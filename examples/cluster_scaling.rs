@@ -1,0 +1,59 @@
+//! Cluster-scaling study (fig-4 methodology as a runnable example):
+//! profile one workload, then replay it on FHSSC/FHDSC clusters of
+//! growing size and print the paper-style table + η ratios.
+//!
+//! ```sh
+//! cargo run --release --example cluster_scaling
+//! ```
+
+use mr_apriori::prelude::*;
+use mr_apriori::coordinator;
+
+fn main() {
+    // Profile the workload once on the reference cluster.
+    let db = QuestGenerator::new(QuestParams::t10_i4(5_000)).generate();
+    let apriori = AprioriConfig { min_support: 0.02, max_k: 3 };
+    let report = MrApriori::new(ClusterConfig::fhssc(3), apriori)
+        .with_split_tx(250)
+        .mine(&db)
+        .expect("profiling run");
+    println!(
+        "profiled workload: {} tx, {} levels, {} frequent itemsets\n",
+        db.len(),
+        report.profile.levels.len(),
+        report.result.frequent.len()
+    );
+
+    let job = JobConfig::default();
+    let ns: Vec<usize> = vec![2, 3, 4, 6, 8, 12, 16];
+    let mut fhssc = Vec::new();
+    let mut fhdsc = Vec::new();
+    let model = EtaModel::default();
+
+    println!("nodes | FHSSC(s) | FHDSC(s) |  η meas | η model");
+    for &n in &ns {
+        let hom = coordinator::simulate(&ClusterConfig::fhssc(n), &report.profile, 250, &job);
+        let het = coordinator::simulate(&ClusterConfig::fhdsc(n), &report.profile, 250, &job);
+        let eta = het.total_secs / hom.total_secs;
+        println!(
+            "{:>5} | {:>8.1} | {:>8.1} | {:>7.2} | {:>7.2}",
+            n,
+            hom.total_secs,
+            het.total_secs,
+            eta,
+            model.eta_predicted(n)
+        );
+        fhssc.push(hom.total_secs);
+        fhdsc.push(het.total_secs);
+    }
+
+    // Chart for shape inspection (who wins, how the gap grows).
+    let mut table = BenchTable::new(
+        "Fig 4 — FHDSC vs FHSSC processing time",
+        "nodes",
+        ns.iter().map(|&n| n as f64).collect(),
+    );
+    table.push_series(Series::new("FHSSC", fhssc));
+    table.push_series(Series::new("FHDSC", fhdsc));
+    println!("\n{}", table.to_ascii_chart());
+}

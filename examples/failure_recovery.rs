@@ -1,0 +1,99 @@
+//! Failure recovery demo: the Hadoop behaviours the framework contributes —
+//! task-attempt retry under injected failures, job abort when a task
+//! exhausts attempts, and namenode re-replication after datanode loss.
+//!
+//! ```sh
+//! cargo run --release --example failure_recovery
+//! ```
+
+use mr_apriori::mapreduce::runner::FailureSpec;
+use mr_apriori::prelude::*;
+use mr_apriori::data::split::plan_splits;
+
+fn main() {
+    let db = QuestGenerator::new(QuestParams::dense(2_000)).generate();
+    let cluster = ClusterConfig::fhssc(4);
+    let apriori = AprioriConfig { min_support: 0.05, max_k: 2 };
+
+    // --- 1. baseline: no failures -------------------------------------
+    let clean = MrApriori::new(cluster.clone(), apriori.clone())
+        .with_split_tx(200)
+        .mine(&db)
+        .expect("clean run");
+    println!(
+        "clean run: {} itemsets, {} map attempts across {} jobs",
+        clean.result.frequent.len(),
+        clean.jobs.iter().map(|(_, s)| s.map_attempts).sum::<usize>(),
+        clean.jobs.len()
+    );
+
+    // --- 2. 25% of map attempts fail: retries must recover ------------
+    let flaky = JobConfig {
+        failure: Some(FailureSpec {
+            map_fail_prob: 0.25,
+            reduce_fail_prob: 0.1,
+            seed: 2012,
+        }),
+        ..Default::default()
+    };
+    let recovered = MrApriori::new(cluster.clone(), apriori.clone())
+        .with_job(flaky)
+        .with_split_tx(200)
+        .mine(&db)
+        .expect("flaky run should still succeed");
+    let (attempts, failures): (usize, usize) = recovered
+        .jobs
+        .iter()
+        .fold((0, 0), |(a, f), (_, s)| {
+            (a + s.map_attempts, f + s.map_failures)
+        });
+    println!(
+        "with 25% injected failures: {} itemsets (identical: {}), {} attempts, {} failures absorbed",
+        recovered.result.frequent.len(),
+        recovered.result.frequent == clean.result.frequent,
+        attempts,
+        failures
+    );
+    assert_eq!(recovered.result.frequent, clean.result.frequent);
+    assert!(failures > 0);
+
+    // --- 3. certain failure: the job must abort, not hang -------------
+    let doomed = JobConfig {
+        failure: Some(FailureSpec {
+            map_fail_prob: 1.0,
+            reduce_fail_prob: 0.0,
+            seed: 1,
+        }),
+        max_attempts: 3,
+        ..Default::default()
+    };
+    let err = MrApriori::new(cluster.clone(), apriori.clone())
+        .with_job(doomed)
+        .with_split_tx(200)
+        .mine(&db)
+        .expect_err("100% failure rate must abort");
+    println!("doomed run aborted as expected: {err}");
+
+    // --- 4. datanode loss: namenode re-replicates ---------------------
+    let mut dfs = Dfs::new(&cluster);
+    let splits = plan_splits(&db, 200);
+    let blocks = dfs.write_splits(&splits).expect("placement");
+    let before: Vec<usize> = blocks
+        .iter()
+        .map(|&b| dfs.locations(b).unwrap().len())
+        .collect();
+    let moved = dfs.decommission(2).expect("decommission node 2");
+    let after: Vec<usize> = blocks
+        .iter()
+        .map(|&b| dfs.locations(b).unwrap().len())
+        .collect();
+    println!(
+        "decommissioned node 2: {} replicas re-replicated; replication {}→{} (min)",
+        moved,
+        before.iter().min().unwrap(),
+        after.iter().min().unwrap()
+    );
+    assert_eq!(before.iter().min(), after.iter().min());
+    assert!(blocks.iter().all(|&b| !dfs.locations(b).unwrap().contains(&2)));
+    println!("all block replicas off the dead node; job would rerun locally elsewhere");
+}

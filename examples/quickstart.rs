@@ -1,0 +1,57 @@
+//! Quickstart: mine frequent itemsets from a synthetic market-basket
+//! dataset on a simulated 3-node Hadoop-like cluster.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use mr_apriori::prelude::*;
+
+fn main() {
+    // 1. A small Quest-style dataset (the standard Apriori benchmark
+    //    family; the paper never names its own dataset).
+    let db = QuestGenerator::new(QuestParams::dense(1_000)).generate();
+    println!(
+        "dataset: {} transactions, {} items, {} item occurrences",
+        db.len(),
+        db.n_items,
+        db.total_items()
+    );
+
+    // 2. The paper's testbed: three identical Core2-Duo-class nodes.
+    let cluster = ClusterConfig::fhssc(3);
+
+    // 3. Mine with the Map/Reduce driver (level-wise jobs over the
+    //    simulated HDFS + jobtracker substrate).
+    let cfg = AprioriConfig { min_support: 0.15, max_k: 0 };
+    let report = MrApriori::new(cluster, cfg.clone())
+        .with_split_tx(100)
+        .mine(&db)
+        .expect("mining failed");
+
+    println!("\nlevel | candidates | frequent");
+    for l in &report.result.levels {
+        println!("{:>5} | {:>10} | {:>8}", l.k, l.n_candidates, l.n_frequent);
+    }
+    println!(
+        "\n{} frequent itemsets in {:.2}s ({} MapReduce jobs)",
+        report.result.frequent.len(),
+        report.wall_secs,
+        report.jobs.len()
+    );
+
+    // 4. Cross-check against the single-machine classical baseline.
+    let classical = ClassicalApriori::default().mine(&db, &cfg);
+    assert_eq!(
+        report.result.frequent, classical.frequent,
+        "Map/Reduce result must equal the classical baseline"
+    );
+    println!("verified: Map/Reduce output == classical Apriori output");
+
+    // 5. Turn the itemsets into association rules (the KDD payoff).
+    let rules = generate_rules(&report.result, 0.6);
+    println!("\ntop rules (confidence >= 0.6):");
+    for r in rules.iter().take(10) {
+        println!("  {}", format_rule(r));
+    }
+}

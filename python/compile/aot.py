@@ -1,0 +1,94 @@
+"""AOT bridge: lower the L2 graphs to HLO **text** artifacts.
+
+Run once by ``make artifacts``; python never runs on the request path.
+
+Interchange format is HLO text, NOT ``lowered.compile()``/``.serialize()``:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text
+parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py there).
+
+Emits one module per (variant, tile-shape) plus ``manifest.json`` which the
+rust runtime (rust/src/runtime/artifacts.rs) uses to pick executables.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (t, i, c) tile shapes the rust TensorEngine can pick from. Keep this list
+# in sync with nothing: rust discovers shapes from manifest.json at startup.
+#   small  — unit tests / tiny splits
+#   medium — default split shape for the fig5 workloads
+#   large  — wide candidate levels (k=2 explosion)
+VARIANTS = [
+    ("small", 256, 64, 64),
+    ("medium", 1024, 256, 256),
+    ("large", 2048, 256, 512),
+]
+
+# The pallas module is the product; the ref module (pure jnp) ships for
+# small/medium so the rust side can differential-test compiled artifacts.
+GRAPHS = {
+    "count_split": (model.count_split, ["small", "medium", "large"]),
+    "count_split_ref": (model.count_split_ref, ["small", "medium"]),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    modules = []
+    for graph_name, (fn, variant_names) in GRAPHS.items():
+        for vname in variant_names:
+            _, t, i, c = next(v for v in VARIANTS if v[0] == vname)
+            lowered = jax.jit(fn).lower(*model.example_args(t, i, c))
+            text = to_hlo_text(lowered)
+            fname = f"{graph_name}_{vname}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            modules.append(
+                {
+                    "graph": graph_name,
+                    "variant": vname,
+                    "path": fname,
+                    "t": t,
+                    "i": i,
+                    "c": c,
+                    "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                    "bytes": len(text),
+                }
+            )
+            print(f"  wrote {fname}  (t={t} i={i} c={c}, {len(text)} chars)")
+    manifest = {"format": 1, "modules": modules}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json ({len(modules)} modules)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

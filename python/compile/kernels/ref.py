@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the support-count kernel.
+
+This is the correctness contract for L1: ``support_count(...)`` must match
+``support_count_ref(...)`` bit-exactly (both are integer-valued f32).
+Also AOT-lowered as a standalone artifact so the rust runtime can
+differential-test the two compiled modules against each other.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def support_count_ref(tx, mask, cand, sizes):
+    """Reference containment count.
+
+    Same signature/shapes as ``support_count.support_count``:
+      tx (T, I), mask (T, 1), cand (C, I), sizes (1, C) → counts (1, C).
+    """
+    overlap = jnp.dot(tx, cand.T, preferred_element_type=jnp.float32)  # (T, C)
+    hit = (overlap == sizes).astype(jnp.float32) * mask  # (T, C)
+    return jnp.sum(hit, axis=0, keepdims=True)  # (1, C)
+
+
+def support_count_py(transactions, candidates):
+    """Slow pure-python oracle over set representations (ground truth for
+    both the jnp path and the bitmap encoding itself)."""
+    counts = []
+    for cand in candidates:
+        cs = set(cand)
+        counts.append(sum(1 for t in transactions if cs.issubset(t)))
+    return counts

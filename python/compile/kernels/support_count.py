@@ -1,0 +1,106 @@
+"""L1 — Pallas support-count kernel.
+
+The Apriori hot-spot is candidate support counting: for every candidate
+itemset c and every transaction t, decide whether c ⊆ t and accumulate the
+per-candidate containment count. With transactions and candidates encoded as
+{0,1} bitmap matrices over a dense item dictionary, containment becomes an
+integer matmul:
+
+    contains(t, c)  ⇔  dot(T[t, :], C[c, :]) == |c|
+
+which is the canonical MXU (systolic array) workload. This is the TPU
+re-think of the paper's Hadoop map task (DESIGN.md §Hardware-Adaptation):
+the HBM→VMEM transaction stream plays the role of the HDFS split stream,
+expressed with a BlockSpec grid instead of map-slot scheduling.
+
+Tiling: the candidate matrix (C×I) and the per-candidate size row stay
+VMEM-resident across the whole sweep; transactions stream through in
+(TILE_T × I) blocks; the (1×C) accumulator lives in the output ref and is
+accumulated across grid steps (zeroed at step 0).
+
+All tensors are 2-D and f32: CPU-PJRT (interpret=True) executes f32
+natively, and counts are exact in f32 as long as I < 2^24. On a real TPU
+the matmul operands would be bf16 with an f32 accumulator — same layout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile height for the transaction stream. 256×256 f32 = 256 KiB per
+# operand block — two such blocks double-buffered plus a ≤512×256 resident
+# candidate matrix stay well under the ~16 MiB VMEM budget (DESIGN.md §Perf).
+TILE_T = 256
+
+
+def _support_count_kernel(sizes_ref, tx_ref, mask_ref, cand_ref, o_ref):
+    """One grid step: accumulate containment counts for one transaction tile.
+
+    Refs (shapes per block):
+      sizes_ref: (1, C)  f32 — |c| for each candidate (VMEM-resident)
+      tx_ref:    (TILE_T, I) f32 — transaction bitmap tile (streamed)
+      mask_ref:  (TILE_T, 1) f32 — 1.0 for live rows, 0.0 for padding
+      cand_ref:  (C, I)  f32 — candidate bitmap (VMEM-resident)
+      o_ref:     (1, C)  f32 — per-candidate counts (accumulated)
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (TILE_T, I) @ (I, C) -> (TILE_T, C) — the MXU matmul.
+    overlap = jnp.dot(
+        tx_ref[...], cand_ref[...].T, preferred_element_type=jnp.float32
+    )
+    # Containment: overlap equals the candidate's cardinality.
+    hit = (overlap == sizes_ref[...]).astype(jnp.float32)
+    # Mask out padding rows, then reduce over the tile.
+    hit = hit * mask_ref[...]
+    o_ref[...] += jnp.sum(hit, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_t",))
+def support_count(tx, mask, cand, sizes, *, tile_t: int = TILE_T):
+    """Count, per candidate, the number of (unmasked) transactions containing it.
+
+    Args:
+      tx:    (T, I) f32 {0,1} transaction bitmap; T must be a multiple of
+             ``tile_t`` (the caller pads and masks the remainder).
+      mask:  (T, 1) f32 {0,1} row-liveness mask.
+      cand:  (C, I) f32 {0,1} candidate bitmap.
+      sizes: (1, C) f32 — cardinality |c| of each candidate row.
+
+    Returns:
+      (1, C) f32 — exact integer-valued support counts.
+    """
+    t, i = tx.shape
+    c, i2 = cand.shape
+    if i != i2:
+        raise ValueError(f"item-width mismatch: tx has {i}, cand has {i2}")
+    if t % tile_t != 0:
+        raise ValueError(f"T={t} not a multiple of tile_t={tile_t}")
+    grid = (t // tile_t,)
+    return pl.pallas_call(
+        _support_count_kernel,
+        grid=grid,
+        in_specs=[
+            # sizes: whole row resident every step.
+            pl.BlockSpec((1, c), lambda s: (0, 0)),
+            # tx: stream tile s.
+            pl.BlockSpec((tile_t, i), lambda s: (s, 0)),
+            # mask: stream tile s.
+            pl.BlockSpec((tile_t, 1), lambda s: (s, 0)),
+            # cand: whole matrix resident every step.
+            pl.BlockSpec((c, i), lambda s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c), lambda s: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, c), jnp.float32),
+        # interpret=True: CPU-PJRT cannot execute Mosaic custom-calls; the
+        # interpret path lowers to plain HLO the rust runtime can run.
+        interpret=True,
+    )(sizes, tx, mask, cand)

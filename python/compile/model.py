@@ -1,0 +1,48 @@
+"""L2 — the jax compute graph the rust coordinator executes.
+
+The "model" for this paper is the map-task compute: given one HDFS-split's
+worth of transactions (bitmap-encoded by the rust side) and the current
+level's candidate set, produce per-candidate support counts. The graph is
+a thin, fully-fused wrapper over the L1 Pallas kernel — all batching over
+splits, levels and nodes lives in the rust L3 coordinator, which calls one
+compiled executable per (T, I, C) tile shape.
+
+Two graph variants are exported:
+  * ``count_split``      — the Pallas-kernel path (the product).
+  * ``count_split_ref``  — the pure-jnp path (differential oracle, also
+                           used for L1-vs-L2 perf comparison in §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.support_count import support_count
+from .kernels.ref import support_count_ref
+
+
+def count_split(tx, mask, cand, sizes):
+    """Support counts for one transaction block (Pallas path).
+
+    Shapes: tx (T, I), mask (T, 1), cand (C, I), sizes (1, C) → (1, C).
+    Returned as a 1-tuple: the AOT bridge lowers with return_tuple=True and
+    the rust side unwraps with to_tuple1 (see /opt/xla-example/README.md).
+    """
+    return (support_count(tx, mask, cand, sizes),)
+
+
+def count_split_ref(tx, mask, cand, sizes):
+    """Same computation, pure-jnp (no pallas_call) — the oracle module."""
+    return (support_count_ref(tx, mask, cand, sizes),)
+
+
+def example_args(t: int, i: int, c: int):
+    """ShapeDtypeStructs for AOT lowering of either variant."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((t, i), f32),  # tx
+        jax.ShapeDtypeStruct((t, 1), f32),  # mask
+        jax.ShapeDtypeStruct((c, i), f32),  # cand
+        jax.ShapeDtypeStruct((1, c), f32),  # sizes
+    )

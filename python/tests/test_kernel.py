@@ -1,0 +1,176 @@
+"""L1 correctness: Pallas support-count kernel vs the pure-jnp oracle vs a
+pure-python set oracle. This is the CORE correctness signal for the compiled
+hot path — exact equality is required (counts are integer-valued f32)."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import support_count_ref, support_count_py
+from compile.kernels.support_count import support_count
+
+
+def encode_bitmaps(transactions, candidates, n_items, t_pad, rng=None):
+    """Set-of-ints → padded f32 bitmap matrices (mirrors rust data::bitmap)."""
+    t = len(transactions)
+    tx = np.zeros((t_pad, n_items), dtype=np.float32)
+    mask = np.zeros((t_pad, 1), dtype=np.float32)
+    for r, items in enumerate(transactions):
+        mask[r, 0] = 1.0
+        for it in items:
+            tx[r, it] = 1.0
+    cand = np.zeros((len(candidates), n_items), dtype=np.float32)
+    sizes = np.zeros((1, len(candidates)), dtype=np.float32)
+    for r, items in enumerate(candidates):
+        sizes[0, r] = len(set(items))
+        for it in items:
+            cand[r, it] = 1.0
+    return tx, mask, cand, sizes
+
+
+def random_db(rng, n_tx, n_items, max_len, n_cand, max_cand_len):
+    transactions = [
+        set(rng.choice(n_items, size=rng.integers(0, max_len + 1), replace=False))
+        for _ in range(n_tx)
+    ]
+    candidates = [
+        sorted(rng.choice(n_items, size=rng.integers(1, max_cand_len + 1), replace=False))
+        for _ in range(n_cand)
+    ]
+    return transactions, candidates
+
+
+def run_both(transactions, candidates, n_items, t_pad, tile_t):
+    tx, mask, cand, sizes = encode_bitmaps(transactions, candidates, n_items, t_pad)
+    got = np.asarray(support_count(tx, mask, cand, sizes, tile_t=tile_t))
+    ref = np.asarray(support_count_ref(tx, mask, cand, sizes))
+    oracle = support_count_py(transactions, candidates)
+    return got, ref, np.asarray(oracle, dtype=np.float32).reshape(1, -1)
+
+
+class TestKernelVsOracles:
+    def test_tiny_handchecked(self):
+        # db: {0,1,2}, {0,2}, {1}; candidates {0}, {0,2}, {1,2}, {3}
+        tr = [{0, 1, 2}, {0, 2}, {1}]
+        ca = [[0], [0, 2], [1, 2], [3]]
+        got, ref, oracle = run_both(tr, ca, n_items=4, t_pad=4, tile_t=2)
+        np.testing.assert_array_equal(oracle, [[2.0, 2.0, 1.0, 0.0]])
+        np.testing.assert_array_equal(got, oracle)
+        np.testing.assert_array_equal(ref, oracle)
+
+    def test_multi_tile_accumulation(self):
+        rng = np.random.default_rng(7)
+        tr, ca = random_db(rng, n_tx=100, n_items=32, max_len=12, n_cand=20, max_cand_len=3)
+        got, ref, oracle = run_both(tr, ca, n_items=32, t_pad=128, tile_t=32)
+        np.testing.assert_array_equal(got, oracle)
+        np.testing.assert_array_equal(ref, oracle)
+
+    def test_single_tile(self):
+        rng = np.random.default_rng(11)
+        tr, ca = random_db(rng, 16, 16, 8, 8, 2)
+        got, ref, oracle = run_both(tr, ca, 16, t_pad=16, tile_t=16)
+        np.testing.assert_array_equal(got, oracle)
+
+    def test_empty_transactions_all_masked(self):
+        ca = [[0], [1, 2]]
+        got, ref, oracle = run_both([], ca, n_items=4, t_pad=8, tile_t=4)
+        np.testing.assert_array_equal(got, [[0.0, 0.0]])
+        np.testing.assert_array_equal(ref, [[0.0, 0.0]])
+
+    def test_empty_transaction_rows(self):
+        # Empty transactions contain no non-empty candidate.
+        tr = [set(), set(), {1}]
+        ca = [[1], [0, 1]]
+        got, _, oracle = run_both(tr, ca, n_items=4, t_pad=4, tile_t=4)
+        np.testing.assert_array_equal(got, [[1.0, 0.0]])
+        np.testing.assert_array_equal(got, oracle)
+
+    def test_duplicate_candidates_counted_independently(self):
+        tr = [{0, 1}, {0}]
+        ca = [[0], [0], [0, 1]]
+        got, _, oracle = run_both(tr, ca, n_items=2, t_pad=2, tile_t=2)
+        np.testing.assert_array_equal(got, [[2.0, 2.0, 1.0]])
+
+    def test_full_width_candidate(self):
+        n = 8
+        tr = [set(range(n)), set(range(n - 1))]
+        ca = [list(range(n))]
+        got, _, oracle = run_both(tr, ca, n_items=n, t_pad=2, tile_t=2)
+        np.testing.assert_array_equal(got, [[1.0]])
+
+    def test_mask_excludes_padding_false_positives(self):
+        # A zero pad row would "contain" a size-0 candidate; ensure the
+        # mask kills padding rows even in that degenerate case.
+        tr = [{0}]
+        ca = [[0]]
+        tx, mask, cand, sizes = encode_bitmaps(tr, ca, 4, t_pad=64)
+        # Deliberately poison padding rows with item bits, mask must win.
+        tx[1:, :] = 1.0
+        got = np.asarray(support_count(tx, mask, cand, sizes, tile_t=32))
+        np.testing.assert_array_equal(got, [[1.0]])
+
+    def test_counts_exact_at_scale(self):
+        rng = np.random.default_rng(3)
+        tr, ca = random_db(rng, 500, 64, 20, 64, 4)
+        got, ref, oracle = run_both(tr, ca, 64, t_pad=512, tile_t=128)
+        np.testing.assert_array_equal(got, oracle)
+        np.testing.assert_array_equal(ref, oracle)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_tx=st.integers(0, 64),
+    n_items=st.sampled_from([8, 16, 32]),
+    tile_t=st.sampled_from([8, 16, 32]),
+    n_cand=st.integers(1, 24),
+)
+def test_hypothesis_kernel_matches_python_oracle(seed, n_tx, n_items, tile_t, n_cand):
+    """Property: for any random db/candidate set and any tiling, the pallas
+    kernel, the jnp oracle and the python set oracle agree exactly."""
+    rng = np.random.default_rng(seed)
+    tr, ca = random_db(rng, n_tx, n_items, max_len=n_items // 2, n_cand=n_cand,
+                       max_cand_len=min(4, n_items))
+    t_pad = max(tile_t, ((n_tx + tile_t - 1) // tile_t) * tile_t)
+    got, ref, oracle = run_both(tr, ca, n_items, t_pad, tile_t)
+    np.testing.assert_array_equal(got, oracle)
+    np.testing.assert_array_equal(ref, oracle)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dtype=st.sampled_from(["float32", "float64", "int32"]))
+def test_hypothesis_input_dtypes_coerce_or_match(dtype):
+    """The kernel contract is f32; other integer-valued dtypes must produce
+    the same counts after explicit cast (what the rust encoder guarantees)."""
+    rng = np.random.default_rng(0)
+    tr, ca = random_db(rng, 32, 16, 8, 8, 3)
+    tx, mask, cand, sizes = encode_bitmaps(tr, ca, 16, 32)
+    cast = lambda a: a.astype(np.float32)  # rust always ships f32
+    got = np.asarray(
+        support_count(
+            cast(tx.astype(dtype)), cast(mask.astype(dtype)),
+            cast(cand.astype(dtype)), cast(sizes.astype(dtype)), tile_t=16,
+        )
+    )
+    oracle = np.asarray(support_count_py(tr, ca), dtype=np.float32).reshape(1, -1)
+    np.testing.assert_array_equal(got, oracle)
+
+
+class TestShapeValidation:
+    def test_item_width_mismatch_raises(self):
+        tx = np.zeros((8, 16), np.float32)
+        mask = np.ones((8, 1), np.float32)
+        cand = np.zeros((2, 8), np.float32)
+        sizes = np.ones((1, 2), np.float32)
+        with pytest.raises(ValueError, match="item-width mismatch"):
+            support_count(tx, mask, cand, sizes, tile_t=8)
+
+    def test_non_multiple_tile_raises(self):
+        tx = np.zeros((10, 16), np.float32)
+        mask = np.ones((10, 1), np.float32)
+        cand = np.zeros((2, 16), np.float32)
+        sizes = np.ones((1, 2), np.float32)
+        with pytest.raises(ValueError, match="not a multiple"):
+            support_count(tx, mask, cand, sizes, tile_t=8)

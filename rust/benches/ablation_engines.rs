@@ -1,0 +1,84 @@
+//! Ablation A1: candidate-matcher engines on the level-2 counting hot
+//! path — hash tree vs trie vs naive scan vs the Pallas/PJRT tensor
+//! engine (when artifacts are built). Reports per-call counting time on
+//! one map-split worth of transactions across candidate-set widths.
+
+use std::time::Instant;
+
+use mr_apriori::apriori::candidates;
+use mr_apriori::prelude::*;
+use mr_apriori::runtime::TensorService;
+
+fn main() {
+    println!("== Ablation A1: support-count engines ==\n");
+    // A 64-item dictionary so the tensor small-variant fits directly.
+    let db = QuestGenerator::new(QuestParams {
+        n_items: 64,
+        ..QuestParams::dense(1_000)
+    })
+    .generate();
+    let split = &db.transactions[..512];
+
+    // Level-2 candidates from the actual frequent items.
+    let cfg = AprioriConfig { min_support: 0.05, max_k: 1 };
+    let f1 = ClassicalApriori::default().mine(&db, &cfg);
+    let f1_sets: Vec<Itemset> = f1.frequent.iter().map(|(is, _)| is.clone()).collect();
+    let all_c2 = candidates::generate(&f1_sets);
+    println!(
+        "{} frequent items -> {} level-2 candidates; split = {} tx\n",
+        f1_sets.len(),
+        all_c2.len(),
+        split.len()
+    );
+
+    let tensor_service = TensorService::start_default().ok();
+    let mut engines: Vec<(&str, Box<dyn SupportEngine>)> = vec![
+        ("hash-tree", build_engine(EngineKind::HashTree, None)),
+        ("trie", build_engine(EngineKind::Trie, None)),
+        ("naive", build_engine(EngineKind::Naive, None)),
+    ];
+    if let Some(svc) = &tensor_service {
+        engines.push(("tensor", build_engine(EngineKind::Tensor, Some(svc.handle()))));
+    } else {
+        println!("(artifacts not built — tensor engine skipped; run `make artifacts`)\n");
+    }
+
+    let widths: Vec<usize> = [64usize, 128, 256, 512]
+        .iter()
+        .copied()
+        .filter(|&w| w <= all_c2.len())
+        .collect();
+    let mut table = BenchTable::new(
+        "A1 — counting time (ms) vs candidate count, one 512-tx split",
+        "candidates",
+        widths.iter().map(|&w| w as f64).collect(),
+    );
+
+    let reference: Vec<Vec<u64>> = widths
+        .iter()
+        .map(|&w| {
+            build_engine(EngineKind::Naive, None)
+                .count(split, &all_c2[..w], db.n_items)
+                .unwrap()
+        })
+        .collect();
+
+    for (name, engine) in &engines {
+        let mut times = Vec::new();
+        for (wi, &w) in widths.iter().enumerate() {
+            let cands = &all_c2[..w];
+            // warmup + correctness check against the naive oracle
+            let counts = engine.count(split, cands, db.n_items).unwrap();
+            assert_eq!(counts, reference[wi], "{name} wrong at width {w}");
+            let iters = 5;
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(engine.count(split, cands, db.n_items).unwrap());
+            }
+            times.push(t0.elapsed().as_secs_f64() * 1e3 / iters as f64);
+        }
+        table.push_series(Series::new(*name, times));
+    }
+    table.emit();
+    println!("all engines agree with the naive oracle at every width");
+}

@@ -1,0 +1,145 @@
+//! Level-wise candidate generation: the F(k-1) ⋈ F(k-1) self-join with
+//! Apriori subset pruning (Agrawal & Srikant '94, Algorithm "apriori-gen").
+//!
+//! Both steps rely on the canonical sorted form of [`Itemset`]s:
+//! * **join**: two frequent (k-1)-itemsets sharing their first k-2 items
+//!   produce one k-candidate;
+//! * **prune**: a candidate survives only if *every* (k-1)-subset is
+//!   frequent — the downward-closure property that gives Apriori its name.
+
+use std::collections::HashSet;
+
+use super::Itemset;
+
+/// Generate level-k candidates from the sorted list of frequent
+/// (k-1)-itemsets. `frequent` must be sorted lexicographically (the
+/// canonical `MiningResult` order); the output is sorted too.
+pub fn generate(frequent: &[Itemset]) -> Vec<Itemset> {
+    if frequent.is_empty() {
+        return Vec::new();
+    }
+    let k_minus_1 = frequent[0].len();
+    debug_assert!(frequent.iter().all(|f| f.len() == k_minus_1));
+    let lookup: HashSet<&[u32]> = frequent.iter().map(|f| f.as_slice()).collect();
+
+    let mut out = Vec::new();
+    // Join: pairs sharing the (k-2)-prefix. frequent is sorted, so equal
+    // prefixes are contiguous — scan prefix groups and pair within.
+    let mut g0 = 0;
+    while g0 < frequent.len() {
+        let prefix = &frequent[g0][..k_minus_1 - 1];
+        let mut g1 = g0 + 1;
+        while g1 < frequent.len() && &frequent[g1][..k_minus_1 - 1] == prefix {
+            g1 += 1;
+        }
+        for a in g0..g1 {
+            for b in (a + 1)..g1 {
+                // last items differ and are ordered (sorted input)
+                let mut cand: Itemset = frequent[a].clone();
+                cand.push(frequent[b][k_minus_1 - 1]);
+                if prune_ok(&cand, &lookup) {
+                    out.push(cand);
+                }
+            }
+        }
+        g0 = g1;
+    }
+    out.sort();
+    out
+}
+
+/// Does every (k-1)-subset of `cand` appear in the frequent set?
+fn prune_ok(cand: &Itemset, frequent: &HashSet<&[u32]>) -> bool {
+    // The two subsets formed by dropping the last two positions are the
+    // join parents — always frequent — but checking them is cheap and
+    // keeps the code obviously correct.
+    let mut sub = Vec::with_capacity(cand.len() - 1);
+    for skip in 0..cand.len() {
+        sub.clear();
+        sub.extend(cand.iter().enumerate().filter(|&(i, _)| i != skip).map(|(_, &x)| x));
+        if !frequent.contains(sub.as_slice()) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Level-1 "candidates": every item in the universe (the first pass scans
+/// and counts all items; no generation needed). Provided for symmetry so
+/// drivers can treat k=1 uniformly.
+pub fn unit_candidates(n_items: usize) -> Vec<Itemset> {
+    (0..n_items as u32).map(|i| vec![i]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iss(xs: &[&[u32]]) -> Vec<Itemset> {
+        xs.iter().map(|x| x.to_vec()).collect()
+    }
+
+    #[test]
+    fn textbook_join_and_prune() {
+        // Classic A&S example: F3 = {abc, abd, acd, ace, bcd}
+        // join -> abcd (from abc+abd), acde (from acd+ace)
+        // prune: abcd ok (abc,abd,acd,bcd all in F3);
+        //        acde pruned (cde missing, ade missing).
+        let f3 = iss(&[
+            &[0, 1, 2],
+            &[0, 1, 3],
+            &[0, 2, 3],
+            &[0, 2, 4],
+            &[1, 2, 3],
+        ]);
+        let c4 = generate(&f3);
+        assert_eq!(c4, iss(&[&[0, 1, 2, 3]]));
+    }
+
+    #[test]
+    fn pairs_from_singletons() {
+        let f1 = iss(&[&[2], &[5], &[9]]);
+        let c2 = generate(&f1);
+        assert_eq!(c2, iss(&[&[2, 5], &[2, 9], &[5, 9]]));
+    }
+
+    #[test]
+    fn empty_and_singleton_input() {
+        assert!(generate(&[]).is_empty());
+        assert!(generate(&iss(&[&[1]])).is_empty()); // nothing to join with
+    }
+
+    #[test]
+    fn no_join_across_different_prefixes() {
+        // {0,1} and {2,3} share no (k-2)-prefix -> no candidate.
+        let f2 = iss(&[&[0, 1], &[2, 3]]);
+        assert!(generate(&f2).is_empty());
+    }
+
+    #[test]
+    fn prune_removes_unsupported_subsets() {
+        // F2 = {01, 02, 12, 13}: join gives 012 (from 01+02) and 123
+        // (13 joins nothing with prefix 1 except 12 -> 123).
+        // 012: subsets 01,02,12 all present -> kept.
+        // 123: subsets 12,13,23 -> 23 missing -> pruned.
+        let f2 = iss(&[&[0, 1], &[0, 2], &[1, 2], &[1, 3]]);
+        assert_eq!(generate(&f2), iss(&[&[0, 1, 2]]));
+    }
+
+    #[test]
+    fn output_sorted_and_unique() {
+        let f1 = iss(&[&[1], &[3], &[5], &[7]]);
+        let c2 = generate(&f1);
+        let mut sorted = c2.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(c2, sorted);
+        assert_eq!(c2.len(), 6); // C(4,2)
+    }
+
+    #[test]
+    fn unit_candidates_cover_universe() {
+        assert_eq!(unit_candidates(3), iss(&[&[0], &[1], &[2]]));
+        assert!(unit_candidates(0).is_empty());
+    }
+}

@@ -1,0 +1,267 @@
+//! FP-Growth (Han et al. 2000) — the stronger published comparator for the
+//! baseline ablation: mines the same frequent itemsets without candidate
+//! generation, via recursive conditional FP-trees.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::data::{ItemId, TransactionDb};
+
+use super::{AprioriConfig, Itemset, LevelStats, MiningResult};
+
+/// Node of an FP-tree. Children keyed by item; `count` is the number of
+/// transactions whose prefix path ends at/through this node.
+#[derive(Debug, Default)]
+struct FpNode {
+    children: HashMap<ItemId, usize>, // item -> node index
+    item: ItemId,
+    count: u64,
+    parent: Option<usize>,
+}
+
+/// Arena-allocated FP-tree with per-item node lists (the "header table").
+#[derive(Debug)]
+struct FpTree {
+    nodes: Vec<FpNode>,
+    /// item -> indices of nodes carrying that item.
+    header: HashMap<ItemId, Vec<usize>>,
+}
+
+impl FpTree {
+    fn new() -> Self {
+        Self {
+            nodes: vec![FpNode::default()], // root
+            header: HashMap::new(),
+        }
+    }
+
+    /// Insert one (ordered) transaction path with multiplicity `count`.
+    fn insert(&mut self, path: &[ItemId], count: u64) {
+        let mut cur = 0usize;
+        for &item in path {
+            let next = match self.nodes[cur].children.get(&item) {
+                Some(&n) => n,
+                None => {
+                    let n = self.nodes.len();
+                    self.nodes.push(FpNode {
+                        children: HashMap::new(),
+                        item,
+                        count: 0,
+                        parent: Some(cur),
+                    });
+                    self.nodes[cur].children.insert(item, n);
+                    self.header.entry(item).or_default().push(n);
+                    n
+                }
+            };
+            self.nodes[next].count += count;
+            cur = next;
+        }
+    }
+
+    /// Conditional pattern base of `item`: (prefix path, count) pairs.
+    fn pattern_base(&self, item: ItemId) -> Vec<(Vec<ItemId>, u64)> {
+        let mut base = Vec::new();
+        if let Some(nodes) = self.header.get(&item) {
+            for &n in nodes {
+                let count = self.nodes[n].count;
+                let mut path = Vec::new();
+                let mut cur = self.nodes[n].parent;
+                while let Some(p) = cur {
+                    if p == 0 {
+                        break;
+                    }
+                    path.push(self.nodes[p].item);
+                    cur = self.nodes[p].parent;
+                }
+                path.reverse();
+                if !path.is_empty() {
+                    base.push((path, count));
+                }
+            }
+        }
+        base
+    }
+
+    fn item_support(&self, item: ItemId) -> u64 {
+        self.header
+            .get(&item)
+            .map(|ns| ns.iter().map(|&n| self.nodes[n].count).sum())
+            .unwrap_or(0)
+    }
+
+    fn items(&self) -> Vec<ItemId> {
+        let mut v: Vec<ItemId> = self.header.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// FP-Growth miner.
+#[derive(Debug, Clone, Default)]
+pub struct FpGrowth;
+
+impl FpGrowth {
+    pub fn mine(&self, db: &TransactionDb, cfg: &AprioriConfig) -> MiningResult {
+        let t0 = Instant::now();
+        let threshold = cfg.threshold(db.len());
+        let mut result = MiningResult {
+            n_transactions: db.len(),
+            ..Default::default()
+        };
+
+        // Pass 1: item supports; keep frequent items, order by descending
+        // support (FP-tree compression heuristic), ties by item id.
+        let mut supports: Vec<u64> = vec![0; db.n_items];
+        for t in &db.transactions {
+            for &i in &t.items {
+                supports[i as usize] += 1;
+            }
+        }
+        let mut order: Vec<ItemId> = (0..db.n_items as u32)
+            .filter(|&i| supports[i as usize] >= threshold)
+            .collect();
+        order.sort_by_key(|&i| (std::cmp::Reverse(supports[i as usize]), i));
+        let rank: HashMap<ItemId, usize> =
+            order.iter().enumerate().map(|(r, &i)| (i, r)).collect();
+
+        // Pass 2: build the global FP-tree over rank-ordered frequent items.
+        let mut tree = FpTree::new();
+        for t in &db.transactions {
+            let mut path: Vec<ItemId> = t
+                .items
+                .iter()
+                .copied()
+                .filter(|i| rank.contains_key(i))
+                .collect();
+            path.sort_by_key(|i| rank[i]);
+            tree.insert(&path, 1);
+        }
+
+        // Recursive growth.
+        let mut found: Vec<(Itemset, u64)> = Vec::new();
+        grow(&tree, &mut Vec::new(), threshold, cfg, &mut found);
+        for (is, _) in &mut found {
+            is.sort_unstable();
+        }
+        result.frequent = found;
+        result.normalize();
+
+        // FP-growth has no per-level loop; report a single aggregate stat
+        // so comparisons can still chart "work".
+        let max_k = result
+            .frequent
+            .iter()
+            .map(|(is, _)| is.len())
+            .max()
+            .unwrap_or(0);
+        result.levels.push(LevelStats {
+            k: max_k,
+            n_candidates: 0, // no candidate generation — the algorithm's point
+            n_frequent: result.frequent.len(),
+            work_units: tree.nodes.len() as f64,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        });
+        result
+    }
+}
+
+/// Mine `tree` (conditional on `suffix`), appending discoveries.
+fn grow(
+    tree: &FpTree,
+    suffix: &mut Vec<ItemId>,
+    threshold: u64,
+    cfg: &AprioriConfig,
+    out: &mut Vec<(Itemset, u64)>,
+) {
+    for item in tree.items() {
+        let support = tree.item_support(item);
+        if support < threshold {
+            continue;
+        }
+        suffix.push(item);
+        if cfg.max_k == 0 || suffix.len() <= cfg.max_k {
+            out.push((suffix.clone(), support));
+            // Build the conditional tree and recurse.
+            let base = tree.pattern_base(item);
+            if !base.is_empty() {
+                // conditional item supports
+                let mut csup: HashMap<ItemId, u64> = HashMap::new();
+                for (path, count) in &base {
+                    for &i in path {
+                        *csup.entry(i).or_insert(0) += count;
+                    }
+                }
+                let mut cond = FpTree::new();
+                for (path, count) in &base {
+                    let filtered: Vec<ItemId> = path
+                        .iter()
+                        .copied()
+                        .filter(|i| csup[i] >= threshold)
+                        .collect();
+                    if !filtered.is_empty() {
+                        cond.insert(&filtered, *count);
+                    }
+                }
+                grow(&cond, suffix, threshold, cfg, out);
+            }
+        }
+        suffix.pop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::classical::{tests::textbook_db, ClassicalApriori};
+    use crate::data::quest::{QuestGenerator, QuestParams};
+
+    #[test]
+    fn matches_classical_on_textbook() {
+        let db = textbook_db();
+        let cfg = AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 };
+        let a = ClassicalApriori::default().mine(&db, &cfg);
+        let b = FpGrowth.mine(&db, &cfg);
+        assert_eq!(a.frequent, b.frequent);
+    }
+
+    #[test]
+    fn matches_classical_on_quest_profiles() {
+        for (params, min_support) in [
+            (QuestParams::goswami_2k(), 0.05),
+            (QuestParams::dense(300), 0.15),
+        ] {
+            let db = QuestGenerator::new(params).generate();
+            let cfg = AprioriConfig { min_support, max_k: 0 };
+            let a = ClassicalApriori::default().mine(&db, &cfg);
+            let b = FpGrowth.mine(&db, &cfg);
+            assert_eq!(a.frequent, b.frequent);
+        }
+    }
+
+    #[test]
+    fn respects_max_k() {
+        let db = textbook_db();
+        let cfg = AprioriConfig { min_support: 2.0 / 9.0, max_k: 2 };
+        let r = FpGrowth.mine(&db, &cfg);
+        assert!(r.frequent.iter().all(|(is, _)| is.len() <= 2));
+    }
+
+    #[test]
+    fn empty_and_all_infrequent() {
+        let db = TransactionDb::new(vec![]);
+        assert!(FpGrowth.mine(&db, &AprioriConfig::default()).frequent.is_empty());
+        let db = textbook_db();
+        let cfg = AprioriConfig { min_support: 0.999, max_k: 0 };
+        assert!(FpGrowth.mine(&db, &cfg).frequent.is_empty());
+    }
+
+    #[test]
+    fn reports_no_candidates() {
+        let db = textbook_db();
+        let cfg = AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 };
+        let r = FpGrowth.mine(&db, &cfg);
+        assert_eq!(r.levels[0].n_candidates, 0);
+        assert_eq!(r.levels[0].n_frequent, r.frequent.len());
+    }
+}

@@ -1,0 +1,313 @@
+//! The hash tree — Agrawal & Srikant's candidate-matching structure.
+//!
+//! Counting is Apriori's hot loop: for each transaction, find every
+//! candidate k-itemset it contains. The hash tree prunes that search:
+//! interior nodes hash the next item of the candidate; leaves hold small
+//! candidate buckets checked exhaustively. `count_all` walks the tree with
+//! the classic "pick each remaining item, recurse" traversal, touching
+//! only subtrees reachable from the transaction's items.
+//!
+//! Because different transaction items can hash to the same child, one
+//! transaction can reach the same leaf along several paths; the leaf check
+//! is path-independent (`contains_all` against the whole transaction), so
+//! every leaf carries an id and a per-transaction **visit stamp** dedupes
+//! arrivals — the same trick the original A&S implementation used.
+
+use crate::data::{ItemId, Transaction};
+
+use super::Itemset;
+
+const FANOUT: usize = 8;
+const LEAF_CAP: usize = 16;
+
+enum Node {
+    Interior(Vec<Option<Box<Node>>>),
+    /// (leaf id, [(candidate index, itemset)])
+    Leaf(usize, Vec<(usize, Itemset)>),
+}
+
+/// Hash tree over one level's candidates (all the same length `k`).
+pub struct HashTree {
+    root: Node,
+    k: usize,
+    n_candidates: usize,
+    n_leaves: usize,
+}
+
+/// Reusable per-counting-pass scratch (leaf visit stamps).
+pub struct Workspace {
+    stamps: Vec<u32>,
+    tick: u32,
+}
+
+impl Workspace {
+    fn new(n_leaves: usize) -> Self {
+        Self { stamps: vec![0; n_leaves], tick: 0 }
+    }
+}
+
+fn hash_item(item: ItemId) -> usize {
+    (item as usize) % FANOUT
+}
+
+impl HashTree {
+    /// Build from the level's candidate list (indices into that list are
+    /// the counter slots the counting pass increments).
+    pub fn build(candidates: &[Itemset]) -> Self {
+        let k = candidates.first().map(|c| c.len()).unwrap_or(0);
+        assert!(
+            candidates.iter().all(|c| c.len() == k),
+            "hash tree requires uniform candidate length (engine::count_grouped handles mixing)"
+        );
+        let mut tree = Self {
+            root: Node::Leaf(0, Vec::new()),
+            k,
+            n_candidates: candidates.len(),
+            n_leaves: 1,
+        };
+        for (idx, cand) in candidates.iter().enumerate() {
+            let k = tree.k;
+            let mut next_leaf = tree.n_leaves;
+            insert(&mut tree.root, idx, cand, 0, k, &mut next_leaf);
+            tree.n_leaves = next_leaf;
+        }
+        tree
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_candidates
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_candidates == 0
+    }
+
+    /// Fresh workspace sized for this tree.
+    pub fn workspace(&self) -> Workspace {
+        Workspace::new(self.n_leaves)
+    }
+
+    /// Increment `counts[i]` for every candidate `i` contained in `tx`.
+    pub fn count_transaction(&self, tx: &Transaction, counts: &mut [u64], ws: &mut Workspace) {
+        if self.k == 0 || tx.items.len() < self.k {
+            return;
+        }
+        ws.tick = ws.tick.wrapping_add(1);
+        if ws.tick == 0 {
+            // stamp wrap: reset (once per 2^32 transactions)
+            ws.stamps.iter_mut().for_each(|s| *s = 0);
+            ws.tick = 1;
+        }
+        visit(&self.root, &tx.items, 0, self.k, counts, tx, ws);
+    }
+
+    /// Count a whole slice of transactions.
+    pub fn count_all(&self, txs: &[Transaction]) -> Vec<u64> {
+        let mut counts = vec![0u64; self.n_candidates];
+        let mut ws = self.workspace();
+        for t in txs {
+            self.count_transaction(t, &mut counts, &mut ws);
+        }
+        counts
+    }
+}
+
+fn insert(
+    node: &mut Node,
+    idx: usize,
+    cand: &Itemset,
+    depth: usize,
+    k: usize,
+    next_leaf: &mut usize,
+) {
+    match node {
+        Node::Interior(children) => {
+            let h = hash_item(cand[depth]);
+            let child = children[h].get_or_insert_with(|| {
+                let id = *next_leaf;
+                *next_leaf += 1;
+                Box::new(Node::Leaf(id, Vec::new()))
+            });
+            insert(child, idx, cand, depth + 1, k, next_leaf);
+        }
+        Node::Leaf(_, bucket) => {
+            bucket.push((idx, cand.clone()));
+            // split overfull leaves while there are items left to hash on
+            if bucket.len() > LEAF_CAP && depth < k {
+                let drained = std::mem::take(bucket);
+                let mut children: Vec<Option<Box<Node>>> = (0..FANOUT).map(|_| None).collect();
+                for (i, c) in drained {
+                    let h = hash_item(c[depth]);
+                    let child = children[h].get_or_insert_with(|| {
+                        let id = *next_leaf;
+                        *next_leaf += 1;
+                        Box::new(Node::Leaf(id, Vec::new()))
+                    });
+                    insert(child, i, &c, depth + 1, k, next_leaf);
+                }
+                *node = Node::Interior(children);
+            }
+        }
+    }
+}
+
+/// Recursive traversal: at an interior node at depth `d`, try every
+/// transaction item that could be the candidate's d-th item (leaving
+/// enough items after it to complete a k-itemset). Leaves are processed
+/// at most once per transaction via the workspace stamp.
+#[allow(clippy::too_many_arguments)]
+fn visit(
+    node: &Node,
+    items: &[ItemId],
+    depth: usize,
+    k: usize,
+    counts: &mut [u64],
+    tx: &Transaction,
+    ws: &mut Workspace,
+) {
+    match node {
+        Node::Leaf(id, bucket) => {
+            if ws.stamps[*id] == ws.tick {
+                return; // already handled for this transaction
+            }
+            ws.stamps[*id] = ws.tick;
+            for (idx, cand) in bucket {
+                if tx.contains_all(cand) {
+                    counts[*idx] += 1;
+                }
+            }
+        }
+        Node::Interior(children) => {
+            let remaining = k - depth; // items still needed
+            if items.len() < remaining {
+                return;
+            }
+            // choose position for the depth-th candidate item; must leave
+            // remaining-1 items after it
+            let last_start = items.len() - remaining;
+            for (i, &item) in items[..=last_start].iter().enumerate() {
+                if let Some(child) = &children[hash_item(item)] {
+                    visit(child, &items[i + 1..], depth + 1, k, counts, tx, ws);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::quest::{QuestGenerator, QuestParams};
+    use crate::data::TransactionDb;
+    use crate::util::rng::Xoshiro256;
+
+    fn naive_counts(db: &TransactionDb, cands: &[Itemset]) -> Vec<u64> {
+        cands.iter().map(|c| db.support(c) as u64).collect()
+    }
+
+    #[test]
+    fn tiny_handchecked() {
+        let db = TransactionDb::new(vec![
+            Transaction::new([0u32, 1, 2]),
+            Transaction::new([0u32, 2]),
+            Transaction::new([1u32, 2]),
+        ]);
+        let cands: Vec<Itemset> = vec![vec![0, 1], vec![0, 2], vec![1, 2]];
+        let tree = HashTree::build(&cands);
+        assert_eq!(tree.len(), 3);
+        assert_eq!(tree.count_all(&db.transactions), vec![1, 2, 2]);
+    }
+
+    #[test]
+    fn unit_candidates_no_double_count_across_hash_collisions() {
+        // Regression: items 0 and 8 hash to the same child (fanout 8); a
+        // transaction containing both used to reach that leaf twice and
+        // double-count candidate [0]. 100 unit candidates force splits.
+        let cands: Vec<Itemset> = (0..100u32).map(|i| vec![i]).collect();
+        let tree = HashTree::build(&cands);
+        let tx = Transaction::new([0u32, 8, 16, 24]);
+        let mut counts = vec![0u64; cands.len()];
+        let mut ws = tree.workspace();
+        tree.count_transaction(&tx, &mut counts, &mut ws);
+        assert_eq!(counts[0], 1, "candidate [0] must count once");
+        assert_eq!(counts[8], 1);
+        assert_eq!(counts[16], 1);
+        assert_eq!(counts.iter().sum::<u64>(), 4);
+    }
+
+    #[test]
+    fn matches_naive_on_random_candidates() {
+        let db = QuestGenerator::new(QuestParams::dense(400)).generate();
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        for k in [1usize, 2, 3, 4] {
+            let mut cands: Vec<Itemset> = (0..300)
+                .map(|_| {
+                    let mut v: Vec<u32> = rng
+                        .sample_distinct(db.n_items, k)
+                        .into_iter()
+                        .map(|x| x as u32)
+                        .collect();
+                    v.sort_unstable();
+                    v
+                })
+                .collect();
+            cands.sort();
+            cands.dedup();
+            let tree = HashTree::build(&cands);
+            assert_eq!(
+                tree.count_all(&db.transactions),
+                naive_counts(&db, &cands),
+                "k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn leaf_split_with_many_candidates() {
+        // > LEAF_CAP candidates sharing hash paths forces interior splits.
+        let cands: Vec<Itemset> = (0..200u32).map(|i| vec![i, i + 200]).collect();
+        let tree = HashTree::build(&cands);
+        let tx = Transaction::new((0..400u32).collect::<Vec<_>>());
+        let counts = tree.count_all(std::slice::from_ref(&tx));
+        assert!(counts.iter().all(|&c| c == 1), "every pair contained once");
+    }
+
+    #[test]
+    fn short_transactions_skipped() {
+        let cands: Vec<Itemset> = vec![vec![0, 1, 2]];
+        let tree = HashTree::build(&cands);
+        let counts = tree.count_all(&[Transaction::new([0u32, 1])]);
+        assert_eq!(counts, vec![0]);
+    }
+
+    #[test]
+    fn empty_tree_counts_nothing() {
+        let tree = HashTree::build(&[]);
+        assert!(tree.is_empty());
+        let counts = tree.count_all(&[Transaction::new([1u32, 2])]);
+        assert!(counts.is_empty());
+    }
+
+    #[test]
+    fn duplicate_candidates_get_independent_slots() {
+        let cands: Vec<Itemset> = vec![vec![1, 2], vec![1, 2]];
+        let tree = HashTree::build(&cands);
+        let counts = tree.count_all(&[Transaction::new([0u32, 1, 2, 3])]);
+        assert_eq!(counts, vec![1, 1]);
+    }
+
+    #[test]
+    fn workspace_reuse_across_many_transactions() {
+        let db = QuestGenerator::new(QuestParams::dense(300)).generate();
+        let cands: Vec<Itemset> = (0..60u32).map(|i| vec![i]).collect();
+        let tree = HashTree::build(&cands);
+        // one shared workspace across the whole pass must equal per-tx fresh
+        let a = tree.count_all(&db.transactions);
+        let mut b = vec![0u64; cands.len()];
+        for t in &db.transactions {
+            let mut fresh = tree.workspace();
+            tree.count_transaction(t, &mut b, &mut fresh);
+        }
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,152 @@
+//! Apriori frequent-itemset mining: the paper's application layer.
+//!
+//! * level-wise candidate generation ([`candidates`]) — the F(k-1)⋈F(k-1)
+//!   join with subset pruning;
+//! * candidate matchers — [`hash_tree`] (Agrawal & Srikant's original
+//!   structure) and [`trie`] (prefix-tree alternative);
+//! * the Map/Reduce jobs ([`mr`]) the coordinator schedules per level;
+//! * single-machine baselines from the paper's related work [8]:
+//!   [`classical`], [`record_filter`], [`intersection`] (tidsets), plus
+//!   [`fp_growth`] as the stronger published comparator;
+//! * association-[`rules`] generation from the mined itemsets;
+//! * extensions: [`son`] (two-job partition/SON Map-Reduce Apriori) and
+//!   [`postprocess`] (closed/maximal itemset reduction).
+
+pub mod candidates;
+pub mod classical;
+pub mod fp_growth;
+pub mod hash_tree;
+pub mod intersection;
+pub mod mr;
+pub mod postprocess;
+pub mod record_filter;
+pub mod rules;
+pub mod son;
+pub mod trie;
+
+use crate::data::ItemId;
+
+/// A sorted, deduplicated itemset. Kept as a plain `Vec` — itemsets are
+/// short (k ≤ ~10) and the sort order is the canonical form every module
+/// relies on.
+pub type Itemset = Vec<ItemId>;
+
+/// Mining parameters shared by every algorithm in this crate.
+#[derive(Debug, Clone)]
+pub struct AprioriConfig {
+    /// Minimum support as a fraction of |D| (0, 1].
+    pub min_support: f64,
+    /// Stop after this level even if candidates remain (0 = unbounded).
+    pub max_k: usize,
+}
+
+impl Default for AprioriConfig {
+    fn default() -> Self {
+        Self { min_support: 0.01, max_k: 0 }
+    }
+}
+
+impl AprioriConfig {
+    /// Absolute support threshold for a database of `n_tx` transactions
+    /// (ceil, min 1 — an itemset must appear at least once).
+    pub fn threshold(&self, n_tx: usize) -> u64 {
+        ((self.min_support * n_tx as f64).ceil() as u64).max(1)
+    }
+
+    pub fn level_allowed(&self, k: usize) -> bool {
+        self.max_k == 0 || k <= self.max_k
+    }
+}
+
+/// Per-level execution record.
+#[derive(Debug, Clone, Default)]
+pub struct LevelStats {
+    pub k: usize,
+    pub n_candidates: usize,
+    pub n_frequent: usize,
+    /// Work units spent counting this level (tx·candidate probes).
+    pub work_units: f64,
+    pub wall_secs: f64,
+}
+
+/// The output of any miner: frequent itemsets with absolute supports,
+/// sorted by (len, lexicographic) — a canonical order every algorithm
+/// produces so results are directly comparable.
+#[derive(Debug, Clone, Default)]
+pub struct MiningResult {
+    pub frequent: Vec<(Itemset, u64)>,
+    pub levels: Vec<LevelStats>,
+    pub n_transactions: usize,
+}
+
+impl MiningResult {
+    /// Canonicalize ordering (miners call this before returning).
+    pub fn normalize(&mut self) {
+        self.frequent
+            .sort_by(|a, b| (a.0.len(), &a.0).cmp(&(b.0.len(), &b.0)));
+    }
+
+    /// Frequent itemsets of one size.
+    pub fn level(&self, k: usize) -> impl Iterator<Item = &(Itemset, u64)> {
+        self.frequent.iter().filter(move |(is, _)| is.len() == k)
+    }
+
+    /// Support lookup (linear scan; result sets are small).
+    pub fn support_of(&self, itemset: &[ItemId]) -> Option<u64> {
+        self.frequent
+            .iter()
+            .find(|(is, _)| is.as_slice() == itemset)
+            .map(|&(_, s)| s)
+    }
+
+    /// Total counting work across levels.
+    pub fn total_work(&self) -> f64 {
+        self.levels.iter().map(|l| l.work_units).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_math() {
+        let c = AprioriConfig { min_support: 0.1, max_k: 0 };
+        assert_eq!(c.threshold(100), 10);
+        assert_eq!(c.threshold(101), 11); // ceil
+        assert_eq!(c.threshold(5), 1);
+        let tiny = AprioriConfig { min_support: 0.0001, max_k: 0 };
+        assert_eq!(tiny.threshold(100), 1); // floor at 1
+    }
+
+    #[test]
+    fn level_gate() {
+        let unbounded = AprioriConfig::default();
+        assert!(unbounded.level_allowed(99));
+        let capped = AprioriConfig { max_k: 2, ..Default::default() };
+        assert!(capped.level_allowed(2));
+        assert!(!capped.level_allowed(3));
+    }
+
+    #[test]
+    fn result_normalize_and_lookup() {
+        let mut r = MiningResult {
+            frequent: vec![
+                (vec![1, 2], 5),
+                (vec![0], 9),
+                (vec![1], 7),
+                (vec![0, 1, 2], 2),
+            ],
+            levels: vec![],
+            n_transactions: 10,
+        };
+        r.normalize();
+        assert_eq!(r.frequent[0].0, vec![0]);
+        assert_eq!(r.frequent[2].0, vec![1, 2]);
+        assert_eq!(r.frequent[3].0, vec![0, 1, 2]);
+        assert_eq!(r.support_of(&[1, 2]), Some(5));
+        assert_eq!(r.support_of(&[9]), None);
+        assert_eq!(r.level(1).count(), 2);
+        assert_eq!(r.level(3).count(), 1);
+    }
+}

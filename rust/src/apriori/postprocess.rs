@@ -1,0 +1,171 @@
+//! Post-processing of mining results: **closed** and **maximal** frequent
+//! itemsets — the condensed representations downstream users usually want
+//! instead of the raw (exponentially redundant) frequent set.
+//!
+//! * closed: no proper superset has the *same* support;
+//! * maximal: no proper superset is frequent at all (maximal ⊆ closed).
+
+use std::collections::HashMap;
+
+use super::{Itemset, MiningResult};
+
+/// Is `a` a proper subset of `b` (both sorted)?
+fn proper_subset(a: &[u32], b: &[u32]) -> bool {
+    if a.len() >= b.len() {
+        return false;
+    }
+    let mut it = b.iter();
+    'outer: for want in a {
+        for have in it.by_ref() {
+            match have.cmp(want) {
+                std::cmp::Ordering::Equal => continue 'outer,
+                std::cmp::Ordering::Greater => return false,
+                std::cmp::Ordering::Less => {}
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Closed frequent itemsets: those with no proper superset of equal
+/// support. O(F²) pairwise check restricted to adjacent sizes by grouping
+/// (an itemset's closure witness can be found among supersets exactly one
+/// item larger, because support is monotone along the lattice).
+pub fn closed_itemsets(result: &MiningResult) -> Vec<(Itemset, u64)> {
+    let by_len = group_by_len(result);
+    result
+        .frequent
+        .iter()
+        .filter(|(is, sup)| {
+            let Some(next) = by_len.get(&(is.len() + 1)) else {
+                return true; // no supersets mined -> closed within the result
+            };
+            !next
+                .iter()
+                .any(|(sup2, is2)| *sup2 == *sup && proper_subset(is, is2))
+        })
+        .cloned()
+        .collect()
+}
+
+/// Maximal frequent itemsets: those with no frequent proper superset.
+pub fn maximal_itemsets(result: &MiningResult) -> Vec<(Itemset, u64)> {
+    let by_len = group_by_len(result);
+    result
+        .frequent
+        .iter()
+        .filter(|(is, _)| {
+            let Some(next) = by_len.get(&(is.len() + 1)) else {
+                return true;
+            };
+            !next.iter().any(|(_, is2)| proper_subset(is, is2))
+        })
+        .cloned()
+        .collect()
+}
+
+fn group_by_len(result: &MiningResult) -> HashMap<usize, Vec<(u64, &Itemset)>> {
+    let mut m: HashMap<usize, Vec<(u64, &Itemset)>> = HashMap::new();
+    for (is, sup) in &result.frequent {
+        m.entry(is.len()).or_default().push((*sup, is));
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::classical::{tests::textbook_db, ClassicalApriori};
+    use crate::apriori::AprioriConfig;
+    use crate::data::quest::{QuestGenerator, QuestParams};
+
+    fn mined() -> MiningResult {
+        ClassicalApriori::default().mine(
+            &textbook_db(),
+            &AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 },
+        )
+    }
+
+    #[test]
+    fn subset_check() {
+        assert!(proper_subset(&[1], &[1, 2]));
+        assert!(proper_subset(&[1, 3], &[1, 2, 3]));
+        assert!(!proper_subset(&[1, 2], &[1, 2]));
+        assert!(!proper_subset(&[1, 4], &[1, 2, 3]));
+        assert!(!proper_subset(&[2, 1], &[1]));
+        assert!(proper_subset(&[], &[1]));
+    }
+
+    #[test]
+    fn maximal_subset_of_closed_subset_of_frequent() {
+        let r = mined();
+        let closed = closed_itemsets(&r);
+        let maximal = maximal_itemsets(&r);
+        assert!(closed.len() <= r.frequent.len());
+        assert!(maximal.len() <= closed.len());
+        for m in &maximal {
+            assert!(closed.contains(m), "maximal {m:?} must be closed");
+        }
+    }
+
+    #[test]
+    fn textbook_maximal_sets() {
+        // Frequent: L3 = {012, 014}; L2 leftovers {13} (1,3 only in 13).
+        let r = mined();
+        let maximal: Vec<Itemset> = maximal_itemsets(&r).into_iter().map(|(is, _)| is).collect();
+        assert!(maximal.contains(&vec![0, 1, 2]));
+        assert!(maximal.contains(&vec![0, 1, 4]));
+        assert!(maximal.contains(&vec![1, 3]));
+        // items covered by L3 supersets must not be maximal
+        assert!(!maximal.contains(&vec![0, 1]));
+        assert!(!maximal.contains(&vec![0]));
+    }
+
+    #[test]
+    fn closed_preserves_support_information() {
+        // Every frequent itemset's support must be derivable as the max
+        // support over closed supersets (the closure property).
+        let r = mined();
+        let closed = closed_itemsets(&r);
+        for (is, sup) in &r.frequent {
+            let derived = closed
+                .iter()
+                .filter(|(c, _)| c.as_slice() == is.as_slice() || proper_subset(is, c))
+                .map(|&(_, s)| s)
+                .max();
+            assert_eq!(derived, Some(*sup), "closure failed for {is:?}");
+        }
+    }
+
+    #[test]
+    fn condensation_on_quest_data() {
+        let db = QuestGenerator::new(QuestParams::dense(250)).generate();
+        let cfg = AprioriConfig { min_support: 0.15, max_k: 0 };
+        let r = ClassicalApriori::default().mine(&db, &cfg);
+        let closed = closed_itemsets(&r);
+        let maximal = maximal_itemsets(&r);
+        assert!(
+            maximal.len() < r.frequent.len(),
+            "dense data must condense: {} maximal of {} frequent",
+            maximal.len(),
+            r.frequent.len()
+        );
+        // closure property holds at scale
+        for (is, sup) in &r.frequent {
+            let derived = closed
+                .iter()
+                .filter(|(c, _)| c.as_slice() == is.as_slice() || proper_subset(is, c))
+                .map(|&(_, s)| s)
+                .max();
+            assert_eq!(derived, Some(*sup));
+        }
+    }
+
+    #[test]
+    fn empty_result_stays_empty() {
+        let r = MiningResult::default();
+        assert!(closed_itemsets(&r).is_empty());
+        assert!(maximal_itemsets(&r).is_empty());
+    }
+}

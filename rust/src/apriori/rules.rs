@@ -1,0 +1,159 @@
+//! Association-rule generation from mined frequent itemsets — the KDD
+//! step the paper's Figure 1 pipeline ends with (interpretation).
+//!
+//! For every frequent itemset Z and non-empty proper subset A ⊂ Z, the
+//! rule A ⇒ (Z \ A) holds when confidence(A ⇒ B) = sup(Z)/sup(A) meets
+//! the threshold. Lift is reported for interpretation.
+
+use crate::data::ItemId;
+
+use super::{Itemset, MiningResult};
+
+/// One association rule A ⇒ B with its quality measures.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rule {
+    pub antecedent: Itemset,
+    pub consequent: Itemset,
+    /// Absolute support of A ∪ B.
+    pub support: u64,
+    /// sup(A∪B) / sup(A).
+    pub confidence: f64,
+    /// confidence / (sup(B)/|D|).
+    pub lift: f64,
+}
+
+/// Generate all rules meeting `min_confidence` from a mining result.
+/// Requires the result to contain every frequent subset (all miners in
+/// this crate guarantee that by downward closure).
+pub fn generate_rules(result: &MiningResult, min_confidence: f64) -> Vec<Rule> {
+    let n = result.n_transactions as f64;
+    let mut rules = Vec::new();
+    for (itemset, support) in result.frequent.iter().filter(|(is, _)| is.len() >= 2) {
+        // enumerate non-empty proper subsets as antecedents
+        let k = itemset.len();
+        for mask in 1..((1u32 << k) - 1) {
+            let antecedent: Itemset = (0..k)
+                .filter(|&i| mask & (1 << i) != 0)
+                .map(|i| itemset[i])
+                .collect();
+            let consequent: Itemset = (0..k)
+                .filter(|&i| mask & (1 << i) == 0)
+                .map(|i| itemset[i])
+                .collect();
+            let Some(sup_a) = result.support_of(&antecedent) else {
+                continue;
+            };
+            let confidence = *support as f64 / sup_a as f64;
+            if confidence + 1e-12 < min_confidence {
+                continue;
+            }
+            let lift = match result.support_of(&consequent) {
+                Some(sup_b) if sup_b > 0 && n > 0.0 => {
+                    confidence / (sup_b as f64 / n)
+                }
+                _ => f64::NAN,
+            };
+            rules.push(Rule {
+                antecedent,
+                consequent,
+                support: *support,
+                confidence,
+                lift,
+            });
+        }
+    }
+    // deterministic report order: by confidence desc, then antecedent
+    rules.sort_by(|a, b| {
+        b.confidence
+            .total_cmp(&a.confidence)
+            .then_with(|| a.antecedent.cmp(&b.antecedent))
+            .then_with(|| a.consequent.cmp(&b.consequent))
+    });
+    rules
+}
+
+/// Pretty-print a rule like `{0,1} => {4} (sup=2, conf=0.50, lift=2.25)`.
+pub fn format_rule(r: &Rule) -> String {
+    fn set(s: &[ItemId]) -> String {
+        let inner: Vec<String> = s.iter().map(|i| i.to_string()).collect();
+        format!("{{{}}}", inner.join(","))
+    }
+    format!(
+        "{} => {} (sup={}, conf={:.2}, lift={:.2})",
+        set(&r.antecedent),
+        set(&r.consequent),
+        r.support,
+        r.confidence,
+        r.lift
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::classical::{tests::textbook_db, ClassicalApriori};
+    use crate::apriori::AprioriConfig;
+
+    fn mined() -> MiningResult {
+        ClassicalApriori::default().mine(
+            &textbook_db(),
+            &AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 },
+        )
+    }
+
+    #[test]
+    fn textbook_rules_from_014() {
+        // {0,1,4} has sup 2; sup({0,4})=2 so {0,4}=>{1} has conf 1.0.
+        let rules = generate_rules(&mined(), 0.9);
+        assert!(rules.iter().any(|r| {
+            r.antecedent == vec![0, 4] && r.consequent == vec![1] && r.confidence == 1.0
+        }));
+        // all reported rules respect the threshold
+        assert!(rules.iter().all(|r| r.confidence >= 0.9));
+    }
+
+    #[test]
+    fn confidence_and_lift_math() {
+        let rules = generate_rules(&mined(), 0.0);
+        // {0} => {1}: sup(01)=4, sup(0)=6 -> conf 2/3; sup(1)=7, n=9
+        let r = rules
+            .iter()
+            .find(|r| r.antecedent == vec![0] && r.consequent == vec![1])
+            .unwrap();
+        assert!((r.confidence - 4.0 / 6.0).abs() < 1e-12);
+        assert!((r.lift - (4.0 / 6.0) / (7.0 / 9.0)).abs() < 1e-12);
+        assert_eq!(r.support, 4);
+    }
+
+    #[test]
+    fn rule_count_matches_subset_enumeration() {
+        // With min_confidence 0 every split of every frequent k>=2 itemset
+        // appears: sum over itemsets of (2^k - 2).
+        let m = mined();
+        let expected: usize = m
+            .frequent
+            .iter()
+            .filter(|(is, _)| is.len() >= 2)
+            .map(|(is, _)| (1usize << is.len()) - 2)
+            .sum();
+        assert_eq!(generate_rules(&m, 0.0).len(), expected);
+    }
+
+    #[test]
+    fn empty_result_no_rules() {
+        let empty = MiningResult::default();
+        assert!(generate_rules(&empty, 0.5).is_empty());
+    }
+
+    #[test]
+    fn formatting() {
+        let r = Rule {
+            antecedent: vec![0, 1],
+            consequent: vec![4],
+            support: 2,
+            confidence: 0.5,
+            lift: 2.25,
+        };
+        assert_eq!(format_rule(&r), "{0,1} => {4} (sup=2, conf=0.50, lift=2.25)");
+    }
+}

@@ -1,0 +1,160 @@
+//! Candidate prefix trie — the hash tree's main competitor in the Apriori
+//! literature (Bodon's trie-based Apriori). Candidates of one level are
+//! stored edge-per-item; counting walks transaction items down shared
+//! prefixes, so common prefixes are probed once per transaction instead of
+//! once per candidate.
+
+use std::collections::BTreeMap;
+
+use crate::data::{ItemId, Transaction};
+
+use super::Itemset;
+
+#[derive(Default)]
+struct TrieNode {
+    children: BTreeMap<ItemId, TrieNode>,
+    /// Candidate index if a candidate ends here.
+    terminal: Option<usize>,
+}
+
+/// Prefix trie over one level's candidates.
+pub struct CandidateTrie {
+    root: TrieNode,
+    k: usize,
+    n_candidates: usize,
+}
+
+impl CandidateTrie {
+    pub fn build(candidates: &[Itemset]) -> Self {
+        let k = candidates.first().map(|c| c.len()).unwrap_or(0);
+        assert!(
+            candidates.iter().all(|c| c.len() == k),
+            "trie requires uniform candidate length (engine::count_grouped handles mixing)"
+        );
+        let mut root = TrieNode::default();
+        for (idx, cand) in candidates.iter().enumerate() {
+            let mut node = &mut root;
+            for &item in cand {
+                node = node.children.entry(item).or_default();
+            }
+            debug_assert!(node.terminal.is_none(), "duplicate candidate {cand:?}");
+            node.terminal = Some(idx);
+        }
+        Self { root, k, n_candidates: candidates.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_candidates
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_candidates == 0
+    }
+
+    /// Increment `counts[i]` for every candidate `i` ⊆ `tx`.
+    pub fn count_transaction(&self, tx: &Transaction, counts: &mut [u64]) {
+        if self.k == 0 || tx.items.len() < self.k {
+            return;
+        }
+        descend(&self.root, &tx.items, self.k, counts);
+    }
+
+    pub fn count_all(&self, txs: &[Transaction]) -> Vec<u64> {
+        let mut counts = vec![0u64; self.n_candidates];
+        for t in txs {
+            self.count_transaction(t, &mut counts);
+        }
+        counts
+    }
+}
+
+fn descend(node: &TrieNode, items: &[ItemId], remaining: usize, counts: &mut [u64]) {
+    if remaining == 0 {
+        if let Some(idx) = node.terminal {
+            counts[idx] += 1;
+        }
+        return;
+    }
+    if items.len() < remaining {
+        return; // not enough items left to complete a candidate
+    }
+    // Sorted invariant on both sides: children are BTreeMap-ordered and
+    // transaction items ascend, so each child is matched at most once.
+    let last_start = items.len() - remaining;
+    for (i, &item) in items[..=last_start].iter().enumerate() {
+        if let Some(child) = node.children.get(&item) {
+            descend(child, &items[i + 1..], remaining - 1, counts);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::hash_tree::HashTree;
+    use crate::data::quest::{QuestGenerator, QuestParams};
+    use crate::data::TransactionDb;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn tiny_handchecked() {
+        let db = TransactionDb::new(vec![
+            Transaction::new([0u32, 1, 2]),
+            Transaction::new([0u32, 2]),
+            Transaction::new([1u32, 2]),
+        ]);
+        let cands: Vec<Itemset> = vec![vec![0, 1], vec![0, 2], vec![1, 2]];
+        let trie = CandidateTrie::build(&cands);
+        assert_eq!(trie.count_all(&db.transactions), vec![1, 2, 2]);
+    }
+
+    #[test]
+    fn agrees_with_hash_tree_and_naive() {
+        let db = QuestGenerator::new(QuestParams::dense(300)).generate();
+        let mut rng = Xoshiro256::seed_from_u64(33);
+        for k in [1usize, 2, 3, 5] {
+            let mut cands: Vec<Itemset> = (0..250)
+                .map(|_| {
+                    let mut v: Vec<u32> = rng
+                        .sample_distinct(db.n_items, k)
+                        .into_iter()
+                        .map(|x| x as u32)
+                        .collect();
+                    v.sort_unstable();
+                    v
+                })
+                .collect();
+            cands.sort();
+            cands.dedup();
+            let trie = CandidateTrie::build(&cands);
+            let tree = HashTree::build(&cands);
+            let naive: Vec<u64> = cands.iter().map(|c| db.support(c) as u64).collect();
+            assert_eq!(trie.count_all(&db.transactions), naive, "trie k={k}");
+            assert_eq!(tree.count_all(&db.transactions), naive, "tree k={k}");
+        }
+    }
+
+    #[test]
+    fn empty_and_short() {
+        let trie = CandidateTrie::build(&[]);
+        assert!(trie.is_empty());
+        assert!(trie.count_all(&[Transaction::new([1u32])]).is_empty());
+
+        let trie = CandidateTrie::build(&[vec![3, 4, 5]]);
+        let mut counts = vec![0u64];
+        trie.count_transaction(&Transaction::new([3u32, 4]), &mut counts);
+        assert_eq!(counts[0], 0);
+    }
+
+    #[test]
+    fn k1_counts_items() {
+        let cands: Vec<Itemset> = vec![vec![0], vec![2]];
+        let trie = CandidateTrie::build(&cands);
+        let txs = [
+            Transaction::new([0u32, 1]),
+            Transaction::new([2u32]),
+            Transaction::new([0u32, 2]),
+        ];
+        assert_eq!(trie.count_all(&txs), vec![2, 2]);
+    }
+}

@@ -1,0 +1,315 @@
+//! Simulated cluster substrate: node hardware profiles and deployment
+//! modes standing in for the paper's physical testbed (three Intel Core2
+//! Duo boxes with 80 GB disks on a managed switch).
+//!
+//! The paper's two headline comparisons are *hardware-shape* experiments:
+//!
+//! * **FHSSC** — "fully-configured similar system configuration": every
+//!   node identical (the paper's actual testbed).
+//! * **FHDSC** — "fully-configured differential system configuration":
+//!   heterogeneous nodes, which the paper reports as uniformly slower.
+//!
+//! `NodeProfile` carries the knobs the cost model consumes (relative CPU
+//! speed, disk and NIC bandwidth, storage capacity); presets reproduce the
+//! 2006-era hardware ratios the paper implies.
+
+use crate::simnet::SwitchConfig;
+
+/// Node identifier within a cluster (0 = master/namenode, like the paper's
+/// `master` host; workers are `slave1..`).
+pub type NodeId = usize;
+
+/// Hardware profile of one node — the inputs to the discrete-event cost
+/// model (`mapreduce::sim`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeProfile {
+    /// Human-readable name for reports.
+    pub name: String,
+    /// Relative CPU speed; 1.0 = the reference Core2 Duo E-series.
+    pub cpu_factor: f64,
+    /// Sequential disk bandwidth (MB/s) — HDFS block reads/writes.
+    pub disk_mbps: f64,
+    /// NIC bandwidth (Mbit/s) — shuffle and replication traffic.
+    pub nic_mbps: f64,
+    /// Map/reduce task slots (Hadoop default: one per core).
+    pub slots: usize,
+    /// Local storage capacity in bytes (the paper's 80 GB/node cap is the
+    /// cause of its fig-5 knee; benches scale this down proportionally).
+    pub storage_bytes: u64,
+}
+
+impl NodeProfile {
+    /// The paper's testbed node: Intel Core2 Duo, SATA disk, GigE, 80 GB.
+    pub fn core2_duo() -> Self {
+        Self {
+            name: "core2duo".into(),
+            cpu_factor: 1.0,
+            disk_mbps: 60.0,
+            nic_mbps: 1000.0,
+            slots: 2,
+            storage_bytes: 80 * 1_000_000_000,
+        }
+    }
+
+    /// A slower, older box (differential configs mix these in).
+    pub fn pentium4() -> Self {
+        Self {
+            name: "pentium4".into(),
+            cpu_factor: 0.45,
+            disk_mbps: 35.0,
+            nic_mbps: 100.0,
+            slots: 1,
+            storage_bytes: 40 * 1_000_000_000,
+        }
+    }
+
+    /// A faster contemporary box.
+    pub fn xeon() -> Self {
+        Self {
+            name: "xeon".into(),
+            cpu_factor: 1.8,
+            disk_mbps: 90.0,
+            nic_mbps: 1000.0,
+            slots: 4,
+            storage_bytes: 160 * 1_000_000_000,
+        }
+    }
+
+    /// Scale storage capacity (benches shrink the 80 GB cap so the fig-5
+    /// knee appears at laptop-scale transaction volumes).
+    pub fn with_storage(mut self, bytes: u64) -> Self {
+        self.storage_bytes = bytes;
+        self
+    }
+
+    pub fn with_slots(mut self, slots: usize) -> Self {
+        assert!(slots > 0);
+        self.slots = slots;
+        self
+    }
+
+    pub fn with_cpu_factor(mut self, f: f64) -> Self {
+        assert!(f > 0.0);
+        self.cpu_factor = f;
+        self
+    }
+}
+
+/// Deployment mode, matching §3.1 of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeployMode {
+    /// Plain single-process execution, no Hadoop daemons at all.
+    Standalone,
+    /// Pseudo-distributed: all daemons on one box — full MR machinery
+    /// (shuffle, task scheduling) but no parallel hardware and extra
+    /// framework overhead.
+    PseudoDistributed,
+    /// Fully-distributed over N nodes.
+    FullyDistributed,
+}
+
+/// Cluster description: profiles + interconnect + deployment mode.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub nodes: Vec<NodeProfile>,
+    pub switch: SwitchConfig,
+    pub mode: DeployMode,
+    /// HDFS replication factor (Hadoop default 3, capped at cluster size).
+    pub replication: usize,
+    /// Rack id per node. The paper's testbed is one managed switch (a
+    /// single rack); multi-rack layouts enable Hadoop's rack-aware
+    /// placement in `dfs` and the oversubscribed-uplink model in `simnet`.
+    pub rack_of: Vec<usize>,
+}
+
+impl ClusterConfig {
+    /// Standalone single node (the paper's "standalone PC" series).
+    pub fn standalone() -> Self {
+        Self {
+            nodes: vec![NodeProfile::core2_duo()],
+            switch: SwitchConfig::loopback(),
+            mode: DeployMode::Standalone,
+            replication: 1,
+            rack_of: vec![0],
+        }
+    }
+
+    /// Pseudo-distributed single node (paper §3.1.1.1).
+    pub fn pseudo_distributed() -> Self {
+        Self {
+            nodes: vec![NodeProfile::core2_duo()],
+            switch: SwitchConfig::loopback(),
+            mode: DeployMode::PseudoDistributed,
+            replication: 1,
+            rack_of: vec![0],
+        }
+    }
+
+    /// FHSSC: N identical Core2 Duo nodes on the managed switch — the
+    /// paper's homogeneous configuration.
+    pub fn fhssc(n: usize) -> Self {
+        assert!(n >= 1);
+        Self {
+            nodes: vec![NodeProfile::core2_duo(); n],
+            switch: SwitchConfig::managed_gige(),
+            mode: DeployMode::FullyDistributed,
+            replication: 3.min(n),
+            rack_of: vec![0; n],
+        }
+    }
+
+    /// FHDSC: N nodes of *differential* configuration — a mix of slow
+    /// Pentium-4-class, reference Core2, and faster Xeon-class boxes in a
+    /// repeating pattern biased toward the slow end (the paper reports
+    /// FHDSC >= FHSSC, i.e. stragglers dominate).
+    pub fn fhdsc(n: usize) -> Self {
+        assert!(n >= 1);
+        let nodes = (0..n)
+            .map(|i| match i % 5 {
+                0 | 2 => NodeProfile::pentium4(),
+                4 => NodeProfile::xeon(),
+                _ => NodeProfile::core2_duo(),
+            })
+            .collect();
+        Self {
+            nodes,
+            switch: SwitchConfig::managed_mixed(),
+            mode: DeployMode::FullyDistributed,
+            replication: 3.min(n),
+            rack_of: vec![0; n],
+        }
+    }
+
+    /// Spread nodes round-robin across `n_racks` racks (Hadoop-style
+    /// multi-rack layout; enables rack-aware placement + uplink modelling).
+    pub fn with_racks(mut self, n_racks: usize) -> Self {
+        assert!(n_racks >= 1);
+        self.rack_of = (0..self.nodes.len()).map(|i| i % n_racks).collect();
+        self
+    }
+
+    /// Number of distinct racks.
+    pub fn n_racks(&self) -> usize {
+        self.rack_of.iter().copied().max().unwrap_or(0) + 1
+    }
+
+    /// Uniformly scale every node's storage (fig-5 knee calibration).
+    pub fn with_storage_per_node(mut self, bytes: u64) -> Self {
+        for n in &mut self.nodes {
+            n.storage_bytes = bytes;
+        }
+        self
+    }
+
+    pub fn with_replication(mut self, r: usize) -> Self {
+        assert!(r >= 1);
+        self.replication = r.min(self.nodes.len());
+        self
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Total map/reduce slots across the cluster.
+    pub fn total_slots(&self) -> usize {
+        self.nodes.iter().map(|n| n.slots).sum()
+    }
+
+    /// Aggregate storage capacity in bytes.
+    pub fn total_storage(&self) -> u64 {
+        self.nodes.iter().map(|n| n.storage_bytes).sum()
+    }
+
+    /// Harmonic-mean CPU factor — the effective per-slot speed when work is
+    /// spread evenly, which is what makes FHDSC slower than FHSSC even at
+    /// equal node counts (stragglers gate the wave).
+    pub fn harmonic_cpu(&self) -> f64 {
+        let s: f64 = self.nodes.iter().map(|n| 1.0 / n.cpu_factor).sum();
+        self.nodes.len() as f64 / s
+    }
+
+    /// Slowest node's CPU factor (wave makespan is gated by it).
+    pub fn min_cpu(&self) -> f64 {
+        self.nodes
+            .iter()
+            .map(|n| n.cpu_factor)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_shape() {
+        let s = ClusterConfig::standalone();
+        assert_eq!(s.n_nodes(), 1);
+        assert_eq!(s.mode, DeployMode::Standalone);
+
+        let p = ClusterConfig::pseudo_distributed();
+        assert_eq!(p.mode, DeployMode::PseudoDistributed);
+
+        let f = ClusterConfig::fhssc(3);
+        assert_eq!(f.n_nodes(), 3);
+        assert_eq!(f.replication, 3);
+        assert!(f.nodes.iter().all(|n| n.name == "core2duo"));
+
+        let d = ClusterConfig::fhdsc(5);
+        assert_eq!(d.n_nodes(), 5);
+        let names: Vec<_> = d.nodes.iter().map(|n| n.name.as_str()).collect();
+        assert!(names.contains(&"pentium4"));
+        assert!(names.contains(&"xeon"));
+    }
+
+    #[test]
+    fn replication_capped_at_cluster_size() {
+        assert_eq!(ClusterConfig::fhssc(2).replication, 2);
+        assert_eq!(ClusterConfig::fhssc(8).replication, 3);
+        assert_eq!(ClusterConfig::fhssc(8).with_replication(5).replication, 5);
+        assert_eq!(ClusterConfig::fhssc(2).with_replication(5).replication, 2);
+    }
+
+    #[test]
+    fn fhdsc_is_slower_in_aggregate() {
+        for n in [2, 3, 5, 8, 16] {
+            let hom = ClusterConfig::fhssc(n);
+            let het = ClusterConfig::fhdsc(n);
+            assert!(
+                het.harmonic_cpu() < hom.harmonic_cpu(),
+                "n={n}: heterogeneous harmonic cpu {} should trail {}",
+                het.harmonic_cpu(),
+                hom.harmonic_cpu()
+            );
+            assert!(het.min_cpu() < hom.min_cpu());
+        }
+    }
+
+    #[test]
+    fn storage_scaling() {
+        let c = ClusterConfig::fhssc(3).with_storage_per_node(1_000_000);
+        assert_eq!(c.total_storage(), 3_000_000);
+        assert_eq!(NodeProfile::core2_duo().with_storage(42).storage_bytes, 42);
+    }
+
+    #[test]
+    fn slot_accounting() {
+        assert_eq!(ClusterConfig::fhssc(3).total_slots(), 6);
+        assert!(ClusterConfig::fhdsc(5).total_slots() < 20); // p4s drag it down
+    }
+
+    #[test]
+    fn rack_layout() {
+        let c = ClusterConfig::fhssc(6).with_racks(2);
+        assert_eq!(c.rack_of, vec![0, 1, 0, 1, 0, 1]);
+        assert_eq!(c.n_racks(), 2);
+        assert_eq!(ClusterConfig::fhssc(3).n_racks(), 1);
+    }
+
+    #[test]
+    fn harmonic_mean_identical_nodes_is_identity() {
+        let c = ClusterConfig::fhssc(4);
+        assert!((c.harmonic_cpu() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,273 @@
+//! Experiment configuration: presets matching the paper's deployments and
+//! a minimal TOML-subset loader (`key = value` scalars + comments) so runs
+//! are reproducible from checked-in files. In-tree because the offline
+//! crate set has no toml/serde (DESIGN.md §Substitutions).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::apriori::AprioriConfig;
+use crate::cluster::ClusterConfig;
+use crate::engine::EngineKind;
+use crate::mapreduce::JobConfig;
+
+/// Deployment preset (paper §3.1 + fig 4/5 series).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Preset {
+    Standalone,
+    Pseudo,
+    #[default]
+    Fhssc,
+    Fhdsc,
+}
+
+impl std::str::FromStr for Preset {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "standalone" => Ok(Self::Standalone),
+            "pseudo" | "pseudo-distributed" => Ok(Self::Pseudo),
+            "fhssc" => Ok(Self::Fhssc),
+            "fhdsc" => Ok(Self::Fhdsc),
+            other => Err(format!(
+                "unknown preset '{other}' (want standalone|pseudo|fhssc|fhdsc)"
+            )),
+        }
+    }
+}
+
+/// Everything one experiment run needs.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub preset: Preset,
+    /// Cluster size for fhssc/fhdsc presets.
+    pub nodes: usize,
+    pub apriori: AprioriConfig,
+    pub engine: EngineKind,
+    /// Transactions per map split.
+    pub split_tx: usize,
+    pub job: JobConfig,
+    /// Workload: transactions to generate (Quest T10.I4) when no input
+    /// file is given.
+    pub transactions: usize,
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            preset: Preset::Fhssc,
+            nodes: 3,
+            apriori: AprioriConfig::default(),
+            engine: EngineKind::HashTree,
+            split_tx: 1000,
+            job: JobConfig { n_reducers: 3, ..Default::default() },
+            transactions: 10_000,
+            seed: 0xACE5_2012,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("key '{key}': {msg}")]
+    BadValue { key: String, msg: String },
+}
+
+impl ExperimentConfig {
+    /// Instantiate the cluster for this config.
+    pub fn cluster(&self) -> ClusterConfig {
+        match self.preset {
+            Preset::Standalone => ClusterConfig::standalone(),
+            Preset::Pseudo => ClusterConfig::pseudo_distributed(),
+            Preset::Fhssc => ClusterConfig::fhssc(self.nodes),
+            Preset::Fhdsc => ClusterConfig::fhdsc(self.nodes),
+        }
+    }
+
+    /// Load a `key = value` TOML-subset file. Unknown keys error (typos
+    /// should fail loudly in experiment configs).
+    pub fn load(path: &Path) -> Result<Self, ConfigError> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let kv = parse_kv(text)?;
+        let mut cfg = Self::default();
+        for (key, value) in &kv {
+            let bad = |msg: &str| ConfigError::BadValue {
+                key: key.clone(),
+                msg: msg.to_string(),
+            };
+            match key.as_str() {
+                "preset" => {
+                    cfg.preset = value.parse().map_err(|e: String| bad(&e))?;
+                }
+                "nodes" => {
+                    cfg.nodes = value.parse().map_err(|_| bad("want integer"))?;
+                    if cfg.nodes == 0 {
+                        return Err(bad("must be >= 1"));
+                    }
+                }
+                "min_support" => {
+                    let v: f64 = value.parse().map_err(|_| bad("want float"))?;
+                    if !(0.0..=1.0).contains(&v) || v == 0.0 {
+                        return Err(bad("must be in (0, 1]"));
+                    }
+                    cfg.apriori.min_support = v;
+                }
+                "max_k" => {
+                    cfg.apriori.max_k = value.parse().map_err(|_| bad("want integer"))?;
+                }
+                "engine" => {
+                    cfg.engine = value.parse().map_err(|e: String| bad(&e))?;
+                }
+                "split_tx" => {
+                    cfg.split_tx = value.parse().map_err(|_| bad("want integer"))?;
+                    if cfg.split_tx == 0 {
+                        return Err(bad("must be >= 1"));
+                    }
+                }
+                "n_reducers" => {
+                    cfg.job.n_reducers = value.parse().map_err(|_| bad("want integer"))?;
+                }
+                "combiner" => {
+                    cfg.job.enable_combiner =
+                        value.parse().map_err(|_| bad("want true|false"))?;
+                }
+                "speculative" => {
+                    cfg.job.speculative = value.parse().map_err(|_| bad("want true|false"))?;
+                }
+                "transactions" => {
+                    cfg.transactions = value.parse().map_err(|_| bad("want integer"))?;
+                }
+                "seed" => {
+                    cfg.seed = value.parse().map_err(|_| bad("want integer"))?;
+                }
+                other => {
+                    return Err(ConfigError::BadValue {
+                        key: other.to_string(),
+                        msg: "unknown key".into(),
+                    })
+                }
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// `key = value` lines; `#` comments; quoted or bare strings.
+fn parse_kv(text: &str) -> Result<BTreeMap<String, String>, ConfigError> {
+    let mut out = BTreeMap::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            return Err(ConfigError::Parse {
+                line: i + 1,
+                msg: format!("expected 'key = value', got '{line}'"),
+            });
+        };
+        let key = k.trim().to_string();
+        let mut value = v.trim().to_string();
+        if value.len() >= 2 && value.starts_with('"') && value.ends_with('"') {
+            value = value[1..value.len() - 1].to_string();
+        }
+        if key.is_empty() || value.is_empty() {
+            return Err(ConfigError::Parse {
+                line: i + 1,
+                msg: "empty key or value".into(),
+            });
+        }
+        out.insert(key, value);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DeployMode;
+
+    #[test]
+    fn default_roundtrip_presets() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.cluster().mode, DeployMode::FullyDistributed);
+        assert_eq!(c.cluster().n_nodes(), 3);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+            # fig-5 style run
+            preset = "fhdsc"
+            nodes = 5
+            min_support = 0.02
+            max_k = 3
+            engine = "tensor"
+            split_tx = 500
+            n_reducers = 4
+            combiner = false
+            speculative = true
+            transactions = 12000
+            seed = 42
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.preset, Preset::Fhdsc);
+        assert_eq!(cfg.nodes, 5);
+        assert_eq!(cfg.apriori.min_support, 0.02);
+        assert_eq!(cfg.apriori.max_k, 3);
+        assert_eq!(cfg.engine, crate::engine::EngineKind::Tensor);
+        assert_eq!(cfg.split_tx, 500);
+        assert_eq!(cfg.job.n_reducers, 4);
+        assert!(!cfg.job.enable_combiner);
+        assert!(cfg.job.speculative);
+        assert_eq!(cfg.transactions, 12000);
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.cluster().n_nodes(), 5);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = ExperimentConfig::parse("bogus = 1").unwrap_err();
+        assert!(matches!(err, ConfigError::BadValue { key, .. } if key == "bogus"));
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(ExperimentConfig::parse("min_support = 0").is_err());
+        assert!(ExperimentConfig::parse("min_support = 1.5").is_err());
+        assert!(ExperimentConfig::parse("nodes = 0").is_err());
+        assert!(ExperimentConfig::parse("split_tx = 0").is_err());
+        assert!(ExperimentConfig::parse("preset = \"mesh\"").is_err());
+        assert!(ExperimentConfig::parse("engine = gpu").is_err());
+        assert!(ExperimentConfig::parse("just a line").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let cfg = ExperimentConfig::parse("# only comments\n\n  \nnodes = 2 # inline\n").unwrap();
+        assert_eq!(cfg.nodes, 2);
+    }
+
+    #[test]
+    fn preset_parse_all() {
+        for (s, p) in [
+            ("standalone", Preset::Standalone),
+            ("pseudo", Preset::Pseudo),
+            ("fhssc", Preset::Fhssc),
+            ("fhdsc", Preset::Fhdsc),
+        ] {
+            assert_eq!(s.parse::<Preset>().unwrap(), p);
+        }
+    }
+}

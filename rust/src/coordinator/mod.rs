@@ -1,0 +1,388 @@
+//! The leader: plans the level-wise Apriori loop as a sequence of
+//! MapReduce jobs, routes splits through the DFS, aggregates counts, and
+//! records everything the benches need to replay the run against any
+//! simulated cluster (the paper's fig 4/5 methodology).
+//!
+//! Responsibilities, mirroring the paper's Hadoop master:
+//! * write the dataset into the DFS (block placement + replication);
+//! * per level k: broadcast the candidate set, run the counting job,
+//!   filter by min-support, generate the next level's candidates;
+//! * collect [`JobStats`] and produce a [`WorkloadProfile`] — the per-level
+//!   cost summary [`simulate`] uses to predict the same workload's makespan
+//!   on a different cluster shape without re-mining.
+
+use std::time::Instant;
+
+use crate::apriori::mr::{CandidateCountApp, ItemCountApp};
+use crate::apriori::{candidates, AprioriConfig, Itemset, LevelStats, MiningResult};
+use crate::cluster::ClusterConfig;
+use crate::data::split::{plan_splits, Split};
+use crate::data::TransactionDb;
+use crate::dfs::{Dfs, DfsError};
+use crate::engine::{EngineKind, SupportEngine};
+use crate::mapreduce::app::MapReduceApp;
+use crate::mapreduce::{
+    JobConfig, JobError, JobRunner, JobStats, SimJobSpec, SimMapTask, SimReport, Simulator,
+};
+
+#[derive(Debug, thiserror::Error)]
+pub enum MineError {
+    #[error("dfs: {0}")]
+    Dfs(#[from] DfsError),
+    #[error("job: {0}")]
+    Job(#[from] JobError),
+}
+
+/// Per-level cost summary — everything the simulator needs, nothing more.
+#[derive(Debug, Clone)]
+pub struct LevelProfile {
+    pub k: usize,
+    pub n_candidates: usize,
+    pub n_frequent: usize,
+    /// Map compute per transaction (work units).
+    pub work_per_tx: f64,
+    /// Shuffle bytes emitted per map task (post-combiner).
+    pub shuffle_bytes_per_map: u64,
+    /// Reduce compute (work units, total).
+    pub reduce_work: f64,
+}
+
+/// A mined workload's replayable cost profile.
+#[derive(Debug, Clone)]
+pub struct WorkloadProfile {
+    pub n_tx: usize,
+    pub db_bytes: usize,
+    pub levels: Vec<LevelProfile>,
+}
+
+/// Everything one coordinated run produces.
+#[derive(Debug)]
+pub struct RunReport {
+    pub result: MiningResult,
+    /// JobStats per level (k, stats).
+    pub jobs: Vec<(usize, JobStats)>,
+    pub profile: WorkloadProfile,
+    pub wall_secs: f64,
+    /// Fraction of DFS blocks placed past node capacity.
+    pub spill_fraction: f64,
+}
+
+/// The Map/Reduce Apriori driver.
+pub struct MrApriori {
+    pub cluster: ClusterConfig,
+    pub apriori: AprioriConfig,
+    pub job: JobConfig,
+    /// Transactions per map split (HDFS block granularity).
+    pub split_tx: usize,
+    engine: Box<dyn SupportEngine>,
+}
+
+impl MrApriori {
+    /// Driver with the default hash-tree engine.
+    pub fn new(cluster: ClusterConfig, apriori: AprioriConfig) -> Self {
+        Self {
+            cluster,
+            apriori,
+            job: JobConfig { n_reducers: 3, ..Default::default() },
+            split_tx: 1000,
+            // Trie is the measured-fastest CPU matcher on every A1 width
+            // (EXPERIMENTS.md §Perf); hash-tree/naive/tensor via with_engine.
+            engine: crate::engine::build_engine(EngineKind::Trie, None),
+        }
+    }
+
+    pub fn with_engine(mut self, engine: Box<dyn SupportEngine>) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn with_job(mut self, job: JobConfig) -> Self {
+        self.job = job;
+        self
+    }
+
+    pub fn with_split_tx(mut self, split_tx: usize) -> Self {
+        assert!(split_tx > 0);
+        self.split_tx = split_tx;
+        self
+    }
+
+    /// Mine `db`: real multi-threaded MapReduce execution.
+    pub fn mine(&self, db: &TransactionDb) -> Result<RunReport, MineError> {
+        let t0 = Instant::now();
+        let threshold = self.apriori.threshold(db.len());
+        let splits = plan_splits(db, self.split_tx);
+        let mut dfs = Dfs::new(&self.cluster);
+        let blocks = dfs.write_splits(&splits)?;
+        let runner = JobRunner::new(&self.cluster, &dfs, &blocks);
+
+        let mut result = MiningResult {
+            n_transactions: db.len(),
+            ..Default::default()
+        };
+        let mut jobs = Vec::new();
+        let mut profiles = Vec::new();
+
+        // ---- level 1 ----
+        let app = ItemCountApp { threshold };
+        let lt0 = Instant::now();
+        let (f1, stats) = runner.run(&app, db, &splits, &self.job)?;
+        push_level(
+            &mut result,
+            &mut profiles,
+            1,
+            db.n_items,
+            &f1,
+            &stats,
+            app.map_cost_hint(avg_split(&splits)),
+            app.record_bytes_hint(),
+            lt0.elapsed().as_secs_f64(),
+        );
+        jobs.push((1, stats));
+        let mut frequent_prev: Vec<Itemset> = f1.iter().map(|(is, _)| is.clone()).collect();
+        result.frequent.extend(f1);
+
+        // ---- levels k >= 2 ----
+        let mut k = 2usize;
+        while !frequent_prev.is_empty() && self.apriori.level_allowed(k) {
+            let cands = candidates::generate(&frequent_prev);
+            if cands.is_empty() {
+                break;
+            }
+            let app = CandidateCountApp {
+                candidates: cands.clone(),
+                engine: self.engine.as_ref(),
+                n_items: db.n_items,
+                threshold,
+            };
+            let lt0 = Instant::now();
+            let (fk, stats) = runner.run(&app, db, &splits, &self.job)?;
+            push_level(
+                &mut result,
+                &mut profiles,
+                k,
+                cands.len(),
+                &fk,
+                &stats,
+                app.map_cost_hint(avg_split(&splits)),
+                app.record_bytes_hint(),
+                lt0.elapsed().as_secs_f64(),
+            );
+            jobs.push((k, stats));
+            frequent_prev = fk.iter().map(|(is, _)| is.clone()).collect();
+            result.frequent.extend(fk);
+            k += 1;
+        }
+        result.normalize();
+
+        Ok(RunReport {
+            result,
+            jobs,
+            profile: WorkloadProfile {
+                n_tx: db.len(),
+                db_bytes: db.approx_bytes(),
+                levels: profiles,
+            },
+            wall_secs: t0.elapsed().as_secs_f64(),
+            spill_fraction: dfs.spill_fraction(),
+        })
+    }
+}
+
+fn avg_split(splits: &[Split]) -> usize {
+    if splits.is_empty() {
+        return 0;
+    }
+    splits.iter().map(|s| s.len()).sum::<usize>() / splits.len()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_level(
+    result: &mut MiningResult,
+    profiles: &mut Vec<LevelProfile>,
+    k: usize,
+    n_candidates: usize,
+    frequent: &[(Itemset, u64)],
+    stats: &JobStats,
+    work_per_map: f64,
+    record_bytes: usize,
+    wall_secs: f64,
+) {
+    let n_maps = stats.maps_total.max(1);
+    result.levels.push(LevelStats {
+        k,
+        n_candidates,
+        n_frequent: frequent.len(),
+        work_units: work_per_map * n_maps as f64,
+        wall_secs,
+    });
+    profiles.push(LevelProfile {
+        k,
+        n_candidates,
+        n_frequent: frequent.len(),
+        work_per_tx: if n_candidates == 0 { 1.0 } else { n_candidates as f64 },
+        shuffle_bytes_per_map: (stats.shuffle_records * record_bytes / n_maps) as u64,
+        reduce_work: stats.shuffle_records as f64,
+    });
+}
+
+/// Replay a mined workload's cost profile on an arbitrary cluster shape —
+/// the fig 4/5 methodology: mine once, predict everywhere. Deterministic.
+pub fn simulate(
+    cluster: &ClusterConfig,
+    profile: &WorkloadProfile,
+    split_tx: usize,
+    job: &JobConfig,
+) -> SimReport {
+    // Re-plan placement for this cluster (same logic as the real path).
+    let n_splits = profile.n_tx.div_ceil(split_tx).max(1);
+    let bytes_per_split = (profile.db_bytes / n_splits.max(1)) as u64;
+    let mut dfs = Dfs::new(cluster);
+    let pseudo_splits: Vec<Split> = (0..n_splits)
+        .map(|i| Split {
+            id: i,
+            start: i * split_tx,
+            end: ((i + 1) * split_tx).min(profile.n_tx),
+            bytes: bytes_per_split as usize,
+        })
+        .collect();
+    let blocks = dfs
+        .write_splits(&pseudo_splits)
+        .expect("placement on simulated cluster");
+
+    let tx_per_split = (profile.n_tx as f64 / n_splits as f64).max(1.0);
+    let specs: Vec<SimJobSpec> = profile
+        .levels
+        .iter()
+        .map(|level| SimJobSpec {
+            map_tasks: blocks
+                .iter()
+                .map(|&b| {
+                    let meta = dfs.meta(b).expect("block meta");
+                    SimMapTask {
+                        bytes: meta.bytes,
+                        work: level.work_per_tx * tx_per_split,
+                        replicas: meta.replicas.clone(),
+                        spilled: meta.spilled,
+                    }
+                })
+                .collect(),
+            n_reducers: job.n_reducers,
+            shuffle_bytes_per_map: level.shuffle_bytes_per_map,
+            reduce_work: level.reduce_work,
+            speculative: job.speculative,
+            surprise: None,
+        })
+        .collect();
+    Simulator::new(cluster.clone()).run_sequence(&specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::classical::{tests::textbook_db, ClassicalApriori};
+    use crate::data::quest::{QuestGenerator, QuestParams};
+
+    fn quick_cfg() -> AprioriConfig {
+        AprioriConfig { min_support: 0.05, max_k: 3 }
+    }
+
+    #[test]
+    fn mr_matches_classical_on_textbook() {
+        let db = textbook_db();
+        let cfg = AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 };
+        let classical = ClassicalApriori::default().mine(&db, &cfg);
+        let report = MrApriori::new(ClusterConfig::fhssc(3), cfg)
+            .with_split_tx(3)
+            .mine(&db)
+            .unwrap();
+        assert_eq!(report.result.frequent, classical.frequent);
+        assert!(report.jobs.len() >= 3); // L1..L3 at least
+        assert_eq!(report.result.n_transactions, 9);
+    }
+
+    #[test]
+    fn mr_matches_classical_on_quest() {
+        let db = QuestGenerator::new(QuestParams::goswami_2k()).generate();
+        let cfg = quick_cfg();
+        let classical = ClassicalApriori::default().mine(&db, &cfg);
+        for preset in [
+            ClusterConfig::standalone(),
+            ClusterConfig::pseudo_distributed(),
+            ClusterConfig::fhssc(3),
+            ClusterConfig::fhdsc(4),
+        ] {
+            let report = MrApriori::new(preset, cfg.clone())
+                .with_split_tx(250)
+                .mine(&db)
+                .unwrap();
+            assert_eq!(report.result.frequent, classical.frequent);
+        }
+    }
+
+    #[test]
+    fn profile_captures_levels() {
+        let db = QuestGenerator::new(QuestParams::dense(500)).generate();
+        let cfg = AprioriConfig { min_support: 0.05, max_k: 3 };
+        let report = MrApriori::new(ClusterConfig::fhssc(3), cfg)
+            .with_split_tx(100)
+            .mine(&db)
+            .unwrap();
+        assert_eq!(report.profile.n_tx, 500);
+        assert!(report.profile.levels.len() >= 2);
+        let l2 = report.profile.levels.iter().find(|l| l.k == 2).unwrap();
+        assert!(l2.n_candidates > 0);
+        assert!(l2.work_per_tx >= l2.n_candidates as f64);
+        assert!(report.wall_secs > 0.0);
+    }
+
+    #[test]
+    fn simulate_replays_profile_deterministically() {
+        let db = QuestGenerator::new(QuestParams::dense(400)).generate();
+        let report = MrApriori::new(ClusterConfig::fhssc(3), quick_cfg())
+            .with_split_tx(100)
+            .mine(&db)
+            .unwrap();
+        let job = JobConfig::default();
+        let a = simulate(&ClusterConfig::fhssc(3), &report.profile, 100, &job);
+        let b = simulate(&ClusterConfig::fhssc(3), &report.profile, 100, &job);
+        assert_eq!(a.total_secs, b.total_secs);
+        assert!(a.total_secs > 0.0);
+    }
+
+    #[test]
+    fn simulate_shows_fig4_ordering() {
+        let db = QuestGenerator::new(QuestParams::t10_i4(1000)).generate();
+        let report = MrApriori::new(ClusterConfig::fhssc(3), quick_cfg())
+            .with_split_tx(100)
+            .mine(&db)
+            .unwrap();
+        let job = JobConfig::default();
+        for n in [2usize, 3, 6] {
+            let hom = simulate(&ClusterConfig::fhssc(n), &report.profile, 100, &job);
+            let het = simulate(&ClusterConfig::fhdsc(n), &report.profile, 100, &job);
+            assert!(
+                het.total_secs > hom.total_secs,
+                "n={n}: FHDSC {} <= FHSSC {}",
+                het.total_secs,
+                hom.total_secs
+            );
+        }
+    }
+
+    #[test]
+    fn engine_selection_preserves_results() {
+        let db = QuestGenerator::new(QuestParams::dense(300)).generate();
+        let cfg = AprioriConfig { min_support: 0.05, max_k: 3 };
+        let base = MrApriori::new(ClusterConfig::fhssc(2), cfg.clone())
+            .with_split_tx(100)
+            .mine(&db)
+            .unwrap();
+        let trie = MrApriori::new(ClusterConfig::fhssc(2), cfg)
+            .with_engine(crate::engine::build_engine(EngineKind::Trie, None))
+            .with_split_tx(100)
+            .mine(&db)
+            .unwrap();
+        assert_eq!(base.result.frequent, trie.result.frequent);
+    }
+}

@@ -1,0 +1,199 @@
+//! Bitmap block encoding for the tensor engine.
+//!
+//! Mirrors `python/tests/test_kernel.py::encode_bitmaps`: a block of
+//! transactions becomes a row-major f32 `{0,1}` matrix `(t_pad × n_items)`
+//! plus a `(t_pad × 1)` liveness mask; a candidate level becomes a
+//! `(c_pad × n_items)` matrix plus a `(1 × c_pad)` cardinality row. Padding
+//! candidates get an impossible cardinality (`n_items + 1`) so they can
+//! never match a transaction — their counts come back 0 and are dropped.
+
+use super::{ItemId, Transaction};
+
+/// A padded, bitmap-encoded transaction block ready for PJRT upload.
+#[derive(Debug, Clone)]
+pub struct BitmapBlock {
+    /// Row-major `(t_pad, n_items)` {0,1} matrix.
+    pub tx: Vec<f32>,
+    /// `(t_pad, 1)` row-liveness mask.
+    pub mask: Vec<f32>,
+    pub t_pad: usize,
+    pub n_items: usize,
+    /// Number of live (unpadded) rows.
+    pub n_live: usize,
+}
+
+impl BitmapBlock {
+    /// Encode `transactions` into a block padded up to a multiple of
+    /// `t_pad_to` rows (and at least one tile). Items `>= n_items` panic —
+    /// the caller must have projected the db to the engine's item width.
+    pub fn encode(transactions: &[Transaction], n_items: usize, t_pad_to: usize) -> Self {
+        assert!(t_pad_to > 0);
+        let n_live = transactions.len();
+        let t_pad = pad_up(n_live.max(1), t_pad_to);
+        let mut tx = vec![0f32; t_pad * n_items];
+        let mut mask = vec![0f32; t_pad];
+        for (r, t) in transactions.iter().enumerate() {
+            mask[r] = 1.0;
+            for &item in &t.items {
+                assert!(
+                    (item as usize) < n_items,
+                    "item {item} out of encoder width {n_items}"
+                );
+                tx[r * n_items + item as usize] = 1.0;
+            }
+        }
+        Self { tx, mask, t_pad, n_items, n_live }
+    }
+
+    /// VMEM-style footprint of the block in bytes (f32).
+    pub fn bytes(&self) -> usize {
+        (self.tx.len() + self.mask.len()) * 4
+    }
+}
+
+/// A padded, bitmap-encoded candidate level.
+#[derive(Debug, Clone)]
+pub struct CandidateBlock {
+    /// Row-major `(c_pad, n_items)` {0,1} matrix.
+    pub cand: Vec<f32>,
+    /// `(1, c_pad)` candidate cardinalities (impossible value on padding).
+    pub sizes: Vec<f32>,
+    pub c_pad: usize,
+    pub n_items: usize,
+    /// Number of live (unpadded) candidate rows.
+    pub n_live: usize,
+}
+
+impl CandidateBlock {
+    /// Encode sorted candidate itemsets, padding up to a multiple of
+    /// `c_pad_to` rows.
+    pub fn encode(candidates: &[Vec<ItemId>], n_items: usize, c_pad_to: usize) -> Self {
+        assert!(c_pad_to > 0);
+        let n_live = candidates.len();
+        let c_pad = pad_up(n_live.max(1), c_pad_to);
+        let mut cand = vec![0f32; c_pad * n_items];
+        // Impossible cardinality on padding rows: a zero candidate row with
+        // size n_items+1 can never equal any overlap, so padded rows always
+        // count 0 (matches the python encoder's semantics via mask+sizes).
+        let mut sizes = vec![(n_items + 1) as f32; c_pad];
+        for (r, items) in candidates.iter().enumerate() {
+            sizes[r] = items.len() as f32;
+            for &item in items {
+                assert!(
+                    (item as usize) < n_items,
+                    "candidate item {item} out of encoder width {n_items}"
+                );
+                cand[r * n_items + item as usize] = 1.0;
+            }
+        }
+        Self { cand, sizes, c_pad, n_items, n_live }
+    }
+
+    pub fn bytes(&self) -> usize {
+        (self.cand.len() + self.sizes.len()) * 4
+    }
+}
+
+/// Round `n` up to a multiple of `m`.
+pub fn pad_up(n: usize, m: usize) -> usize {
+    n.div_ceil(m) * m
+}
+
+/// CPU reference of the containment count over encoded blocks — used to
+/// differential-test the PJRT path byte-for-byte (see engine::tensor).
+pub fn count_on_host(block: &BitmapBlock, cands: &CandidateBlock) -> Vec<u32> {
+    assert_eq!(block.n_items, cands.n_items);
+    let (ni, t_pad, c_pad) = (block.n_items, block.t_pad, cands.c_pad);
+    let mut counts = vec![0u32; c_pad];
+    for r in 0..t_pad {
+        if block.mask[r] == 0.0 {
+            continue;
+        }
+        let row = &block.tx[r * ni..(r + 1) * ni];
+        for c in 0..c_pad {
+            let crow = &cands.cand[c * ni..(c + 1) * ni];
+            let overlap: f32 = row
+                .iter()
+                .zip(crow.iter())
+                .map(|(a, b)| a * b)
+                .sum();
+            if overlap == cands.sizes[c] {
+                counts[c] += 1;
+            }
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TransactionDb;
+
+    fn tx(items: &[u32]) -> Transaction {
+        Transaction::new(items.iter().copied())
+    }
+
+    #[test]
+    fn pad_up_math() {
+        assert_eq!(pad_up(0, 8), 0);
+        assert_eq!(pad_up(1, 8), 8);
+        assert_eq!(pad_up(8, 8), 8);
+        assert_eq!(pad_up(9, 8), 16);
+    }
+
+    #[test]
+    fn encode_shapes_and_mask() {
+        let b = BitmapBlock::encode(&[tx(&[0, 2]), tx(&[1])], 4, 8);
+        assert_eq!(b.t_pad, 8);
+        assert_eq!(b.n_live, 2);
+        assert_eq!(b.tx.len(), 8 * 4);
+        assert_eq!(&b.mask[..3], &[1.0, 1.0, 0.0]);
+        assert_eq!(&b.tx[0..4], &[1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(&b.tx[4..8], &[0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_block_still_one_tile() {
+        let b = BitmapBlock::encode(&[], 4, 8);
+        assert_eq!(b.t_pad, 8);
+        assert_eq!(b.n_live, 0);
+        assert!(b.mask.iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn candidate_padding_is_unmatchable() {
+        let c = CandidateBlock::encode(&[vec![0]], 4, 8);
+        assert_eq!(c.c_pad, 8);
+        assert_eq!(c.sizes[0], 1.0);
+        // padding rows: size 5 (=n_items+1) with all-zero row
+        assert!(c.sizes[1..].iter().all(|&s| s == 5.0));
+        let b = BitmapBlock::encode(&[tx(&[0, 1, 2, 3])], 4, 8);
+        let counts = count_on_host(&b, &c);
+        assert_eq!(counts[0], 1);
+        assert!(counts[1..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn host_count_matches_db_support() {
+        let db = TransactionDb::new(vec![
+            tx(&[0, 1, 2]),
+            tx(&[0, 2]),
+            tx(&[1]),
+            tx(&[0, 1, 2, 3]),
+        ]);
+        let cands = vec![vec![0], vec![0, 2], vec![1, 2], vec![3]];
+        let b = BitmapBlock::encode(&db.transactions, 4, 4);
+        let c = CandidateBlock::encode(&cands, 4, 4);
+        let counts = count_on_host(&b, &c);
+        for (i, cand) in cands.iter().enumerate() {
+            assert_eq!(counts[i] as usize, db.support(cand), "cand {cand:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of encoder width")]
+    fn oversized_item_panics() {
+        BitmapBlock::encode(&[tx(&[9])], 4, 4);
+    }
+}

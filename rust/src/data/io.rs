@@ -1,0 +1,133 @@
+//! On-disk `.dat` transaction format (the FIMI repository convention the
+//! Apriori literature uses): one transaction per line, space-separated
+//! integer item ids. Reader tolerates blank lines and `#` comments.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use super::{Transaction, TransactionDb};
+
+#[derive(Debug, thiserror::Error)]
+pub enum DatError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("line {line}: bad item '{token}'")]
+    BadItem { line: usize, token: String },
+}
+
+/// Write a database in `.dat` format.
+pub fn write_dat(db: &TransactionDb, path: &Path) -> Result<(), DatError> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    for t in &db.transactions {
+        let mut first = true;
+        for item in &t.items {
+            if !first {
+                write!(w, " ")?;
+            }
+            write!(w, "{item}")?;
+            first = false;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a `.dat` database.
+pub fn read_dat(path: &Path) -> Result<TransactionDb, DatError> {
+    let r = BufReader::new(std::fs::File::open(path)?);
+    let mut transactions = Vec::new();
+    for (ln, line) in r.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut items = Vec::new();
+        for token in line.split_ascii_whitespace() {
+            let item = token.parse::<u32>().map_err(|_| DatError::BadItem {
+                line: ln + 1,
+                token: token.to_string(),
+            })?;
+            items.push(item);
+        }
+        transactions.push(Transaction::new(items));
+    }
+    Ok(TransactionDb::new(transactions))
+}
+
+/// Serialize one transaction to its `.dat` line (used by the DFS block
+/// writer, which stores line-delimited slices of the db).
+pub fn tx_to_line(t: &Transaction) -> String {
+    t.items
+        .iter()
+        .map(|i| i.to_string())
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Parse one `.dat` line (used by map tasks reading DFS blocks).
+pub fn line_to_tx(line: &str) -> Option<Transaction> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return None;
+    }
+    let items: Option<Vec<u32>> = line
+        .split_ascii_whitespace()
+        .map(|t| t.parse::<u32>().ok())
+        .collect();
+    items.map(Transaction::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::quest::{QuestGenerator, QuestParams};
+
+    #[test]
+    fn roundtrip_through_file() {
+        let db = QuestGenerator::new(QuestParams::t10_i4(200)).generate();
+        let dir = std::env::temp_dir().join("mr_apriori_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("roundtrip.dat");
+        write_dat(&db, &p).unwrap();
+        let back = read_dat(&p).unwrap();
+        assert_eq!(db.transactions, back.transactions);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn reader_skips_comments_and_blanks() {
+        let dir = std::env::temp_dir().join("mr_apriori_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("comments.dat");
+        std::fs::write(&p, "# header\n1 2 3\n\n4 5\n# trailer\n").unwrap();
+        let db = read_dat(&p).unwrap();
+        assert_eq!(db.len(), 2);
+        assert_eq!(db.transactions[0].items, vec![1, 2, 3]);
+        assert_eq!(db.transactions[1].items, vec![4, 5]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn reader_rejects_garbage() {
+        let dir = std::env::temp_dir().join("mr_apriori_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.dat");
+        std::fs::write(&p, "1 2 x\n").unwrap();
+        let err = read_dat(&p).unwrap_err();
+        assert!(matches!(err, DatError::BadItem { line: 1, .. }));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn line_roundtrip() {
+        let t = Transaction::new([3, 1, 2]);
+        let line = tx_to_line(&t);
+        assert_eq!(line, "1 2 3");
+        assert_eq!(line_to_tx(&line).unwrap(), t);
+        assert!(line_to_tx("# comment").is_none());
+        assert!(line_to_tx("   ").is_none());
+        assert!(line_to_tx("1 bad").is_none());
+    }
+}

@@ -1,0 +1,209 @@
+//! Transaction data substrate: item dictionary, transaction database,
+//! IBM Quest-style synthetic workload generator, on-disk `.dat` format,
+//! bitmap block encoding for the tensor engine, and the split planner that
+//! carves a database into HDFS-block-sized map splits.
+
+pub mod bitmap;
+pub mod io;
+pub mod quest;
+pub mod split;
+
+use std::collections::BTreeSet;
+
+/// Dense item identifier. The paper's datasets are market-basket style —
+/// items are SKUs; we re-encode to dense u32 ids at load time.
+pub type ItemId = u32;
+
+/// One transaction: a sorted, deduplicated set of item ids.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Transaction {
+    pub items: Vec<ItemId>,
+}
+
+impl Transaction {
+    /// Build from any iterator, sorting + deduplicating.
+    pub fn new(items: impl IntoIterator<Item = ItemId>) -> Self {
+        let set: BTreeSet<ItemId> = items.into_iter().collect();
+        Self { items: set.into_iter().collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Sorted-merge containment test: does this transaction contain every
+    /// item of `subset` (which must be sorted ascending)?
+    pub fn contains_all(&self, subset: &[ItemId]) -> bool {
+        let mut it = self.items.iter();
+        'outer: for want in subset {
+            for have in it.by_ref() {
+                if have == want {
+                    continue 'outer;
+                }
+                if have > want {
+                    return false;
+                }
+            }
+            return false;
+        }
+        true
+    }
+}
+
+/// An in-memory transaction database plus its item universe.
+#[derive(Debug, Clone, Default)]
+pub struct TransactionDb {
+    pub transactions: Vec<Transaction>,
+    /// Number of distinct item ids (ids are `0..n_items`).
+    pub n_items: usize,
+}
+
+impl TransactionDb {
+    pub fn new(transactions: Vec<Transaction>) -> Self {
+        let n_items = transactions
+            .iter()
+            .flat_map(|t| t.items.iter())
+            .map(|&i| i as usize + 1)
+            .max()
+            .unwrap_or(0);
+        Self { transactions, n_items }
+    }
+
+    pub fn len(&self) -> usize {
+        self.transactions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.transactions.is_empty()
+    }
+
+    /// Total item occurrences (the "volume" knob in fig 5 terms).
+    pub fn total_items(&self) -> usize {
+        self.transactions.iter().map(|t| t.len()).sum()
+    }
+
+    /// Approximate on-disk size in bytes under the `.dat` text format —
+    /// used by the DFS to account block storage against node capacity.
+    pub fn approx_bytes(&self) -> usize {
+        // each item ~6 chars incl separator, newline per tx
+        self.total_items() * 6 + self.len()
+    }
+
+    /// Absolute support count of one (sorted) itemset — the slow oracle
+    /// every optimized counting path is tested against.
+    pub fn support(&self, itemset: &[ItemId]) -> usize {
+        self.transactions
+            .iter()
+            .filter(|t| t.contains_all(itemset))
+            .count()
+    }
+
+    /// Re-encode keeping only `keep` items (sorted), remapping them to
+    /// dense ids `0..keep.len()`. Returns the new db and the mapping
+    /// `new_id -> old_id`. This is the classic Apriori dictionary-shrink:
+    /// after F1, only frequent items matter, which keeps the bitmap item
+    /// width small for the tensor engine.
+    pub fn project(&self, keep: &[ItemId]) -> (TransactionDb, Vec<ItemId>) {
+        let mut old_to_new = vec![u32::MAX; self.n_items];
+        for (new, &old) in keep.iter().enumerate() {
+            old_to_new[old as usize] = new as u32;
+        }
+        let transactions = self
+            .transactions
+            .iter()
+            .map(|t| Transaction {
+                items: t
+                    .items
+                    .iter()
+                    .filter_map(|&i| {
+                        let n = old_to_new[i as usize];
+                        (n != u32::MAX).then_some(n)
+                    })
+                    .collect(),
+            })
+            .collect();
+        (
+            TransactionDb { transactions, n_items: keep.len() },
+            keep.to_vec(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tx(items: &[u32]) -> Transaction {
+        Transaction::new(items.iter().copied())
+    }
+
+    #[test]
+    fn transaction_sorts_and_dedups() {
+        let t = tx(&[5, 1, 3, 1, 5]);
+        assert_eq!(t.items, vec![1, 3, 5]);
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn contains_all_sorted_merge() {
+        let t = tx(&[1, 3, 5, 9]);
+        assert!(t.contains_all(&[]));
+        assert!(t.contains_all(&[1]));
+        assert!(t.contains_all(&[3, 9]));
+        assert!(t.contains_all(&[1, 3, 5, 9]));
+        assert!(!t.contains_all(&[2]));
+        assert!(!t.contains_all(&[1, 4]));
+        assert!(!t.contains_all(&[9, 10]));
+    }
+
+    #[test]
+    fn empty_transaction_contains_only_empty() {
+        let t = tx(&[]);
+        assert!(t.contains_all(&[]));
+        assert!(!t.contains_all(&[0]));
+    }
+
+    #[test]
+    fn db_support_counts() {
+        let db = TransactionDb::new(vec![tx(&[0, 1, 2]), tx(&[0, 2]), tx(&[1])]);
+        assert_eq!(db.n_items, 3);
+        assert_eq!(db.support(&[0]), 2);
+        assert_eq!(db.support(&[0, 2]), 2);
+        assert_eq!(db.support(&[1, 2]), 1);
+        assert_eq!(db.support(&[]), 3);
+        assert_eq!(db.support(&[2, 1, 0].to_vec().as_slice()), 0); // unsorted -> no match
+    }
+
+    #[test]
+    fn db_volume_accounting() {
+        let db = TransactionDb::new(vec![tx(&[0, 1]), tx(&[2])]);
+        assert_eq!(db.total_items(), 3);
+        assert!(db.approx_bytes() > 0);
+    }
+
+    #[test]
+    fn project_remaps_and_filters() {
+        let db = TransactionDb::new(vec![tx(&[0, 2, 4]), tx(&[1, 2]), tx(&[4])]);
+        let (p, map) = db.project(&[2, 4]);
+        assert_eq!(p.n_items, 2);
+        assert_eq!(map, vec![2, 4]);
+        assert_eq!(p.transactions[0].items, vec![0, 1]); // {2,4} -> {0,1}
+        assert_eq!(p.transactions[1].items, vec![0]); // {2} -> {0}
+        assert_eq!(p.transactions[2].items, vec![1]); // {4} -> {1}
+        // support is preserved under projection
+        assert_eq!(p.support(&[0]), db.support(&[2]));
+        assert_eq!(p.support(&[0, 1]), db.support(&[2, 4]));
+    }
+
+    #[test]
+    fn empty_db() {
+        let db = TransactionDb::new(vec![]);
+        assert_eq!(db.n_items, 0);
+        assert_eq!(db.support(&[1]), 0);
+        assert!(db.is_empty());
+    }
+}

@@ -1,0 +1,246 @@
+//! IBM Quest-style synthetic transaction generator.
+//!
+//! The paper never names its dataset, so we substitute the standard
+//! market-basket benchmark family (Agrawal & Srikant's Quest generator,
+//! the source of T10.I4.D100K etc.): a pool of correlated "maximal
+//! potentially-frequent itemsets" is drawn once, then each transaction is
+//! assembled from a few pool patterns with corruption noise. This produces
+//! the skewed support distribution Apriori's pruning exploits — uniform
+//! random baskets would make every algorithm look identical.
+
+use super::{ItemId, Transaction, TransactionDb};
+use crate::util::rng::Xoshiro256;
+
+/// Generator parameters, named after the Quest conventions:
+/// `T` = average transaction length, `I` = average pattern length,
+/// `D` = number of transactions, `N` = item universe, `L` = pattern pool.
+#[derive(Debug, Clone)]
+pub struct QuestParams {
+    /// Number of transactions (|D|).
+    pub n_transactions: usize,
+    /// Item universe size (N).
+    pub n_items: usize,
+    /// Average transaction length (T).
+    pub avg_tx_len: f64,
+    /// Average maximal-pattern length (I).
+    pub avg_pattern_len: f64,
+    /// Number of potentially-frequent patterns in the pool (L).
+    pub n_patterns: usize,
+    /// Probability an item from a chosen pattern is dropped (corruption).
+    pub corruption: f64,
+    /// RNG seed — same seed, same dataset, across runs and machines.
+    pub seed: u64,
+}
+
+impl QuestParams {
+    /// The classic T10.I4 profile over a 1k-item universe, sized to `d`
+    /// transactions — the fig-5 sweep uses this with varying `d`.
+    pub fn t10_i4(d: usize) -> Self {
+        Self {
+            n_transactions: d,
+            n_items: 1000,
+            avg_tx_len: 10.0,
+            avg_pattern_len: 4.0,
+            n_patterns: 200,
+            corruption: 0.25,
+            seed: 0xACE5_2012,
+        }
+    }
+
+    /// A small dense profile (few items, long baskets) where candidate
+    /// explosion at k=2..3 is visible — exercises the `large` tile variant.
+    pub fn dense(d: usize) -> Self {
+        Self {
+            n_transactions: d,
+            n_items: 100,
+            avg_tx_len: 15.0,
+            avg_pattern_len: 5.0,
+            n_patterns: 40,
+            corruption: 0.15,
+            seed: 0xDE45E, // dense-profile default seed
+        }
+    }
+
+    /// The ~2000-transaction profile used by the paper's reference [8]
+    /// (Goswami et al.) for the baseline comparison (ablation A3).
+    pub fn goswami_2k() -> Self {
+        Self {
+            n_transactions: 2000,
+            n_items: 120,
+            avg_tx_len: 8.0,
+            avg_pattern_len: 3.0,
+            n_patterns: 60,
+            corruption: 0.2,
+            seed: 0x605A,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// The generator itself. Deterministic for a given `QuestParams`.
+#[derive(Debug)]
+pub struct QuestGenerator {
+    params: QuestParams,
+}
+
+impl QuestGenerator {
+    pub fn new(params: QuestParams) -> Self {
+        assert!(params.n_items >= 2, "need at least 2 items");
+        assert!(params.avg_tx_len >= 1.0);
+        assert!(params.avg_pattern_len >= 1.0);
+        Self { params }
+    }
+
+    /// Draw the pattern pool: each pattern is a set of items, with some
+    /// inter-pattern overlap (a fraction of items is reused from the
+    /// previous pattern, per the original Quest design).
+    fn pattern_pool(&self, rng: &mut Xoshiro256) -> Vec<Vec<ItemId>> {
+        let p = &self.params;
+        let mut pool: Vec<Vec<ItemId>> = Vec::with_capacity(p.n_patterns);
+        for i in 0..p.n_patterns {
+            let len = (1 + rng.poisson(p.avg_pattern_len - 1.0)).min(p.n_items);
+            let mut items: Vec<ItemId> = Vec::with_capacity(len);
+            // reuse ~half the items from the previous pattern for correlation
+            if i > 0 && !pool[i - 1].is_empty() {
+                let prev = &pool[i - 1];
+                let reuse = (len / 2).min(prev.len());
+                for &idx in rng.sample_distinct(prev.len(), reuse).iter() {
+                    items.push(prev[idx]);
+                }
+            }
+            while items.len() < len {
+                let candidate = rng.gen_range(p.n_items as u64) as ItemId;
+                if !items.contains(&candidate) {
+                    items.push(candidate);
+                }
+            }
+            items.sort_unstable();
+            items.dedup();
+            pool.push(items);
+        }
+        pool
+    }
+
+    /// Generate the full database.
+    pub fn generate(&self) -> TransactionDb {
+        let p = &self.params;
+        let mut rng = Xoshiro256::seed_from_u64(p.seed);
+        let pool = self.pattern_pool(&mut rng);
+        // Pattern popularity is exponentially skewed (Quest uses an
+        // exponential weight per pattern).
+        let mut weights: Vec<f64> = (0..pool.len()).map(|_| rng.exponential(1.0)).collect();
+        let total: f64 = weights.iter().sum();
+        for w in &mut weights {
+            *w /= total;
+        }
+        // cumulative distribution for pattern picking
+        let mut cdf = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for w in &weights {
+            acc += w;
+            cdf.push(acc);
+        }
+
+        let mut transactions = Vec::with_capacity(p.n_transactions);
+        for _ in 0..p.n_transactions {
+            let target_len = 1 + rng.poisson(p.avg_tx_len - 1.0);
+            let mut items: Vec<ItemId> = Vec::with_capacity(target_len + 4);
+            let mut guard = 0;
+            while items.len() < target_len && guard < 64 {
+                guard += 1;
+                // pick a pattern by weight
+                let u = rng.next_f64();
+                let idx = cdf.partition_point(|&c| c < u).min(pool.len() - 1);
+                for &item in &pool[idx] {
+                    if rng.bool_with(p.corruption) {
+                        continue; // corrupted away
+                    }
+                    items.push(item);
+                    if items.len() >= target_len + 4 {
+                        break;
+                    }
+                }
+            }
+            if items.is_empty() {
+                // ensure non-empty baskets: add one uniform item
+                items.push(rng.gen_range(p.n_items as u64) as ItemId);
+            }
+            transactions.push(Transaction::new(items));
+        }
+        let mut db = TransactionDb::new(transactions);
+        // The universe is the configured N even if the tail never appears.
+        db.n_items = p.n_items;
+        db
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = QuestGenerator::new(QuestParams::t10_i4(500)).generate();
+        let b = QuestGenerator::new(QuestParams::t10_i4(500)).generate();
+        assert_eq!(a.transactions, b.transactions);
+    }
+
+    #[test]
+    fn seed_changes_dataset() {
+        let a = QuestGenerator::new(QuestParams::t10_i4(200)).generate();
+        let b = QuestGenerator::new(QuestParams::t10_i4(200).with_seed(99)).generate();
+        assert_ne!(a.transactions, b.transactions);
+    }
+
+    #[test]
+    fn shape_matches_params() {
+        let p = QuestParams::t10_i4(1000);
+        let db = QuestGenerator::new(p.clone()).generate();
+        assert_eq!(db.len(), 1000);
+        assert_eq!(db.n_items, p.n_items);
+        assert!(db.transactions.iter().all(|t| !t.is_empty()));
+        let avg = db.total_items() as f64 / db.len() as f64;
+        assert!(
+            (avg - p.avg_tx_len).abs() < p.avg_tx_len * 0.5,
+            "avg basket len {avg} vs configured {}",
+            p.avg_tx_len
+        );
+    }
+
+    #[test]
+    fn support_distribution_is_skewed() {
+        // Pattern reuse must create items far above the uniform-support
+        // baseline — that skew is what makes Apriori's pruning meaningful.
+        let db = QuestGenerator::new(QuestParams::t10_i4(2000)).generate();
+        let mut supports: Vec<usize> = (0..db.n_items as u32)
+            .map(|i| db.support(&[i]))
+            .collect();
+        supports.sort_unstable_by(|a, b| b.cmp(a));
+        let uniform = db.total_items() as f64 / db.n_items as f64;
+        assert!(
+            supports[0] as f64 > uniform * 5.0,
+            "top item support {} should dominate uniform {uniform}",
+            supports[0]
+        );
+    }
+
+    #[test]
+    fn dense_profile_is_denser() {
+        let sparse = QuestGenerator::new(QuestParams::t10_i4(500)).generate();
+        let dense = QuestGenerator::new(QuestParams::dense(500)).generate();
+        let d_sparse = sparse.total_items() as f64 / (sparse.len() * sparse.n_items) as f64;
+        let d_dense = dense.total_items() as f64 / (dense.len() * dense.n_items) as f64;
+        assert!(d_dense > d_sparse * 5.0);
+    }
+
+    #[test]
+    fn goswami_profile_sizes() {
+        let db = QuestGenerator::new(QuestParams::goswami_2k()).generate();
+        assert_eq!(db.len(), 2000);
+        assert_eq!(db.n_items, 120);
+    }
+}

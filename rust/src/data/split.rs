@@ -1,0 +1,104 @@
+//! Split planner: carve a transaction database into HDFS-block-sized map
+//! splits, the unit of map-task scheduling (one map task per split, as in
+//! Hadoop's FileInputFormat).
+
+use super::{Transaction, TransactionDb};
+
+/// One input split: a contiguous range of transactions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Split {
+    pub id: usize,
+    /// Transaction index range `[start, end)` in the source db.
+    pub start: usize,
+    pub end: usize,
+    /// Approximate byte size (drives block placement and cost models).
+    pub bytes: usize,
+}
+
+impl Split {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// Plan splits of at most `max_tx` transactions each (Hadoop splits by
+/// bytes; transactions here are near-constant-size so counting rows keeps
+/// the tests exact while `bytes` still carries the size signal).
+pub fn plan_splits(db: &TransactionDb, max_tx: usize) -> Vec<Split> {
+    assert!(max_tx > 0, "split size must be positive");
+    let mut splits = Vec::new();
+    let mut start = 0usize;
+    let mut id = 0usize;
+    while start < db.len() {
+        let end = (start + max_tx).min(db.len());
+        let bytes: usize = db.transactions[start..end]
+            .iter()
+            .map(|t| t.len() * 6 + 1)
+            .sum();
+        splits.push(Split { id, start, end, bytes });
+        id += 1;
+        start = end;
+    }
+    splits
+}
+
+/// Materialize the transactions of one split.
+pub fn split_transactions<'a>(db: &'a TransactionDb, s: &Split) -> &'a [Transaction] {
+    &db.transactions[s.start..s.end]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::quest::{QuestGenerator, QuestParams};
+
+    #[test]
+    fn covers_db_exactly_without_overlap() {
+        let db = QuestGenerator::new(QuestParams::t10_i4(1003)).generate();
+        let splits = plan_splits(&db, 100);
+        assert_eq!(splits.len(), 11);
+        assert_eq!(splits[0].len(), 100);
+        assert_eq!(splits[10].len(), 3);
+        let mut covered = 0;
+        for (i, s) in splits.iter().enumerate() {
+            assert_eq!(s.id, i);
+            assert_eq!(s.start, covered);
+            covered = s.end;
+            assert!(s.bytes > 0);
+        }
+        assert_eq!(covered, db.len());
+    }
+
+    #[test]
+    fn single_split_when_db_fits() {
+        let db = QuestGenerator::new(QuestParams::t10_i4(10)).generate();
+        let splits = plan_splits(&db, 100);
+        assert_eq!(splits.len(), 1);
+        assert_eq!(splits[0].len(), 10);
+    }
+
+    #[test]
+    fn empty_db_no_splits() {
+        let db = TransactionDb::new(vec![]);
+        assert!(plan_splits(&db, 10).is_empty());
+    }
+
+    #[test]
+    fn split_transactions_slices() {
+        let db = QuestGenerator::new(QuestParams::t10_i4(50)).generate();
+        let splits = plan_splits(&db, 20);
+        let total: usize = splits
+            .iter()
+            .map(|s| split_transactions(&db, s).len())
+            .sum();
+        assert_eq!(total, 50);
+        assert_eq!(
+            split_transactions(&db, &splits[1])[0],
+            db.transactions[20]
+        );
+    }
+}

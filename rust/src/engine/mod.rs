@@ -1,0 +1,307 @@
+//! Pluggable support-count engines — the hot path behind every map task.
+//!
+//! A [`SupportEngine`] answers one question: given a slice of transactions
+//! and a level's candidate itemsets, how many transactions contain each
+//! candidate? Three interchangeable implementations:
+//!
+//! * [`HashTreeEngine`] / [`TrieEngine`] — pure-rust CPU matchers;
+//! * [`TensorEngine`] — bitmap-encodes the slice and candidates and runs
+//!   the AOT-compiled Pallas kernel through the PJRT runtime (the
+//!   three-layer hot path);
+//! * [`NaiveEngine`] — the O(|C|·|D|) oracle used in differential tests.
+//!
+//! All engines are `Send + Sync` so one instance can serve every
+//! tasktracker thread (the tensor engine funnels into the PJRT service
+//! thread internally).
+
+use crate::apriori::hash_tree::HashTree;
+use crate::apriori::trie::CandidateTrie;
+use crate::apriori::Itemset;
+use crate::data::bitmap::{BitmapBlock, CandidateBlock};
+use crate::data::Transaction;
+use crate::runtime::{CountRequest, TensorServiceHandle};
+
+/// Engine selector for configs and CLIs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    #[default]
+    HashTree,
+    Trie,
+    Naive,
+    /// The Pallas/PJRT path (requires built artifacts).
+    Tensor,
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "hash-tree" | "hashtree" => Ok(Self::HashTree),
+            "trie" => Ok(Self::Trie),
+            "naive" => Ok(Self::Naive),
+            "tensor" => Ok(Self::Tensor),
+            other => Err(format!(
+                "unknown engine '{other}' (want hash-tree|trie|naive|tensor)"
+            )),
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("tensor runtime: {0}")]
+    Tensor(#[from] crate::runtime::service::ServiceError),
+}
+
+/// The counting contract. `n_items` is the (projected) dictionary width —
+/// the tensor engine uses it to pick an artifact tile shape.
+pub trait SupportEngine: Send + Sync {
+    fn count(
+        &self,
+        txs: &[Transaction],
+        candidates: &[Itemset],
+        n_items: usize,
+    ) -> Result<Vec<u64>, EngineError>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Group candidate indices by itemset length: the hash tree and trie
+/// require a uniform k per structure, but the engine contract accepts
+/// mixed-length candidate lists (one structure per length, counts merged
+/// back into the caller's order).
+fn count_grouped(
+    txs: &[Transaction],
+    candidates: &[Itemset],
+    count_level: impl Fn(&[Itemset]) -> Vec<u64>,
+) -> Vec<u64> {
+    use std::collections::BTreeMap;
+    let mut by_len: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, c) in candidates.iter().enumerate() {
+        by_len.entry(c.len()).or_default().push(i);
+    }
+    let mut counts = vec![0u64; candidates.len()];
+    for idxs in by_len.values() {
+        if idxs.len() == candidates.len() {
+            // common case: uniform level, no regrouping copy
+            return count_level(candidates);
+        }
+        let group: Vec<Itemset> = idxs.iter().map(|&i| candidates[i].clone()).collect();
+        for (&i, c) in idxs.iter().zip(count_level(&group)) {
+            counts[i] = c;
+        }
+    }
+    let _ = txs;
+    counts
+}
+
+/// Agrawal–Srikant hash tree per call (build cost amortizes over the
+/// transaction slice, which is a whole map split).
+pub struct HashTreeEngine;
+
+impl SupportEngine for HashTreeEngine {
+    fn count(
+        &self,
+        txs: &[Transaction],
+        candidates: &[Itemset],
+        _n_items: usize,
+    ) -> Result<Vec<u64>, EngineError> {
+        Ok(count_grouped(txs, candidates, |group| {
+            HashTree::build(group).count_all(txs)
+        }))
+    }
+
+    fn name(&self) -> &'static str {
+        "hash-tree"
+    }
+}
+
+/// Prefix-trie matcher.
+pub struct TrieEngine;
+
+impl SupportEngine for TrieEngine {
+    fn count(
+        &self,
+        txs: &[Transaction],
+        candidates: &[Itemset],
+        _n_items: usize,
+    ) -> Result<Vec<u64>, EngineError> {
+        Ok(count_grouped(txs, candidates, |group| {
+            CandidateTrie::build(group).count_all(txs)
+        }))
+    }
+
+    fn name(&self) -> &'static str {
+        "trie"
+    }
+}
+
+/// Direct scan oracle.
+pub struct NaiveEngine;
+
+impl SupportEngine for NaiveEngine {
+    fn count(
+        &self,
+        txs: &[Transaction],
+        candidates: &[Itemset],
+        _n_items: usize,
+    ) -> Result<Vec<u64>, EngineError> {
+        Ok(candidates
+            .iter()
+            .map(|c| txs.iter().filter(|t| t.contains_all(c)).count() as u64)
+            .collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+}
+
+/// The three-layer hot path: bitmap-encode, ship to the PJRT service,
+/// run the AOT-compiled Pallas kernel.
+pub struct TensorEngine {
+    handle: TensorServiceHandle,
+    /// Row padding granularity (matches the kernel's smallest tile).
+    pad_to: usize,
+}
+
+impl TensorEngine {
+    pub fn new(handle: TensorServiceHandle) -> Self {
+        Self { handle, pad_to: 256 }
+    }
+}
+
+impl SupportEngine for TensorEngine {
+    fn count(
+        &self,
+        txs: &[Transaction],
+        candidates: &[Itemset],
+        n_items: usize,
+    ) -> Result<Vec<u64>, EngineError> {
+        if candidates.is_empty() {
+            return Ok(Vec::new());
+        }
+        let block = BitmapBlock::encode(txs, n_items, self.pad_to);
+        let cands = CandidateBlock::encode(candidates, n_items, 64);
+        let counts = self.handle.count(CountRequest {
+            graph: "count_split".into(),
+            block,
+            cands,
+        })?;
+        Ok(counts.into_iter().map(u64::from).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "tensor"
+    }
+}
+
+/// Build an engine. The tensor engine needs the PJRT service handle.
+pub fn build_engine(
+    kind: EngineKind,
+    tensor: Option<TensorServiceHandle>,
+) -> Box<dyn SupportEngine> {
+    match kind {
+        EngineKind::HashTree => Box::new(HashTreeEngine),
+        EngineKind::Trie => Box::new(TrieEngine),
+        EngineKind::Naive => Box::new(NaiveEngine),
+        EngineKind::Tensor => Box::new(TensorEngine::new(
+            tensor.expect("tensor engine requires a TensorServiceHandle"),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::quest::{QuestGenerator, QuestParams};
+    use crate::runtime::{ArtifactManifest, TensorService};
+    use crate::util::rng::Xoshiro256;
+
+    fn sample(n_items: usize) -> (Vec<Transaction>, Vec<Itemset>) {
+        let db = QuestGenerator::new(QuestParams {
+            n_items,
+            ..QuestParams::dense(200)
+        })
+        .generate();
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mut cands: Vec<Itemset> = (0..120)
+            .map(|_| {
+                let k = rng.range_usize(1, 4);
+                let mut v: Vec<u32> = rng
+                    .sample_distinct(n_items, k)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        cands.sort();
+        cands.dedup();
+        (db.transactions, cands)
+    }
+
+    #[test]
+    fn cpu_engines_agree_with_naive() {
+        let (txs, cands) = sample(60);
+        let naive = NaiveEngine.count(&txs, &cands, 60).unwrap();
+        assert_eq!(HashTreeEngine.count(&txs, &cands, 60).unwrap(), naive);
+        assert_eq!(TrieEngine.count(&txs, &cands, 60).unwrap(), naive);
+    }
+
+    #[test]
+    fn tensor_engine_agrees_with_naive() {
+        let dir = ArtifactManifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping tensor engine test: run `make artifacts`");
+            return;
+        }
+        let svc = TensorService::start(ArtifactManifest::load(&dir).unwrap());
+        let engine = TensorEngine::new(svc.handle());
+        let (txs, cands) = sample(60);
+        let naive = NaiveEngine.count(&txs, &cands, 60).unwrap();
+        assert_eq!(engine.count(&txs, &cands, 60).unwrap(), naive);
+        assert_eq!(engine.name(), "tensor");
+    }
+
+    #[test]
+    fn tensor_engine_shared_across_threads() {
+        let dir = ArtifactManifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping tensor engine test: run `make artifacts`");
+            return;
+        }
+        let svc = TensorService::start(ArtifactManifest::load(&dir).unwrap());
+        let engine = TensorEngine::new(svc.handle());
+        let (txs, cands) = sample(40);
+        let expected = NaiveEngine.count(&txs, &cands, 40).unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let (engine, txs, cands, expected) = (&engine, &txs, &cands, &expected);
+                s.spawn(move || {
+                    assert_eq!(&engine.count(txs, cands, 40).unwrap(), expected);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn empty_candidates_ok() {
+        let (txs, _) = sample(30);
+        for e in [EngineKind::HashTree, EngineKind::Trie, EngineKind::Naive] {
+            let engine = build_engine(e, None);
+            assert!(engine.count(&txs, &[], 30).unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn kind_parses() {
+        assert_eq!("hash-tree".parse::<EngineKind>().unwrap(), EngineKind::HashTree);
+        assert_eq!("trie".parse::<EngineKind>().unwrap(), EngineKind::Trie);
+        assert_eq!("naive".parse::<EngineKind>().unwrap(), EngineKind::Naive);
+        assert_eq!("tensor".parse::<EngineKind>().unwrap(), EngineKind::Tensor);
+        assert!("x".parse::<EngineKind>().is_err());
+    }
+}

@@ -1,0 +1,59 @@
+//! # mr-apriori — Map/Reduce Apriori for voluminous data-sets
+//!
+//! A from-scratch reproduction of *"Map/Reduce Design and Implementation of
+//! Apriori Algorithm for Handling Voluminous Data-Sets"* (ACIJ 2012,
+//! DOI 10.5121/acij.2012.3604) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — a Hadoop-like MapReduce substrate (simulated
+//!   HDFS block store, jobtracker/tasktracker scheduling, shuffle,
+//!   combiners, speculative execution) plus the level-wise Apriori driver
+//!   that plans one counting job per candidate level.
+//! * **L2/L1 (python/, build-time only)** — the support-count hot-spot as a
+//!   Pallas bitmap-matmul kernel inside a jax graph, AOT-lowered to HLO
+//!   text artifacts.
+//! * **runtime** — a PJRT CPU client that loads the artifacts and serves
+//!   count requests to map tasks; python never runs on the request path.
+//!
+//! See `DESIGN.md` for the module inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod apriori;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dfs;
+pub mod engine;
+pub mod mapreduce;
+pub mod metrics;
+pub mod perfmodel;
+pub mod runtime;
+pub mod simnet;
+pub mod util;
+
+/// Convenience re-exports covering the public API surface used by the
+/// examples and benches.
+pub mod prelude {
+    pub use crate::apriori::{
+        classical::{ClassicalApriori, MatcherKind},
+        fp_growth::FpGrowth,
+        intersection::IntersectionApriori,
+        record_filter::RecordFilterApriori,
+        postprocess::{closed_itemsets, maximal_itemsets},
+        rules::{format_rule, generate_rules},
+        son::{SonApriori, SonReport},
+        AprioriConfig, Itemset, MiningResult,
+    };
+    pub use crate::cluster::{ClusterConfig, DeployMode, NodeProfile};
+    pub use crate::config::{ExperimentConfig, Preset};
+    pub use crate::coordinator::{simulate, MrApriori, RunReport, WorkloadProfile};
+    pub use crate::data::{
+        bitmap::BitmapBlock, quest::QuestGenerator, quest::QuestParams, TransactionDb,
+    };
+    pub use crate::dfs::Dfs;
+    pub use crate::engine::{build_engine, EngineKind, SupportEngine};
+    pub use crate::mapreduce::{JobConfig, JobStats, SimReport, Simulator};
+    pub use crate::metrics::bench::{BenchTable, Series};
+    pub use crate::perfmodel::{EtaModel, KernelRoofline};
+    pub use crate::runtime::{ArtifactManifest, TensorService, TensorServiceHandle};
+}

@@ -1,0 +1,362 @@
+//! `repro` — the leader CLI.
+//!
+//! Subcommands:
+//!   generate  — emit a Quest-style synthetic dataset as `.dat`
+//!   mine      — run Map/Reduce Apriori on a dataset (real execution)
+//!   simulate  — replay a workload on a simulated cluster (fig-4/5 method)
+//!   bench     — regenerate a paper figure (fig4 | fig5 | eta)
+//!   report    — print artifact + kernel-roofline info
+//!
+//! Flag parsing is hand-rolled (offline build, no clap — DESIGN.md
+//! §Substitutions): `--key value` pairs after the subcommand.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use mr_apriori::prelude::*;
+use mr_apriori::{apriori, coordinator, data, engine, perfmodel, runtime};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprintln!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+    let flags = match Flags::parse(rest) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd.as_str() {
+        "generate" => cmd_generate(&flags),
+        "mine" => cmd_mine(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "bench" => cmd_bench(&flags),
+        "report" => cmd_report(&flags),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}'")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "\
+repro — Map/Reduce Apriori (ACIJ 2012 reproduction)
+
+USAGE:
+  repro generate --transactions N [--profile t10i4|dense|goswami] [--seed S] --out FILE
+  repro mine [--config FILE] [--preset standalone|pseudo|fhssc|fhdsc] [--nodes N]
+             [--min-support F] [--max-k K] [--engine hash-tree|trie|naive|tensor]
+             [--split-tx N] [--transactions N | --input FILE] [--rules CONF]
+  repro simulate [--config FILE] [--preset P] [--nodes N] [--transactions N]
+  repro bench --figure fig4|fig5|eta
+  repro report
+";
+
+/// `--key value` flag bag.
+struct Flags(HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Self, String> {
+        let mut m = HashMap::new();
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(format!("expected --flag, got '{a}'"));
+            };
+            let val = it
+                .next()
+                .ok_or_else(|| format!("flag --{key} needs a value"))?;
+            m.insert(key.to_string(), val.clone());
+        }
+        Ok(Self(m))
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0.get(key).map(|s| s.as_str())
+    }
+
+    fn parse_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+}
+
+/// Assemble an ExperimentConfig from `--config` plus flag overrides.
+fn experiment_config(flags: &Flags) -> Result<ExperimentConfig, String> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => ExperimentConfig::load(Path::new(path)).map_err(|e| e.to_string())?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(p) = flags.parse_opt::<Preset>("preset")? {
+        cfg.preset = p;
+    }
+    if let Some(n) = flags.parse_opt::<usize>("nodes")? {
+        cfg.nodes = n;
+    }
+    if let Some(s) = flags.parse_opt::<f64>("min-support")? {
+        cfg.apriori.min_support = s;
+    }
+    if let Some(k) = flags.parse_opt::<usize>("max-k")? {
+        cfg.apriori.max_k = k;
+    }
+    if let Some(e) = flags.parse_opt::<EngineKind>("engine")? {
+        cfg.engine = e;
+    }
+    if let Some(n) = flags.parse_opt::<usize>("split-tx")? {
+        cfg.split_tx = n;
+    }
+    if let Some(n) = flags.parse_opt::<usize>("transactions")? {
+        cfg.transactions = n;
+    }
+    if let Some(s) = flags.parse_opt::<u64>("seed")? {
+        cfg.seed = s;
+    }
+    Ok(cfg)
+}
+
+fn load_or_generate(flags: &Flags, cfg: &ExperimentConfig) -> Result<TransactionDb, String> {
+    match flags.get("input") {
+        Some(path) => data::io::read_dat(Path::new(path)).map_err(|e| e.to_string()),
+        None => {
+            let params = QuestParams::t10_i4(cfg.transactions).with_seed(cfg.seed);
+            Ok(QuestGenerator::new(params).generate())
+        }
+    }
+}
+
+fn build_engine_for(cfg: &ExperimentConfig) -> Result<Box<dyn SupportEngine>, String> {
+    if cfg.engine == EngineKind::Tensor {
+        let svc = runtime::TensorService::start_default().map_err(|e| e.to_string())?;
+        // Keep the service thread alive for the whole mining run; the CLI
+        // process exits right after, so this one-shot leak is deliberate.
+        let handle = svc.handle();
+        std::mem::forget(svc);
+        Ok(engine::build_engine(EngineKind::Tensor, Some(handle)))
+    } else {
+        Ok(engine::build_engine(cfg.engine, None))
+    }
+}
+
+fn cmd_generate(flags: &Flags) -> Result<(), String> {
+    let n: usize = flags
+        .parse_opt("transactions")?
+        .ok_or("--transactions required")?;
+    let out: PathBuf = flags.get("out").ok_or("--out required")?.into();
+    let seed: u64 = flags.parse_opt("seed")?.unwrap_or(0xACE5_2012);
+    let params = match flags.get("profile").unwrap_or("t10i4") {
+        "t10i4" => QuestParams::t10_i4(n),
+        "dense" => QuestParams::dense(n),
+        "goswami" => QuestParams::goswami_2k(),
+        other => return Err(format!("unknown profile '{other}'")),
+    }
+    .with_seed(seed);
+    let db = QuestGenerator::new(params).generate();
+    data::io::write_dat(&db, &out).map_err(|e| e.to_string())?;
+    println!(
+        "wrote {} transactions ({} item occurrences, {} distinct items) to {}",
+        db.len(),
+        db.total_items(),
+        db.n_items,
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_mine(flags: &Flags) -> Result<(), String> {
+    let cfg = experiment_config(flags)?;
+    let db = load_or_generate(flags, &cfg)?;
+    let engine = build_engine_for(&cfg)?;
+    println!(
+        "mining {} transactions on {:?}/{} nodes (engine={}, min_support={})",
+        db.len(),
+        cfg.preset,
+        cfg.cluster().n_nodes(),
+        engine.name(),
+        cfg.apriori.min_support,
+    );
+    let driver = MrApriori::new(cfg.cluster(), cfg.apriori.clone())
+        .with_engine(engine)
+        .with_job(cfg.job.clone())
+        .with_split_tx(cfg.split_tx);
+    let report = driver.mine(&db).map_err(|e| e.to_string())?;
+
+    println!("\nlevel | candidates | frequent | wall(s)");
+    for l in &report.result.levels {
+        println!(
+            "{:>5} | {:>10} | {:>8} | {:.3}",
+            l.k, l.n_candidates, l.n_frequent, l.wall_secs
+        );
+    }
+    println!(
+        "\n{} frequent itemsets in {:.3}s wall ({} MR jobs, locality {:.0}%)",
+        report.result.frequent.len(),
+        report.wall_secs,
+        report.jobs.len(),
+        report
+            .jobs
+            .iter()
+            .map(|(_, s)| s.locality_fraction())
+            .sum::<f64>()
+            / report.jobs.len().max(1) as f64
+            * 100.0
+    );
+    if let Some(conf) = flags.parse_opt::<f64>("rules")? {
+        let rules = generate_rules(&report.result, conf);
+        println!("\n{} association rules at confidence >= {conf}:", rules.len());
+        for r in rules.iter().take(20) {
+            println!("  {}", format_rule(r));
+        }
+        if rules.len() > 20 {
+            println!("  ... ({} more)", rules.len() - 20);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(flags: &Flags) -> Result<(), String> {
+    let cfg = experiment_config(flags)?;
+    let db = load_or_generate(flags, &cfg)?;
+    // Profile via a real run, then replay on the configured cluster.
+    let driver = MrApriori::new(cfg.cluster(), cfg.apriori.clone())
+        .with_job(cfg.job.clone())
+        .with_split_tx(cfg.split_tx);
+    let report = driver.mine(&db).map_err(|e| e.to_string())?;
+    let sim = coordinator::simulate(&cfg.cluster(), &report.profile, cfg.split_tx, &cfg.job);
+    println!(
+        "simulated {:?}/{} nodes: startup {:.1}s + map {:.1}s + shuffle {:.1}s + reduce {:.1}s = {:.1}s (locality {:.0}%, spill {:.0}%)",
+        cfg.preset,
+        cfg.cluster().n_nodes(),
+        sim.startup_secs,
+        sim.map_secs,
+        sim.shuffle_secs,
+        sim.reduce_secs,
+        sim.total_secs,
+        sim.locality_fraction * 100.0,
+        sim.spill_fraction * 100.0,
+    );
+    Ok(())
+}
+
+fn cmd_bench(flags: &Flags) -> Result<(), String> {
+    let fig = flags.get("figure").ok_or("--figure required")?;
+    let bench = match fig {
+        "fig4" => "fig4_fhdsc_vs_fhssc",
+        "fig5" => "fig5_tx_vs_config",
+        "eta" => "eta_model",
+        other => return Err(format!("unknown figure '{other}'")),
+    };
+    println!("regenerate with: cargo bench --bench {bench}");
+    Ok(())
+}
+
+fn cmd_report(_flags: &Flags) -> Result<(), String> {
+    let dir = runtime::ArtifactManifest::default_dir();
+    println!("artifacts dir: {}", dir.display());
+    match runtime::ArtifactManifest::load(&dir) {
+        Ok(m) => {
+            println!("{} AOT modules:", m.modules.len());
+            for spec in &m.modules {
+                let roof = perfmodel::KernelRoofline {
+                    tile_t: spec.t.min(256),
+                    i: spec.i,
+                    c: spec.c,
+                    elem_bytes: 4,
+                };
+                println!(
+                    "  {:<28} t={:<5} i={:<4} c={:<4} vmem={:>7.1} KiB  AI={:>6.1}  MXU~{:.0}%",
+                    format!("{}:{}", spec.graph, spec.variant),
+                    spec.t,
+                    spec.i,
+                    spec.c,
+                    roof.vmem_bytes() as f64 / 1024.0,
+                    roof.arithmetic_intensity(),
+                    roof.mxu_utilization_estimate() * 100.0
+                );
+            }
+        }
+        Err(e) => println!("no artifacts ({e}); run `make artifacts`"),
+    }
+    let _ = apriori::AprioriConfig::default();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(args: &[&str]) -> Result<Flags, String> {
+        Flags::parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn flags_parse_pairs() {
+        let f = flags(&["--nodes", "5", "--preset", "fhdsc"]).unwrap();
+        assert_eq!(f.get("nodes"), Some("5"));
+        assert_eq!(f.get("preset"), Some("fhdsc"));
+        assert_eq!(f.get("missing"), None);
+    }
+
+    #[test]
+    fn flags_reject_bare_values_and_dangling() {
+        assert!(flags(&["nodes", "5"]).is_err());
+        assert!(flags(&["--nodes"]).is_err());
+    }
+
+    #[test]
+    fn experiment_config_overrides_apply() {
+        let f = flags(&[
+            "--preset", "fhdsc", "--nodes", "7", "--min-support", "0.04",
+            "--max-k", "2", "--engine", "trie", "--split-tx", "123",
+            "--transactions", "4567", "--seed", "9",
+        ])
+        .unwrap();
+        let cfg = experiment_config(&f).unwrap();
+        assert_eq!(cfg.preset, Preset::Fhdsc);
+        assert_eq!(cfg.nodes, 7);
+        assert_eq!(cfg.apriori.min_support, 0.04);
+        assert_eq!(cfg.apriori.max_k, 2);
+        assert_eq!(cfg.engine, EngineKind::Trie);
+        assert_eq!(cfg.split_tx, 123);
+        assert_eq!(cfg.transactions, 4567);
+        assert_eq!(cfg.seed, 9);
+    }
+
+    #[test]
+    fn experiment_config_rejects_bad_values() {
+        let f = flags(&["--engine", "gpu"]).unwrap();
+        assert!(experiment_config(&f).is_err());
+        let f = flags(&["--nodes", "many"]).unwrap();
+        assert!(experiment_config(&f).is_err());
+    }
+
+    #[test]
+    fn shipped_config_files_parse() {
+        for name in ["fig5_fhssc3.toml", "tensor_smoke.toml", "standalone_baseline.toml"] {
+            let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+                .join("configs")
+                .join(name);
+            let cfg = ExperimentConfig::load(&p).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(cfg.transactions > 0, "{name}");
+        }
+    }
+}

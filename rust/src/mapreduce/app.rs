@@ -1,0 +1,114 @@
+//! The application contract: what a MapReduce job supplies.
+//!
+//! Mirrors Hadoop's `Mapper`/`Combiner`/`Reducer` trio over typed keys and
+//! values instead of `Writable` byte streams. Inputs are transaction
+//! slices (this system's InputFormat); emission goes through a collector
+//! closure exactly like `context.write(k, v)`.
+
+use std::fmt::Debug;
+use std::hash::Hash;
+
+use crate::data::{split::Split, Transaction};
+
+/// A MapReduce application over typed keys/values.
+pub trait MapReduceApp: Send + Sync {
+    /// Intermediate/output key. `Ord + Hash` because the shuffle both
+    /// hash-partitions and sort-merges (Hadoop semantics: reducer input
+    /// arrives key-sorted). `Sync` because tasktracker threads share the
+    /// jobtracker's output store by reference.
+    type K: Ord + Hash + Clone + Send + Sync + Debug + 'static;
+    /// Value type.
+    type V: Clone + Send + Sync + Debug + 'static;
+
+    /// Map one input split. `emit` corresponds to `context.write`.
+    fn map(
+        &self,
+        split: &Split,
+        input: &[Transaction],
+        emit: &mut dyn FnMut(Self::K, Self::V),
+    );
+
+    /// Optional map-side combiner over one key's values from a single map
+    /// task. Returning `None` disables combining for this app.
+    fn combine(&self, _key: &Self::K, _values: &[Self::V]) -> Option<Self::V> {
+        None
+    }
+
+    /// Reduce one key group. Returning `None` drops the key from the
+    /// output (Apriori uses this for the min-support filter).
+    fn reduce(&self, key: &Self::K, values: &[Self::V]) -> Option<Self::V>;
+
+    /// Abstract compute cost of mapping `n_tx` transactions, in work units
+    /// (1 unit ≈ one transaction·candidate containment probe). Drives the
+    /// simulator and the stats; the default is linear in input size.
+    fn map_cost_hint(&self, n_tx: usize) -> f64 {
+        n_tx as f64
+    }
+
+    /// Abstract compute cost of reducing one key group.
+    fn reduce_cost_hint(&self, n_values: usize) -> f64 {
+        n_values as f64
+    }
+
+    /// Approximate serialized size in bytes of one (key, value) record on
+    /// the shuffle wire (drives the simulator's shuffle matrix).
+    fn record_bytes_hint(&self) -> usize {
+        16
+    }
+}
+
+/// A trivial word-count-style app over item ids, used by the substrate's
+/// own tests (the Apriori apps live in `apriori::mr`).
+pub struct ItemCount;
+
+impl MapReduceApp for ItemCount {
+    type K = u32;
+    type V = u64;
+
+    fn map(&self, _s: &Split, input: &[Transaction], emit: &mut dyn FnMut(u32, u64)) {
+        for t in input {
+            for &item in &t.items {
+                emit(item, 1);
+            }
+        }
+    }
+
+    fn combine(&self, _k: &u32, values: &[u64]) -> Option<u64> {
+        Some(values.iter().sum())
+    }
+
+    fn reduce(&self, _k: &u32, values: &[u64]) -> Option<u64> {
+        Some(values.iter().sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::split::{plan_splits, split_transactions};
+    use crate::data::TransactionDb;
+
+    #[test]
+    fn item_count_maps_and_combines() {
+        let db = TransactionDb::new(vec![
+            Transaction::new([0u32, 1]),
+            Transaction::new([1u32]),
+        ]);
+        let splits = plan_splits(&db, 10);
+        let mut out = Vec::new();
+        ItemCount.map(&splits[0], split_transactions(&db, &splits[0]), &mut |k, v| {
+            out.push((k, v))
+        });
+        out.sort_unstable();
+        assert_eq!(out, vec![(0, 1), (1, 1), (1, 1)]);
+        assert_eq!(ItemCount.combine(&1, &[1, 1]), Some(2));
+        assert_eq!(ItemCount.reduce(&1, &[2, 5]), Some(7));
+    }
+
+    #[test]
+    fn default_hints_are_sane() {
+        assert_eq!(ItemCount.map_cost_hint(100), 100.0);
+        assert_eq!(ItemCount.reduce_cost_hint(3), 3.0);
+        assert!(ItemCount.record_bytes_hint() > 0);
+    }
+}

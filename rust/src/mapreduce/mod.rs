@@ -1,0 +1,26 @@
+//! The Hadoop-like MapReduce substrate.
+//!
+//! Two execution engines share the same job description:
+//!
+//! * [`runner`] — **real** multi-threaded execution: per-node tasktracker
+//!   pools sized by slot count, a jobtracker with locality-aware FIFO
+//!   scheduling, hash-partitioned sort-merge shuffle, optional combiner,
+//!   speculative re-execution of stragglers, and failure injection with
+//!   bounded retry. Produces actual results and wall-clock stats.
+//! * [`sim`] — a **discrete-event cost model** of the same schedule over
+//!   the paper's hardware profiles (`cluster`, `simnet`, `dfs`): map waves
+//!   on slots with data-locality and spill penalties, flow-level shuffle,
+//!   reduce waves, and Hadoop's fixed per-task/per-job overheads. This is
+//!   what regenerates the paper's fig 4/5 *shapes* on one machine.
+//!
+//! Apriori (or any other application) implements [`app::MapReduceApp`] and
+//! runs unchanged on either engine.
+
+pub mod app;
+pub mod runner;
+pub mod shuffle;
+pub mod sim;
+
+pub use app::MapReduceApp;
+pub use runner::{JobConfig, JobError, JobRunner, JobStats};
+pub use sim::{SimJobSpec, SimMapTask, SimReport, Simulator};

@@ -1,0 +1,671 @@
+//! The real execution engine: jobtracker + per-node tasktracker pools.
+//!
+//! Faithful to Hadoop 0.20's control flow at the granularity this repo
+//! needs: FIFO scheduling with data-locality preference (a tasktracker
+//! asking for work is handed a map task whose block lives on that node if
+//! one is queued), bounded re-execution of failed attempts, speculative
+//! duplicates of stragglers once the pending queue drains, a map-side
+//! combiner, and a hash-partitioned sort-merge shuffle feeding the reduce
+//! wave. Execution is genuinely parallel: one OS thread per (node, slot).
+//!
+//! Simulated *hardware* speed differences do not slow down the host
+//! threads — they are the business of `sim`; this engine measures real
+//! wall-clock and real scheduling behaviour (locality ratios, speculation
+//! wins/waste, failure retries).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::cluster::{ClusterConfig, NodeId};
+use crate::data::split::{split_transactions, Split};
+use crate::data::TransactionDb;
+use crate::dfs::{BlockId, Dfs};
+
+use super::app::MapReduceApp;
+use super::shuffle::{combine_local, group_by_key, partition_output};
+
+/// Knobs of one job submission (Hadoop's `JobConf` analogue).
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    /// Number of reduce tasks.
+    pub n_reducers: usize,
+    /// Run the app's combiner over each map task's output.
+    pub enable_combiner: bool,
+    /// Launch speculative duplicates of straggling map attempts.
+    pub speculative: bool,
+    /// A running task is a straggler once its runtime exceeds this multiple
+    /// of the median completed map duration.
+    pub speculation_slowdown: f64,
+    /// Max attempts per task before the job aborts (Hadoop default 4).
+    pub max_attempts: usize,
+    /// Deterministic failure injection, if any.
+    pub failure: Option<FailureSpec>,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        Self {
+            n_reducers: 1,
+            enable_combiner: true,
+            speculative: true,
+            speculation_slowdown: 1.5,
+            max_attempts: 4,
+            failure: None,
+        }
+    }
+}
+
+/// Deterministic fault injection: attempt (task, n) fails iff a hash of
+/// (seed, task, n) falls under the probability. Reproducible across runs.
+#[derive(Debug, Clone, Copy)]
+pub struct FailureSpec {
+    pub map_fail_prob: f64,
+    pub reduce_fail_prob: f64,
+    pub seed: u64,
+}
+
+impl FailureSpec {
+    fn fails(&self, prob: f64, task: usize, attempt: usize) -> bool {
+        // splitmix-style avalanche over (seed, task, attempt)
+        let mut z = self
+            .seed
+            .wrapping_add((task as u64) << 32)
+            .wrapping_add(attempt as u64)
+            .wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z as f64 / u64::MAX as f64) < prob
+    }
+}
+
+/// Counters a run reports (Hadoop's job counters analogue).
+#[derive(Debug, Clone, Default)]
+pub struct JobStats {
+    pub maps_total: usize,
+    pub map_attempts: usize,
+    pub map_failures: usize,
+    pub speculative_launched: usize,
+    pub speculative_wasted: usize,
+    pub locality_local: usize,
+    pub locality_remote: usize,
+    pub shuffle_records: usize,
+    pub reduces_total: usize,
+    pub reduce_attempts: usize,
+    pub reduce_failures: usize,
+    pub output_records: usize,
+    pub map_secs: f64,
+    pub reduce_secs: f64,
+    pub total_secs: f64,
+}
+
+impl JobStats {
+    /// Fraction of map attempts that read their split locally.
+    pub fn locality_fraction(&self) -> f64 {
+        let n = self.locality_local + self.locality_remote;
+        if n == 0 {
+            return 1.0;
+        }
+        self.locality_local as f64 / n as f64
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum JobError {
+    #[error("map task {task} failed {attempts} attempts (max {max})")]
+    MapTaskFailed {
+        task: usize,
+        attempts: usize,
+        max: usize,
+    },
+    #[error("reduce task {task} failed {attempts} attempts (max {max})")]
+    ReduceTaskFailed {
+        task: usize,
+        attempts: usize,
+        max: usize,
+    },
+    #[error("splits/blocks length mismatch: {splits} vs {blocks}")]
+    BadPlacement { splits: usize, blocks: usize },
+    #[error("n_reducers must be >= 1")]
+    NoReducers,
+}
+
+/// The job execution engine bound to a cluster + DFS placement.
+pub struct JobRunner<'a> {
+    pub cluster: &'a ClusterConfig,
+    pub dfs: &'a Dfs,
+    /// `blocks[i]` backs `splits[i]` (from `Dfs::write_splits`).
+    pub blocks: &'a [BlockId],
+}
+
+/// Jobtracker state shared by all tasktracker threads.
+struct MapPhase<K, V> {
+    pending: Vec<usize>,
+    /// task -> (attempt count started, started instants of live attempts)
+    running: HashMap<usize, Vec<Instant>>,
+    attempts_started: HashMap<usize, usize>,
+    completed: HashSet<usize>,
+    completed_durations: Vec<f64>,
+    outputs: HashMap<usize, Vec<Vec<(K, V)>>>,
+    stats: JobStats,
+    abort: Option<JobError>,
+}
+
+impl<'a> JobRunner<'a> {
+    pub fn new(cluster: &'a ClusterConfig, dfs: &'a Dfs, blocks: &'a [BlockId]) -> Self {
+        Self { cluster, dfs, blocks }
+    }
+
+    /// Run one job to completion. Output is key-sorted and deterministic.
+    pub fn run<A: MapReduceApp>(
+        &self,
+        app: &A,
+        db: &TransactionDb,
+        splits: &[Split],
+        cfg: &JobConfig,
+    ) -> Result<(Vec<(A::K, A::V)>, JobStats), JobError> {
+        if cfg.n_reducers == 0 {
+            return Err(JobError::NoReducers);
+        }
+        if splits.len() != self.blocks.len() {
+            return Err(JobError::BadPlacement {
+                splits: splits.len(),
+                blocks: self.blocks.len(),
+            });
+        }
+        let t0 = Instant::now();
+        let (outputs, mut stats) = self.map_phase(app, db, splits, cfg)?;
+        stats.map_secs = t0.elapsed().as_secs_f64();
+
+        // Shuffle: reducer r pulls partition r of every map output, in
+        // task order (determinism).
+        let t1 = Instant::now();
+        let mut reduce_inputs: Vec<Vec<(A::K, A::V)>> =
+            (0..cfg.n_reducers).map(|_| Vec::new()).collect();
+        let mut task_ids: Vec<usize> = outputs.keys().copied().collect();
+        task_ids.sort_unstable();
+        for tid in task_ids {
+            for (r, part) in outputs[&tid].iter().enumerate() {
+                stats.shuffle_records += part.len();
+                reduce_inputs[r].extend(part.iter().cloned());
+            }
+        }
+
+        let output = self.reduce_phase(app, reduce_inputs, cfg, &mut stats)?;
+        stats.reduce_secs = t1.elapsed().as_secs_f64();
+        stats.output_records = output.len();
+        stats.total_secs = t0.elapsed().as_secs_f64();
+        Ok((output, stats))
+    }
+
+    /// The map wave: tasktracker threads pull tasks with locality
+    /// preference; stragglers get speculative duplicates.
+    #[allow(clippy::type_complexity)]
+    fn map_phase<A: MapReduceApp>(
+        &self,
+        app: &A,
+        db: &TransactionDb,
+        splits: &[Split],
+        cfg: &JobConfig,
+    ) -> Result<(HashMap<usize, Vec<Vec<(A::K, A::V)>>>, JobStats), JobError> {
+        let n_tasks = splits.len();
+        let state = Mutex::new(MapPhase::<A::K, A::V> {
+            pending: (0..n_tasks).collect(),
+            running: HashMap::new(),
+            attempts_started: HashMap::new(),
+            completed: HashSet::new(),
+            completed_durations: Vec::new(),
+            outputs: HashMap::new(),
+            stats: JobStats {
+                maps_total: n_tasks,
+                reduces_total: cfg.n_reducers,
+                ..Default::default()
+            },
+            abort: None,
+        });
+        let cv = Condvar::new();
+
+        std::thread::scope(|scope| {
+            for (node, profile) in self.cluster.nodes.iter().enumerate() {
+                for _slot in 0..profile.slots {
+                    let state = &state;
+                    let cv = &cv;
+                    scope.spawn(move || {
+                        self.map_worker(app, db, splits, cfg, node, state, cv);
+                    });
+                }
+            }
+        });
+
+        let mut st = state.into_inner().unwrap();
+        if let Some(err) = st.abort.take() {
+            return Err(err);
+        }
+        let outputs = std::mem::take(&mut st.outputs);
+        Ok((outputs, st.stats.clone()))
+    }
+
+    fn map_worker<A: MapReduceApp>(
+        &self,
+        app: &A,
+        db: &TransactionDb,
+        splits: &[Split],
+        cfg: &JobConfig,
+        node: NodeId,
+        state: &Mutex<MapPhase<A::K, A::V>>,
+        cv: &Condvar,
+    ) {
+        loop {
+            // --- pick a task under the lock ---
+            let picked: Option<(usize, usize, bool)> = {
+                let mut st = state.lock().unwrap();
+                loop {
+                    if st.abort.is_some() || st.completed.len() == st.stats.maps_total {
+                        cv.notify_all();
+                        return;
+                    }
+                    // 1. locality-preferred FIFO from the pending queue
+                    if !st.pending.is_empty() {
+                        let pos = st
+                            .pending
+                            .iter()
+                            .position(|&t| self.dfs.is_local(self.blocks[t], node))
+                            .unwrap_or(0);
+                        let task = st.pending.remove(pos);
+                        let local = self.dfs.is_local(self.blocks[task], node);
+                        if local {
+                            st.stats.locality_local += 1;
+                        } else {
+                            st.stats.locality_remote += 1;
+                        }
+                        let attempt = *st
+                            .attempts_started
+                            .entry(task)
+                            .and_modify(|a| *a += 1)
+                            .or_insert(1);
+                        st.running.entry(task).or_default().push(Instant::now());
+                        st.stats.map_attempts += 1;
+                        break Some((task, attempt, false));
+                    }
+                    // 2. speculation: duplicate the slowest straggler
+                    if cfg.speculative && !st.completed_durations.is_empty() {
+                        let mut ds = st.completed_durations.clone();
+                        ds.sort_by(f64::total_cmp);
+                        let median = ds[ds.len() / 2];
+                        let threshold = median * cfg.speculation_slowdown;
+                        let straggler = st
+                            .running
+                            .iter()
+                            .filter(|(t, starts)| {
+                                !st.completed.contains(t)
+                                    && starts.len() == 1 // not yet duplicated
+                                    && starts[0].elapsed().as_secs_f64() > threshold
+                            })
+                            .map(|(&t, _)| t)
+                            .next();
+                        if let Some(task) = straggler {
+                            let attempt = *st
+                                .attempts_started
+                                .entry(task)
+                                .and_modify(|a| *a += 1)
+                                .or_insert(1);
+                            st.running.get_mut(&task).unwrap().push(Instant::now());
+                            st.stats.map_attempts += 1;
+                            st.stats.speculative_launched += 1;
+                            break Some((task, attempt, true));
+                        }
+                    }
+                    // 3. nothing to do yet: wait for completions/failures
+                    let (guard, _timeout) = cv
+                        .wait_timeout(st, std::time::Duration::from_millis(2))
+                        .unwrap();
+                    st = guard;
+                }
+            };
+            let Some((task, attempt, speculative)) = picked else {
+                return;
+            };
+
+            // --- execute the attempt outside the lock ---
+            let started = Instant::now();
+            let failed = cfg
+                .failure
+                .map(|f| f.fails(f.map_fail_prob, task, attempt))
+                .unwrap_or(false);
+            let result = if failed {
+                None
+            } else {
+                let mut records: Vec<(A::K, A::V)> = Vec::new();
+                app.map(&splits[task], split_transactions(db, &splits[task]), &mut |k, v| {
+                    records.push((k, v))
+                });
+                if cfg.enable_combiner {
+                    records = combine_local(records, |k, vs| app.combine(k, vs));
+                }
+                Some(partition_output(records, cfg.n_reducers))
+            };
+
+            // --- report under the lock ---
+            let mut st = state.lock().unwrap();
+            match result {
+                Some(partitions) => {
+                    if st.completed.insert(task) {
+                        st.completed_durations
+                            .push(started.elapsed().as_secs_f64());
+                        st.outputs.insert(task, partitions);
+                    } else if speculative || attempt > 1 {
+                        st.stats.speculative_wasted += 1;
+                    }
+                    st.running.remove(&task);
+                }
+                None => {
+                    st.stats.map_failures += 1;
+                    // remove this attempt's start record
+                    if let Some(starts) = st.running.get_mut(&task) {
+                        starts.pop();
+                        if starts.is_empty() {
+                            st.running.remove(&task);
+                        }
+                    }
+                    if st.completed.contains(&task) {
+                        // a twin already finished; nothing to do
+                    } else if attempt >= cfg.max_attempts {
+                        st.abort = Some(JobError::MapTaskFailed {
+                            task,
+                            attempts: attempt,
+                            max: cfg.max_attempts,
+                        });
+                    } else if !st.pending.contains(&task)
+                        && !st.running.contains_key(&task)
+                    {
+                        st.pending.push(task); // re-queue for retry
+                    }
+                }
+            }
+            cv.notify_all();
+        }
+    }
+
+    /// The reduce wave: `n_reducers` tasks over the worker pool (reducers
+    /// have no locality — Hadoop pulls map output over the network anyway).
+    fn reduce_phase<A: MapReduceApp>(
+        &self,
+        app: &A,
+        reduce_inputs: Vec<Vec<(A::K, A::V)>>,
+        cfg: &JobConfig,
+        stats: &mut JobStats,
+    ) -> Result<Vec<(A::K, A::V)>, JobError> {
+        struct RedState<K, V> {
+            pending: Vec<usize>,
+            attempts: HashMap<usize, usize>,
+            done: HashMap<usize, Vec<(K, V)>>,
+            failures: usize,
+            attempts_total: usize,
+            abort: Option<JobError>,
+        }
+        let n = reduce_inputs.len();
+        let state = Mutex::new(RedState::<A::K, A::V> {
+            pending: (0..n).collect(),
+            attempts: HashMap::new(),
+            done: HashMap::new(),
+            failures: 0,
+            attempts_total: 0,
+            abort: None,
+        });
+        let inputs = &reduce_inputs;
+
+        std::thread::scope(|scope| {
+            for profile in self.cluster.nodes.iter() {
+                for _slot in 0..profile.slots {
+                    let state = &state;
+                    scope.spawn(move || loop {
+                        let picked = {
+                            let mut st = state.lock().unwrap();
+                            if st.abort.is_some() || st.done.len() == n {
+                                return;
+                            }
+                            match st.pending.pop() {
+                                Some(t) => {
+                                    let a = *st.attempts.entry(t).and_modify(|x| *x += 1).or_insert(1);
+                                    st.attempts_total += 1;
+                                    Some((t, a))
+                                }
+                                None => None,
+                            }
+                        };
+                        let Some((task, attempt)) = picked else {
+                            std::thread::sleep(std::time::Duration::from_micros(200));
+                            continue;
+                        };
+                        let failed = cfg
+                            .failure
+                            .map(|f| f.fails(f.reduce_fail_prob, task + 1_000_000, attempt))
+                            .unwrap_or(false);
+                        if failed {
+                            let mut st = state.lock().unwrap();
+                            st.failures += 1;
+                            if attempt >= cfg.max_attempts {
+                                st.abort = Some(JobError::ReduceTaskFailed {
+                                    task,
+                                    attempts: attempt,
+                                    max: cfg.max_attempts,
+                                });
+                            } else {
+                                st.pending.push(task);
+                            }
+                            continue;
+                        }
+                        let mut out: Vec<(A::K, A::V)> = Vec::new();
+                        for (k, vs) in group_by_key(inputs[task].clone()) {
+                            if let Some(v) = app.reduce(&k, &vs) {
+                                out.push((k, v));
+                            }
+                        }
+                        let mut st = state.lock().unwrap();
+                        st.done.insert(task, out);
+                    });
+                }
+            }
+        });
+
+        let mut st = state.into_inner().unwrap();
+        if let Some(err) = st.abort.take() {
+            return Err(err);
+        }
+        stats.reduce_attempts = st.attempts_total;
+        stats.reduce_failures = st.failures;
+        // Deterministic final order: concat partitions by id, sort by key.
+        let mut output = Vec::new();
+        for r in 0..n {
+            output.extend(st.done.remove(&r).unwrap());
+        }
+        output.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(output)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::quest::{QuestGenerator, QuestParams};
+    use crate::data::split::plan_splits;
+    use crate::mapreduce::app::ItemCount;
+
+    fn fixture(n_nodes: usize, n_tx: usize) -> (ClusterConfig, TransactionDb, Vec<Split>) {
+        let db = QuestGenerator::new(QuestParams::t10_i4(n_tx)).generate();
+        let splits = plan_splits(&db, (n_tx / (n_nodes * 2)).max(1));
+        (ClusterConfig::fhssc(n_nodes), db, splits)
+    }
+
+    fn ground_truth(db: &TransactionDb) -> Vec<(u32, u64)> {
+        let mut counts: HashMap<u32, u64> = HashMap::new();
+        for t in &db.transactions {
+            for &i in &t.items {
+                *counts.entry(i).or_insert(0) += 1;
+            }
+        }
+        let mut v: Vec<_> = counts.into_iter().collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn item_count_end_to_end_matches_ground_truth() {
+        let (cluster, db, splits) = fixture(3, 1000);
+        let mut dfs = Dfs::new(&cluster);
+        let blocks = dfs.write_splits(&splits).unwrap();
+        let runner = JobRunner::new(&cluster, &dfs, &blocks);
+        let cfg = JobConfig { n_reducers: 4, ..Default::default() };
+        let (out, stats) = runner.run(&ItemCount, &db, &splits, &cfg).unwrap();
+        assert_eq!(out, ground_truth(&db));
+        assert_eq!(stats.maps_total, splits.len());
+        assert!(stats.map_attempts >= splits.len());
+        assert_eq!(stats.output_records, out.len());
+        assert!(stats.total_secs > 0.0);
+    }
+
+    #[test]
+    fn deterministic_output_across_runs_and_reducer_counts() {
+        let (cluster, db, splits) = fixture(2, 600);
+        let mut dfs = Dfs::new(&cluster);
+        let blocks = dfs.write_splits(&splits).unwrap();
+        let runner = JobRunner::new(&cluster, &dfs, &blocks);
+        let mut results = Vec::new();
+        for n_reducers in [1, 2, 7] {
+            let cfg = JobConfig { n_reducers, ..Default::default() };
+            let (out, _) = runner.run(&ItemCount, &db, &splits, &cfg).unwrap();
+            results.push(out);
+        }
+        assert_eq!(results[0], results[1]);
+        assert_eq!(results[1], results[2]);
+    }
+
+    #[test]
+    fn combiner_does_not_change_results_but_cuts_shuffle() {
+        let (cluster, db, splits) = fixture(2, 800);
+        let mut dfs = Dfs::new(&cluster);
+        let blocks = dfs.write_splits(&splits).unwrap();
+        let runner = JobRunner::new(&cluster, &dfs, &blocks);
+        let on = JobConfig { enable_combiner: true, n_reducers: 2, ..Default::default() };
+        let off = JobConfig { enable_combiner: false, n_reducers: 2, ..Default::default() };
+        let (a, sa) = runner.run(&ItemCount, &db, &splits, &on).unwrap();
+        let (b, sb) = runner.run(&ItemCount, &db, &splits, &off).unwrap();
+        assert_eq!(a, b);
+        assert!(
+            sa.shuffle_records * 2 < sb.shuffle_records,
+            "combiner should collapse shuffle: {} vs {}",
+            sa.shuffle_records,
+            sb.shuffle_records
+        );
+    }
+
+    #[test]
+    fn locality_mostly_local_on_replicated_cluster() {
+        let (cluster, db, splits) = fixture(3, 2000);
+        let mut dfs = Dfs::new(&cluster);
+        let blocks = dfs.write_splits(&splits).unwrap();
+        let runner = JobRunner::new(&cluster, &dfs, &blocks);
+        let (_, stats) = runner
+            .run(&ItemCount, &db, &splits, &JobConfig::default())
+            .unwrap();
+        // replication 3 on 3 nodes -> every block local everywhere.
+        assert_eq!(stats.locality_fraction(), 1.0);
+    }
+
+    #[test]
+    fn failure_injection_retries_and_recovers() {
+        let (cluster, db, splits) = fixture(2, 500);
+        let mut dfs = Dfs::new(&cluster);
+        let blocks = dfs.write_splits(&splits).unwrap();
+        let runner = JobRunner::new(&cluster, &dfs, &blocks);
+        let cfg = JobConfig {
+            failure: Some(FailureSpec {
+                map_fail_prob: 0.3,
+                reduce_fail_prob: 0.2,
+                seed: 7,
+            }),
+            speculative: false,
+            ..Default::default()
+        };
+        let (out, stats) = runner.run(&ItemCount, &db, &splits, &cfg).unwrap();
+        assert_eq!(out, ground_truth(&db));
+        assert!(stats.map_failures > 0, "expected injected failures");
+        assert!(stats.map_attempts > stats.maps_total);
+    }
+
+    #[test]
+    fn unrecoverable_failure_aborts_with_error() {
+        let (cluster, db, splits) = fixture(2, 200);
+        let mut dfs = Dfs::new(&cluster);
+        let blocks = dfs.write_splits(&splits).unwrap();
+        let runner = JobRunner::new(&cluster, &dfs, &blocks);
+        let cfg = JobConfig {
+            failure: Some(FailureSpec {
+                map_fail_prob: 1.0,
+                reduce_fail_prob: 0.0,
+                seed: 1,
+            }),
+            max_attempts: 3,
+            ..Default::default()
+        };
+        match runner.run(&ItemCount, &db, &splits, &cfg) {
+            Err(JobError::MapTaskFailed { attempts: 3, max: 3, .. }) => {}
+            other => panic!("expected MapTaskFailed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reduce_failures_exhaust_and_abort() {
+        let (cluster, db, splits) = fixture(2, 200);
+        let mut dfs = Dfs::new(&cluster);
+        let blocks = dfs.write_splits(&splits).unwrap();
+        let runner = JobRunner::new(&cluster, &dfs, &blocks);
+        let cfg = JobConfig {
+            failure: Some(FailureSpec {
+                map_fail_prob: 0.0,
+                reduce_fail_prob: 1.0,
+                seed: 2,
+            }),
+            max_attempts: 2,
+            ..Default::default()
+        };
+        assert!(matches!(
+            runner.run(&ItemCount, &db, &splits, &cfg),
+            Err(JobError::ReduceTaskFailed { .. })
+        ));
+    }
+
+    #[test]
+    fn empty_input_produces_empty_output() {
+        let cluster = ClusterConfig::fhssc(2);
+        let db = TransactionDb::new(vec![]);
+        let splits = plan_splits(&db, 10);
+        let dfs = Dfs::new(&cluster);
+        let runner = JobRunner::new(&cluster, &dfs, &[]);
+        let (out, stats) = runner
+            .run(&ItemCount, &db, &splits, &JobConfig::default())
+            .unwrap();
+        assert!(out.is_empty());
+        assert_eq!(stats.maps_total, 0);
+    }
+
+    #[test]
+    fn config_validation() {
+        let (cluster, db, splits) = fixture(2, 100);
+        let mut dfs = Dfs::new(&cluster);
+        let blocks = dfs.write_splits(&splits).unwrap();
+        let runner = JobRunner::new(&cluster, &dfs, &blocks);
+        let cfg = JobConfig { n_reducers: 0, ..Default::default() };
+        assert!(matches!(
+            runner.run(&ItemCount, &db, &splits, &cfg),
+            Err(JobError::NoReducers)
+        ));
+        let short = &blocks[..blocks.len() - 1];
+        let runner = JobRunner::new(&cluster, &dfs, short);
+        assert!(matches!(
+            runner.run(&ItemCount, &db, &splits, &JobConfig::default()),
+            Err(JobError::BadPlacement { .. })
+        ));
+    }
+}

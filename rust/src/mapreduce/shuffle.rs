@@ -1,0 +1,157 @@
+//! Shuffle: hash partitioning and sort-merge grouping.
+//!
+//! Hadoop semantics: each map task's output is partitioned by
+//! `hash(key) % n_reducers`; each reducer pulls its partition from every
+//! map, merge-sorts by key, and sees `(key, [values...])` groups in key
+//! order. The combiner runs over a *single map task's* output before the
+//! wire — it must be applied per-map, never across maps.
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+
+/// Hadoop's `HashPartitioner`: stable across the process (we use a fixed
+/// seed-free SipHash via `DefaultHasher` with identical initial state).
+pub fn partition<K: Hash>(key: &K, n_reducers: usize) -> usize {
+    assert!(n_reducers > 0);
+    let mut h = DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() % n_reducers as u64) as usize
+}
+
+/// Partition one map task's output into `n_reducers` buckets.
+pub fn partition_output<K: Hash, V>(records: Vec<(K, V)>, n_reducers: usize) -> Vec<Vec<(K, V)>> {
+    let mut parts: Vec<Vec<(K, V)>> = (0..n_reducers).map(|_| Vec::new()).collect();
+    for (k, v) in records {
+        let p = partition(&k, n_reducers);
+        parts[p].push((k, v));
+    }
+    parts
+}
+
+/// Group a reducer's pulled records by key, in key order (sort-merge).
+pub fn group_by_key<K: Ord + Clone, V>(mut records: Vec<(K, V)>) -> Vec<(K, Vec<V>)> {
+    records.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut groups: Vec<(K, Vec<V>)> = Vec::new();
+    for (k, v) in records {
+        match groups.last_mut() {
+            Some((gk, vs)) if *gk == k => vs.push(v),
+            _ => groups.push((k, vec![v])),
+        }
+    }
+    groups
+}
+
+/// Apply a combiner to one map task's local output: group by key, fold
+/// each group to a single record. `combine` returning `None` passes the
+/// group through unchanged (no combiner configured for the app).
+pub fn combine_local<K: Ord + Clone, V: Clone>(
+    records: Vec<(K, V)>,
+    combine: impl Fn(&K, &[V]) -> Option<V>,
+) -> Vec<(K, V)> {
+    let mut out = Vec::new();
+    for (k, vs) in group_by_key(records) {
+        match combine(&k, &vs) {
+            Some(v) => out.push((k, v)),
+            None => out.extend(vs.into_iter().map(|v| (k.clone(), v))),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn partition_is_stable_and_in_range() {
+        for n in [1usize, 2, 3, 7, 16] {
+            for key in 0u32..200 {
+                let p1 = partition(&key, n);
+                let p2 = partition(&key, n);
+                assert_eq!(p1, p2);
+                assert!(p1 < n);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_spreads_keys() {
+        let n = 8;
+        let mut hist = vec![0usize; n];
+        for key in 0u32..8000 {
+            hist[partition(&key, n)] += 1;
+        }
+        let (min, max) = (hist.iter().min().unwrap(), hist.iter().max().unwrap());
+        assert!(
+            *max < min * 2,
+            "partition histogram too skewed: {hist:?}"
+        );
+    }
+
+    #[test]
+    fn partition_output_preserves_all_records() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let records: Vec<(u32, u64)> = (0..500)
+            .map(|_| (rng.gen_range(100) as u32, rng.gen_range(10)))
+            .collect();
+        let parts = partition_output(records.clone(), 4);
+        assert_eq!(parts.len(), 4);
+        let mut flat: Vec<_> = parts.into_iter().flatten().collect();
+        let mut orig = records;
+        flat.sort_unstable();
+        orig.sort_unstable();
+        assert_eq!(flat, orig);
+    }
+
+    #[test]
+    fn group_by_key_sorts_and_groups() {
+        let groups = group_by_key(vec![(3, 'a'), (1, 'b'), (3, 'c'), (2, 'd'), (1, 'e')]);
+        assert_eq!(
+            groups,
+            vec![(1, vec!['b', 'e']), (2, vec!['d']), (3, vec!['a', 'c'])]
+        );
+        assert!(group_by_key::<u32, ()>(vec![]).is_empty());
+    }
+
+    #[test]
+    fn combine_local_sums() {
+        let combined = combine_local(
+            vec![(1u32, 1u64), (2, 1), (1, 1), (1, 1)],
+            |_k, vs| Some(vs.iter().sum()),
+        );
+        assert_eq!(combined, vec![(1, 3), (2, 1)]);
+    }
+
+    #[test]
+    fn combine_local_none_passthrough() {
+        let recs = vec![(1u32, 1u64), (1, 2), (2, 3)];
+        let out = combine_local(recs.clone(), |_k, _vs| None);
+        assert_eq!(out, vec![(1, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn combiner_equivalence_property() {
+        // For an associative+commutative combiner, combine-then-reduce must
+        // equal reduce-alone. This is the invariant that makes ablation A2
+        // a pure performance experiment.
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        for _ in 0..50 {
+            let records: Vec<(u32, u64)> = (0..rng.range_usize(1, 300))
+                .map(|_| (rng.gen_range(20) as u32, 1))
+                .collect();
+            let direct: Vec<(u32, u64)> = group_by_key(records.clone())
+                .into_iter()
+                .map(|(k, vs)| (k, vs.iter().sum()))
+                .collect();
+            let combined_first: Vec<(u32, u64)> = group_by_key(combine_local(
+                records,
+                |_k, vs: &[u64]| Some(vs.iter().sum()),
+            ))
+            .into_iter()
+            .map(|(k, vs)| (k, vs.iter().sum()))
+            .collect();
+            assert_eq!(direct, combined_first);
+        }
+    }
+}

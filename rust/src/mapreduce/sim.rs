@@ -1,0 +1,505 @@
+//! Discrete-event cost model of a MapReduce job over simulated hardware.
+//!
+//! This is the substitute for the paper's physical testbed (DESIGN.md
+//! §Substitutions): it reproduces the *shape* of fig 4/5 — who wins, where
+//! the storage knee falls, how heterogeneity (FHDSC) degrades the makespan
+//! — from first principles:
+//!
+//! * **map wave**: greedy earliest-finish-time list scheduling of map tasks
+//!   onto per-node slots; a task reads its split from local disk when the
+//!   chosen node holds a replica, over the network otherwise, with a
+//!   read-amplification penalty on spilled blocks (storage over-commit);
+//! * **shuffle**: a flow-level all-to-all transfer (`simnet`);
+//! * **reduce wave**: reducers round-robin over nodes, gated by merge I/O
+//!   and compute;
+//! * **framework overheads**: per-task startup (Hadoop 0.20 forked a JVM
+//!   per attempt) and per-job coordination that grows ~ln N with cluster
+//!   size (namenode/jobtracker chatter) — the term the paper's
+//!   `FHDSC = FHSSC = ln N` model gestures at.
+//!
+//! Durations are deterministic functions of `NodeProfile`s, so every curve
+//! in the benches is exactly reproducible.
+
+use crate::cluster::{ClusterConfig, DeployMode, NodeId};
+use crate::simnet::Network;
+
+/// One map task as the simulator sees it.
+#[derive(Debug, Clone)]
+pub struct SimMapTask {
+    /// Split size on disk.
+    pub bytes: u64,
+    /// Compute cost in work units (1 unit = one tx·candidate probe).
+    pub work: f64,
+    /// Nodes holding a replica of the backing block.
+    pub replicas: Vec<NodeId>,
+    /// Block was placed past node capacity (fig-5 knee).
+    pub spilled: bool,
+}
+
+/// One job description.
+#[derive(Debug, Clone)]
+pub struct SimJobSpec {
+    pub map_tasks: Vec<SimMapTask>,
+    pub n_reducers: usize,
+    /// Total shuffle bytes produced by each map task (spread uniformly
+    /// over reducers).
+    pub shuffle_bytes_per_map: u64,
+    /// Compute cost per reducer, work units.
+    pub reduce_work: f64,
+    /// Model speculative re-execution of stragglers.
+    pub speculative: bool,
+    /// Unexpected degradation: `(node, factor)` multiplies the runtime of
+    /// every task assigned to `node` *after* scheduling — the classic
+    /// straggler scenario (thermal throttling, a busy neighbour, a dying
+    /// disk) that the scheduler could not have planned around and that
+    /// speculative execution exists to absorb.
+    pub surprise: Option<(NodeId, f64)>,
+}
+
+impl Default for SimJobSpec {
+    fn default() -> Self {
+        Self {
+            map_tasks: Vec::new(),
+            n_reducers: 1,
+            shuffle_bytes_per_map: 0,
+            reduce_work: 0.0,
+            speculative: false,
+            surprise: None,
+        }
+    }
+}
+
+/// Framework cost constants. Defaults follow Hadoop-0.20-era folklore:
+/// ~1 s JVM fork per task, seconds of job setup, coordination growing
+/// with ln(cluster size).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Per-attempt startup (JVM fork + localization), seconds.
+    pub task_startup_s: f64,
+    /// Fixed per-job setup/teardown, seconds.
+    pub job_startup_s: f64,
+    /// Coefficient of the ln(N) coordination term, seconds.
+    pub coordination_s: f64,
+    /// Read amplification on spilled blocks.
+    pub spill_penalty: f64,
+    /// Reference node throughput, work units / second at cpu_factor 1.0.
+    pub work_units_per_sec: f64,
+}
+
+impl CostModel {
+    /// Defaults per deployment mode (standalone skips the framework).
+    pub fn for_mode(mode: DeployMode) -> Self {
+        match mode {
+            DeployMode::Standalone => Self {
+                task_startup_s: 0.0,
+                job_startup_s: 0.0,
+                coordination_s: 0.0,
+                spill_penalty: 3.0,
+                work_units_per_sec: 2.0e6,
+            },
+            DeployMode::PseudoDistributed => Self {
+                task_startup_s: 1.0,
+                job_startup_s: 4.0,
+                coordination_s: 0.0,
+                spill_penalty: 3.0,
+                work_units_per_sec: 2.0e6,
+            },
+            DeployMode::FullyDistributed => Self {
+                task_startup_s: 1.0,
+                job_startup_s: 4.0,
+                coordination_s: 2.0,
+                spill_penalty: 3.0,
+                work_units_per_sec: 2.0e6,
+            },
+        }
+    }
+}
+
+/// Phase timings of one simulated job.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    pub startup_secs: f64,
+    pub map_secs: f64,
+    pub shuffle_secs: f64,
+    pub reduce_secs: f64,
+    pub total_secs: f64,
+    /// Fraction of map tasks that ran data-local.
+    pub locality_fraction: f64,
+    /// Fraction of map tasks that paid the spill penalty.
+    pub spill_fraction: f64,
+    /// Map tasks sped up by speculative re-execution.
+    pub speculated: usize,
+}
+
+/// The simulator: cluster + cost model.
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    pub cluster: ClusterConfig,
+    pub cost: CostModel,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    node: NodeId,
+    free_at: f64,
+}
+
+impl Simulator {
+    pub fn new(cluster: ClusterConfig) -> Self {
+        let cost = CostModel::for_mode(cluster.mode);
+        Self { cluster, cost }
+    }
+
+    pub fn with_cost(cluster: ClusterConfig, cost: CostModel) -> Self {
+        Self { cluster, cost }
+    }
+
+    fn network(&self) -> Network {
+        Network::new(
+            self.cluster.switch.clone(),
+            self.cluster.nodes.iter().map(|n| n.nic_mbps).collect(),
+        )
+        // inter-rack uplink: a quarter of the backplane (oversubscribed
+        // top-of-rack), only binding for multi-rack layouts.
+        .with_racks(
+            self.cluster.rack_of.clone(),
+            self.cluster.switch.backplane_mbps / 4.0,
+        )
+    }
+
+    /// Map-task duration on a given node.
+    fn map_duration(&self, t: &SimMapTask, node: NodeId) -> f64 {
+        let p = &self.cluster.nodes[node];
+        let local = t.replicas.contains(&node);
+        let disk = t.bytes as f64 / (p.disk_mbps * 1e6);
+        let read = if local {
+            disk
+        } else {
+            // remote read: the remote disk still serves the bytes, then
+            // they cross the switch gated by this node's NIC — a
+            // store-and-forward (non-pipelined) approximation, which is
+            // what makes data-locality scheduling worth having.
+            let net =
+                t.bytes as f64 * 8.0 / (p.nic_mbps.min(self.cluster.switch.port_mbps) * 1e6);
+            disk + net + self.cluster.switch.latency_ms / 1e3
+        };
+        let compute = t.work / (self.cost.work_units_per_sec * p.cpu_factor);
+        // Storage over-commit degrades the whole task, not just the read:
+        // once disks are full, intermediate files (the paper's "superset
+        // transaction generation") spill remotely and spill-merge passes
+        // thrash — the mechanism §4 blames for the fig-5 exponential tail.
+        let spill = if t.spilled { self.cost.spill_penalty } else { 1.0 };
+        self.cost.task_startup_s + (read + compute) * spill
+    }
+
+    /// Simulate one job; returns phase timings.
+    pub fn run(&self, spec: &SimJobSpec) -> SimReport {
+        let n_nodes = self.cluster.n_nodes();
+        let mut report = SimReport::default();
+
+        // ---- startup + coordination ----
+        report.startup_secs = self.cost.job_startup_s
+            + self.cost.coordination_s * (n_nodes.max(1) as f64).ln().max(0.0);
+
+        // ---- map wave: pull-based scheduling, like the real jobtracker —
+        // when a slot frees it pulls the first pending task local to its
+        // node (else the queue head). Slot availability evolves with
+        // *actual* durations (including the post-scheduling surprise), so
+        // a degraded node naturally pulls fewer tasks; what's left is the
+        // tail a running straggler gates — speculation's job.
+        let mut slots: Vec<Slot> = Vec::new();
+        for (node, p) in self.cluster.nodes.iter().enumerate() {
+            for _ in 0..p.slots {
+                slots.push(Slot { node, free_at: 0.0 });
+            }
+        }
+        let n_tasks = spec.map_tasks.len();
+        let mut pending: Vec<usize> = (0..n_tasks).collect();
+        let mut map_node: Vec<NodeId> = vec![0; n_tasks];
+        let mut task_start = vec![0.0f64; n_tasks];
+        let mut task_finish = vec![0.0f64; n_tasks];
+        let mut actual = vec![0.0f64; n_tasks];
+        let mut local_count = 0usize;
+        while !pending.is_empty() {
+            // earliest-free slot pulls next (deterministic tie-break).
+            let si = slots
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.free_at.total_cmp(&b.1.free_at).then(a.0.cmp(&b.0)))
+                .map(|(i, _)| i)
+                .unwrap();
+            let node = slots[si].node;
+            let pos = pending
+                .iter()
+                .position(|&ti| spec.map_tasks[ti].replicas.contains(&node))
+                .unwrap_or(0);
+            let ti = pending.remove(pos);
+            let t = &spec.map_tasks[ti];
+            if t.replicas.contains(&node) {
+                local_count += 1;
+            }
+            let mut dur = self.map_duration(t, node);
+            if let Some((slow_node, factor)) = spec.surprise {
+                if node == slow_node {
+                    dur *= factor.max(1.0);
+                }
+            }
+            map_node[ti] = node;
+            actual[ti] = dur;
+            task_start[ti] = slots[si].free_at;
+            slots[si].free_at += dur;
+            task_finish[ti] = slots[si].free_at;
+        }
+        let mut map_finish = task_finish.iter().cloned().fold(0.0f64, f64::max);
+
+        // Phase D: speculative execution — a task whose actual runtime
+        // exceeds `2 × median` gets a duplicate on the earliest-free slot
+        // of a *different* node; the earlier finisher wins.
+        if spec.speculative && actual.len() > 2 {
+            let mut sorted = actual.clone();
+            sorted.sort_by(f64::total_cmp);
+            let median = sorted[sorted.len() / 2];
+            let mut slot_free: Vec<f64> = slots.iter().map(|s| s.free_at).collect();
+            for ti in 0..actual.len() {
+                if actual[ti] > 2.0 * median {
+                    // backup launched when the straggler is detected
+                    // (median elapsed), on the earliest-free foreign slot.
+                    let (bs, bfree) = slot_free
+                        .iter()
+                        .enumerate()
+                        .filter(|(si, _)| slots[*si].node != map_node[ti])
+                        .map(|(si, &f)| (si, f))
+                        .min_by(|a, b| a.1.total_cmp(&b.1))
+                        .map(|(si, f)| (Some(si), f))
+                        .unwrap_or((None, f64::INFINITY));
+                    if let Some(bs) = bs {
+                        let detect = task_start[ti] + median;
+                        let backup_start = bfree.max(detect);
+                        // the backup reads remotely at median compute speed
+                        let dup = self.cost.task_startup_s + median * 1.2;
+                        let dup_finish = backup_start + dup;
+                        if dup_finish < task_finish[ti] {
+                            task_finish[ti] = dup_finish;
+                            slot_free[bs] = dup_finish;
+                            report.speculated += 1;
+                        }
+                    }
+                }
+            }
+            map_finish = task_finish.iter().cloned().fold(0.0f64, f64::max);
+        }
+        report.map_secs = map_finish;
+        report.locality_fraction = if spec.map_tasks.is_empty() {
+            1.0
+        } else {
+            local_count as f64 / spec.map_tasks.len() as f64
+        };
+        report.spill_fraction = if spec.map_tasks.is_empty() {
+            0.0
+        } else {
+            spec.map_tasks.iter().filter(|t| t.spilled).count() as f64
+                / spec.map_tasks.len() as f64
+        };
+
+        // ---- shuffle: all-to-all flow matrix ----
+        if spec.n_reducers > 0 && spec.shuffle_bytes_per_map > 0 && !spec.map_tasks.is_empty() {
+            let per_reducer = spec.shuffle_bytes_per_map / spec.n_reducers.max(1) as u64;
+            let mut matrix = vec![vec![0u64; n_nodes]; n_nodes];
+            for (m, &src) in map_node.iter().enumerate() {
+                let _ = m;
+                for r in 0..spec.n_reducers {
+                    let dst = r % n_nodes; // reducers round-robin on nodes
+                    matrix[src][dst] += per_reducer;
+                }
+            }
+            report.shuffle_secs = self.network().shuffle_makespan(&matrix);
+        }
+
+        // ---- reduce wave ----
+        if spec.n_reducers > 0 {
+            let total_shuffle: u64 =
+                spec.shuffle_bytes_per_map * spec.map_tasks.len() as u64;
+            let bytes_per_reducer = total_shuffle / spec.n_reducers as u64;
+            let mut slot_free = vec![0.0f64; n_nodes];
+            let mut finish = 0.0f64;
+            for r in 0..spec.n_reducers {
+                let node = r % n_nodes;
+                let p = &self.cluster.nodes[node];
+                // merge-sort I/O + compute
+                let io = bytes_per_reducer as f64 / (p.disk_mbps * 1e6);
+                let compute =
+                    spec.reduce_work / (self.cost.work_units_per_sec * p.cpu_factor);
+                let dur = self.cost.task_startup_s + io + compute;
+                slot_free[node] += dur;
+                finish = finish.max(slot_free[node]);
+            }
+            report.reduce_secs = finish;
+        }
+
+        report.total_secs =
+            report.startup_secs + report.map_secs + report.shuffle_secs + report.reduce_secs;
+        report
+    }
+
+    /// Sum of several jobs run back-to-back (Apriori's level-wise loop).
+    pub fn run_sequence(&self, specs: &[SimJobSpec]) -> SimReport {
+        let mut total = SimReport { locality_fraction: 1.0, ..Default::default() };
+        let mut loc_acc = 0.0;
+        for s in specs {
+            let r = self.run(s);
+            total.startup_secs += r.startup_secs;
+            total.map_secs += r.map_secs;
+            total.shuffle_secs += r.shuffle_secs;
+            total.reduce_secs += r.reduce_secs;
+            total.total_secs += r.total_secs;
+            total.speculated += r.speculated;
+            loc_acc += r.locality_fraction;
+            total.spill_fraction = total.spill_fraction.max(r.spill_fraction);
+        }
+        if !specs.is_empty() {
+            total.locality_fraction = loc_acc / specs.len() as f64;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_tasks(n: usize, bytes: u64, work: f64, n_nodes: usize) -> Vec<SimMapTask> {
+        (0..n)
+            .map(|i| SimMapTask {
+                bytes,
+                work,
+                replicas: vec![i % n_nodes, (i + 1) % n_nodes],
+                spilled: false,
+            })
+            .collect()
+    }
+
+    fn spec(n_maps: usize, n_nodes: usize) -> SimJobSpec {
+        SimJobSpec {
+            map_tasks: uniform_tasks(n_maps, 8_000_000, 4.0e6, n_nodes),
+            n_reducers: n_nodes,
+            shuffle_bytes_per_map: 500_000,
+            reduce_work: 1.0e6,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn more_nodes_speed_up_large_jobs() {
+        let t3 = Simulator::new(ClusterConfig::fhssc(3)).run(&spec(64, 3)).total_secs;
+        let t6 = Simulator::new(ClusterConfig::fhssc(6)).run(&spec(64, 6)).total_secs;
+        assert!(t6 < t3, "6 nodes {t6} should beat 3 nodes {t3}");
+    }
+
+    #[test]
+    fn fhdsc_slower_than_fhssc_at_equal_n() {
+        for n in [2, 3, 5, 8] {
+            let hom = Simulator::new(ClusterConfig::fhssc(n)).run(&spec(48, n)).total_secs;
+            let het = Simulator::new(ClusterConfig::fhdsc(n)).run(&spec(48, n)).total_secs;
+            assert!(
+                het > hom,
+                "n={n}: FHDSC {het} must be slower than FHSSC {hom} (paper fig 4)"
+            );
+        }
+    }
+
+    #[test]
+    fn standalone_beats_distributed_on_tiny_inputs() {
+        // The paper's fig-5 crossover: framework overhead dominates small
+        // jobs, parallelism wins large ones.
+        let tiny = SimJobSpec {
+            map_tasks: uniform_tasks(2, 100_000, 1.0e5, 1),
+            n_reducers: 1,
+            shuffle_bytes_per_map: 10_000,
+            reduce_work: 1.0e4,
+            ..Default::default()
+        };
+        let sa = Simulator::new(ClusterConfig::standalone()).run(&tiny).total_secs;
+        let fd = Simulator::new(ClusterConfig::fhssc(3)).run(&tiny).total_secs;
+        assert!(sa < fd, "standalone {sa} must beat distributed {fd} on tiny input");
+
+        let big = spec(96, 3);
+        let mut big_sa = big.clone();
+        for t in &mut big_sa.map_tasks {
+            t.replicas = vec![0];
+        }
+        let sa_big = Simulator::new(ClusterConfig::standalone()).run(&big_sa).total_secs;
+        let fd_big = Simulator::new(ClusterConfig::fhssc(3)).run(&big).total_secs;
+        assert!(fd_big < sa_big, "distributed {fd_big} must beat standalone {sa_big} on big input");
+    }
+
+    #[test]
+    fn spilled_blocks_inflate_map_time() {
+        let n = 3;
+        let mut clean = spec(32, n);
+        let mut spilled = clean.clone();
+        for t in &mut spilled.map_tasks {
+            t.spilled = true;
+        }
+        let sim = Simulator::new(ClusterConfig::fhssc(n));
+        let tc = sim.run(&clean).total_secs;
+        let ts = sim.run(&spilled).total_secs;
+        assert!(ts > tc, "spill must cost: {ts} vs {tc}");
+        clean.map_tasks.truncate(0);
+        assert!(sim.run(&clean).map_secs == 0.0);
+    }
+
+    #[test]
+    fn remote_reads_slower_than_local() {
+        let sim = Simulator::new(ClusterConfig::fhssc(3));
+        let local = SimMapTask {
+            bytes: 64_000_000,
+            work: 0.0,
+            replicas: vec![0],
+            spilled: false,
+        };
+        let d_local = sim.map_duration(&local, 0);
+        let d_remote = sim.map_duration(&local, 1);
+        assert!(d_remote > d_local, "{d_remote} vs {d_local}");
+    }
+
+    #[test]
+    fn speculation_reduces_makespan_with_straggler() {
+        // Node 3 unexpectedly degrades 10x after scheduling: without
+        // speculation its tasks gate the wave.
+        let sim = Simulator::new(ClusterConfig::fhssc(4));
+        let mut s = spec(32, 4);
+        s.surprise = Some((3, 10.0));
+        s.speculative = false;
+        let without = sim.run(&s).total_secs;
+        s.speculative = true;
+        let with_spec = sim.run(&s);
+        assert!(with_spec.speculated > 0, "straggler should trigger speculation");
+        assert!(
+            with_spec.total_secs < without,
+            "speculation must help: {} vs {without}",
+            with_spec.total_secs
+        );
+        // and a surprise with speculation still beats no mitigation
+        let mut clean = spec(32, 4);
+        clean.speculative = false;
+        assert!(without > sim.run(&clean).total_secs, "surprise must cost something");
+    }
+
+    #[test]
+    fn coordination_overhead_grows_logarithmically() {
+        let r2 = Simulator::new(ClusterConfig::fhssc(2)).run(&spec(4, 2));
+        let r16 = Simulator::new(ClusterConfig::fhssc(16)).run(&spec(4, 16));
+        let delta = r16.startup_secs - r2.startup_secs;
+        let expected = 2.0 * ((16f64).ln() - (2f64).ln());
+        assert!((delta - expected).abs() < 1e-9, "delta {delta} vs {expected}");
+    }
+
+    #[test]
+    fn sequence_sums_jobs() {
+        let sim = Simulator::new(ClusterConfig::fhssc(3));
+        let s = spec(8, 3);
+        let one = sim.run(&s).total_secs;
+        let three = sim.run_sequence(&[s.clone(), s.clone(), s]).total_secs;
+        assert!((three - 3.0 * one).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,195 @@
+//! Paper-style result tables: each bench regenerates a figure by printing
+//! the same rows/series the paper plots, as aligned text, markdown and
+//! CSV, plus an ASCII sparkline chart for quick shape inspection.
+
+use std::fmt::Write as _;
+
+/// One plotted series (a line in the paper's figure).
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub values: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>, values: Vec<f64>) -> Self {
+        Self { name: name.into(), values }
+    }
+}
+
+/// A figure reproduction: an x-axis plus one or more series.
+#[derive(Debug, Clone)]
+pub struct BenchTable {
+    pub title: String,
+    pub x_label: String,
+    pub x: Vec<f64>,
+    pub series: Vec<Series>,
+}
+
+impl BenchTable {
+    pub fn new(title: impl Into<String>, x_label: impl Into<String>, x: Vec<f64>) -> Self {
+        Self {
+            title: title.into(),
+            x_label: x_label.into(),
+            x,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn push_series(&mut self, s: Series) -> &mut Self {
+        assert_eq!(
+            s.values.len(),
+            self.x.len(),
+            "series '{}' length mismatch",
+            s.name
+        );
+        self.series.push(s);
+        self
+    }
+
+    /// Markdown table (the form EXPERIMENTS.md embeds).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}", self.title);
+        let _ = write!(out, "| {} |", self.x_label);
+        for s in &self.series {
+            let _ = write!(out, " {} |", s.name);
+        }
+        let _ = writeln!(out);
+        let _ = write!(out, "|---|");
+        for _ in &self.series {
+            let _ = write!(out, "---|");
+        }
+        let _ = writeln!(out);
+        for (i, x) in self.x.iter().enumerate() {
+            let _ = write!(out, "| {} |", trim_num(*x));
+            for s in &self.series {
+                let _ = write!(out, " {} |", trim_num(s.values[i]));
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+
+    /// CSV (one row per x, columns = series).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = write!(out, "{}", self.x_label);
+        for s in &self.series {
+            let _ = write!(out, ",{}", s.name);
+        }
+        let _ = writeln!(out);
+        for (i, x) in self.x.iter().enumerate() {
+            let _ = write!(out, "{}", trim_num(*x));
+            for s in &self.series {
+                let _ = write!(out, ",{}", trim_num(s.values[i]));
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+
+    /// ASCII chart: one sparkline row per series, normalized over the
+    /// table's global max — enough to eyeball "who wins / where's the knee".
+    pub fn to_ascii_chart(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self
+            .series
+            .iter()
+            .flat_map(|s| s.values.iter())
+            .fold(0.0f64, |a, &b| a.max(b));
+        let mut out = String::new();
+        let _ = writeln!(out, "{} (max={})", self.title, trim_num(max));
+        let width = self.series.iter().map(|s| s.name.len()).max().unwrap_or(0);
+        for s in &self.series {
+            let line: String = s
+                .values
+                .iter()
+                .map(|&v| {
+                    if max <= 0.0 {
+                        GLYPHS[0]
+                    } else {
+                        let idx = ((v / max) * 7.0).round() as usize;
+                        GLYPHS[idx.min(7)]
+                    }
+                })
+                .collect();
+            let _ = writeln!(out, "{:>width$} {}", s.name, line, width = width);
+        }
+        out
+    }
+
+    /// Print everything to stdout (what bench binaries call) and return
+    /// the markdown for EXPERIMENTS.md capture.
+    pub fn emit(&self) -> String {
+        let md = self.to_markdown();
+        println!("{md}");
+        println!("{}", self.to_ascii_chart());
+        println!("--- csv ---\n{}", self.to_csv());
+        md
+    }
+}
+
+fn trim_num(v: f64) -> String {
+    if v == 0.0 {
+        return "0".into();
+    }
+    if v.fract() == 0.0 && v.abs() < 1e12 {
+        format!("{}", v as i64)
+    } else if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> BenchTable {
+        let mut t = BenchTable::new("Fig X", "n", vec![1.0, 2.0, 3.0]);
+        t.push_series(Series::new("a", vec![1.0, 4.0, 9.0]));
+        t.push_series(Series::new("b", vec![2.0, 2.0, 2.0]));
+        t
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = table().to_markdown();
+        assert!(md.contains("### Fig X"));
+        assert!(md.contains("| n | a | b |"));
+        assert!(md.contains("| 2 | 4 | 2 |"));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = table().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "n,a,b");
+        assert_eq!(lines[2], "2,4,2");
+        assert_eq!(lines.len(), 4);
+    }
+
+    #[test]
+    fn ascii_chart_has_one_row_per_series() {
+        let chart = table().to_ascii_chart();
+        assert_eq!(chart.lines().count(), 3); // title + 2 series
+        assert!(chart.contains('█')); // the max point saturates
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn series_length_validated() {
+        let mut t = BenchTable::new("t", "x", vec![1.0]);
+        t.push_series(Series::new("bad", vec![1.0, 2.0]));
+    }
+
+    #[test]
+    fn num_formatting() {
+        assert_eq!(trim_num(0.0), "0");
+        assert_eq!(trim_num(3.0), "3");
+        assert_eq!(trim_num(0.5), "0.500");
+        assert_eq!(trim_num(123.456), "123.5");
+    }
+}

@@ -1,0 +1,121 @@
+//! Metrics and reporting: wall-clock timers, counters, and the bench-table
+//! emitter that prints paper-style rows (markdown + CSV) for every figure
+//! reproduction.
+
+pub mod bench;
+
+use std::time::Instant;
+
+/// A simple scoped timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Median / mean / min / max over repeated measurements — the aggregation
+/// every bench row reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "Summary::of(empty)");
+        let mut s = samples.to_vec();
+        s.sort_by(f64::total_cmp);
+        let n = s.len();
+        Self {
+            n,
+            mean: s.iter().sum::<f64>() / n as f64,
+            median: if n % 2 == 1 {
+                s[n / 2]
+            } else {
+                (s[n / 2 - 1] + s[n / 2]) / 2.0
+            },
+            min: s[0],
+            max: s[n - 1],
+        }
+    }
+}
+
+/// Time `f` over `n` iterations after `warmup` runs; returns per-iteration
+/// seconds. The in-tree criterion substitute (DESIGN.md §Substitutions).
+pub fn measure<F: FnMut()>(warmup: usize, n: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples: Vec<f64> = (0..n.max(1))
+        .map(|_| {
+            let t = Timer::start();
+            f();
+            t.secs()
+        })
+        .collect();
+    Summary::of(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_math() {
+        let s = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        let e = Summary::of(&[4.0, 1.0, 2.0, 3.0]);
+        assert_eq!(e.median, 2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn summary_rejects_empty() {
+        Summary::of(&[]);
+    }
+
+    #[test]
+    fn measure_runs_and_times() {
+        let mut runs = 0;
+        let s = measure(2, 5, || {
+            runs += 1;
+            std::hint::black_box(());
+        });
+        assert_eq!(runs, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.min >= 0.0);
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.millis() >= 2.0);
+    }
+}

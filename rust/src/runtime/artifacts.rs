@@ -1,0 +1,209 @@
+//! Artifact manifest: which AOT-lowered HLO modules exist, with their
+//! (t, i, c) tile shapes. Written by `python/compile/aot.py`; parsed here
+//! with the in-tree JSON parser.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One lowered module from `manifest.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModuleSpec {
+    /// Graph name: `count_split` (pallas) or `count_split_ref` (jnp oracle).
+    pub graph: String,
+    /// Shape-variant name: `small` / `medium` / `large`.
+    pub variant: String,
+    /// HLO text file, relative to the manifest's directory.
+    pub path: PathBuf,
+    /// Tile shape: transactions per call, item width, candidate width.
+    pub t: usize,
+    pub i: usize,
+    pub c: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("cannot read {path}: {source}")]
+    Io {
+        path: PathBuf,
+        source: std::io::Error,
+    },
+    #[error("manifest parse: {0}")]
+    Parse(String),
+    #[error("manifest format {0} unsupported (want 1)")]
+    Format(f64),
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub modules: Vec<ModuleSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self, ManifestError> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath).map_err(|source| ManifestError::Io {
+            path: mpath.clone(),
+            source,
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (separated for testability).
+    pub fn parse(dir: &Path, text: &str) -> Result<Self, ManifestError> {
+        let j = Json::parse(text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let fmt = j
+            .get("format")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| ManifestError::Parse("missing 'format'".into()))?;
+        if fmt != 1.0 {
+            return Err(ManifestError::Format(fmt));
+        }
+        let mods = j
+            .get("modules")
+            .and_then(|m| m.as_arr())
+            .ok_or_else(|| ManifestError::Parse("missing 'modules'".into()))?;
+        let mut modules = Vec::with_capacity(mods.len());
+        for m in mods {
+            let field = |k: &str| -> Result<&Json, ManifestError> {
+                m.get(k)
+                    .ok_or_else(|| ManifestError::Parse(format!("module missing '{k}'")))
+            };
+            modules.push(ModuleSpec {
+                graph: field("graph")?
+                    .as_str()
+                    .ok_or_else(|| ManifestError::Parse("graph not a string".into()))?
+                    .to_string(),
+                variant: field("variant")?
+                    .as_str()
+                    .ok_or_else(|| ManifestError::Parse("variant not a string".into()))?
+                    .to_string(),
+                path: dir.join(
+                    field("path")?
+                        .as_str()
+                        .ok_or_else(|| ManifestError::Parse("path not a string".into()))?,
+                ),
+                t: field("t")?
+                    .as_usize()
+                    .ok_or_else(|| ManifestError::Parse("t not a number".into()))?,
+                i: field("i")?
+                    .as_usize()
+                    .ok_or_else(|| ManifestError::Parse("i not a number".into()))?,
+                c: field("c")?
+                    .as_usize()
+                    .ok_or_else(|| ManifestError::Parse("c not a number".into()))?,
+            });
+        }
+        Ok(Self { dir: dir.to_path_buf(), modules })
+    }
+
+    /// Find a module by graph + variant.
+    pub fn find(&self, graph: &str, variant: &str) -> Option<&ModuleSpec> {
+        self.modules
+            .iter()
+            .find(|m| m.graph == graph && m.variant == variant)
+    }
+
+    /// Smallest variant of `graph` whose item width fits `n_items` and
+    /// candidate width fits `n_cands` — the shape-selection policy of the
+    /// tensor engine (prefer the least padding waste).
+    pub fn best_fit(&self, graph: &str, n_items: usize, n_cands: usize) -> Option<&ModuleSpec> {
+        self.modules
+            .iter()
+            .filter(|m| m.graph == graph && m.i >= n_items)
+            .min_by_key(|m| {
+                // waste = padded candidate slots (rounded up to full calls)
+                // tie-broken by item-width padding.
+                let calls = n_cands.div_ceil(m.c);
+                (calls * m.c - n_cands, m.i - n_items, m.t)
+            })
+    }
+
+    /// Default artifacts directory: `$MR_APRIORI_ARTIFACTS` or `artifacts/`
+    /// next to the workspace root.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("MR_APRIORI_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "modules": [
+        {"graph":"count_split","variant":"small","path":"count_split_small.hlo.txt","t":256,"i":64,"c":64,"sha256":"x","bytes":10},
+        {"graph":"count_split","variant":"medium","path":"count_split_medium.hlo.txt","t":1024,"i":256,"c":256,"sha256":"y","bytes":10},
+        {"graph":"count_split_ref","variant":"small","path":"count_split_ref_small.hlo.txt","t":256,"i":64,"c":64,"sha256":"z","bytes":10}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(Path::new("/art"), SAMPLE).unwrap();
+        assert_eq!(m.modules.len(), 3);
+        let s = m.find("count_split", "small").unwrap();
+        assert_eq!((s.t, s.i, s.c), (256, 64, 64));
+        assert_eq!(s.path, Path::new("/art/count_split_small.hlo.txt"));
+        assert!(m.find("count_split", "huge").is_none());
+    }
+
+    #[test]
+    fn best_fit_prefers_least_padding() {
+        let m = ArtifactManifest::parse(Path::new("/a"), SAMPLE).unwrap();
+        // 30 items, 50 candidates -> small (64 wide) fits with least waste
+        let s = m.best_fit("count_split", 30, 50).unwrap();
+        assert_eq!(s.variant, "small");
+        // 200 items require the 256-wide medium
+        let s = m.best_fit("count_split", 200, 50).unwrap();
+        assert_eq!(s.variant, "medium");
+        // 300 items fit nothing
+        assert!(m.best_fit("count_split", 300, 50).is_none());
+    }
+
+    #[test]
+    fn best_fit_large_candidate_sets_prefer_wide_c() {
+        let m = ArtifactManifest::parse(Path::new("/a"), SAMPLE).unwrap();
+        // 60 items, 512 candidates: small needs 8 calls with 0 waste;
+        // medium needs 2 calls with 0 waste — both zero-waste, tie-break on
+        // item padding picks small (64-30=4 < 256-60).
+        let s = m.best_fit("count_split", 60, 512).unwrap();
+        assert_eq!(s.variant, "small");
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(ArtifactManifest::parse(Path::new("/a"), "{}").is_err());
+        assert!(ArtifactManifest::parse(Path::new("/a"), "not json").is_err());
+        assert!(
+            ArtifactManifest::parse(Path::new("/a"), r#"{"format":2,"modules":[]}"#).is_err()
+        );
+        assert!(ArtifactManifest::parse(
+            Path::new("/a"),
+            r#"{"format":1,"modules":[{"graph":"g"}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_built() {
+        let dir = ArtifactManifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert!(m.find("count_split", "small").is_some());
+        assert!(m.find("count_split_ref", "small").is_some());
+        for spec in &m.modules {
+            assert!(spec.path.exists(), "{:?} missing", spec.path);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 ↔ L1/L2 bridge: load the AOT-compiled HLO artifacts and serve
+//! support-count executions to map tasks over a channel.
+//!
+//! PJRT handles are not `Send` (`xla` crate types wrap raw pointers), so a
+//! dedicated **service thread** owns the `PjRtClient` and all compiled
+//! executables; the rest of the system talks to it through the cloneable
+//! [`TensorServiceHandle`]. This mirrors how a real deployment would pin an
+//! accelerator context to a device-owning thread, with map tasks queueing
+//! batched count requests.
+
+pub mod artifacts;
+pub mod service;
+
+pub use artifacts::{ArtifactManifest, ModuleSpec};
+pub use service::{CountRequest, TensorService, TensorServiceHandle};

@@ -1,0 +1,408 @@
+//! The tensor service: a device-owning thread wrapping the PJRT CPU client.
+//!
+//! `xla` crate handles are `!Send`, so one thread owns the client and the
+//! compile cache; everything else holds a cloneable [`TensorServiceHandle`]
+//! and performs synchronous `count` RPCs over mpsc channels. Requests carry
+//! encoded bitmap blocks of *any* live size — the service chunks them into
+//! the artifact's fixed (t, i, c) tile shape, pads, executes, and reduces.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::data::bitmap::{BitmapBlock, CandidateBlock};
+
+use super::artifacts::{ArtifactManifest, ModuleSpec};
+
+/// One support-count request over encoded blocks.
+#[derive(Debug)]
+pub struct CountRequest {
+    /// Graph to run: `count_split` (pallas) or `count_split_ref` (oracle).
+    pub graph: String,
+    /// Transactions, already bitmap-encoded at some item width.
+    pub block: BitmapBlock,
+    /// Candidates encoded at the same item width.
+    pub cands: CandidateBlock,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ServiceError {
+    #[error("no artifact fits graph={graph} items={items} cands={cands}")]
+    NoFit {
+        graph: String,
+        items: usize,
+        cands: usize,
+    },
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("tensor service stopped")]
+    Stopped,
+    #[error("item width mismatch: block {block} vs cands {cands}")]
+    WidthMismatch { block: usize, cands: usize },
+}
+
+enum Msg {
+    Count {
+        req: CountRequest,
+        reply: mpsc::Sender<Result<Vec<u32>, ServiceError>>,
+    },
+    /// Number of modules compiled so far (introspection for tests/metrics).
+    Stats {
+        reply: mpsc::Sender<usize>,
+    },
+    Shutdown,
+}
+
+/// Handle to the service thread. Clone freely; all clones talk to the same
+/// PJRT client. The sender sits behind a mutex so the handle is `Sync` and
+/// can be shared by reference across tasktracker threads (`std::mpsc`
+/// senders are `Send` but not `Sync`); the critical section is just the
+/// enqueue, not the execution.
+pub struct TensorServiceHandle {
+    tx: std::sync::Mutex<mpsc::Sender<Msg>>,
+}
+
+impl Clone for TensorServiceHandle {
+    fn clone(&self) -> Self {
+        Self {
+            tx: std::sync::Mutex::new(self.tx.lock().unwrap().clone()),
+        }
+    }
+}
+
+impl TensorServiceHandle {
+    fn send(&self, msg: Msg) -> Result<(), ServiceError> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(msg)
+            .map_err(|_| ServiceError::Stopped)
+    }
+
+    /// Count supports: returns one count per **live** candidate row.
+    pub fn count(&self, req: CountRequest) -> Result<Vec<u32>, ServiceError> {
+        let (rtx, rrx) = mpsc::channel();
+        self.send(Msg::Count { req, reply: rtx })?;
+        rrx.recv().map_err(|_| ServiceError::Stopped)?
+    }
+
+    /// How many distinct modules have been compiled.
+    pub fn compiled_modules(&self) -> Result<usize, ServiceError> {
+        let (rtx, rrx) = mpsc::channel();
+        self.send(Msg::Stats { reply: rtx })?;
+        rrx.recv().map_err(|_| ServiceError::Stopped)
+    }
+}
+
+/// The running service; dropping it shuts the thread down.
+pub struct TensorService {
+    tx: mpsc::Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl TensorService {
+    /// Start the service against an artifact directory. Fails fast if the
+    /// manifest is unreadable; PJRT client creation happens on the service
+    /// thread (first error surfaces on the first request).
+    pub fn start(manifest: ArtifactManifest) -> Self {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let join = std::thread::Builder::new()
+            .name("tensor-service".into())
+            .spawn(move || service_loop(manifest, rx))
+            .expect("spawn tensor-service");
+        Self { tx, join: Some(join) }
+    }
+
+    /// Start from the default artifacts directory.
+    pub fn start_default() -> Result<Self, super::artifacts::ManifestError> {
+        Ok(Self::start(ArtifactManifest::load(
+            &ArtifactManifest::default_dir(),
+        )?))
+    }
+
+    pub fn handle(&self) -> TensorServiceHandle {
+        TensorServiceHandle {
+            tx: std::sync::Mutex::new(self.tx.clone()),
+        }
+    }
+}
+
+impl Drop for TensorService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ModuleSpec,
+}
+
+fn service_loop(manifest: ArtifactManifest, rx: mpsc::Receiver<Msg>) {
+    let mut client: Option<xla::PjRtClient> = None;
+    let mut cache: HashMap<(String, String), Compiled> = HashMap::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Stats { reply } => {
+                let _ = reply.send(cache.len());
+            }
+            Msg::Count { req, reply } => {
+                let res = handle_count(&manifest, &mut client, &mut cache, req);
+                let _ = reply.send(res);
+            }
+        }
+    }
+}
+
+fn handle_count(
+    manifest: &ArtifactManifest,
+    client: &mut Option<xla::PjRtClient>,
+    cache: &mut HashMap<(String, String), Compiled>,
+    req: CountRequest,
+) -> Result<Vec<u32>, ServiceError> {
+    if req.block.n_items != req.cands.n_items {
+        return Err(ServiceError::WidthMismatch {
+            block: req.block.n_items,
+            cands: req.cands.n_items,
+        });
+    }
+    let spec = manifest
+        .best_fit(&req.graph, req.block.n_items, req.cands.n_live.max(1))
+        .ok_or_else(|| ServiceError::NoFit {
+            graph: req.graph.clone(),
+            items: req.block.n_items,
+            cands: req.cands.n_live,
+        })?
+        .clone();
+
+    if client.is_none() {
+        *client = Some(xla::PjRtClient::cpu().map_err(|e| ServiceError::Xla(e.to_string()))?);
+    }
+    let key = (spec.graph.clone(), spec.variant.clone());
+    if !cache.contains_key(&key) {
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)
+            .map_err(|e| ServiceError::Xla(format!("load {:?}: {e}", spec.path)))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .as_ref()
+            .unwrap()
+            .compile(&comp)
+            .map_err(|e| ServiceError::Xla(format!("compile {:?}: {e}", spec.path)))?;
+        cache.insert(key.clone(), Compiled { exe, spec: spec.clone() });
+    }
+    let compiled = cache.get(&key).unwrap();
+    execute_chunked(compiled, &req)
+}
+
+/// Chunk an arbitrary-size (block × candidates) request into the module's
+/// fixed (t, i, c) shape: transactions chunk along rows (counts summed),
+/// candidates chunk along columns (counts concatenated). Inputs narrower
+/// than the module's item width are zero-padded on the right; padded
+/// candidate slots carry an unmatchable cardinality (encoder invariant).
+fn execute_chunked(compiled: &Compiled, req: &CountRequest) -> Result<Vec<u32>, ServiceError> {
+    let spec = &compiled.spec;
+    let (bt, bi) = (req.block.t_pad, req.block.n_items);
+    let n_live_c = req.cands.n_live;
+    let mut counts = vec![0u32; n_live_c];
+
+    for c0 in (0..n_live_c).step_by(spec.c) {
+        let c1 = (c0 + spec.c).min(n_live_c);
+        // Build the (spec.c, spec.i) candidate tile.
+        let mut cand = vec![0f32; spec.c * spec.i];
+        let mut sizes = vec![(spec.i + 1) as f32; spec.c];
+        for (dst, src) in (c0..c1).enumerate() {
+            let s = &req.cands.cand[src * bi..(src + 1) * bi];
+            cand[dst * spec.i..dst * spec.i + bi].copy_from_slice(s);
+            sizes[dst] = req.cands.sizes[src];
+        }
+        for t0 in (0..bt).step_by(spec.t) {
+            let t1 = (t0 + spec.t).min(bt);
+            if req.block.mask[t0..t1].iter().all(|&m| m == 0.0) {
+                continue; // fully padded row chunk contributes nothing
+            }
+            // Build the (spec.t, spec.i) transaction tile + mask column.
+            let mut tx = vec![0f32; spec.t * spec.i];
+            let mut mask = vec![0f32; spec.t];
+            for (dst, src) in (t0..t1).enumerate() {
+                let s = &req.block.tx[src * bi..(src + 1) * bi];
+                tx[dst * spec.i..dst * spec.i + bi].copy_from_slice(s);
+                mask[dst] = req.block.mask[src];
+            }
+            let partial = execute_one(compiled, &tx, &mask, &cand, &sizes)?;
+            for (dst, src) in (c0..c1).enumerate() {
+                counts[src] += partial[dst] as u32;
+            }
+        }
+    }
+    Ok(counts)
+}
+
+/// One PJRT execution at exactly the module's shape.
+fn execute_one(
+    compiled: &Compiled,
+    tx: &[f32],
+    mask: &[f32],
+    cand: &[f32],
+    sizes: &[f32],
+) -> Result<Vec<f32>, ServiceError> {
+    let spec = &compiled.spec;
+    let xla_err = |e: xla::Error| ServiceError::Xla(e.to_string());
+    let (t, i, c) = (spec.t as i64, spec.i as i64, spec.c as i64);
+    let tx_l = xla::Literal::vec1(tx).reshape(&[t, i]).map_err(xla_err)?;
+    let mask_l = xla::Literal::vec1(mask).reshape(&[t, 1]).map_err(xla_err)?;
+    let cand_l = xla::Literal::vec1(cand).reshape(&[c, i]).map_err(xla_err)?;
+    let sizes_l = xla::Literal::vec1(sizes).reshape(&[1, c]).map_err(xla_err)?;
+    let result = compiled
+        .exe
+        .execute::<xla::Literal>(&[tx_l, mask_l, cand_l, sizes_l])
+        .map_err(xla_err)?[0][0]
+        .to_literal_sync()
+        .map_err(xla_err)?;
+    // Lowered with return_tuple=True → unwrap the 1-tuple.
+    let out = result.to_tuple1().map_err(xla_err)?;
+    out.to_vec::<f32>().map_err(xla_err)
+}
+
+#[cfg(test)]
+mod tests {
+    //! Service tests require built artifacts (`make artifacts`); they skip
+    //! (with a note) when the manifest is absent so `cargo test` stays
+    //! green on a fresh checkout. Full coverage runs in CI order:
+    //! `make artifacts && cargo test`.
+    use super::*;
+    use crate::data::bitmap::count_on_host;
+    use crate::data::quest::{QuestGenerator, QuestParams};
+    use crate::data::Transaction;
+    use crate::util::rng::Xoshiro256;
+
+    fn service() -> Option<TensorService> {
+        let dir = ArtifactManifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping tensor-service test: run `make artifacts`");
+            return None;
+        }
+        Some(TensorService::start(ArtifactManifest::load(&dir).unwrap()))
+    }
+
+    fn tiny_request(graph: &str) -> CountRequest {
+        let txs = vec![
+            Transaction::new([0u32, 1, 2]),
+            Transaction::new([0u32, 2]),
+            Transaction::new([1u32]),
+        ];
+        let cands = vec![vec![0u32], vec![0, 2], vec![1, 2], vec![3]];
+        CountRequest {
+            graph: graph.into(),
+            block: BitmapBlock::encode(&txs, 64, 64),
+            cands: CandidateBlock::encode(&cands, 64, 8),
+        }
+    }
+
+    #[test]
+    fn pallas_artifact_counts_tiny_db() {
+        let Some(svc) = service() else { return };
+        let counts = svc.handle().count(tiny_request("count_split")).unwrap();
+        assert_eq!(counts, vec![2, 2, 1, 0]);
+    }
+
+    #[test]
+    fn ref_artifact_matches_pallas_artifact() {
+        let Some(svc) = service() else { return };
+        let h = svc.handle();
+        let a = h.count(tiny_request("count_split")).unwrap();
+        let b = h.count(tiny_request("count_split_ref")).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn chunked_execution_matches_host_reference() {
+        let Some(svc) = service() else { return };
+        let h = svc.handle();
+        // 600 transactions (3 chunks of t=256) × 150 candidates (3 chunks
+        // of c=64 on the small variant) over a 64-item dictionary.
+        let db = QuestGenerator::new(QuestParams {
+            n_items: 64,
+            ..QuestParams::dense(600)
+        })
+        .generate();
+        let mut rng = Xoshiro256::seed_from_u64(12);
+        let cands: Vec<Vec<u32>> = (0..150)
+            .map(|_| {
+                let k = rng.range_usize(1, 4);
+                let mut v: Vec<u32> =
+                    rng.sample_distinct(64, k).into_iter().map(|x| x as u32).collect();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        let block = BitmapBlock::encode(&db.transactions, 64, 256);
+        let cblock = CandidateBlock::encode(&cands, 64, 64);
+        let host = count_on_host(&block, &cblock);
+        let got = h
+            .count(CountRequest {
+                graph: "count_split".into(),
+                block,
+                cands: cblock,
+            })
+            .unwrap();
+        assert_eq!(got.len(), 150);
+        assert_eq!(&host[..150], &got[..]);
+    }
+
+    #[test]
+    fn width_mismatch_rejected() {
+        let Some(svc) = service() else { return };
+        let h = svc.handle();
+        let req = CountRequest {
+            graph: "count_split".into(),
+            block: BitmapBlock::encode(&[Transaction::new([0u32])], 64, 64),
+            cands: CandidateBlock::encode(&[vec![0u32]], 32, 8),
+        };
+        assert!(matches!(
+            h.count(req),
+            Err(ServiceError::WidthMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn unknown_graph_is_no_fit() {
+        let Some(svc) = service() else { return };
+        let req = CountRequest {
+            graph: "nonexistent".into(),
+            ..tiny_request("x")
+        };
+        assert!(matches!(
+            svc.handle().count(req),
+            Err(ServiceError::NoFit { .. })
+        ));
+    }
+
+    #[test]
+    fn compile_cache_reuses_modules() {
+        let Some(svc) = service() else { return };
+        let h = svc.handle();
+        h.count(tiny_request("count_split")).unwrap();
+        h.count(tiny_request("count_split")).unwrap();
+        h.count(tiny_request("count_split")).unwrap();
+        assert_eq!(h.compiled_modules().unwrap(), 1);
+    }
+
+    #[test]
+    fn handles_are_cloneable_across_threads() {
+        let Some(svc) = service() else { return };
+        let h = svc.handle();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || h.count(tiny_request("count_split")).unwrap())
+            })
+            .collect();
+        for t in handles {
+            assert_eq!(t.join().unwrap(), vec![2, 2, 1, 0]);
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! Simulated interconnect: the paper's "managed switch linked to private
+//! LAN" as a flow-level bandwidth/latency model.
+//!
+//! The discrete-event simulator (`mapreduce::sim`) asks this module how
+//! long a transfer takes given concurrent flow counts; we model a
+//! store-and-forward switch with per-port bandwidth, a switching latency,
+//! and fair sharing when several flows target the same destination port
+//! (shuffle fan-in — the dominant contention pattern in MapReduce).
+
+use crate::cluster::NodeId;
+
+/// Switch/link parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwitchConfig {
+    /// Per-port line rate, Mbit/s.
+    pub port_mbps: f64,
+    /// One-way switching + propagation latency, milliseconds.
+    pub latency_ms: f64,
+    /// Aggregate backplane capacity, Mbit/s (managed switches are usually
+    /// non-blocking; cheap ones oversubscribe).
+    pub backplane_mbps: f64,
+}
+
+impl SwitchConfig {
+    /// Loopback "network" for standalone / pseudo-distributed modes:
+    /// effectively memory-speed, near-zero latency.
+    pub fn loopback() -> Self {
+        Self {
+            port_mbps: 40_000.0,
+            latency_ms: 0.01,
+            backplane_mbps: 400_000.0,
+        }
+    }
+
+    /// The paper's managed GigE switch with Cat-6 runs.
+    pub fn managed_gige() -> Self {
+        Self {
+            port_mbps: 1000.0,
+            latency_ms: 0.3,
+            backplane_mbps: 16_000.0,
+        }
+    }
+
+    /// Mixed-NIC environment (FHDSC): the switch is the same, but ports
+    /// negotiate down to the slowest NIC; modelled per-flow in
+    /// [`Network::flow_mbps`] using node NIC speeds.
+    pub fn managed_mixed() -> Self {
+        Self {
+            port_mbps: 1000.0,
+            latency_ms: 0.5,
+            backplane_mbps: 8_000.0,
+        }
+    }
+}
+
+/// A point-to-point transfer request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Flow {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub bytes: u64,
+}
+
+/// Flow-level network model over a switch and per-node NIC speeds, with
+/// optional rack topology: flows crossing racks share an uplink of
+/// `inter_rack_mbps` (classic oversubscribed top-of-rack design).
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub switch: SwitchConfig,
+    /// Per-node NIC speed (Mbit/s), indexed by NodeId.
+    pub nic_mbps: Vec<f64>,
+    /// Rack id per node (all-zero = the paper's single managed switch).
+    pub rack_of: Vec<usize>,
+    /// Aggregate inter-rack uplink capacity, Mbit/s.
+    pub inter_rack_mbps: f64,
+}
+
+impl Network {
+    pub fn new(switch: SwitchConfig, nic_mbps: Vec<f64>) -> Self {
+        assert!(!nic_mbps.is_empty());
+        let n = nic_mbps.len();
+        Self {
+            switch,
+            nic_mbps,
+            rack_of: vec![0; n],
+            inter_rack_mbps: f64::INFINITY,
+        }
+    }
+
+    /// Attach a rack topology (rack id per node + uplink capacity).
+    pub fn with_racks(mut self, rack_of: Vec<usize>, inter_rack_mbps: f64) -> Self {
+        assert_eq!(rack_of.len(), self.nic_mbps.len());
+        assert!(inter_rack_mbps > 0.0);
+        self.rack_of = rack_of;
+        self.inter_rack_mbps = inter_rack_mbps;
+        self
+    }
+
+    /// Do two nodes share a rack?
+    pub fn same_rack(&self, a: NodeId, b: NodeId) -> bool {
+        self.rack_of[a] == self.rack_of[b]
+    }
+
+    /// Effective bandwidth of one flow when `fanin` flows converge on the
+    /// destination and `fanout` flows leave the source concurrently:
+    /// min(port, src NIC / fanout, dst NIC / fanin), all floored by the
+    /// backplane share.
+    pub fn flow_mbps(&self, f: &Flow, fanout: usize, fanin: usize, active_flows: usize) -> f64 {
+        if f.src == f.dst {
+            // Node-local transfer: memory/disk path, not the switch.
+            return self.switch.port_mbps * 4.0;
+        }
+        let src_share = self.nic_mbps[f.src] / fanout.max(1) as f64;
+        let dst_share = self.nic_mbps[f.dst] / fanin.max(1) as f64;
+        let backplane_share = self.switch.backplane_mbps / active_flows.max(1) as f64;
+        let mut mbps = self
+            .switch
+            .port_mbps
+            .min(src_share)
+            .min(dst_share)
+            .min(backplane_share);
+        if !self.same_rack(f.src, f.dst) {
+            // cross-rack flows share the oversubscribed uplink
+            mbps = mbps.min(self.inter_rack_mbps / active_flows.max(1) as f64);
+        }
+        mbps
+    }
+
+    /// Transfer time in seconds under the given concurrency.
+    pub fn transfer_secs(&self, f: &Flow, fanout: usize, fanin: usize, active: usize) -> f64 {
+        let mbps = self.flow_mbps(f, fanout, fanin, active);
+        let latency = self.switch.latency_ms / 1000.0;
+        if f.bytes == 0 {
+            return latency;
+        }
+        latency + (f.bytes as f64 * 8.0) / (mbps * 1_000_000.0)
+    }
+
+    /// Makespan (seconds) of an all-to-all shuffle: every (src, dst) pair
+    /// carries `matrix[src][dst]` bytes. Flows are served concurrently;
+    /// each flow sees its steady-state fair share and the makespan is the
+    /// slowest flow — a standard flow-level approximation of the shuffle
+    /// phase (§fig-4/5 cost model).
+    pub fn shuffle_makespan(&self, matrix: &[Vec<u64>]) -> f64 {
+        let n = matrix.len();
+        let mut flows = Vec::new();
+        for (src, row) in matrix.iter().enumerate() {
+            assert_eq!(row.len(), n, "shuffle matrix must be square");
+            for (dst, &bytes) in row.iter().enumerate() {
+                if bytes > 0 {
+                    flows.push(Flow { src, dst, bytes });
+                }
+            }
+        }
+        if flows.is_empty() {
+            return 0.0;
+        }
+        let active = flows.len();
+        let mut worst: f64 = 0.0;
+        for f in &flows {
+            let fanout = flows.iter().filter(|g| g.src == f.src).count();
+            let fanin = flows.iter().filter(|g| g.dst == f.dst).count();
+            worst = worst.max(self.transfer_secs(f, fanout, fanin, active));
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gige(n: usize) -> Network {
+        Network::new(SwitchConfig::managed_gige(), vec![1000.0; n])
+    }
+
+    #[test]
+    fn zero_bytes_costs_latency_only() {
+        let net = gige(2);
+        let f = Flow { src: 0, dst: 1, bytes: 0 };
+        let t = net.transfer_secs(&f, 1, 1, 1);
+        assert!((t - 0.0003).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gige_transfer_time_sanity() {
+        // 125 MB over an uncontended GigE link ≈ 1 second.
+        let net = gige(2);
+        let f = Flow { src: 0, dst: 1, bytes: 125_000_000 };
+        let t = net.transfer_secs(&f, 1, 1, 1);
+        assert!((t - 1.0).abs() < 0.01, "got {t}");
+    }
+
+    #[test]
+    fn fanin_contention_slows_flows() {
+        let net = gige(4);
+        let f = Flow { src: 0, dst: 3, bytes: 10_000_000 };
+        let alone = net.transfer_secs(&f, 1, 1, 1);
+        let contended = net.transfer_secs(&f, 1, 3, 3);
+        assert!(contended > alone * 2.5, "{contended} vs {alone}");
+    }
+
+    #[test]
+    fn local_transfers_bypass_switch() {
+        let net = gige(2);
+        let local = Flow { src: 1, dst: 1, bytes: 125_000_000 };
+        let remote = Flow { src: 0, dst: 1, bytes: 125_000_000 };
+        assert!(
+            net.transfer_secs(&local, 1, 1, 1) < net.transfer_secs(&remote, 1, 1, 1) / 2.0
+        );
+    }
+
+    #[test]
+    fn slow_nic_gates_flow() {
+        // FHDSC: a 100 Mbit NIC on the destination caps the flow.
+        let net = Network::new(SwitchConfig::managed_mixed(), vec![1000.0, 100.0]);
+        let f = Flow { src: 0, dst: 1, bytes: 125_000_000 };
+        let t = net.transfer_secs(&f, 1, 1, 1);
+        assert!(t > 9.0, "100 Mbit should take ~10s, got {t}");
+    }
+
+    #[test]
+    fn shuffle_makespan_scales_with_nodes_and_bytes() {
+        let net3 = gige(3);
+        let m_small = vec![vec![0, 1_000_000, 1_000_000]; 3];
+        let m_big = vec![vec![0, 10_000_000, 10_000_000]; 3];
+        let s = net3.shuffle_makespan(&m_small);
+        let b = net3.shuffle_makespan(&m_big);
+        assert!(b > s * 5.0);
+        assert_eq!(net3.shuffle_makespan(&vec![vec![0; 3]; 3]), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "square")]
+    fn shuffle_matrix_must_be_square() {
+        gige(2).shuffle_makespan(&[vec![0, 1], vec![2]]);
+    }
+
+    #[test]
+    fn cross_rack_flows_gated_by_uplink() {
+        let net = gige(4).with_racks(vec![0, 0, 1, 1], 200.0);
+        let intra = Flow { src: 0, dst: 1, bytes: 25_000_000 };
+        let inter = Flow { src: 0, dst: 2, bytes: 25_000_000 };
+        let t_intra = net.transfer_secs(&intra, 1, 1, 1);
+        let t_inter = net.transfer_secs(&inter, 1, 1, 1);
+        assert!(
+            t_inter > t_intra * 4.0,
+            "200 Mbit uplink must gate cross-rack: {t_inter} vs {t_intra}"
+        );
+        assert!(net.same_rack(0, 1));
+        assert!(!net.same_rack(1, 2));
+    }
+
+    #[test]
+    fn single_rack_default_is_neutral() {
+        let plain = gige(3);
+        let racked = gige(3).with_racks(vec![0, 0, 0], 100.0);
+        let f = Flow { src: 0, dst: 2, bytes: 10_000_000 };
+        assert_eq!(
+            plain.transfer_secs(&f, 1, 1, 1),
+            racked.transfer_secs(&f, 1, 1, 1),
+            "same-rack flows never touch the uplink"
+        );
+    }
+
+    #[test]
+    fn rack_aware_shuffle_slower_than_flat() {
+        let flat = gige(4);
+        let racked = gige(4).with_racks(vec![0, 0, 1, 1], 100.0);
+        let m = vec![vec![2_000_000u64; 4]; 4];
+        assert!(racked.shuffle_makespan(&m) > flat.shuffle_makespan(&m) * 2.0);
+    }
+}

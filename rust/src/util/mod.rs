@@ -1,0 +1,10 @@
+//! Small in-tree substrates that would normally be external crates.
+//!
+//! The build is fully offline against a fixed vendored crate set (see
+//! `.cargo/config.toml`), so the pieces a Hadoop-like system usually pulls
+//! from the ecosystem — a JSON parser for the artifact manifest, a seedable
+//! PRNG for workload generation, a tiny property-testing loop — live here.
+
+pub mod json;
+pub mod proptest;
+pub mod rng;

@@ -1,0 +1,193 @@
+//! Tiny property-testing driver (the vendored crate set has no proptest).
+//!
+//! `check` runs a property over `n` randomly generated cases from a seeded
+//! [`Xoshiro256`]; on failure it retries the *same seed* derivation chain so
+//! the failing case is exactly reproducible from the printed seed, and
+//! performs greedy input-size shrinking when the generator supports it via
+//! [`Shrink`].
+
+use super::rng::Xoshiro256;
+
+/// Types that can propose smaller versions of themselves for shrinking.
+pub trait Shrink: Sized {
+    /// Candidate strictly-smaller inputs, most aggressive first.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl<T: Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        if self.is_empty() {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        out.push(self[..self.len() / 2].to_vec()); // first half
+        out.push(self[self.len() / 2..].to_vec()); // second half
+        if self.len() > 1 {
+            out.push(self[1..].to_vec()); // drop head
+            out.push(self[..self.len() - 1].to_vec()); // drop tail
+        }
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        match *self {
+            0 => Vec::new(),
+            1 => vec![0],
+            n => vec![n / 2, n - 1],
+        }
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        match *self {
+            0 => Vec::new(),
+            1 => vec![0],
+            n => vec![n / 2, n - 1],
+        }
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Outcome of a property over one input.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` inputs drawn from `gen`. Panics with the seed,
+/// case index and (shrunk) debug form of the failing input.
+pub fn check<T, G, P>(name: &str, seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Shrink + Clone + std::fmt::Debug,
+    G: FnMut(&mut Xoshiro256) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let minimal = shrink_failure(input, &mut prop);
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}): {msg}\n  minimal input: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_failure<T, P>(mut failing: T, prop: &mut P) -> T
+where
+    T: Shrink + Clone,
+    P: FnMut(&T) -> PropResult,
+{
+    // Greedy descent, capped so a pathological shrink lattice terminates.
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in failing.shrink() {
+            if prop(&cand).is_err() {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_a_true_property() {
+        check(
+            "reverse-reverse-id",
+            1,
+            200,
+            |r| (0..r.range_usize(0, 20)).map(|_| r.next_u64()).collect::<Vec<_>>(),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v { Ok(()) } else { Err("mismatch".into()) }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-small' failed")]
+    fn fails_a_false_property_with_seed_in_message() {
+        check(
+            "always-small",
+            2,
+            500,
+            |r| (0..r.range_usize(0, 64)).map(|_| r.next_u64()).collect::<Vec<_>>(),
+            |v| {
+                if v.len() < 30 { Ok(()) } else { Err(format!("len {}", v.len())) }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinks_vec_failures_toward_minimal() {
+        // Property "contains no element > 100" fails; shrinker should find a
+        // small witness (not necessarily size-1, but much smaller than 64).
+        let mut witness_len = usize::MAX;
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(
+                "no-big",
+                3,
+                100,
+                |r| (0..64).map(|_| r.gen_range(200)).collect::<Vec<u64>>(),
+                |v| {
+                    if v.iter().any(|&x| x > 100) {
+                        Err(format!("witness-len={}", v.len()))
+                    } else {
+                        Ok(())
+                    }
+                },
+            );
+        }));
+        assert!(result.is_err());
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // minimal input printed after shrinking; parse its length.
+        let start = msg.find("minimal input: [").unwrap();
+        let body = &msg[start + "minimal input: [".len()..];
+        let end = body.find(']').unwrap();
+        let n = if body[..end].trim().is_empty() {
+            0
+        } else {
+            body[..end].split(',').count()
+        };
+        witness_len = witness_len.min(n);
+        assert!(witness_len <= 4, "expected shrunk witness, got len {witness_len}");
+    }
+
+    #[test]
+    fn usize_shrink_descends_to_zero() {
+        let mut v = 1000usize;
+        let mut steps = 0;
+        while let Some(&next) = v.shrink().first() {
+            v = next;
+            steps += 1;
+            assert!(steps < 100);
+        }
+        assert_eq!(v, 0);
+    }
+}

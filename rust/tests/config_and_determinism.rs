@@ -1,0 +1,126 @@
+//! Config-system integration and cross-cutting determinism: a checked-in
+//! config file drives the same run twice to identical reports; presets map
+//! to the paper's deployments; the simulator is bit-deterministic.
+
+use std::path::PathBuf;
+
+use mr_apriori::cluster::DeployMode;
+use mr_apriori::coordinator;
+use mr_apriori::prelude::*;
+
+fn write_tmp(name: &str, text: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("mr_apriori_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(name);
+    std::fs::write(&p, text).unwrap();
+    p
+}
+
+#[test]
+fn config_file_drives_a_full_run() {
+    let p = write_tmp(
+        "run.toml",
+        r#"
+        preset = "fhssc"
+        nodes = 3
+        min_support = 0.05
+        max_k = 2
+        split_tx = 100
+        n_reducers = 2
+        transactions = 500
+        seed = 11
+        "#,
+    );
+    let cfg = ExperimentConfig::load(&p).unwrap();
+    assert_eq!(cfg.cluster().mode, DeployMode::FullyDistributed);
+    let db = QuestGenerator::new(QuestParams::t10_i4(cfg.transactions).with_seed(cfg.seed))
+        .generate();
+    let run = |cfg: &ExperimentConfig| {
+        MrApriori::new(cfg.cluster(), cfg.apriori.clone())
+            .with_job(cfg.job.clone())
+            .with_split_tx(cfg.split_tx)
+            .mine(&db)
+            .unwrap()
+    };
+    let a = run(&cfg);
+    let b = run(&cfg);
+    assert_eq!(a.result.frequent, b.result.frequent);
+    assert!(!a.result.frequent.is_empty());
+    assert_eq!(a.profile.levels.len(), b.profile.levels.len());
+}
+
+#[test]
+fn presets_map_to_paper_deployments() {
+    for (text, mode, n) in [
+        ("preset = \"standalone\"", DeployMode::Standalone, 1),
+        ("preset = \"pseudo\"", DeployMode::PseudoDistributed, 1),
+        ("preset = \"fhssc\"\nnodes = 5", DeployMode::FullyDistributed, 5),
+        ("preset = \"fhdsc\"\nnodes = 7", DeployMode::FullyDistributed, 7),
+    ] {
+        let cfg = ExperimentConfig::parse(text).unwrap();
+        let cluster = cfg.cluster();
+        assert_eq!(cluster.mode, mode, "{text}");
+        assert_eq!(cluster.n_nodes(), n, "{text}");
+    }
+}
+
+#[test]
+fn simulator_replay_is_bit_deterministic_across_processes_shapes() {
+    let db = QuestGenerator::new(QuestParams::t10_i4(800)).generate();
+    let cfg = AprioriConfig { min_support: 0.03, max_k: 2 };
+    let report = MrApriori::new(ClusterConfig::fhssc(3), cfg)
+        .with_split_tx(100)
+        .mine(&db)
+        .unwrap();
+    let job = JobConfig::default();
+    for cluster in [
+        ClusterConfig::standalone(),
+        ClusterConfig::fhssc(2),
+        ClusterConfig::fhssc(8),
+        ClusterConfig::fhdsc(5),
+    ] {
+        let a = coordinator::simulate(&cluster, &report.profile, 100, &job);
+        let b = coordinator::simulate(&cluster, &report.profile, 100, &job);
+        assert_eq!(a.total_secs.to_bits(), b.total_secs.to_bits());
+        assert_eq!(a.map_secs.to_bits(), b.map_secs.to_bits());
+        assert_eq!(a.shuffle_secs.to_bits(), b.shuffle_secs.to_bits());
+    }
+}
+
+#[test]
+fn dataset_io_roundtrip_preserves_mining_results() {
+    let db = QuestGenerator::new(QuestParams::goswami_2k()).generate();
+    let p = write_tmp("roundtrip.dat", "");
+    mr_apriori::data::io::write_dat(&db, &p).unwrap();
+    let back = mr_apriori::data::io::read_dat(&p).unwrap();
+    let cfg = AprioriConfig { min_support: 0.05, max_k: 3 };
+    let a = ClassicalApriori::default().mine(&db, &cfg);
+    let b = ClassicalApriori::default().mine(&back, &cfg);
+    assert_eq!(a.frequent, b.frequent);
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn eta_model_consistent_with_simulator_across_sizes() {
+    // The analytic heterogeneity model must upper-bound the simulated η
+    // (it ignores pull-based straggler avoidance) while both stay > 1.
+    let db = QuestGenerator::new(QuestParams::t10_i4(1_500)).generate();
+    let cfg = AprioriConfig { min_support: 0.03, max_k: 2 };
+    let report = MrApriori::new(ClusterConfig::fhssc(3), cfg)
+        .with_split_tx(150)
+        .mine(&db)
+        .unwrap();
+    let job = JobConfig::default();
+    let model = EtaModel::default();
+    for n in [2usize, 4, 8] {
+        let hom = coordinator::simulate(&ClusterConfig::fhssc(n), &report.profile, 150, &job);
+        let het = coordinator::simulate(&ClusterConfig::fhdsc(n), &report.profile, 150, &job);
+        let measured = het.total_secs / hom.total_secs;
+        let predicted = model.eta_predicted(n);
+        assert!(measured > 1.0, "n={n}");
+        assert!(
+            predicted >= measured * 0.9,
+            "n={n}: model {predicted} should not undercut measured {measured}"
+        );
+    }
+}

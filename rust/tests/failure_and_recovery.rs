@@ -1,0 +1,146 @@
+//! Failure-path integration: injected task failures, abort semantics,
+//! datanode decommission during a workload, and under-replication reads.
+
+use mr_apriori::data::split::plan_splits;
+use mr_apriori::dfs::{Dfs, DfsError};
+use mr_apriori::mapreduce::app::ItemCount;
+use mr_apriori::mapreduce::runner::FailureSpec;
+use mr_apriori::mapreduce::{JobConfig, JobRunner};
+use mr_apriori::prelude::*;
+
+fn quest(n: usize) -> TransactionDb {
+    QuestGenerator::new(QuestParams::t10_i4(n)).generate()
+}
+
+#[test]
+fn mining_survives_moderate_failure_rates() {
+    let db = quest(600);
+    let cfg = AprioriConfig { min_support: 0.05, max_k: 2 };
+    let clean = MrApriori::new(ClusterConfig::fhssc(3), cfg.clone())
+        .with_split_tx(100)
+        .mine(&db)
+        .unwrap();
+    for seed in [1u64, 7, 42] {
+        let job = JobConfig {
+            failure: Some(FailureSpec {
+                map_fail_prob: 0.3,
+                reduce_fail_prob: 0.2,
+                seed,
+            }),
+            max_attempts: 16,
+            speculative: false,
+            ..Default::default()
+        };
+        let flaky = MrApriori::new(ClusterConfig::fhssc(3), cfg.clone())
+            .with_job(job)
+            .with_split_tx(100)
+            .mine(&db)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(flaky.result.frequent, clean.result.frequent, "seed {seed}");
+        let failures: usize = flaky.jobs.iter().map(|(_, s)| s.map_failures).sum();
+        assert!(failures > 0, "seed {seed}: injection had no effect");
+    }
+}
+
+#[test]
+fn certain_failure_aborts_the_whole_mining_run() {
+    let db = quest(300);
+    let cfg = AprioriConfig { min_support: 0.05, max_k: 2 };
+    let job = JobConfig {
+        failure: Some(FailureSpec {
+            map_fail_prob: 1.0,
+            reduce_fail_prob: 0.0,
+            seed: 3,
+        }),
+        max_attempts: 2,
+        ..Default::default()
+    };
+    let err = MrApriori::new(ClusterConfig::fhssc(2), cfg)
+        .with_job(job)
+        .with_split_tx(50)
+        .mine(&db)
+        .expect_err("must abort");
+    assert!(err.to_string().contains("map task"));
+}
+
+#[test]
+fn decommission_mid_workload_keeps_data_readable_and_jobs_running() {
+    let db = quest(800);
+    let cluster = ClusterConfig::fhssc(4);
+    let splits = plan_splits(&db, 100);
+    let mut dfs = Dfs::new(&cluster);
+    let blocks = dfs.write_splits(&splits).unwrap();
+
+    // run one job, then lose a node, then run again on the updated dfs
+    let runner = JobRunner::new(&cluster, &dfs, &blocks);
+    let (before, _) = runner
+        .run(&ItemCount, &db, &splits, &JobConfig::default())
+        .unwrap();
+
+    dfs.decommission(1).unwrap();
+    for &b in &blocks {
+        let locs = dfs.locations(b).unwrap();
+        assert!(!locs.contains(&1), "replica still on dead node");
+        assert_eq!(locs.len(), 3, "re-replication restored factor 3");
+    }
+    let runner = JobRunner::new(&cluster, &dfs, &blocks);
+    let (after, stats) = runner
+        .run(&ItemCount, &db, &splits, &JobConfig::default())
+        .unwrap();
+    assert_eq!(before, after, "results unchanged after decommission");
+    // node 1's trackers still pull tasks (compute is fine, storage is gone):
+    // locality can dip below 1.0 but must stay sane.
+    let loc = stats.locality_fraction();
+    assert!((0.0..=1.0).contains(&loc));
+}
+
+#[test]
+fn double_decommission_errors_and_underreplication_is_visible() {
+    let db = quest(200);
+    let cluster = ClusterConfig::fhssc(3);
+    let splits = plan_splits(&db, 50);
+    let mut dfs = Dfs::new(&cluster);
+    let blocks = dfs.write_splits(&splits).unwrap();
+    dfs.decommission(0).unwrap();
+    assert!(matches!(
+        dfs.decommission(0),
+        Err(DfsError::AlreadyDecommissioned(0))
+    ));
+    // no spare nodes: blocks under-replicated but still readable
+    dfs.decommission(1).unwrap();
+    for &b in &blocks {
+        let locs = dfs.locations(b).unwrap();
+        assert_eq!(locs.len(), 1, "single replica remains");
+        assert_eq!(locs[0], 2);
+    }
+}
+
+#[test]
+fn speculative_execution_counters_fire_on_real_runner() {
+    // A large number of small tasks on a 2-node cluster: with aggressive
+    // speculation thresholds some duplicates fire; results stay exact.
+    let db = quest(1_000);
+    let cluster = ClusterConfig::fhssc(2);
+    let splits = plan_splits(&db, 20);
+    let mut dfs = Dfs::new(&cluster);
+    let blocks = dfs.write_splits(&splits).unwrap();
+    let runner = JobRunner::new(&cluster, &dfs, &blocks);
+    let cfg = JobConfig {
+        speculative: true,
+        speculation_slowdown: 0.0, // every running task is "late": max pressure
+        n_reducers: 2,
+        ..Default::default()
+    };
+    let (out, stats) = runner.run(&ItemCount, &db, &splits, &cfg).unwrap();
+    let baseline = runner
+        .run(&ItemCount, &db, &splits, &JobConfig { speculative: false, n_reducers: 2, ..Default::default() })
+        .unwrap()
+        .0;
+    assert_eq!(out, baseline, "speculation must never change results");
+    assert!(
+        stats.map_attempts >= stats.maps_total,
+        "attempts {} < tasks {}",
+        stats.map_attempts,
+        stats.maps_total
+    );
+}

@@ -1,0 +1,226 @@
+//! Cross-algorithm equivalence: every miner in the crate — classical (3
+//! matchers), record-filter, intersection, FP-Growth, and the distributed
+//! MapReduce driver on every deployment preset — must produce identical
+//! frequent itemsets on arbitrary workloads. This is the strongest
+//! correctness statement the repo makes.
+
+use mr_apriori::prelude::*;
+use mr_apriori::util::proptest::check;
+use mr_apriori::util::rng::Xoshiro256;
+
+fn gen_params(rng: &mut Xoshiro256) -> Vec<u64> {
+    vec![
+        rng.next_u64(),                      // dataset seed
+        rng.range_usize(30, 300) as u64,     // transactions
+        rng.range_usize(10, 40) as u64,      // items
+        (rng.range_usize(8, 25)) as u64,     // min-support %
+    ]
+}
+
+fn build_db(params: &[u64]) -> TransactionDb {
+    let p = QuestParams {
+        n_transactions: params[1] as usize,
+        n_items: params[2] as usize,
+        avg_tx_len: 6.0,
+        avg_pattern_len: 3.0,
+        n_patterns: 12,
+        corruption: 0.25,
+        seed: params[0],
+    };
+    QuestGenerator::new(p).generate()
+}
+
+#[test]
+fn prop_all_single_machine_miners_agree() {
+    check(
+        "miners-agree",
+        0x314159,
+        12,
+        gen_params,
+        |params| {
+            let db = build_db(params);
+            let cfg = AprioriConfig {
+                min_support: params[3] as f64 / 100.0,
+                max_k: 5,
+            };
+            let base = ClassicalApriori::new(MatcherKind::Naive).mine(&db, &cfg);
+            let checks: Vec<(&str, MiningResult)> = vec![
+                ("hash-tree", ClassicalApriori::new(MatcherKind::HashTree).mine(&db, &cfg)),
+                ("trie", ClassicalApriori::new(MatcherKind::Trie).mine(&db, &cfg)),
+                ("record-filter", RecordFilterApriori.mine(&db, &cfg)),
+                ("intersection", IntersectionApriori.mine(&db, &cfg)),
+                ("fp-growth", FpGrowth.mine(&db, &cfg)),
+            ];
+            for (name, r) in checks {
+                if r.frequent != base.frequent {
+                    return Err(format!(
+                        "{name} diverged: {} vs {} itemsets",
+                        r.frequent.len(),
+                        base.frequent.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mapreduce_driver_matches_classical_on_every_preset() {
+    check(
+        "mr-driver-matches",
+        0x271828,
+        8,
+        gen_params,
+        |params| {
+            let db = build_db(params);
+            let cfg = AprioriConfig {
+                min_support: params[3] as f64 / 100.0,
+                max_k: 4,
+            };
+            let base = ClassicalApriori::default().mine(&db, &cfg);
+            for cluster in [
+                ClusterConfig::standalone(),
+                ClusterConfig::pseudo_distributed(),
+                ClusterConfig::fhssc(3),
+                ClusterConfig::fhdsc(4),
+            ] {
+                let name = format!("{:?}x{}", cluster.mode, cluster.n_nodes());
+                let report = MrApriori::new(cluster, cfg.clone())
+                    .with_split_tx(37)
+                    .mine(&db)
+                    .map_err(|e| format!("{name}: {e}"))?;
+                if report.result.frequent != base.frequent {
+                    return Err(format!("{name} diverged"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_supports_are_exact_and_downward_closed() {
+    check(
+        "supports-exact-closed",
+        0x161803,
+        10,
+        gen_params,
+        |params| {
+            let db = build_db(params);
+            let cfg = AprioriConfig {
+                min_support: params[3] as f64 / 100.0,
+                max_k: 4,
+            };
+            let r = ClassicalApriori::default().mine(&db, &cfg);
+            let threshold = cfg.threshold(db.len());
+            for (is, sup) in &r.frequent {
+                if *sup != db.support(is) as u64 {
+                    return Err(format!("support of {is:?} wrong"));
+                }
+                if *sup < threshold {
+                    return Err(format!("{is:?} below threshold"));
+                }
+                // downward closure: every (k-1)-subset present
+                if is.len() > 1 {
+                    for skip in 0..is.len() {
+                        let sub: Vec<u32> = is
+                            .iter()
+                            .enumerate()
+                            .filter(|&(i, _)| i != skip)
+                            .map(|(_, &x)| x)
+                            .collect();
+                        if r.support_of(&sub).is_none() {
+                            return Err(format!("closure violated: {sub:?} of {is:?}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rules_respect_confidence_and_support_math() {
+    check(
+        "rules-math",
+        0x141421,
+        10,
+        gen_params,
+        |params| {
+            let db = build_db(params);
+            let cfg = AprioriConfig {
+                min_support: params[3] as f64 / 100.0,
+                max_k: 3,
+            };
+            let r = ClassicalApriori::default().mine(&db, &cfg);
+            let rules = generate_rules(&r, 0.4);
+            for rule in &rules {
+                if rule.confidence < 0.4 {
+                    return Err("rule under confidence threshold".into());
+                }
+                // support(antecedent ∪ consequent) == rule.support, exactly
+                let mut union: Vec<u32> = rule
+                    .antecedent
+                    .iter()
+                    .chain(rule.consequent.iter())
+                    .copied()
+                    .collect();
+                union.sort_unstable();
+                if db.support(&union) as u64 != rule.support {
+                    return Err(format!("rule support wrong for {union:?}"));
+                }
+                let sup_a = db.support(&rule.antecedent) as f64;
+                let conf = rule.support as f64 / sup_a;
+                if (conf - rule.confidence).abs() > 1e-9 {
+                    return Err("confidence math wrong".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Mining the projected (frequent-items-only) database must preserve all
+/// itemsets above threshold — the dictionary-shrink the tensor path uses.
+#[test]
+fn prop_projection_preserves_frequent_itemsets() {
+    check(
+        "projection-preserves",
+        0x173205,
+        10,
+        gen_params,
+        |params| {
+            let db = build_db(params);
+            let cfg = AprioriConfig {
+                min_support: params[3] as f64 / 100.0,
+                max_k: 3,
+            };
+            let full = ClassicalApriori::default().mine(&db, &cfg);
+            let frequent_items: Vec<u32> = full.level(1).map(|(is, _)| is[0]).collect();
+            let (projected, back) = db.project(&frequent_items);
+            let proj = ClassicalApriori::default().mine(&projected, &cfg);
+            // map projected ids back and compare
+            let mut mapped: Vec<(Itemset, u64)> = proj
+                .frequent
+                .iter()
+                .map(|(is, s)| {
+                    let mut orig: Vec<u32> = is.iter().map(|&i| back[i as usize]).collect();
+                    orig.sort_unstable();
+                    (orig, *s)
+                })
+                .collect();
+            mapped.sort_by(|a, b| (a.0.len(), &a.0).cmp(&(b.0.len(), &b.0)));
+            if mapped == full.frequent {
+                Ok(())
+            } else {
+                Err(format!(
+                    "projection changed results: {} vs {}",
+                    mapped.len(),
+                    full.frequent.len()
+                ))
+            }
+        },
+    );
+}

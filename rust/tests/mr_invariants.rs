@@ -1,0 +1,254 @@
+//! Property tests over the MapReduce substrate: for arbitrary datasets,
+//! cluster shapes and job configurations, the engine must produce exactly
+//! the single-machine ground truth, deterministically, with invariant
+//! counters. Uses the in-tree property-test driver (`util::proptest`).
+
+use std::collections::HashMap;
+
+use mr_apriori::data::split::plan_splits;
+use mr_apriori::data::{Transaction, TransactionDb};
+use mr_apriori::dfs::Dfs;
+use mr_apriori::mapreduce::app::ItemCount;
+use mr_apriori::prelude::*;
+use mr_apriori::util::proptest::check;
+use mr_apriori::util::rng::Xoshiro256;
+
+/// Random database generator for property tests.
+fn gen_db(rng: &mut Xoshiro256) -> Vec<Vec<u32>> {
+    let n_tx = rng.range_usize(0, 120);
+    (0..n_tx)
+        .map(|_| {
+            let len = rng.range_usize(0, 12);
+            (0..len).map(|_| rng.gen_range(40) as u32).collect()
+        })
+        .collect()
+}
+
+fn to_db(raw: &[Vec<u32>]) -> TransactionDb {
+    TransactionDb::new(raw.iter().map(|r| Transaction::new(r.iter().copied())).collect())
+}
+
+fn ground_truth(db: &TransactionDb) -> Vec<(u32, u64)> {
+    let mut counts: HashMap<u32, u64> = HashMap::new();
+    for t in &db.transactions {
+        for &i in &t.items {
+            *counts.entry(i).or_insert(0) += 1;
+        }
+    }
+    let mut v: Vec<_> = counts.into_iter().collect();
+    v.sort_unstable();
+    v
+}
+
+fn run_job(db: &TransactionDb, n_nodes: usize, split_tx: usize, cfg: &JobConfig) -> Vec<(u32, u64)> {
+    let cluster = ClusterConfig::fhssc(n_nodes);
+    let splits = plan_splits(db, split_tx);
+    let mut dfs = Dfs::new(&cluster);
+    let blocks = dfs.write_splits(&splits).unwrap();
+    mr_apriori::mapreduce::JobRunner::new(&cluster, &dfs, &blocks)
+        .run(&ItemCount, db, &splits, cfg)
+        .unwrap()
+        .0
+}
+
+#[test]
+fn prop_output_equals_ground_truth_for_any_db_and_cluster() {
+    check(
+        "mr-output-equals-ground-truth",
+        0xA11CE,
+        30,
+        |rng| {
+            let raw = gen_db(rng);
+            let n_nodes = rng.range_usize(1, 5);
+            let split_tx = rng.range_usize(1, 40);
+            let n_reducers = rng.range_usize(1, 6);
+            (raw, vec![n_nodes as u64, split_tx as u64, n_reducers as u64])
+        },
+        |(raw, params)| {
+            let db = to_db(raw);
+            let cfg = JobConfig {
+                n_reducers: params[2] as usize,
+                ..Default::default()
+            };
+            let got = run_job(&db, params[0] as usize, params[1] as usize, &cfg);
+            let want = ground_truth(&db);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("got {got:?}, want {want:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_combiner_and_reducer_count_do_not_change_output() {
+    check(
+        "mr-combiner-reducers-invariant",
+        0xBEE,
+        20,
+        |rng| gen_db(rng),
+        |raw| {
+            let db = to_db(raw);
+            let base = run_job(
+                &db,
+                2,
+                16,
+                &JobConfig { n_reducers: 1, enable_combiner: false, ..Default::default() },
+            );
+            for n_reducers in [2usize, 5] {
+                for combiner in [false, true] {
+                    let cfg = JobConfig {
+                        n_reducers,
+                        enable_combiner: combiner,
+                        ..Default::default()
+                    };
+                    let got = run_job(&db, 3, 10, &cfg);
+                    if got != base {
+                        return Err(format!(
+                            "divergence at reducers={n_reducers} combiner={combiner}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_stats_invariants() {
+    check(
+        "mr-stats-invariants",
+        0xCAFE,
+        25,
+        |rng| {
+            let raw = gen_db(rng);
+            let split_tx = rng.range_usize(1, 30);
+            (raw, vec![split_tx as u64])
+        },
+        |(raw, params)| {
+            let db = to_db(raw);
+            let cluster = ClusterConfig::fhssc(3);
+            let splits = plan_splits(&db, params[0] as usize);
+            let mut dfs = Dfs::new(&cluster);
+            let blocks = dfs.write_splits(&splits).unwrap();
+            let (_, stats) = mr_apriori::mapreduce::JobRunner::new(&cluster, &dfs, &blocks)
+                .run(&ItemCount, &db, &splits, &JobConfig::default())
+                .unwrap();
+            if stats.maps_total != splits.len() {
+                return Err(format!(
+                    "maps_total {} != splits {}",
+                    stats.maps_total,
+                    splits.len()
+                ));
+            }
+            if stats.map_attempts < stats.maps_total {
+                return Err("attempts < tasks".into());
+            }
+            let loc = stats.locality_fraction();
+            if !(0.0..=1.0).contains(&loc) {
+                return Err(format!("locality {loc} out of range"));
+            }
+            // replication 3 on 3 nodes => all local
+            if !splits.is_empty() && loc != 1.0 {
+                return Err(format!("expected all-local, got {loc}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_deterministic_across_repeated_runs() {
+    check(
+        "mr-determinism",
+        0xD00D,
+        10,
+        |rng| gen_db(rng),
+        |raw| {
+            let db = to_db(raw);
+            let cfg = JobConfig { n_reducers: 4, ..Default::default() };
+            let a = run_job(&db, 3, 7, &cfg);
+            let b = run_job(&db, 3, 7, &cfg);
+            if a == b { Ok(()) } else { Err("non-deterministic output".into()) }
+        },
+    );
+}
+
+#[test]
+fn prop_failure_injection_preserves_results_when_recoverable() {
+    check(
+        "mr-failure-recovery",
+        0xFA11,
+        15,
+        |rng| {
+            let raw = gen_db(rng);
+            let seed = rng.next_u64();
+            (raw, vec![seed])
+        },
+        |(raw, params)| {
+            let db = to_db(raw);
+            let clean = run_job(&db, 2, 10, &JobConfig::default());
+            let cfg = JobConfig {
+                failure: Some(mr_apriori::mapreduce::runner::FailureSpec {
+                    map_fail_prob: 0.2,
+                    reduce_fail_prob: 0.1,
+                    seed: params[0],
+                }),
+                speculative: false,
+                max_attempts: 12, // generous: recovery must happen
+                ..Default::default()
+            };
+            let got = run_job(&db, 2, 10, &cfg);
+            if got == clean {
+                Ok(())
+            } else {
+                Err("failure-recovered run diverged".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_simulator_monotone_in_work() {
+    use mr_apriori::mapreduce::{SimJobSpec, SimMapTask};
+    check(
+        "sim-monotone-work",
+        0x51A1,
+        40,
+        |rng| {
+            vec![
+                rng.range_usize(1, 64) as u64,  // n maps
+                rng.range_usize(1, 4) as u64,   // nodes
+                (rng.gen_range(50) + 1) * 100_000, // work
+            ]
+        },
+        |params| {
+            let (n_maps, n_nodes, work) =
+                (params[0] as usize, params[1] as usize, params[2] as f64);
+            let mk = |w: f64| SimJobSpec {
+                map_tasks: (0..n_maps)
+                    .map(|i| SimMapTask {
+                        bytes: 1_000_000,
+                        work: w,
+                        replicas: vec![i % n_nodes],
+                        spilled: false,
+                    })
+                    .collect(),
+                n_reducers: n_nodes,
+                shuffle_bytes_per_map: 10_000,
+                reduce_work: 1000.0,
+                ..Default::default()
+            };
+            let sim = Simulator::new(ClusterConfig::fhssc(n_nodes));
+            let lo = sim.run(&mk(work)).total_secs;
+            let hi = sim.run(&mk(work * 2.0)).total_secs;
+            if hi > lo {
+                Ok(())
+            } else {
+                Err(format!("2x work not slower: {hi} vs {lo}"))
+            }
+        },
+    );
+}

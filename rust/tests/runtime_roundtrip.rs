@@ -1,0 +1,157 @@
+//! Integration tests across the three-layer boundary: the AOT-compiled
+//! Pallas artifact executed through PJRT must agree exactly with the
+//! pure-rust engines for arbitrary shapes, including chunking boundaries
+//! (transactions crossing the t-tile, candidates crossing the c-tile).
+//!
+//! These tests skip with a note when `make artifacts` hasn't run — the
+//! Makefile's `test` target builds artifacts first, so CI runs them.
+
+use mr_apriori::data::bitmap::{count_on_host, BitmapBlock, CandidateBlock};
+use mr_apriori::data::Transaction;
+use mr_apriori::prelude::*;
+use mr_apriori::runtime::{ArtifactManifest, CountRequest, TensorService};
+use mr_apriori::util::proptest::check;
+use mr_apriori::util::rng::Xoshiro256;
+
+fn service() -> Option<TensorService> {
+    let dir = ArtifactManifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping runtime roundtrip: run `make artifacts`");
+        return None;
+    }
+    Some(TensorService::start(ArtifactManifest::load(&dir).unwrap()))
+}
+
+fn random_case(
+    rng: &mut Xoshiro256,
+    n_items: usize,
+) -> (Vec<Transaction>, Vec<Vec<u32>>) {
+    let n_tx = rng.range_usize(0, 400);
+    let txs: Vec<Transaction> = (0..n_tx)
+        .map(|_| {
+            let len = rng.range_usize(0, 10);
+            Transaction::new((0..len).map(|_| rng.gen_range(n_items as u64) as u32))
+        })
+        .collect();
+    let n_cands = rng.range_usize(1, 150);
+    let cands: Vec<Vec<u32>> = (0..n_cands)
+        .map(|_| {
+            let k = rng.range_usize(1, 4.min(n_items));
+            let mut v: Vec<u32> = rng
+                .sample_distinct(n_items, k)
+                .into_iter()
+                .map(|x| x as u32)
+                .collect();
+            v.sort_unstable();
+            v
+        })
+        .collect();
+    (txs, cands)
+}
+
+#[test]
+fn prop_tensor_service_matches_host_reference_at_chunk_boundaries() {
+    let Some(svc) = service() else { return };
+    let h = svc.handle();
+    check(
+        "tensor-vs-host",
+        0x7E45,
+        15,
+        |rng| vec![rng.next_u64()],
+        |params| {
+            let mut rng = Xoshiro256::seed_from_u64(params[0]);
+            let (txs, cands) = random_case(&mut rng, 64);
+            let block = BitmapBlock::encode(&txs, 64, 256);
+            let cblock = CandidateBlock::encode(&cands, 64, 64);
+            let host = count_on_host(&block, &cblock);
+            let got = h
+                .count(CountRequest {
+                    graph: "count_split".into(),
+                    block,
+                    cands: cblock,
+                })
+                .map_err(|e| e.to_string())?;
+            if got[..] == host[..got.len()] {
+                Ok(())
+            } else {
+                Err("tensor counts diverge from host reference".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn exact_tile_boundary_shapes() {
+    let Some(svc) = service() else { return };
+    let h = svc.handle();
+    // t exactly 256 (one tile), 257-ish (two tiles), candidates exactly 64
+    // (one small-variant call) and 65 (two calls).
+    for (n_tx, n_cands) in [(256usize, 64usize), (255, 65), (257, 63), (512, 128), (1, 1)] {
+        let mut rng = Xoshiro256::seed_from_u64((n_tx * 1000 + n_cands) as u64);
+        let txs: Vec<Transaction> = (0..n_tx)
+            .map(|_| {
+                let len = rng.range_usize(1, 8);
+                Transaction::new((0..len).map(|_| rng.gen_range(64) as u32))
+            })
+            .collect();
+        let cands: Vec<Vec<u32>> = (0..n_cands)
+            .map(|_| {
+                let k = rng.range_usize(1, 3);
+                let mut v: Vec<u32> =
+                    rng.sample_distinct(64, k).into_iter().map(|x| x as u32).collect();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        let block = BitmapBlock::encode(&txs, 64, 256);
+        let cblock = CandidateBlock::encode(&cands, 64, 64);
+        let host = count_on_host(&block, &cblock);
+        let got = h
+            .count(CountRequest {
+                graph: "count_split".into(),
+                block,
+                cands: cblock,
+            })
+            .unwrap();
+        assert_eq!(got.len(), n_cands, "case ({n_tx},{n_cands})");
+        assert_eq!(&got[..], &host[..n_cands], "case ({n_tx},{n_cands})");
+    }
+}
+
+#[test]
+fn tensor_engine_full_mining_run_matches_cpu() {
+    let Some(svc) = service() else { return };
+    let db = QuestGenerator::new(QuestParams {
+        n_items: 60,
+        ..QuestParams::dense(400)
+    })
+    .generate();
+    let cfg = AprioriConfig { min_support: 0.1, max_k: 3 };
+    let cpu = MrApriori::new(ClusterConfig::fhssc(2), cfg.clone())
+        .with_split_tx(100)
+        .mine(&db)
+        .unwrap();
+    let tensor = MrApriori::new(ClusterConfig::fhssc(2), cfg)
+        .with_engine(build_engine(EngineKind::Tensor, Some(svc.handle())))
+        .with_split_tx(100)
+        .mine(&db)
+        .unwrap();
+    assert_eq!(tensor.result.frequent, cpu.result.frequent);
+    assert!(!tensor.result.frequent.is_empty());
+}
+
+#[test]
+fn pallas_and_ref_graphs_agree_through_pjrt() {
+    let Some(svc) = service() else { return };
+    let h = svc.handle();
+    let mut rng = Xoshiro256::seed_from_u64(99);
+    let (txs, cands) = random_case(&mut rng, 64);
+    let mk = |graph: &str| CountRequest {
+        graph: graph.into(),
+        block: BitmapBlock::encode(&txs, 64, 256),
+        cands: CandidateBlock::encode(&cands, 64, 64),
+    };
+    let a = h.count(mk("count_split")).unwrap();
+    let b = h.count(mk("count_split_ref")).unwrap();
+    assert_eq!(a, b, "pallas artifact must equal jnp-ref artifact");
+}
