@@ -1,0 +1,10 @@
+"""The AOT/kernel tests need the optional jax (+hypothesis) toolchain.
+
+Skip the whole directory cleanly when it is absent so the rust tier-1 CI
+job (and a bare `pytest`) stays hermetic; the dedicated `python-aot` CI
+job installs jax and runs these for real.
+"""
+
+import pytest
+
+pytest.importorskip("jax", reason="jax not installed; AOT tests are optional")

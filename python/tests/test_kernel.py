@@ -6,7 +6,9 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed; kernel tests are optional")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from compile.kernels.ref import support_count_ref, support_count_py
 from compile.kernels.support_count import support_count

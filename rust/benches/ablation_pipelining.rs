@@ -1,0 +1,132 @@
+//! Ablation: pipelined multi-level job scheduling + batched shared-scan
+//! counting vs the paper's synchronous one-job-per-level driver.
+//!
+//! Three schedules mine the same QUEST workload end-to-end on the real
+//! multi-threaded MapReduce engine:
+//!
+//! * `synchronous`     — run job k to completion, then plan job k+1;
+//! * `pipelined`       — job k+1's map wave overlaps job k's reduce wave
+//!                       (optimistic look-ahead candidates, exactness
+//!                       restored at resolve time);
+//! * `pipelined+batch` — additionally counts two adjacent levels per job
+//!                       through the engines' shared-scan `count_batch`,
+//!                       halving the number of jobs and dataset passes.
+//!
+//! The bench asserts all three emit byte-identical frequent itemsets (the
+//! differential proof) and reports real wall-clock plus the simulated
+//! cluster makespan, where Hadoop's per-job setup latency — the overhead
+//! the pipeline removes — is modelled explicitly.
+
+use std::time::Instant;
+
+use mr_apriori::coordinator;
+use mr_apriori::prelude::*;
+
+fn main() {
+    println!("== Ablation: pipelined vs synchronous level scheduling ==\n");
+    let db = QuestGenerator::new(QuestParams::t10_i4(8_000)).generate();
+    let apriori = AprioriConfig { min_support: 0.02, max_k: 4 };
+    let cluster = ClusterConfig::fhssc(3);
+    let job = JobConfig { n_reducers: 3, ..Default::default() };
+
+    let modes: [(&str, Option<PipelineConfig>); 3] = [
+        ("synchronous", None),
+        (
+            "pipelined",
+            Some(PipelineConfig {
+                enabled: true,
+                batch_levels: 1,
+                ..Default::default()
+            }),
+        ),
+        (
+            "pipelined+batch2",
+            Some(PipelineConfig {
+                enabled: true,
+                batch_levels: 2,
+                ..Default::default()
+            }),
+        ),
+    ];
+
+    let mut names = Vec::new();
+    let mut walls = Vec::new();
+    let mut n_jobs = Vec::new();
+    let mut reference: Option<Vec<(Itemset, u64)>> = None;
+    let mut base_profile = None;
+
+    for (name, pipeline) in modes {
+        let mut driver = MrApriori::new(cluster.clone(), apriori.clone())
+            .with_job(job.clone())
+            .with_split_tx(250);
+        if let Some(p) = pipeline {
+            driver = driver.with_pipeline(p);
+        }
+        let t0 = Instant::now();
+        let report = driver.mine(&db).expect("mining run");
+        let wall = t0.elapsed().as_secs_f64();
+
+        // Differential proof: every schedule mines identical itemsets.
+        match &reference {
+            None => reference = Some(report.result.frequent.clone()),
+            Some(base) => assert_eq!(
+                &report.result.frequent, base,
+                "{name} diverged from the synchronous baseline"
+            ),
+        }
+        base_profile.get_or_insert(report.profile);
+
+        println!("{name:>18}: wall {wall:.3}s | {} MR jobs", report.jobs.len());
+        names.push(name);
+        walls.push(wall);
+        n_jobs.push(report.jobs.len() as f64);
+    }
+
+    println!(
+        "\nfrequent itemsets: {} (identical across schedules)\n",
+        reference.as_ref().map(|r| r.len()).unwrap_or(0)
+    );
+
+    let mut table = BenchTable::new(
+        "Ablation: level-scheduling pipeline (QUEST T10.I4, 8k tx, fhssc/3)",
+        "schedule",
+        (0..names.len()).map(|i| i as f64).collect(),
+    );
+    table.push_series(Series::new("wall_secs", walls.clone()));
+    table.push_series(Series::new("mr_jobs", n_jobs));
+    table.emit();
+    for (i, name) in names.iter().enumerate() {
+        println!("schedule {i} = {name}");
+    }
+
+    let base_wall = walls[0];
+    for i in 1..names.len() {
+        println!(
+            "{:>18}: real wall speedup {:.2}x",
+            names[i],
+            base_wall / walls[i].max(1e-9),
+        );
+    }
+
+    // Schedule-model comparison on the simulated Hadoop cluster, where
+    // per-job setup latency is explicit. ONE workload profile (the sync
+    // run's) replayed under both sequencers — comparing profiles captured
+    // from different runs would conflate speculative counting work with
+    // scheduling gains. The batch2 variant's extra win (half the jobs and
+    // dataset passes) is visible in the wall/mr_jobs columns above, not
+    // here: the per-level replay models the same overlap for both
+    // pipelined variants.
+    let profile = base_profile.expect("at least one run");
+    let sim_sync = coordinator::simulate(&cluster, &profile, 250, &job);
+    let sim_piped = coordinator::simulate_pipelined(&cluster, &profile, 250, &job);
+    println!(
+        "\nsimulated 3-node makespan: synchronous {:.1}s vs pipelined {:.1}s ({:.2}x)",
+        sim_sync.total_secs,
+        sim_piped.total_secs,
+        sim_sync.total_secs / sim_piped.total_secs.max(1e-9),
+    );
+    assert!(
+        sim_piped.total_secs < sim_sync.total_secs,
+        "pipelined schedule must beat the synchronous makespan"
+    );
+}

@@ -58,12 +58,38 @@ impl MapReduceApp for ItemCountApp {
 }
 
 /// Level-k job (k ≥ 2): candidates broadcast, counting via an engine.
+///
+/// `candidates` may mix adjacent levels (the pipelined driver's batched
+/// jobs, SON's phase 2): counting then goes through the engine's
+/// shared-scan [`count_batch`](SupportEngine::count_batch) path, so one
+/// pass over the split serves every level in the batch. The per-length
+/// grouping is computed once at construction — map tasks run once per
+/// split and must not regroup.
 pub struct CandidateCountApp<'e> {
     pub candidates: Vec<Itemset>,
+    groups: crate::engine::LevelGroups,
     pub engine: &'e dyn SupportEngine,
     /// Dictionary width for the engine (tensor tile selection).
     pub n_items: usize,
     pub threshold: u64,
+}
+
+impl<'e> CandidateCountApp<'e> {
+    pub fn new(
+        candidates: Vec<Itemset>,
+        engine: &'e dyn SupportEngine,
+        n_items: usize,
+        threshold: u64,
+    ) -> Self {
+        let groups = crate::engine::LevelGroups::build(&candidates);
+        Self {
+            candidates,
+            groups,
+            engine,
+            n_items,
+            threshold,
+        }
+    }
 }
 
 impl<'e> MapReduceApp for CandidateCountApp<'e> {
@@ -72,8 +98,8 @@ impl<'e> MapReduceApp for CandidateCountApp<'e> {
 
     fn map(&self, _s: &Split, input: &[Transaction], emit: &mut dyn FnMut(Itemset, u64)) {
         let counts = self
-            .engine
-            .count(input, &self.candidates, self.n_items)
+            .groups
+            .count(self.engine, input, &self.candidates, self.n_items)
             .expect("support engine failed in map task");
         for (cand, count) in self.candidates.iter().zip(counts) {
             if count > 0 {
@@ -149,12 +175,7 @@ mod tests {
     fn candidate_count_level2_matches_textbook() {
         let f1: Vec<Itemset> = vec![vec![0], vec![1], vec![2], vec![3], vec![4]];
         let c2 = candidates::generate(&f1);
-        let app = CandidateCountApp {
-            candidates: c2,
-            engine: &HashTreeEngine,
-            n_items: 5,
-            threshold: 2,
-        };
+        let app = CandidateCountApp::new(c2, &HashTreeEngine, 5, 2);
         let out = run_app(&app, 3);
         assert_eq!(
             out,
@@ -173,25 +194,28 @@ mod tests {
     fn engines_produce_identical_job_output() {
         let f1: Vec<Itemset> = (0..5u32).map(|i| vec![i]).collect();
         let c2 = candidates::generate(&f1);
-        let a = run_app(
-            &CandidateCountApp {
-                candidates: c2.clone(),
-                engine: &HashTreeEngine,
-                n_items: 5,
-                threshold: 1,
-            },
-            2,
-        );
-        let b = run_app(
-            &CandidateCountApp {
-                candidates: c2,
-                engine: &NaiveEngine,
-                n_items: 5,
-                threshold: 1,
-            },
-            2,
-        );
+        let a = run_app(&CandidateCountApp::new(c2.clone(), &HashTreeEngine, 5, 1), 2);
+        let b = run_app(&CandidateCountApp::new(c2, &NaiveEngine, 5, 1), 2);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn batched_two_level_job_matches_per_level_jobs() {
+        let f1: Vec<Itemset> = (0..5u32).map(|i| vec![i]).collect();
+        let c2 = candidates::generate(&f1);
+        let c3 = candidates::generate(&c2);
+        assert!(!c3.is_empty());
+        let run = |cands: Vec<Itemset>| {
+            run_app(&CandidateCountApp::new(cands, &HashTreeEngine, 5, 1), 3)
+        };
+        let mut mixed = c2.clone();
+        mixed.extend(c3.clone());
+        let mut batched = run(mixed);
+        let mut separate = run(c2);
+        separate.extend(run(c3));
+        batched.sort();
+        separate.sort();
+        assert_eq!(batched, separate);
     }
 
     #[test]
@@ -203,12 +227,7 @@ mod tests {
 
     #[test]
     fn cost_hints_scale() {
-        let app = CandidateCountApp {
-            candidates: vec![vec![0, 1]; 50],
-            engine: &HashTreeEngine,
-            n_items: 5,
-            threshold: 1,
-        };
+        let app = CandidateCountApp::new(vec![vec![0, 1]; 50], &HashTreeEngine, 5, 1);
         assert_eq!(app.map_cost_hint(100), 5000.0);
         assert!(ItemCountApp { threshold: 1 }.map_cost_hint(10) > 0.0);
     }

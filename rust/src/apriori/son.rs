@@ -127,12 +127,7 @@ impl SonApriori {
 
         // ---- phase 2: exact global count + threshold ----
         let threshold = self.apriori.threshold(db.len());
-        let p2 = CandidateCountApp {
-            candidates,
-            engine: self.engine.as_ref(),
-            n_items: db.n_items,
-            threshold,
-        };
+        let p2 = CandidateCountApp::new(candidates, self.engine.as_ref(), db.n_items, threshold);
         let (frequent, phase2) = runner.run(&p2, db, &splits, &self.job)?;
 
         let mut result = MiningResult {

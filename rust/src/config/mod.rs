@@ -8,6 +8,7 @@ use std::path::Path;
 
 use crate::apriori::AprioriConfig;
 use crate::cluster::ClusterConfig;
+use crate::coordinator::PipelineConfig;
 use crate::engine::EngineKind;
 use crate::mapreduce::JobConfig;
 
@@ -48,6 +49,8 @@ pub struct ExperimentConfig {
     /// Transactions per map split.
     pub split_tx: usize,
     pub job: JobConfig,
+    /// Pipelined job-DAG execution (off = the paper's synchronous loop).
+    pub pipeline: PipelineConfig,
     /// Workload: transactions to generate (Quest T10.I4) when no input
     /// file is given.
     pub transactions: usize,
@@ -63,20 +66,43 @@ impl Default for ExperimentConfig {
             engine: EngineKind::HashTree,
             split_tx: 1000,
             job: JobConfig { n_reducers: 3, ..Default::default() },
+            pipeline: PipelineConfig::default(),
             transactions: 10_000,
             seed: 0xACE5_2012,
         }
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("line {line}: {msg}")]
+    Io(std::io::Error),
     Parse { line: usize, msg: String },
-    #[error("key '{key}': {msg}")]
     BadValue { key: String, msg: String },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "io: {e}"),
+            Self::Parse { line, msg } => write!(f, "line {line}: {msg}"),
+            Self::BadValue { key, msg } => write!(f, "key '{key}': {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
 }
 
 impl ExperimentConfig {
@@ -142,6 +168,25 @@ impl ExperimentConfig {
                 }
                 "speculative" => {
                     cfg.job.speculative = value.parse().map_err(|_| bad("want true|false"))?;
+                }
+                "pipeline" => {
+                    cfg.pipeline.enabled = value.parse().map_err(|_| bad("want true|false"))?;
+                }
+                "batch_levels" => {
+                    cfg.pipeline.batch_levels =
+                        value.parse().map_err(|_| bad("want integer"))?;
+                    if !(1..=2).contains(&cfg.pipeline.batch_levels) {
+                        return Err(bad("must be 1 or 2"));
+                    }
+                }
+                "max_blowup" => {
+                    let v: f64 = value.parse().map_err(|_| bad("want float"))?;
+                    // NaN would silently disable both the blowup guard and
+                    // the batched look-ahead (all comparisons false).
+                    if !v.is_finite() || v < 0.0 {
+                        return Err(bad("must be a finite value >= 0"));
+                    }
+                    cfg.pipeline.max_blowup = v;
                 }
                 "transactions" => {
                     cfg.transactions = value.parse().map_err(|_| bad("want integer"))?;
@@ -234,6 +279,24 @@ mod tests {
         assert_eq!(cfg.transactions, 12000);
         assert_eq!(cfg.seed, 42);
         assert_eq!(cfg.cluster().n_nodes(), 5);
+    }
+
+    #[test]
+    fn pipeline_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::parse(
+            "pipeline = true\nbatch_levels = 2\nmax_blowup = 4.5\n",
+        )
+        .unwrap();
+        assert!(cfg.pipeline.enabled);
+        assert_eq!(cfg.pipeline.batch_levels, 2);
+        assert_eq!(cfg.pipeline.max_blowup, 4.5);
+        assert!(!ExperimentConfig::default().pipeline.enabled);
+        assert!(ExperimentConfig::parse("batch_levels = 0").is_err());
+        assert!(ExperimentConfig::parse("batch_levels = 3").is_err());
+        assert!(ExperimentConfig::parse("max_blowup = -1").is_err());
+        assert!(ExperimentConfig::parse("max_blowup = nan").is_err());
+        assert!(ExperimentConfig::parse("max_blowup = inf").is_err());
+        assert!(ExperimentConfig::parse("pipeline = maybe").is_err());
     }
 
     #[test]

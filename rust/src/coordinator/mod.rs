@@ -1,7 +1,7 @@
-//! The leader: plans the level-wise Apriori loop as a sequence of
-//! MapReduce jobs, routes splits through the DFS, aggregates counts, and
-//! records everything the benches need to replay the run against any
-//! simulated cluster (the paper's fig 4/5 methodology).
+//! The leader: plans the level-wise Apriori loop as MapReduce jobs, routes
+//! splits through the DFS, aggregates counts, and records everything the
+//! benches need to replay the run against any simulated cluster (the
+//! paper's fig 4/5 methodology).
 //!
 //! Responsibilities, mirroring the paper's Hadoop master:
 //! * write the dataset into the DFS (block placement + replication);
@@ -10,6 +10,23 @@
 //! * collect [`JobStats`] and produce a [`WorkloadProfile`] — the per-level
 //!   cost summary [`simulate`] uses to predict the same workload's makespan
 //!   on a different cluster shape without re-mining.
+//!
+//! Two execution modes share the loop:
+//!
+//! * **synchronous** (the paper's baseline): one counting job per level,
+//!   run to completion before the next level is even planned — every level
+//!   pays full job setup latency with an idle cluster between levels;
+//! * **pipelined** ([`PipelineConfig`]): a job DAG. Look-ahead candidate
+//!   sets are generated *optimistically* from the predecessor's candidate
+//!   set (a superset of the exact `generate(F_k)`, by downward closure),
+//!   so job k+1's map wave starts while job k's reduce wave is still
+//!   running; exactness is restored by intersecting each job's
+//!   (threshold-filtered) counts with the exact candidate set once the
+//!   previous level's frequent itemsets resolve. With `batch_levels = 2`
+//!   each job counts two adjacent levels in one shared scan
+//!   ([`SupportEngine::count_batch`]), halving the number of dataset
+//!   passes and job setups. Both modes emit byte-identical frequent
+//!   itemsets (`tests/mr_invariants.rs` proves it property-style).
 
 use std::time::Instant;
 
@@ -25,12 +42,78 @@ use crate::mapreduce::{
     JobConfig, JobError, JobRunner, JobStats, SimJobSpec, SimMapTask, SimReport, Simulator,
 };
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MineError {
-    #[error("dfs: {0}")]
-    Dfs(#[from] DfsError),
-    #[error("job: {0}")]
-    Job(#[from] JobError),
+    Dfs(DfsError),
+    Job(JobError),
+}
+
+impl std::fmt::Display for MineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Dfs(e) => write!(f, "dfs: {e}"),
+            Self::Job(e) => write!(f, "job: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for MineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Dfs(e) => Some(e),
+            Self::Job(e) => Some(e),
+        }
+    }
+}
+
+impl From<DfsError> for MineError {
+    fn from(e: DfsError) -> Self {
+        Self::Dfs(e)
+    }
+}
+
+impl From<JobError> for MineError {
+    fn from(e: JobError) -> Self {
+        Self::Job(e)
+    }
+}
+
+/// Pipelined-execution knobs. Disabled by default — the paper's baseline
+/// is strictly synchronous, and every published figure replays that mode.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Overlap successor map waves with predecessor reduce waves using
+    /// optimistic (candidate-derived) look-ahead candidate sets.
+    pub enabled: bool,
+    /// Adjacent levels counted per job through the engines' shared-scan
+    /// `count_batch` path: 1 = one level per job (classic), 2 = pairs of
+    /// levels per job (half the jobs, half the dataset passes).
+    pub batch_levels: usize,
+    /// Give up on an optimistic candidate set when it exceeds this
+    /// multiple of its parent set's size; the driver then waits for the
+    /// exact frequent itemsets instead (degrading that level to the
+    /// synchronous schedule) so speculative counting work stays bounded.
+    pub max_blowup: f64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            batch_levels: 2,
+            max_blowup: 8.0,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Fully-enabled preset (overlap + two-level batched scans).
+    pub fn pipelined() -> Self {
+        Self {
+            enabled: true,
+            ..Self::default()
+        }
+    }
 }
 
 /// Per-level cost summary — everything the simulator needs, nothing more.
@@ -59,7 +142,8 @@ pub struct WorkloadProfile {
 #[derive(Debug)]
 pub struct RunReport {
     pub result: MiningResult,
-    /// JobStats per level (k, stats).
+    /// JobStats per counting job `(first level covered, stats)` — a
+    /// batched pipelined job covers more than one level.
     pub jobs: Vec<(usize, JobStats)>,
     pub profile: WorkloadProfile,
     pub wall_secs: f64,
@@ -72,18 +156,23 @@ pub struct MrApriori {
     pub cluster: ClusterConfig,
     pub apriori: AprioriConfig,
     pub job: JobConfig,
+    pub pipeline: PipelineConfig,
     /// Transactions per map split (HDFS block granularity).
     pub split_tx: usize,
     engine: Box<dyn SupportEngine>,
 }
 
+/// What a pipelined reduce lane hands back.
+type ReduceOutcome = Result<(Vec<(Itemset, u64)>, JobStats), JobError>;
+
 impl MrApriori {
-    /// Driver with the default hash-tree engine.
+    /// Driver with the default (trie) engine.
     pub fn new(cluster: ClusterConfig, apriori: AprioriConfig) -> Self {
         Self {
             cluster,
             apriori,
             job: JobConfig { n_reducers: 3, ..Default::default() },
+            pipeline: PipelineConfig::default(),
             split_tx: 1000,
             // Trie is the measured-fastest CPU matcher on every A1 width
             // (EXPERIMENTS.md §Perf); hash-tree/naive/tensor via with_engine.
@@ -101,14 +190,38 @@ impl MrApriori {
         self
     }
 
+    pub fn with_pipeline(mut self, pipeline: PipelineConfig) -> Self {
+        assert!(
+            (1..=2).contains(&pipeline.batch_levels),
+            "batch_levels must be 1 or 2"
+        );
+        assert!(
+            pipeline.max_blowup.is_finite() && pipeline.max_blowup >= 0.0,
+            "max_blowup must be a finite value >= 0"
+        );
+        self.pipeline = pipeline;
+        self
+    }
+
     pub fn with_split_tx(mut self, split_tx: usize) -> Self {
         assert!(split_tx > 0);
         self.split_tx = split_tx;
         self
     }
 
-    /// Mine `db`: real multi-threaded MapReduce execution.
+    /// Mine `db`: real multi-threaded MapReduce execution, synchronous or
+    /// pipelined per [`PipelineConfig`]. Both modes produce identical
+    /// frequent itemsets.
     pub fn mine(&self, db: &TransactionDb) -> Result<RunReport, MineError> {
+        if self.pipeline.enabled {
+            self.mine_pipelined(db)
+        } else {
+            self.mine_sync(db)
+        }
+    }
+
+    /// The paper's baseline: run job k to completion, then plan job k+1.
+    fn mine_sync(&self, db: &TransactionDb) -> Result<RunReport, MineError> {
         let t0 = Instant::now();
         let threshold = self.apriori.threshold(db.len());
         let splits = plan_splits(db, self.split_tx);
@@ -149,12 +262,8 @@ impl MrApriori {
             if cands.is_empty() {
                 break;
             }
-            let app = CandidateCountApp {
-                candidates: cands.clone(),
-                engine: self.engine.as_ref(),
-                n_items: db.n_items,
-                threshold,
-            };
+            let app =
+                CandidateCountApp::new(cands.clone(), self.engine.as_ref(), db.n_items, threshold);
             let lt0 = Instant::now();
             let (fk, stats) = runner.run(&app, db, &splits, &self.job)?;
             push_level(
@@ -187,6 +296,264 @@ impl MrApriori {
             spill_fraction: dfs.spill_fraction(),
         })
     }
+
+    /// The pipelined job DAG.
+    ///
+    /// Level 1 runs synchronously (everything depends on F1). From level 2
+    /// on, each counting job's candidate set is generated from the
+    /// *predecessor job's candidate set* — a superset of the exact
+    /// `generate(F_prev)` by downward closure — so the job's map wave is
+    /// schedulable the moment the predecessor's map wave drains, and it
+    /// overlaps the predecessor's reduce wave, which runs on a spare lane.
+    /// When a job's reduce output lands, its counts are intersected with
+    /// the exact candidate set (known by then) to recover exactly the
+    /// synchronous driver's frequent itemsets and supports.
+    fn mine_pipelined(&self, db: &TransactionDb) -> Result<RunReport, MineError> {
+        let t0 = Instant::now();
+        let threshold = self.apriori.threshold(db.len());
+        let splits = plan_splits(db, self.split_tx);
+        let avg_split_tx = avg_split(&splits);
+        let mut dfs = Dfs::new(&self.cluster);
+        let blocks = dfs.write_splits(&splits)?;
+        let runner = JobRunner::new(&self.cluster, &dfs, &blocks);
+        let runner = &runner;
+
+        let mut result = MiningResult {
+            n_transactions: db.len(),
+            ..Default::default()
+        };
+        let mut jobs: Vec<(usize, JobStats)> = Vec::new();
+        let mut profiles: Vec<LevelProfile> = Vec::new();
+
+        // ---- level 1 (synchronous root of the DAG) ----
+        let app = ItemCountApp { threshold };
+        let lt0 = Instant::now();
+        let (f1, stats) = runner.run(&app, db, &splits, &self.job)?;
+        push_level(
+            &mut result,
+            &mut profiles,
+            1,
+            db.n_items,
+            &f1,
+            &stats,
+            app.map_cost_hint(avg_split_tx),
+            app.record_bytes_hint(),
+            lt0.elapsed().as_secs_f64(),
+        );
+        jobs.push((1, stats));
+        let mut freq_by_level: Vec<Vec<Itemset>> = vec![Vec::new(), Vec::new()];
+        freq_by_level[1] = f1.iter().map(|(is, _)| is.clone()).collect();
+        result.frequent.extend(f1);
+
+        // Single source of truth for the profile's shuffle-record size:
+        // the same hint the synchronous path reads off its per-level apps.
+        let record_bytes =
+            CandidateCountApp::new(Vec::new(), self.engine.as_ref(), db.n_items, threshold)
+                .record_bytes_hint();
+        let outcome: Result<(), MineError> = std::thread::scope(|scope| {
+            // The in-flight predecessor: (first level, counted groups,
+            // reduce lane handle). At most one job's reduce is pending.
+            let mut pending: Option<(
+                usize,
+                Vec<Vec<Itemset>>,
+                std::thread::ScopedJoinHandle<'_, ReduceOutcome>,
+            )> = None;
+            let mut k = 2usize;
+            let mut chain_dead = false;
+
+            while !chain_dead && self.apriori.level_allowed(k) {
+                // -- candidate groups for the job starting at level k --
+                let mut base: Vec<Itemset> = match &pending {
+                    Some((_, prev_groups, _)) => {
+                        candidates::generate(prev_groups.last().expect("job has groups"))
+                    }
+                    None => candidates::generate(&freq_by_level[k - 1]),
+                };
+                let parent_len = pending
+                    .as_ref()
+                    .map(|(_, groups, _)| groups.last().expect("job has groups").len().max(1));
+                if let Some(parent) = parent_len {
+                    if base.len() as f64 > self.pipeline.max_blowup * parent as f64 {
+                        // Optimism exploded: wait for the exact frequent
+                        // sets (synchronous schedule for this level).
+                        let (bk, groups, handle) = pending.take().expect("checked above");
+                        let (out, stats) = handle.join().expect("reduce lane")?;
+                        chain_dead = resolve_job(
+                            bk,
+                            &groups,
+                            out,
+                            stats,
+                            avg_split_tx,
+                            record_bytes,
+                            &mut result,
+                            &mut profiles,
+                            &mut jobs,
+                            &mut freq_by_level,
+                        );
+                        if chain_dead {
+                            break;
+                        }
+                        base = candidates::generate(&freq_by_level[k - 1]);
+                    }
+                }
+                if base.is_empty() {
+                    break;
+                }
+                let mut groups = vec![base];
+                if self.pipeline.batch_levels >= 2 && self.apriori.level_allowed(k + 1) {
+                    let ahead = candidates::generate(&groups[0]);
+                    if !ahead.is_empty()
+                        && ahead.len() as f64 <= self.pipeline.max_blowup * groups[0].len() as f64
+                    {
+                        groups.push(ahead);
+                    }
+                }
+
+                let app = CandidateCountApp::new(
+                    groups.concat(),
+                    self.engine.as_ref(),
+                    db.n_items,
+                    threshold,
+                );
+                // Map wave for this job — overlaps the pending reduce lane.
+                let map_outputs = runner.map_stage(&app, db, &splits, &self.job)?;
+                // Resolve the predecessor before opening a new reduce lane
+                // (bounds look-ahead to one job and keeps level order).
+                if let Some((bk, prev_groups, handle)) = pending.take() {
+                    let (out, stats) = handle.join().expect("reduce lane")?;
+                    chain_dead = resolve_job(
+                        bk,
+                        &prev_groups,
+                        out,
+                        stats,
+                        avg_split_tx,
+                        record_bytes,
+                        &mut result,
+                        &mut profiles,
+                        &mut jobs,
+                        &mut freq_by_level,
+                    );
+                }
+                if chain_dead {
+                    // The predecessor just proved the chain ends before this
+                    // job's levels: drop its map outputs instead of paying a
+                    // shuffle + reduce wave that would resolve to nothing.
+                    break;
+                }
+                let n_levels = groups.len();
+                let job_cfg = &self.job;
+                let handle =
+                    scope.spawn(move || runner.reduce_stage(&app, map_outputs, job_cfg));
+                pending = Some((k, groups, handle));
+                k += n_levels;
+            }
+            // Drain the last lane. If the chain died earlier its counts
+            // resolve to nothing (exact candidate sets are empty).
+            if let Some((bk, groups, handle)) = pending.take() {
+                let (out, stats) = handle.join().expect("reduce lane")?;
+                resolve_job(
+                    bk,
+                    &groups,
+                    out,
+                    stats,
+                    avg_split_tx,
+                    record_bytes,
+                    &mut result,
+                    &mut profiles,
+                    &mut jobs,
+                    &mut freq_by_level,
+                );
+            }
+            Ok(())
+        });
+        outcome?;
+        result.normalize();
+
+        Ok(RunReport {
+            result,
+            jobs,
+            profile: WorkloadProfile {
+                n_tx: db.len(),
+                db_bytes: db.approx_bytes(),
+                levels: profiles,
+            },
+            wall_secs: t0.elapsed().as_secs_f64(),
+            spill_fraction: dfs.spill_fraction(),
+        })
+    }
+}
+
+/// Fold one finished (possibly multi-level) counting job back into the
+/// mining state: for each level the job counted, intersect its
+/// threshold-filtered counts with the exact candidate set generated from
+/// the previous level's (now known) frequent itemsets. Returns `true`
+/// when the level chain is exhausted — an exact candidate set or a
+/// frequent set came up empty.
+#[allow(clippy::too_many_arguments)]
+fn resolve_job(
+    base_k: usize,
+    groups: &[Vec<Itemset>],
+    output: Vec<(Itemset, u64)>,
+    stats: JobStats,
+    avg_split_tx: usize,
+    record_bytes: usize,
+    result: &mut MiningResult,
+    profiles: &mut Vec<LevelProfile>,
+    jobs: &mut Vec<(usize, JobStats)>,
+    freq_by_level: &mut Vec<Vec<Itemset>>,
+) -> bool {
+    use std::collections::HashMap;
+    // Levels differ in itemset length, so one lookup covers the union.
+    let counts: HashMap<&Itemset, u64> = output.iter().map(|(is, s)| (is, *s)).collect();
+    let n_maps = stats.maps_total.max(1);
+    let total_counted: usize = groups.iter().map(|g| g.len()).sum::<usize>().max(1);
+    let mut dead = false;
+
+    for (i, group) in groups.iter().enumerate() {
+        let k = base_k + i;
+        while freq_by_level.len() <= k {
+            freq_by_level.push(Vec::new());
+        }
+        let exact = candidates::generate(&freq_by_level[k - 1]);
+        if exact.is_empty() {
+            // The synchronous driver would never have run this level; the
+            // speculative counts for it are discarded.
+            dead = true;
+            break;
+        }
+        // `exact ⊆ group` by downward closure, so every exact candidate
+        // at or above threshold is present in the job output.
+        let frequent: Vec<(Itemset, u64)> = exact
+            .iter()
+            .filter_map(|c| counts.get(c).map(|&s| (c.clone(), s)))
+            .collect();
+        let share = group.len() as f64 / total_counted as f64;
+        result.levels.push(LevelStats {
+            k,
+            n_candidates: exact.len(),
+            n_frequent: frequent.len(),
+            // actual probes spent on this level's (optimistic) group
+            work_units: (avg_split_tx * group.len()) as f64 * n_maps as f64,
+            wall_secs: stats.total_secs * share,
+        });
+        let level_shuffle = stats.shuffle_records * group.len() / total_counted;
+        profiles.push(LevelProfile {
+            k,
+            n_candidates: exact.len(),
+            n_frequent: frequent.len(),
+            work_per_tx: group.len().max(1) as f64,
+            shuffle_bytes_per_map: (level_shuffle * record_bytes / n_maps) as u64,
+            reduce_work: level_shuffle as f64,
+        });
+        freq_by_level[k] = frequent.iter().map(|(is, _)| is.clone()).collect();
+        result.frequent.extend(frequent);
+        if freq_by_level[k].is_empty() {
+            dead = true;
+            break;
+        }
+    }
+    jobs.push((base_k, stats));
+    dead
 }
 
 fn avg_split(splits: &[Split]) -> usize {
@@ -226,14 +593,14 @@ fn push_level(
     });
 }
 
-/// Replay a mined workload's cost profile on an arbitrary cluster shape —
-/// the fig 4/5 methodology: mine once, predict everywhere. Deterministic.
-pub fn simulate(
+/// Build the per-level job specs that replay a profile on a cluster —
+/// shared by the synchronous and pipelined simulators.
+fn plan_sim_specs(
     cluster: &ClusterConfig,
     profile: &WorkloadProfile,
     split_tx: usize,
     job: &JobConfig,
-) -> SimReport {
+) -> Vec<SimJobSpec> {
     // Re-plan placement for this cluster (same logic as the real path).
     let n_splits = profile.n_tx.div_ceil(split_tx).max(1);
     let bytes_per_split = (profile.db_bytes / n_splits.max(1)) as u64;
@@ -251,7 +618,7 @@ pub fn simulate(
         .expect("placement on simulated cluster");
 
     let tx_per_split = (profile.n_tx as f64 / n_splits as f64).max(1.0);
-    let specs: Vec<SimJobSpec> = profile
+    profile
         .levels
         .iter()
         .map(|level| SimJobSpec {
@@ -273,8 +640,33 @@ pub fn simulate(
             speculative: job.speculative,
             surprise: None,
         })
-        .collect();
+        .collect()
+}
+
+/// Replay a mined workload's cost profile on an arbitrary cluster shape —
+/// the fig 4/5 methodology: mine once, predict everywhere. Deterministic.
+pub fn simulate(
+    cluster: &ClusterConfig,
+    profile: &WorkloadProfile,
+    split_tx: usize,
+    job: &JobConfig,
+) -> SimReport {
+    let specs = plan_sim_specs(cluster, profile, split_tx, job);
     Simulator::new(cluster.clone()).run_sequence(&specs)
+}
+
+/// Same replay, but the level jobs execute as the pipelined DAG: each
+/// job's map wave starts when the predecessor's map wave drains, with
+/// shuffle/reduce overlapped. The delta against [`simulate`] is the
+/// framework latency the pipelined driver removes.
+pub fn simulate_pipelined(
+    cluster: &ClusterConfig,
+    profile: &WorkloadProfile,
+    split_tx: usize,
+    job: &JobConfig,
+) -> SimReport {
+    let specs = plan_sim_specs(cluster, profile, split_tx, job);
+    Simulator::new(cluster.clone()).run_pipelined_sequence(&specs)
 }
 
 #[cfg(test)]
@@ -321,6 +713,110 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_matches_classical_on_textbook() {
+        let db = textbook_db();
+        let cfg = AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 };
+        let classical = ClassicalApriori::default().mine(&db, &cfg);
+        for batch_levels in [1usize, 2] {
+            let report = MrApriori::new(ClusterConfig::fhssc(3), cfg.clone())
+                .with_split_tx(3)
+                .with_pipeline(PipelineConfig {
+                    enabled: true,
+                    batch_levels,
+                    ..Default::default()
+                })
+                .mine(&db)
+                .unwrap();
+            assert_eq!(
+                report.result.frequent, classical.frequent,
+                "batch_levels={batch_levels}"
+            );
+        }
+    }
+
+    #[test]
+    fn pipelined_matches_synchronous_on_quest_presets() {
+        let db = QuestGenerator::new(QuestParams::goswami_2k()).generate();
+        let cfg = quick_cfg();
+        let sync = MrApriori::new(ClusterConfig::fhssc(3), cfg.clone())
+            .with_split_tx(250)
+            .mine(&db)
+            .unwrap();
+        for preset in [
+            ClusterConfig::standalone(),
+            ClusterConfig::fhssc(3),
+            ClusterConfig::fhdsc(4),
+        ] {
+            for batch_levels in [1usize, 2] {
+                let piped = MrApriori::new(preset.clone(), cfg.clone())
+                    .with_split_tx(250)
+                    .with_pipeline(PipelineConfig {
+                        enabled: true,
+                        batch_levels,
+                        ..Default::default()
+                    })
+                    .mine(&db)
+                    .unwrap();
+                assert_eq!(
+                    piped.result.frequent, sync.result.frequent,
+                    "preset {:?} batch_levels={batch_levels}",
+                    preset.mode
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_zero_blowup_budget_degrades_to_exact_schedule() {
+        // max_blowup = 0 forces the optimism guard on every level, so the
+        // driver continually waits for exact frequent sets — results must
+        // still be identical (and the run must not deadlock).
+        let db = QuestGenerator::new(QuestParams::dense(400)).generate();
+        let cfg = AprioriConfig { min_support: 0.05, max_k: 4 };
+        let sync = MrApriori::new(ClusterConfig::fhssc(2), cfg.clone())
+            .with_split_tx(100)
+            .mine(&db)
+            .unwrap();
+        let piped = MrApriori::new(ClusterConfig::fhssc(2), cfg)
+            .with_split_tx(100)
+            .with_pipeline(PipelineConfig {
+                enabled: true,
+                batch_levels: 1,
+                max_blowup: 0.0,
+            })
+            .mine(&db)
+            .unwrap();
+        assert_eq!(piped.result.frequent, sync.result.frequent);
+    }
+
+    #[test]
+    fn pipelined_batching_runs_fewer_jobs() {
+        let db = QuestGenerator::new(QuestParams::dense(500)).generate();
+        let cfg = AprioriConfig { min_support: 0.05, max_k: 4 };
+        let sync = MrApriori::new(ClusterConfig::fhssc(3), cfg.clone())
+            .with_split_tx(100)
+            .mine(&db)
+            .unwrap();
+        let piped = MrApriori::new(ClusterConfig::fhssc(3), cfg)
+            .with_split_tx(100)
+            .with_pipeline(PipelineConfig::pipelined())
+            .mine(&db)
+            .unwrap();
+        assert_eq!(piped.result.frequent, sync.result.frequent);
+        assert!(
+            piped.jobs.len() < sync.jobs.len(),
+            "batched pipeline should merge level jobs: {} vs {}",
+            piped.jobs.len(),
+            sync.jobs.len()
+        );
+        // levels still reported per level, in ascending order
+        let ks: Vec<usize> = piped.result.levels.iter().map(|l| l.k).collect();
+        let mut sorted = ks.clone();
+        sorted.sort_unstable();
+        assert_eq!(ks, sorted);
+    }
+
+    #[test]
     fn profile_captures_levels() {
         let db = QuestGenerator::new(QuestParams::dense(500)).generate();
         let cfg = AprioriConfig { min_support: 0.05, max_k: 3 };
@@ -348,6 +844,27 @@ mod tests {
         let b = simulate(&ClusterConfig::fhssc(3), &report.profile, 100, &job);
         assert_eq!(a.total_secs, b.total_secs);
         assert!(a.total_secs > 0.0);
+    }
+
+    #[test]
+    fn simulate_pipelined_beats_synchronous_replay() {
+        let db = QuestGenerator::new(QuestParams::t10_i4(1000)).generate();
+        let report = MrApriori::new(ClusterConfig::fhssc(3), quick_cfg())
+            .with_split_tx(100)
+            .mine(&db)
+            .unwrap();
+        assert!(report.profile.levels.len() >= 2, "need a multi-level workload");
+        let job = JobConfig::default();
+        for cluster in [ClusterConfig::fhssc(3), ClusterConfig::fhdsc(4)] {
+            let sync = simulate(&cluster, &report.profile, 100, &job);
+            let piped = simulate_pipelined(&cluster, &report.profile, 100, &job);
+            assert!(
+                piped.total_secs < sync.total_secs,
+                "pipelined replay {} must beat synchronous {}",
+                piped.total_secs,
+                sync.total_secs
+            );
+        }
     }
 
     #[test]

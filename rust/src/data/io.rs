@@ -7,12 +7,34 @@ use std::path::Path;
 
 use super::{Transaction, TransactionDb};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DatError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("line {line}: bad item '{token}'")]
+    Io(std::io::Error),
     BadItem { line: usize, token: String },
+}
+
+impl std::fmt::Display for DatError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "io error: {e}"),
+            Self::BadItem { line, token } => write!(f, "line {line}: bad item '{token}'"),
+        }
+    }
+}
+
+impl std::error::Error for DatError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io(e) => Some(e),
+            Self::BadItem { .. } => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for DatError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
 }
 
 /// Write a database in `.dat` format.

@@ -53,15 +53,28 @@ impl DatanodeState {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DfsError {
-    #[error("unknown block {0:?}")]
     UnknownBlock(BlockId),
-    #[error("replication {want} exceeds live datanodes {have}")]
     NotEnoughNodes { want: usize, have: usize },
-    #[error("node {0} already decommissioned")]
     AlreadyDecommissioned(NodeId),
 }
+
+impl std::fmt::Display for DfsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::UnknownBlock(id) => write!(f, "unknown block {id:?}"),
+            Self::NotEnoughNodes { want, have } => {
+                write!(f, "replication {want} exceeds live datanodes {have}")
+            }
+            Self::AlreadyDecommissioned(node) => {
+                write!(f, "node {node} already decommissioned")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DfsError {}
 
 /// The whole filesystem: namenode state + datanode accounting.
 #[derive(Debug, Clone)]

@@ -48,10 +48,31 @@ impl std::str::FromStr for EngineKind {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum EngineError {
-    #[error("tensor runtime: {0}")]
-    Tensor(#[from] crate::runtime::service::ServiceError),
+    Tensor(crate::runtime::service::ServiceError),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Tensor(e) => write!(f, "tensor runtime: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Tensor(e) => Some(e),
+        }
+    }
+}
+
+impl From<crate::runtime::service::ServiceError> for EngineError {
+    fn from(e: crate::runtime::service::ServiceError) -> Self {
+        Self::Tensor(e)
+    }
 }
 
 /// The counting contract. `n_items` is the (projected) dictionary width —
@@ -64,7 +85,108 @@ pub trait SupportEngine: Send + Sync {
         n_items: usize,
     ) -> Result<Vec<u64>, EngineError>;
 
+    /// Count candidates from several adjacent levels in **one logical scan**
+    /// of `txs`. `groups[g]` holds one level's candidate list (uniform
+    /// length within a group); the result is aligned group-for-group.
+    ///
+    /// The default delegates to [`SupportEngine::count`] per group — one
+    /// pass over the slice per level. Structure-based engines override it
+    /// with a genuine shared scan (build one matcher per level, stream each
+    /// transaction through all of them), which is what lets a batched
+    /// multi-level counting job read each split once instead of once per
+    /// level.
+    fn count_batch(
+        &self,
+        txs: &[Transaction],
+        groups: &[Vec<Itemset>],
+        n_items: usize,
+    ) -> Result<Vec<Vec<u64>>, EngineError> {
+        groups.iter().map(|g| self.count(txs, g, n_items)).collect()
+    }
+
     fn name(&self) -> &'static str;
+}
+
+/// Count a possibly mixed-length candidate list through the engine's
+/// batched shared-scan path, returning counts aligned with `candidates`'
+/// order. Uniform-length lists (the common single-level job) go straight
+/// to [`SupportEngine::count`]; mixed lists (a batched multi-level job)
+/// are regrouped by length, counted via [`SupportEngine::count_batch`] in
+/// one scan, and scattered back.
+pub fn count_mixed(
+    engine: &dyn SupportEngine,
+    txs: &[Transaction],
+    candidates: &[Itemset],
+    n_items: usize,
+) -> Result<Vec<u64>, EngineError> {
+    LevelGroups::build(candidates).count(engine, txs, candidates, n_items)
+}
+
+/// A candidate list's per-length grouping, precomputed **once per job** so
+/// the map-task hot path ([`count`](Self::count), called once per split)
+/// never regroups or clones candidates per split.
+#[derive(Debug, Clone)]
+pub struct LevelGroups {
+    /// One uniform-length candidate list per level, ascending length.
+    groups: Vec<Vec<Itemset>>,
+    /// `index[g][j]` = position of `groups[g][j]` in the original list.
+    index: Vec<Vec<usize>>,
+    n_candidates: usize,
+}
+
+impl LevelGroups {
+    pub fn build(candidates: &[Itemset]) -> Self {
+        let by_len = indices_by_len(candidates);
+        let groups = by_len
+            .values()
+            .map(|idxs| idxs.iter().map(|&i| candidates[i].clone()).collect())
+            .collect();
+        let index = by_len.into_values().collect();
+        Self {
+            groups,
+            index,
+            n_candidates: candidates.len(),
+        }
+    }
+
+    /// Single level (or empty) — the shared-scan batch path is a no-op win.
+    pub fn is_uniform(&self) -> bool {
+        self.groups.len() <= 1
+    }
+
+    /// Count through the engine, scattering counts back into the original
+    /// candidate order. `candidates` must be the list this was built from
+    /// (used verbatim on the uniform fast path).
+    pub fn count(
+        &self,
+        engine: &dyn SupportEngine,
+        txs: &[Transaction],
+        candidates: &[Itemset],
+        n_items: usize,
+    ) -> Result<Vec<u64>, EngineError> {
+        debug_assert_eq!(candidates.len(), self.n_candidates);
+        if self.is_uniform() {
+            return engine.count(txs, candidates, n_items);
+        }
+        let counted = engine.count_batch(txs, &self.groups, n_items)?;
+        let mut counts = vec![0u64; self.n_candidates];
+        for (idxs, group_counts) in self.index.iter().zip(counted) {
+            for (&i, c) in idxs.iter().zip(group_counts) {
+                counts[i] = c;
+            }
+        }
+        Ok(counts)
+    }
+}
+
+/// Candidate indices keyed by itemset length, in ascending-length order —
+/// the regrouping step both `count_grouped` and [`count_mixed`] share.
+fn indices_by_len(candidates: &[Itemset]) -> std::collections::BTreeMap<usize, Vec<usize>> {
+    let mut by_len: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+    for (i, c) in candidates.iter().enumerate() {
+        by_len.entry(c.len()).or_default().push(i);
+    }
+    by_len
 }
 
 /// Group candidate indices by itemset length: the hash tree and trie
@@ -76,11 +198,7 @@ fn count_grouped(
     candidates: &[Itemset],
     count_level: impl Fn(&[Itemset]) -> Vec<u64>,
 ) -> Vec<u64> {
-    use std::collections::BTreeMap;
-    let mut by_len: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
-    for (i, c) in candidates.iter().enumerate() {
-        by_len.entry(c.len()).or_default().push(i);
-    }
+    let by_len = indices_by_len(candidates);
     let mut counts = vec![0u64; candidates.len()];
     for idxs in by_len.values() {
         if idxs.len() == candidates.len() {
@@ -112,6 +230,25 @@ impl SupportEngine for HashTreeEngine {
         }))
     }
 
+    /// Shared scan: one hash tree per level, each transaction streamed
+    /// through all of them in a single pass over the slice.
+    fn count_batch(
+        &self,
+        txs: &[Transaction],
+        groups: &[Vec<Itemset>],
+        _n_items: usize,
+    ) -> Result<Vec<Vec<u64>>, EngineError> {
+        let trees: Vec<HashTree> = groups.iter().map(|g| HashTree::build(g)).collect();
+        let mut workspaces: Vec<_> = trees.iter().map(|t| t.workspace()).collect();
+        let mut counts: Vec<Vec<u64>> = groups.iter().map(|g| vec![0u64; g.len()]).collect();
+        for tx in txs {
+            for ((tree, ws), c) in trees.iter().zip(&mut workspaces).zip(&mut counts) {
+                tree.count_transaction(tx, c, ws);
+            }
+        }
+        Ok(counts)
+    }
+
     fn name(&self) -> &'static str {
         "hash-tree"
     }
@@ -130,6 +267,23 @@ impl SupportEngine for TrieEngine {
         Ok(count_grouped(txs, candidates, |group| {
             CandidateTrie::build(group).count_all(txs)
         }))
+    }
+
+    /// Shared scan: one trie per level, probed together per transaction.
+    fn count_batch(
+        &self,
+        txs: &[Transaction],
+        groups: &[Vec<Itemset>],
+        _n_items: usize,
+    ) -> Result<Vec<Vec<u64>>, EngineError> {
+        let tries: Vec<CandidateTrie> = groups.iter().map(|g| CandidateTrie::build(g)).collect();
+        let mut counts: Vec<Vec<u64>> = groups.iter().map(|g| vec![0u64; g.len()]).collect();
+        for tx in txs {
+            for (trie, c) in tries.iter().zip(&mut counts) {
+                trie.count_transaction(tx, c);
+            }
+        }
+        Ok(counts)
     }
 
     fn name(&self) -> &'static str {
@@ -190,6 +344,43 @@ impl SupportEngine for TensorEngine {
             cands,
         })?;
         Ok(counts.into_iter().map(u64::from).collect())
+    }
+
+    /// Batched path: the transaction slice is bitmap-encoded **once** and
+    /// the encoded block shared across the per-level kernel calls — the
+    /// encode is the host-side scan, so this is the tensor engine's
+    /// shared-scan analogue.
+    fn count_batch(
+        &self,
+        txs: &[Transaction],
+        groups: &[Vec<Itemset>],
+        n_items: usize,
+    ) -> Result<Vec<Vec<u64>>, EngineError> {
+        let mut block = Some(BitmapBlock::encode(txs, n_items, self.pad_to));
+        let last = groups.iter().rposition(|g| !g.is_empty());
+        groups
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| {
+                if g.is_empty() {
+                    return Ok(Vec::new());
+                }
+                // The request owns its block; move the encode into the
+                // final call and clone only for the earlier ones.
+                let block = if Some(gi) == last {
+                    block.take().expect("taken only on the last group")
+                } else {
+                    block.as_ref().expect("not yet taken").clone()
+                };
+                let cands = CandidateBlock::encode(g, n_items, 64);
+                let counts = self.handle.count(CountRequest {
+                    graph: "count_split".into(),
+                    block,
+                    cands,
+                })?;
+                Ok(counts.into_iter().map(u64::from).collect())
+            })
+            .collect()
     }
 
     fn name(&self) -> &'static str {
@@ -293,6 +484,60 @@ mod tests {
         for e in [EngineKind::HashTree, EngineKind::Trie, EngineKind::Naive] {
             let engine = build_engine(e, None);
             assert!(engine.count(&txs, &[], 30).unwrap().is_empty());
+        }
+    }
+
+    /// Split a mixed-length candidate list into per-length groups.
+    fn level_groups(cands: &[Itemset]) -> Vec<Vec<Itemset>> {
+        use std::collections::BTreeMap;
+        let mut by_len: BTreeMap<usize, Vec<Itemset>> = BTreeMap::new();
+        for c in cands {
+            by_len.entry(c.len()).or_default().push(c.clone());
+        }
+        by_len.into_values().collect()
+    }
+
+    #[test]
+    fn shared_scan_batch_matches_per_level_counts() {
+        let (txs, cands) = sample(60);
+        let groups = level_groups(&cands);
+        assert!(groups.len() > 1, "sample should span several levels");
+        for e in [EngineKind::HashTree, EngineKind::Trie, EngineKind::Naive] {
+            let engine = build_engine(e, None);
+            let batched = engine.count_batch(&txs, &groups, 60).unwrap();
+            assert_eq!(batched.len(), groups.len(), "{}", engine.name());
+            for (group, got) in groups.iter().zip(&batched) {
+                let want = NaiveEngine.count(&txs, group, 60).unwrap();
+                assert_eq!(got, &want, "{} level k={}", engine.name(), group[0].len());
+            }
+        }
+    }
+
+    #[test]
+    fn count_mixed_preserves_caller_order() {
+        let (txs, cands) = sample(50);
+        let want = NaiveEngine.count(&txs, &cands, 50).unwrap();
+        for e in [EngineKind::HashTree, EngineKind::Trie, EngineKind::Naive] {
+            let engine = build_engine(e, None);
+            let got = count_mixed(engine.as_ref(), &txs, &cands, 50).unwrap();
+            assert_eq!(got, want, "{}", engine.name());
+        }
+        // uniform-length fast path
+        let pairs: Vec<Itemset> = cands.iter().filter(|c| c.len() == 2).cloned().collect();
+        let got = count_mixed(&TrieEngine, &txs, &pairs, 50).unwrap();
+        assert_eq!(got, NaiveEngine.count(&txs, &pairs, 50).unwrap());
+    }
+
+    #[test]
+    fn batch_with_empty_groups() {
+        let (txs, cands) = sample(40);
+        let pairs: Vec<Itemset> = cands.iter().filter(|c| c.len() == 2).cloned().collect();
+        let groups = vec![pairs.clone(), Vec::new()];
+        for e in [EngineKind::HashTree, EngineKind::Trie, EngineKind::Naive] {
+            let engine = build_engine(e, None);
+            let batched = engine.count_batch(&txs, &groups, 40).unwrap();
+            assert_eq!(batched[0], NaiveEngine.count(&txs, &pairs, 40).unwrap());
+            assert!(batched[1].is_empty());
         }
     }
 

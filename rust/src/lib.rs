@@ -46,7 +46,9 @@ pub mod prelude {
     };
     pub use crate::cluster::{ClusterConfig, DeployMode, NodeProfile};
     pub use crate::config::{ExperimentConfig, Preset};
-    pub use crate::coordinator::{simulate, MrApriori, RunReport, WorkloadProfile};
+    pub use crate::coordinator::{
+        simulate, simulate_pipelined, MrApriori, PipelineConfig, RunReport, WorkloadProfile,
+    };
     pub use crate::data::{
         bitmap::BitmapBlock, quest::QuestGenerator, quest::QuestParams, TransactionDb,
     };

@@ -59,7 +59,9 @@ USAGE:
   repro mine [--config FILE] [--preset standalone|pseudo|fhssc|fhdsc] [--nodes N]
              [--min-support F] [--max-k K] [--engine hash-tree|trie|naive|tensor]
              [--split-tx N] [--transactions N | --input FILE] [--rules CONF]
+             [--pipeline true|false] [--batch-levels 1|2]
   repro simulate [--config FILE] [--preset P] [--nodes N] [--transactions N]
+                 [--pipeline true|false]
   repro bench --figure fig4|fig5|eta
   repro report
 ";
@@ -131,6 +133,15 @@ fn experiment_config(flags: &Flags) -> Result<ExperimentConfig, String> {
     if let Some(s) = flags.parse_opt::<u64>("seed")? {
         cfg.seed = s;
     }
+    if let Some(p) = flags.parse_opt::<bool>("pipeline")? {
+        cfg.pipeline.enabled = p;
+    }
+    if let Some(b) = flags.parse_opt::<usize>("batch-levels")? {
+        if !(1..=2).contains(&b) {
+            return Err("--batch-levels: must be 1 or 2".into());
+        }
+        cfg.pipeline.batch_levels = b;
+    }
     Ok(cfg)
 }
 
@@ -187,16 +198,22 @@ fn cmd_mine(flags: &Flags) -> Result<(), String> {
     let db = load_or_generate(flags, &cfg)?;
     let engine = build_engine_for(&cfg)?;
     println!(
-        "mining {} transactions on {:?}/{} nodes (engine={}, min_support={})",
+        "mining {} transactions on {:?}/{} nodes (engine={}, min_support={}, schedule={})",
         db.len(),
         cfg.preset,
         cfg.cluster().n_nodes(),
         engine.name(),
         cfg.apriori.min_support,
+        if cfg.pipeline.enabled {
+            "pipelined"
+        } else {
+            "synchronous"
+        },
     );
     let driver = MrApriori::new(cfg.cluster(), cfg.apriori.clone())
         .with_engine(engine)
         .with_job(cfg.job.clone())
+        .with_pipeline(cfg.pipeline.clone())
         .with_split_tx(cfg.split_tx);
     let report = driver.mine(&db).map_err(|e| e.to_string())?;
 
@@ -241,7 +258,11 @@ fn cmd_simulate(flags: &Flags) -> Result<(), String> {
         .with_job(cfg.job.clone())
         .with_split_tx(cfg.split_tx);
     let report = driver.mine(&db).map_err(|e| e.to_string())?;
-    let sim = coordinator::simulate(&cfg.cluster(), &report.profile, cfg.split_tx, &cfg.job);
+    let sim = if cfg.pipeline.enabled {
+        coordinator::simulate_pipelined(&cfg.cluster(), &report.profile, cfg.split_tx, &cfg.job)
+    } else {
+        coordinator::simulate(&cfg.cluster(), &report.profile, cfg.split_tx, &cfg.job)
+    };
     println!(
         "simulated {:?}/{} nodes: startup {:.1}s + map {:.1}s + shuffle {:.1}s + reduce {:.1}s = {:.1}s (locality {:.0}%, spill {:.0}%)",
         cfg.preset,
@@ -339,6 +360,16 @@ mod tests {
         assert_eq!(cfg.split_tx, 123);
         assert_eq!(cfg.transactions, 4567);
         assert_eq!(cfg.seed, 9);
+    }
+
+    #[test]
+    fn pipeline_flags_apply() {
+        let f = flags(&["--pipeline", "true", "--batch-levels", "1"]).unwrap();
+        let cfg = experiment_config(&f).unwrap();
+        assert!(cfg.pipeline.enabled);
+        assert_eq!(cfg.pipeline.batch_levels, 1);
+        let f = flags(&["--batch-levels", "9"]).unwrap();
+        assert!(experiment_config(&f).is_err());
     }
 
     #[test]

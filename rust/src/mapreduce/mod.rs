@@ -22,5 +22,5 @@ pub mod shuffle;
 pub mod sim;
 
 pub use app::MapReduceApp;
-pub use runner::{JobConfig, JobError, JobRunner, JobStats};
+pub use runner::{JobConfig, JobError, JobRunner, JobStats, MapOutputs};
 pub use sim::{SimJobSpec, SimMapTask, SimReport, Simulator};

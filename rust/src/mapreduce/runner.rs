@@ -111,25 +111,40 @@ impl JobStats {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JobError {
-    #[error("map task {task} failed {attempts} attempts (max {max})")]
     MapTaskFailed {
         task: usize,
         attempts: usize,
         max: usize,
     },
-    #[error("reduce task {task} failed {attempts} attempts (max {max})")]
     ReduceTaskFailed {
         task: usize,
         attempts: usize,
         max: usize,
     },
-    #[error("splits/blocks length mismatch: {splits} vs {blocks}")]
     BadPlacement { splits: usize, blocks: usize },
-    #[error("n_reducers must be >= 1")]
     NoReducers,
 }
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::MapTaskFailed { task, attempts, max } => {
+                write!(f, "map task {task} failed {attempts} attempts (max {max})")
+            }
+            Self::ReduceTaskFailed { task, attempts, max } => {
+                write!(f, "reduce task {task} failed {attempts} attempts (max {max})")
+            }
+            Self::BadPlacement { splits, blocks } => {
+                write!(f, "splits/blocks length mismatch: {splits} vs {blocks}")
+            }
+            Self::NoReducers => write!(f, "n_reducers must be >= 1"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
 
 /// The job execution engine bound to a cluster + DFS placement.
 pub struct JobRunner<'a> {
@@ -137,6 +152,23 @@ pub struct JobRunner<'a> {
     pub dfs: &'a Dfs,
     /// `blocks[i]` backs `splits[i]` (from `Dfs::write_splits`).
     pub blocks: &'a [BlockId],
+}
+
+/// A completed map wave, ready for [`JobRunner::reduce_stage`]: the
+/// per-task partitioned outputs plus the stats accumulated so far. Owning
+/// this value is owning the intermediate data — it can be carried to
+/// another thread so the reduce wave overlaps a successor job's map wave.
+pub struct MapOutputs<K, V> {
+    outputs: HashMap<usize, Vec<Vec<(K, V)>>>,
+    stats: JobStats,
+}
+
+impl<K, V> MapOutputs<K, V> {
+    /// Stats accumulated through the map wave (map counters populated,
+    /// shuffle/reduce counters still zero).
+    pub fn stats(&self) -> &JobStats {
+        &self.stats
+    }
 }
 
 /// Jobtracker state shared by all tasktracker threads.
@@ -158,6 +190,7 @@ impl<'a> JobRunner<'a> {
     }
 
     /// Run one job to completion. Output is key-sorted and deterministic.
+    /// Composes [`map_stage`](Self::map_stage) + [`reduce_stage`](Self::reduce_stage).
     pub fn run<A: MapReduceApp>(
         &self,
         app: &A,
@@ -165,6 +198,25 @@ impl<'a> JobRunner<'a> {
         splits: &[Split],
         cfg: &JobConfig,
     ) -> Result<(Vec<(A::K, A::V)>, JobStats), JobError> {
+        let outputs = self.map_stage(app, db, splits, cfg)?;
+        self.reduce_stage(app, outputs, cfg)
+    }
+
+    /// Run just the map wave of a job: validate, schedule the map tasks
+    /// over the tasktracker pool, and hand back the partitioned map
+    /// outputs. [`reduce_stage`](Self::reduce_stage) completes the job.
+    ///
+    /// Splitting the two waves is what lets the pipelined coordinator
+    /// overlap a successor job's map wave with its predecessor's reduce
+    /// wave: the predecessor's `reduce_stage` runs on a spare lane while
+    /// the slots the map wave freed pick up the next job's map tasks.
+    pub fn map_stage<A: MapReduceApp>(
+        &self,
+        app: &A,
+        db: &TransactionDb,
+        splits: &[Split],
+        cfg: &JobConfig,
+    ) -> Result<MapOutputs<A::K, A::V>, JobError> {
         if cfg.n_reducers == 0 {
             return Err(JobError::NoReducers);
         }
@@ -174,9 +226,22 @@ impl<'a> JobRunner<'a> {
                 blocks: self.blocks.len(),
             });
         }
-        let t0 = Instant::now();
+        let started = Instant::now();
         let (outputs, mut stats) = self.map_phase(app, db, splits, cfg)?;
-        stats.map_secs = t0.elapsed().as_secs_f64();
+        stats.map_secs = started.elapsed().as_secs_f64();
+        Ok(MapOutputs { outputs, stats })
+    }
+
+    /// Shuffle + reduce wave over a completed map stage. Output is
+    /// key-sorted and deterministic regardless of what else is running on
+    /// the cluster (the shuffle pulls partitions in task order).
+    pub fn reduce_stage<A: MapReduceApp>(
+        &self,
+        app: &A,
+        map_outputs: MapOutputs<A::K, A::V>,
+        cfg: &JobConfig,
+    ) -> Result<(Vec<(A::K, A::V)>, JobStats), JobError> {
+        let MapOutputs { outputs, mut stats } = map_outputs;
 
         // Shuffle: reducer r pulls partition r of every map output, in
         // task order (determinism).
@@ -195,7 +260,10 @@ impl<'a> JobRunner<'a> {
         let output = self.reduce_phase(app, reduce_inputs, cfg, &mut stats)?;
         stats.reduce_secs = t1.elapsed().as_secs_f64();
         stats.output_records = output.len();
-        stats.total_secs = t0.elapsed().as_secs_f64();
+        // Sum of the stages' own elapsed times: a pipelined coordinator may
+        // park the map outputs while a predecessor's reduce lane drains,
+        // and that wait is scheduling, not this job's work.
+        stats.total_secs = stats.map_secs + stats.reduce_secs;
         Ok((output, stats))
     }
 
@@ -523,6 +591,48 @@ mod tests {
         assert!(stats.map_attempts >= splits.len());
         assert_eq!(stats.output_records, out.len());
         assert!(stats.total_secs > 0.0);
+    }
+
+    #[test]
+    fn staged_run_equals_one_shot_run() {
+        let (cluster, db, splits) = fixture(3, 900);
+        let mut dfs = Dfs::new(&cluster);
+        let blocks = dfs.write_splits(&splits).unwrap();
+        let runner = JobRunner::new(&cluster, &dfs, &blocks);
+        let cfg = JobConfig { n_reducers: 3, ..Default::default() };
+        let (one_shot, s1) = runner.run(&ItemCount, &db, &splits, &cfg).unwrap();
+        let mo = runner.map_stage(&ItemCount, &db, &splits, &cfg).unwrap();
+        assert_eq!(mo.stats().maps_total, splits.len());
+        assert_eq!(mo.stats().shuffle_records, 0, "shuffle not yet pulled");
+        let (staged, s2) = runner.reduce_stage(&ItemCount, mo, &cfg).unwrap();
+        assert_eq!(one_shot, staged);
+        assert_eq!(s1.shuffle_records, s2.shuffle_records);
+        assert_eq!(s1.output_records, s2.output_records);
+    }
+
+    #[test]
+    fn successor_map_wave_overlaps_predecessor_reduce() {
+        // Two jobs staged by hand: job B's map wave runs while job A's
+        // reduce wave is still in flight on another lane. Both must still
+        // produce the exact ground truth with identical shuffle volumes.
+        let (cluster, db, splits) = fixture(3, 1200);
+        let mut dfs = Dfs::new(&cluster);
+        let blocks = dfs.write_splits(&splits).unwrap();
+        let runner = JobRunner::new(&cluster, &dfs, &blocks);
+        let cfg = JobConfig { n_reducers: 4, ..Default::default() };
+        let truth = ground_truth(&db);
+
+        let mo_a = runner.map_stage(&ItemCount, &db, &splits, &cfg).unwrap();
+        let ((out_a, stats_a), (out_b, stats_b)) = std::thread::scope(|s| {
+            let reduce_a = s.spawn(|| runner.reduce_stage(&ItemCount, mo_a, &cfg).unwrap());
+            let mo_b = runner.map_stage(&ItemCount, &db, &splits, &cfg).unwrap();
+            let b = runner.reduce_stage(&ItemCount, mo_b, &cfg).unwrap();
+            (reduce_a.join().unwrap(), b)
+        });
+        assert_eq!(out_a, truth);
+        assert_eq!(out_b, truth);
+        assert_eq!(stats_a.shuffle_records, stats_b.shuffle_records);
+        assert_eq!(stats_a.maps_total, stats_b.maps_total);
     }
 
     #[test]

@@ -341,6 +341,51 @@ impl Simulator {
         report
     }
 
+    /// Pipelined job DAG: job k+1 is submitted when job k's map wave
+    /// starts (its candidates exist by then), so its setup/coordination
+    /// runs concurrently with job k's waves — but still gates job k+1's
+    /// own maps, which additionally wait for the map slots to drain.
+    /// Job k's shuffle + reduce overlap the successor's maps on the lanes
+    /// the map wave freed. `startup_secs` still accounts every job's
+    /// setup (the work exists; overlap only hides it from the critical
+    /// path), and `total_secs` is the pipelined **makespan** — the latest
+    /// reduce finish — not the sum of per-job totals that the synchronous
+    /// [`run_sequence`](Self::run_sequence) reports.
+    pub fn run_pipelined_sequence(&self, specs: &[SimJobSpec]) -> SimReport {
+        let mut total = SimReport { locality_fraction: 1.0, ..Default::default() };
+        let mut loc_acc = 0.0;
+        let mut map_cursor = 0.0f64; // when the map slots next come free
+        let mut prev_map_start = 0.0f64;
+        let mut makespan = 0.0f64;
+        for (j, s) in specs.iter().enumerate() {
+            let r = self.run(s);
+            total.startup_secs += r.startup_secs;
+            let map_start = if j == 0 {
+                r.startup_secs
+            } else {
+                // submitted at the predecessor's map start; setup overlaps
+                // the predecessor's waves but cannot be skipped outright.
+                map_cursor.max(prev_map_start + r.startup_secs)
+            };
+            let map_end = map_start + r.map_secs;
+            let finish = map_end + r.shuffle_secs + r.reduce_secs;
+            prev_map_start = map_start;
+            map_cursor = map_end;
+            makespan = makespan.max(finish);
+            total.map_secs += r.map_secs;
+            total.shuffle_secs += r.shuffle_secs;
+            total.reduce_secs += r.reduce_secs;
+            total.speculated += r.speculated;
+            loc_acc += r.locality_fraction;
+            total.spill_fraction = total.spill_fraction.max(r.spill_fraction);
+        }
+        if !specs.is_empty() {
+            total.locality_fraction = loc_acc / specs.len() as f64;
+        }
+        total.total_secs = makespan;
+        total
+    }
+
     /// Sum of several jobs run back-to-back (Apriori's level-wise loop).
     pub fn run_sequence(&self, specs: &[SimJobSpec]) -> SimReport {
         let mut total = SimReport { locality_fraction: 1.0, ..Default::default() };
@@ -501,5 +546,60 @@ mod tests {
         let one = sim.run(&s).total_secs;
         let three = sim.run_sequence(&[s.clone(), s.clone(), s]).total_secs;
         assert!((three - 3.0 * one).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipelined_sequence_beats_synchronous_and_is_deterministic() {
+        let sim = Simulator::new(ClusterConfig::fhssc(3));
+        let specs = [spec(16, 3), spec(12, 3), spec(8, 3), spec(4, 3)];
+        let sync = sim.run_sequence(&specs);
+        let piped = sim.run_pipelined_sequence(&specs);
+        assert!(
+            piped.total_secs < sync.total_secs,
+            "pipelined {} must beat synchronous {}",
+            piped.total_secs,
+            sync.total_secs
+        );
+        // phases still account for the same work, only the timeline overlaps
+        assert_eq!(piped.startup_secs.to_bits(), sync.startup_secs.to_bits());
+        assert_eq!(piped.map_secs.to_bits(), sync.map_secs.to_bits());
+        assert_eq!(piped.reduce_secs.to_bits(), sync.reduce_secs.to_bits());
+        // makespan can never undercut the serialized map waves
+        assert!(piped.total_secs >= piped.map_secs);
+        let again = sim.run_pipelined_sequence(&specs);
+        assert_eq!(piped.total_secs.to_bits(), again.total_secs.to_bits());
+    }
+
+    #[test]
+    fn pipelined_setup_not_free_without_overlap_capacity() {
+        // Jobs with (near) nothing to hide setup under: tiny maps, no
+        // shuffle, no reduce. The pipelined makespan must still pay every
+        // job's setup on the critical path rather than erasing it.
+        let sim = Simulator::new(ClusterConfig::fhssc(3));
+        let tiny = SimJobSpec {
+            map_tasks: uniform_tasks(1, 1_000, 1.0, 3),
+            n_reducers: 1,
+            shuffle_bytes_per_map: 0,
+            reduce_work: 0.0,
+            ..Default::default()
+        };
+        let specs = [tiny.clone(), tiny.clone(), tiny];
+        let piped = sim.run_pipelined_sequence(&specs);
+        assert!(
+            piped.total_secs >= piped.startup_secs,
+            "pipelined makespan {} must not undercut the serialized setups {}",
+            piped.total_secs,
+            piped.startup_secs
+        );
+    }
+
+    #[test]
+    fn pipelined_single_job_matches_run() {
+        let sim = Simulator::new(ClusterConfig::fhssc(3));
+        let s = spec(8, 3);
+        let one = sim.run(&s);
+        let piped = sim.run_pipelined_sequence(std::slice::from_ref(&s));
+        assert_eq!(one.total_secs.to_bits(), piped.total_secs.to_bits());
+        assert!(sim.run_pipelined_sequence(&[]).total_secs == 0.0);
     }
 }

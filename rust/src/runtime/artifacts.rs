@@ -21,17 +21,33 @@ pub struct ModuleSpec {
     pub c: usize,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("cannot read {path}: {source}")]
     Io {
         path: PathBuf,
         source: std::io::Error,
     },
-    #[error("manifest parse: {0}")]
     Parse(String),
-    #[error("manifest format {0} unsupported (want 1)")]
     Format(f64),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io { path, source } => write!(f, "cannot read {}: {source}", path.display()),
+            Self::Parse(msg) => write!(f, "manifest parse: {msg}"),
+            Self::Format(v) => write!(f, "manifest format {v} unsupported (want 1)"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 /// The parsed artifact manifest.

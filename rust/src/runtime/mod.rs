@@ -10,6 +10,7 @@
 
 pub mod artifacts;
 pub mod service;
+pub mod xla_stub;
 
 pub use artifacts::{ArtifactManifest, ModuleSpec};
 pub use service::{CountRequest, TensorService, TensorServiceHandle};

@@ -12,6 +12,11 @@ use std::thread::JoinHandle;
 
 use crate::data::bitmap::{BitmapBlock, CandidateBlock};
 
+// The PJRT client API. The offline build binds the in-tree stub (every
+// call errors with `ServiceError::Xla`); linking the real `xla` crate is a
+// one-line swap here once the native toolchain is available.
+use super::xla_stub as xla;
+
 use super::artifacts::{ArtifactManifest, ModuleSpec};
 
 /// One support-count request over encoded blocks.
@@ -25,21 +30,34 @@ pub struct CountRequest {
     pub cands: CandidateBlock,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ServiceError {
-    #[error("no artifact fits graph={graph} items={items} cands={cands}")]
     NoFit {
         graph: String,
         items: usize,
         cands: usize,
     },
-    #[error("xla: {0}")]
     Xla(String),
-    #[error("tensor service stopped")]
     Stopped,
-    #[error("item width mismatch: block {block} vs cands {cands}")]
     WidthMismatch { block: usize, cands: usize },
 }
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::NoFit { graph, items, cands } => {
+                write!(f, "no artifact fits graph={graph} items={items} cands={cands}")
+            }
+            Self::Xla(msg) => write!(f, "xla: {msg}"),
+            Self::Stopped => write!(f, "tensor service stopped"),
+            Self::WidthMismatch { block, cands } => {
+                write!(f, "item width mismatch: block {block} vs cands {cands}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
 
 enum Msg {
     Count {

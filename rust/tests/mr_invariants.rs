@@ -210,6 +210,97 @@ fn prop_failure_injection_preserves_results_when_recoverable() {
     );
 }
 
+/// Tentpole invariant: the pipelined job DAG (optimistic look-ahead
+/// candidates, overlapped reduce lanes, batched shared-scan counting) must
+/// emit **byte-identical** frequent itemsets to the synchronous per-level
+/// driver, for arbitrary workloads, presets and batch depths.
+#[test]
+fn prop_pipelined_driver_equals_synchronous_driver() {
+    check(
+        "mr-pipelined-equivalence",
+        0xF1F0,
+        10,
+        |rng| {
+            let raw = gen_db(rng);
+            let min_sup_pct = rng.range_usize(3, 15) as u64;
+            let n_nodes = rng.range_usize(1, 4) as u64;
+            let split_tx = rng.range_usize(1, 40) as u64;
+            (raw, vec![min_sup_pct, n_nodes, split_tx])
+        },
+        |(raw, params)| {
+            let db = to_db(raw);
+            let cfg = mr_apriori::apriori::AprioriConfig {
+                min_support: params[0] as f64 / 100.0,
+                max_k: 5,
+            };
+            let cluster = ClusterConfig::fhssc(params[1] as usize);
+            let split_tx = params[2] as usize;
+            let sync = MrApriori::new(cluster.clone(), cfg.clone())
+                .with_split_tx(split_tx)
+                .mine(&db)
+                .map_err(|e| e.to_string())?;
+            for batch_levels in [1usize, 2] {
+                let piped = MrApriori::new(cluster.clone(), cfg.clone())
+                    .with_split_tx(split_tx)
+                    .with_pipeline(PipelineConfig {
+                        enabled: true,
+                        batch_levels,
+                        ..Default::default()
+                    })
+                    .mine(&db)
+                    .map_err(|e| e.to_string())?;
+                if piped.result.frequent != sync.result.frequent {
+                    return Err(format!(
+                        "pipelined (batch_levels={batch_levels}) diverged: {} vs {} itemsets",
+                        piped.result.frequent.len(),
+                        sync.result.frequent.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Shuffle invariants under overlapping jobs: a successor job's map wave
+/// running while the predecessor's reduce wave is in flight must not
+/// change either job's shuffle volume, output, or counters.
+#[test]
+fn overlapping_jobs_preserve_shuffle_invariants() {
+    let db = to_db(&{
+        let mut rng = Xoshiro256::seed_from_u64(0x0E27);
+        gen_db(&mut rng)
+    });
+    let cluster = ClusterConfig::fhssc(3);
+    let splits = plan_splits(&db, 8);
+    let mut dfs = Dfs::new(&cluster);
+    let blocks = dfs.write_splits(&splits).unwrap();
+    let runner = mr_apriori::mapreduce::JobRunner::new(&cluster, &dfs, &blocks);
+    let cfg = JobConfig { n_reducers: 3, ..Default::default() };
+
+    // Baseline: both jobs strictly sequential.
+    let (seq_a, stats_seq_a) = runner.run(&ItemCount, &db, &splits, &cfg).unwrap();
+    let (seq_b, stats_seq_b) = runner.run(&ItemCount, &db, &splits, &cfg).unwrap();
+    assert_eq!(seq_a, seq_b);
+
+    // Overlapped: B's map wave runs while A's reduce wave is in flight.
+    let mo_a = runner.map_stage(&ItemCount, &db, &splits, &cfg).unwrap();
+    let ((out_a, stats_a), (out_b, stats_b)) = std::thread::scope(|s| {
+        let lane_a = s.spawn(|| runner.reduce_stage(&ItemCount, mo_a, &cfg).unwrap());
+        let mo_b = runner.map_stage(&ItemCount, &db, &splits, &cfg).unwrap();
+        let b = runner.reduce_stage(&ItemCount, mo_b, &cfg).unwrap();
+        (lane_a.join().unwrap(), b)
+    });
+    assert_eq!(out_a, seq_a, "overlap changed job A's output");
+    assert_eq!(out_b, seq_a, "overlap changed job B's output");
+    assert_eq!(stats_a.shuffle_records, stats_seq_a.shuffle_records);
+    assert_eq!(stats_b.shuffle_records, stats_seq_b.shuffle_records);
+    assert_eq!(stats_a.maps_total, splits.len());
+    assert_eq!(stats_b.maps_total, splits.len());
+    assert_eq!(stats_a.output_records, out_a.len());
+    assert_eq!(stats_b.output_records, out_b.len());
+}
+
 #[test]
 fn prop_simulator_monotone_in_work() {
     use mr_apriori::mapreduce::{SimJobSpec, SimMapTask};
