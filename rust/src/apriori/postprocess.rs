@@ -11,21 +11,7 @@ use super::{Itemset, MiningResult};
 
 /// Is `a` a proper subset of `b` (both sorted)?
 fn proper_subset(a: &[u32], b: &[u32]) -> bool {
-    if a.len() >= b.len() {
-        return false;
-    }
-    let mut it = b.iter();
-    'outer: for want in a {
-        for have in it.by_ref() {
-            match have.cmp(want) {
-                std::cmp::Ordering::Equal => continue 'outer,
-                std::cmp::Ordering::Greater => return false,
-                std::cmp::Ordering::Less => {}
-            }
-        }
-        return false;
-    }
-    true
+    a.len() < b.len() && crate::data::is_subset(a, b)
 }
 
 /// Closed frequent itemsets: those with no proper superset of equal
@@ -167,5 +153,74 @@ mod tests {
         let r = MiningResult::default();
         assert!(closed_itemsets(&r).is_empty());
         assert!(maximal_itemsets(&r).is_empty());
+    }
+
+    /// Mine a seeded dense Quest workload for the property drivers.
+    fn mine_case(d: usize, seed: u64) -> MiningResult {
+        let db = QuestGenerator::new(QuestParams::dense(d).with_seed(seed)).generate();
+        ClassicalApriori::default().mine(&db, &AprioriConfig { min_support: 0.1, max_k: 4 })
+    }
+
+    #[test]
+    fn prop_maximal_subset_of_closed_subset_of_frequent() {
+        crate::util::proptest::check(
+            "maximal ⊆ closed ⊆ frequent",
+            0xC105ED,
+            10,
+            |rng| (rng.range_usize(30, 180), rng.next_u64()),
+            |&(d, seed)| {
+                let r = mine_case(d, seed);
+                let closed = closed_itemsets(&r);
+                let maximal = maximal_itemsets(&r);
+                for c in &closed {
+                    if !r.frequent.contains(c) {
+                        return Err(format!("closed {c:?} not frequent"));
+                    }
+                }
+                for m in &maximal {
+                    if !closed.contains(m) {
+                        return Err(format!("maximal {m:?} not closed"));
+                    }
+                }
+                if maximal.len() > closed.len() || closed.len() > r.frequent.len() {
+                    return Err("condensation sizes out of order".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_closed_supports_round_trip_against_full_result() {
+        crate::util::proptest::check(
+            "closed supports round-trip",
+            0x2042D,
+            10,
+            |rng| (rng.range_usize(30, 180), rng.next_u64()),
+            |&(d, seed)| {
+                let r = mine_case(d, seed);
+                let closed = closed_itemsets(&r);
+                // every closed itemset keeps its exact support from the
+                // full result...
+                for (is, sup) in &closed {
+                    if r.support_of(is) != Some(*sup) {
+                        return Err(format!("closed support drifted for {is:?}"));
+                    }
+                }
+                // ...and every frequent support is recoverable as the max
+                // over closed supersets (the closure property)
+                for (is, sup) in &r.frequent {
+                    let derived = closed
+                        .iter()
+                        .filter(|(c, _)| c.as_slice() == is.as_slice() || proper_subset(is, c))
+                        .map(|&(_, s)| s)
+                        .max();
+                    if derived != Some(*sup) {
+                        return Err(format!("closure failed for {is:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -31,7 +31,15 @@ pub fn generate_rules(result: &MiningResult, min_confidence: f64) -> Vec<Rule> {
     for (itemset, support) in result.frequent.iter().filter(|(is, _)| is.len() >= 2) {
         // enumerate non-empty proper subsets as antecedents
         let k = itemset.len();
-        for mask in 1..((1u32 << k) - 1) {
+        if k > 63 {
+            // u64 subset masks cover k <= 63; an itemset past that would
+            // enumerate > 2^63 rules, so no real mining result contains
+            // one. Skip it rather than overflow the shift (the u32 masks
+            // used previously broke at k = 32 already).
+            debug_assert!(k <= 63, "generate_rules: skipping itemset of len {k} > 63");
+            continue;
+        }
+        for mask in 1..((1u64 << k) - 1) {
             let antecedent: Itemset = (0..k)
                 .filter(|&i| mask & (1 << i) != 0)
                 .map(|i| itemset[i])
@@ -143,6 +151,31 @@ mod tests {
     fn empty_result_no_rules() {
         let empty = MiningResult::default();
         assert!(generate_rules(&empty, 0.5).is_empty());
+    }
+
+    #[test]
+    fn oversized_itemset_is_skipped_not_overflowed() {
+        // Regression: subset masks were u32, so a k >= 32 itemset hit
+        // `1u32 << 32`. With u64 masks, k <= 63 enumerates correctly and
+        // k > 63 is skipped (debug builds flag the impossible input).
+        let wide: Itemset = (0..70).collect();
+        let r = MiningResult {
+            frequent: vec![(wide, 3), (vec![100, 101], 2), (vec![100], 4), (vec![101], 2)],
+            levels: vec![],
+            n_transactions: 10,
+        };
+        if cfg!(debug_assertions) {
+            // the hook is left alone (it is process-global and tests run
+            // concurrently), so this prints one expected backtrace
+            let outcome = std::panic::catch_unwind(|| generate_rules(&r, 0.0));
+            assert!(outcome.is_err(), "debug build must flag a k > 63 itemset");
+        } else {
+            // release builds skip the oversized itemset but still rule
+            // the well-formed remainder
+            let rules = generate_rules(&r, 0.0);
+            assert_eq!(rules.len(), 2); // {100}=>{101} and {101}=>{100}
+            assert!(rules.iter().all(|rule| rule.antecedent.len() == 1));
+        }
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Experiment configuration: presets matching the paper's deployments and
-//! a minimal TOML-subset loader (`key = value` scalars + comments) so runs
-//! are reproducible from checked-in files. In-tree because the offline
-//! crate set has no toml/serde (DESIGN.md §Substitutions).
+//! a minimal TOML-subset loader (`key = value` scalars, `[section]`
+//! headers, comments) so runs are reproducible from checked-in files.
+//! In-tree because the offline crate set has no toml/serde (DESIGN.md
+//! §Substitutions).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -11,6 +12,7 @@ use crate::cluster::ClusterConfig;
 use crate::coordinator::PipelineConfig;
 use crate::engine::EngineKind;
 use crate::mapreduce::JobConfig;
+use crate::serve::ServeConfig;
 
 /// Deployment preset (paper §3.1 + fig 4/5 series).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -51,6 +53,8 @@ pub struct ExperimentConfig {
     pub job: JobConfig,
     /// Pipelined job-DAG execution (off = the paper's synchronous loop).
     pub pipeline: PipelineConfig,
+    /// Online rule-serving layer (`[serve]` section; `repro serve`).
+    pub serve: ServeConfig,
     /// Workload: transactions to generate (Quest T10.I4) when no input
     /// file is given.
     pub transactions: usize,
@@ -67,6 +71,7 @@ impl Default for ExperimentConfig {
             split_tx: 1000,
             job: JobConfig { n_reducers: 3, ..Default::default() },
             pipeline: PipelineConfig::default(),
+            serve: ServeConfig::default(),
             transactions: 10_000,
             seed: 0xACE5_2012,
         }
@@ -194,6 +199,41 @@ impl ExperimentConfig {
                 "seed" => {
                     cfg.seed = value.parse().map_err(|_| bad("want integer"))?;
                 }
+                "serve.workers" => {
+                    cfg.serve.workers = value.parse().map_err(|_| bad("want integer"))?;
+                    if cfg.serve.workers == 0 {
+                        return Err(bad("must be >= 1"));
+                    }
+                }
+                "serve.queue_depth" => {
+                    cfg.serve.queue_depth = value.parse().map_err(|_| bad("want integer"))?;
+                    if cfg.serve.queue_depth == 0 {
+                        return Err(bad("must be >= 1"));
+                    }
+                }
+                "serve.top_k" => {
+                    cfg.serve.top_k = value.parse().map_err(|_| bad("want integer"))?;
+                    if cfg.serve.top_k == 0 {
+                        return Err(bad("must be >= 1"));
+                    }
+                }
+                "serve.min_confidence" => {
+                    let v: f64 = value.parse().map_err(|_| bad("want float"))?;
+                    if !(0.0..=1.0).contains(&v) {
+                        return Err(bad("must be in [0, 1]"));
+                    }
+                    cfg.serve.min_confidence = v;
+                }
+                "serve.refresh_tx" => {
+                    cfg.serve.refresh_tx = value.parse().map_err(|_| bad("want integer"))?;
+                    if cfg.serve.refresh_tx == 0 {
+                        return Err(bad("must be >= 1"));
+                    }
+                }
+                "serve.refresh_batches" => {
+                    cfg.serve.refresh_batches =
+                        value.parse().map_err(|_| bad("want integer"))?;
+                }
                 other => {
                     return Err(ConfigError::BadValue {
                         key: other.to_string(),
@@ -206,12 +246,26 @@ impl ExperimentConfig {
     }
 }
 
-/// `key = value` lines; `#` comments; quoted or bare strings.
+/// `key = value` lines; `#` comments; quoted or bare strings; `[name]`
+/// section headers prefix subsequent keys as `name.key` (TOML semantics
+/// for the flat one-level tables this config uses).
 fn parse_kv(text: &str) -> Result<BTreeMap<String, String>, ConfigError> {
     let mut out = BTreeMap::new();
+    let mut section = String::new();
     for (i, raw) in text.lines().enumerate() {
         let line = raw.split('#').next().unwrap_or("").trim();
         if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            let name = name.trim();
+            if name.is_empty() || name.contains(['[', ']', '=']) {
+                return Err(ConfigError::Parse {
+                    line: i + 1,
+                    msg: format!("bad section header '{line}'"),
+                });
+            }
+            section = format!("{name}.");
             continue;
         }
         let Some((k, v)) = line.split_once('=') else {
@@ -231,7 +285,7 @@ fn parse_kv(text: &str) -> Result<BTreeMap<String, String>, ConfigError> {
                 msg: "empty key or value".into(),
             });
         }
-        out.insert(key, value);
+        out.insert(format!("{section}{key}"), value);
     }
     Ok(out)
 }
@@ -297,6 +351,53 @@ mod tests {
         assert!(ExperimentConfig::parse("max_blowup = nan").is_err());
         assert!(ExperimentConfig::parse("max_blowup = inf").is_err());
         assert!(ExperimentConfig::parse("pipeline = maybe").is_err());
+    }
+
+    #[test]
+    fn serve_section_parses_and_validates() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+            nodes = 4
+            [serve]
+            workers = 8
+            queue_depth = 256
+            top_k = 3
+            min_confidence = 0.75
+            refresh_tx = 250
+            refresh_batches = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.nodes, 4);
+        assert_eq!(cfg.serve.workers, 8);
+        assert_eq!(cfg.serve.queue_depth, 256);
+        assert_eq!(cfg.serve.top_k, 3);
+        assert_eq!(cfg.serve.min_confidence, 0.75);
+        assert_eq!(cfg.serve.refresh_tx, 250);
+        assert_eq!(cfg.serve.refresh_batches, 2);
+        // defaults hold when the section is absent
+        let d = ExperimentConfig::default().serve;
+        assert_eq!((d.workers, d.queue_depth, d.refresh_batches), (2, 64, 0));
+        // validations
+        assert!(ExperimentConfig::parse("[serve]\nworkers = 0").is_err());
+        assert!(ExperimentConfig::parse("[serve]\nqueue_depth = 0").is_err());
+        assert!(ExperimentConfig::parse("[serve]\ntop_k = 0").is_err());
+        assert!(ExperimentConfig::parse("[serve]\nmin_confidence = 1.5").is_err());
+        assert!(ExperimentConfig::parse("[serve]\nrefresh_tx = 0").is_err());
+        assert!(ExperimentConfig::parse("[serve]\nrefresh_batches = 0").is_ok());
+    }
+
+    #[test]
+    fn section_headers_prefix_and_reject_malformed() {
+        // a key inside an unknown section fails as an unknown (prefixed) key
+        let err = ExperimentConfig::parse("[mesh]\nx = 1").unwrap_err();
+        assert!(matches!(err, ConfigError::BadValue { key, .. } if key == "mesh.x"));
+        // header with trailing comment is fine
+        assert!(ExperimentConfig::parse("[serve] # section\nworkers = 2").is_ok());
+        assert!(ExperimentConfig::parse("[]\nworkers = 2").is_err());
+        assert!(ExperimentConfig::parse("[a=b]\nx = 1").is_err());
+        // an empty section is a no-op
+        assert!(ExperimentConfig::parse("[serve]").is_ok());
     }
 
     #[test]

@@ -11,6 +11,11 @@
 //!   cost summary [`simulate`] uses to predict the same workload's makespan
 //!   on a different cluster shape without re-mining.
 //!
+//! Besides the CLI and the benches, the serving layer's refresher
+//! (`serve::refresh`) drives this same driver from a background thread:
+//! each micro-batch re-mines the grown database through [`MrApriori::mine`]
+//! (either schedule) while the previous snapshot keeps serving reads.
+//!
 //! Two execution modes share the loop:
 //!
 //! * **synchronous** (the paper's baseline): one counting job per level,

@@ -14,6 +14,24 @@ use std::collections::BTreeSet;
 /// items are SKUs; we re-encode to dense u32 ids at load time.
 pub type ItemId = u32;
 
+/// Sorted-merge containment: does sorted `b` contain every item of sorted
+/// `a`? The shared primitive behind [`Transaction::contains_all`], the
+/// closed/maximal post-processing and the serving rule index.
+pub fn is_subset(a: &[ItemId], b: &[ItemId]) -> bool {
+    let mut it = b.iter();
+    'outer: for want in a {
+        for have in it.by_ref() {
+            match have.cmp(want) {
+                std::cmp::Ordering::Equal => continue 'outer,
+                std::cmp::Ordering::Greater => return false,
+                std::cmp::Ordering::Less => {}
+            }
+        }
+        return false;
+    }
+    true
+}
+
 /// One transaction: a sorted, deduplicated set of item ids.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Transaction {
@@ -38,19 +56,7 @@ impl Transaction {
     /// Sorted-merge containment test: does this transaction contain every
     /// item of `subset` (which must be sorted ascending)?
     pub fn contains_all(&self, subset: &[ItemId]) -> bool {
-        let mut it = self.items.iter();
-        'outer: for want in subset {
-            for have in it.by_ref() {
-                if have == want {
-                    continue 'outer;
-                }
-                if have > want {
-                    return false;
-                }
-            }
-            return false;
-        }
-        true
+        is_subset(subset, &self.items)
     }
 }
 
@@ -100,6 +106,18 @@ impl TransactionDb {
             .iter()
             .filter(|t| t.contains_all(itemset))
             .count()
+    }
+
+    /// Append a delta of transactions in place (micro-batch ingest for
+    /// the serving layer), growing the item universe if the delta
+    /// introduces ids beyond it.
+    pub fn append(&mut self, delta: impl IntoIterator<Item = Transaction>) {
+        for t in delta {
+            if let Some(&max) = t.items.last() {
+                self.n_items = self.n_items.max(max as usize + 1);
+            }
+            self.transactions.push(t);
+        }
     }
 
     /// Re-encode keeping only `keep` items (sorted), remapping them to
@@ -197,6 +215,20 @@ mod tests {
         // support is preserved under projection
         assert_eq!(p.support(&[0]), db.support(&[2]));
         assert_eq!(p.support(&[0, 1]), db.support(&[2, 4]));
+    }
+
+    #[test]
+    fn append_grows_db_and_item_universe() {
+        let mut db = TransactionDb::new(vec![tx(&[0, 1])]);
+        assert_eq!((db.len(), db.n_items), (1, 2));
+        db.append([tx(&[1, 4]), tx(&[0])]);
+        assert_eq!((db.len(), db.n_items), (3, 5));
+        assert_eq!(db.support(&[1]), 2);
+        db.append(std::iter::empty());
+        assert_eq!((db.len(), db.n_items), (3, 5));
+        // empty transactions don't shrink the universe
+        db.append([tx(&[])]);
+        assert_eq!((db.len(), db.n_items), (4, 5));
     }
 
     #[test]

@@ -48,6 +48,18 @@ impl std::str::FromStr for EngineKind {
     }
 }
 
+/// The CLI/config name — round-trips through [`EngineKind::from_str`].
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::HashTree => "hash-tree",
+            Self::Trie => "trie",
+            Self::Naive => "naive",
+            Self::Tensor => "tensor",
+        })
+    }
+}
+
 #[derive(Debug)]
 pub enum EngineError {
     Tensor(crate::runtime::service::ServiceError),
@@ -548,5 +560,17 @@ mod tests {
         assert_eq!("naive".parse::<EngineKind>().unwrap(), EngineKind::Naive);
         assert_eq!("tensor".parse::<EngineKind>().unwrap(), EngineKind::Tensor);
         assert!("x".parse::<EngineKind>().is_err());
+    }
+
+    #[test]
+    fn kind_display_round_trips_through_parse() {
+        for e in [
+            EngineKind::HashTree,
+            EngineKind::Trie,
+            EngineKind::Naive,
+            EngineKind::Tensor,
+        ] {
+            assert_eq!(e.to_string().parse::<EngineKind>().unwrap(), e);
+        }
     }
 }

@@ -13,6 +13,10 @@
 //!   text artifacts.
 //! * **runtime** — a PJRT CPU client that loads the artifacts and serves
 //!   count requests to map tasks; python never runs on the request path.
+//! * **serve** — the online consumption layer: immutable rule-index
+//!   snapshots over the mined output, atomic hot-swap, a worker-pool
+//!   query server with admission control, and micro-batch background
+//!   refresh that re-mines without pausing reads.
 //!
 //! See `DESIGN.md` for the module inventory and the experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
@@ -28,6 +32,7 @@ pub mod mapreduce;
 pub mod metrics;
 pub mod perfmodel;
 pub mod runtime;
+pub mod serve;
 pub mod simnet;
 pub mod util;
 
@@ -40,7 +45,7 @@ pub mod prelude {
         intersection::IntersectionApriori,
         record_filter::RecordFilterApriori,
         postprocess::{closed_itemsets, maximal_itemsets},
-        rules::{format_rule, generate_rules},
+        rules::{format_rule, generate_rules, Rule},
         son::{SonApriori, SonReport},
         AprioriConfig, Itemset, MiningResult,
     };
@@ -56,6 +61,14 @@ pub mod prelude {
     pub use crate::engine::{build_engine, EngineKind, SupportEngine};
     pub use crate::mapreduce::{JobConfig, JobStats, SimReport, Simulator};
     pub use crate::metrics::bench::{BenchTable, Series};
+    pub use crate::metrics::histogram::{HistogramSnapshot, LatencyHistogram};
     pub use crate::perfmodel::{EtaModel, KernelRoofline};
     pub use crate::runtime::{ArtifactManifest, TensorService, TensorServiceHandle};
+    pub use crate::serve::{
+        index::{reference_recommend, render_lines, RuleIndex},
+        refresh::{synth_baskets, synth_delta, Refresher, RefreshStats},
+        server::{QueryResponse, RuleServer, ServeError, ServeOptions, ServerStats},
+        snapshot::SnapshotCell,
+        ServeConfig,
+    };
 }

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   generate  — emit a Quest-style synthetic dataset as `.dat`
 //!   mine      — run Map/Reduce Apriori on a dataset (real execution)
+//!   rules     — mine, then print the association rules
+//!   serve     — mine, then run the online rule server (one-shot load)
 //!   simulate  — replay a workload on a simulated cluster (fig-4/5 method)
 //!   bench     — regenerate a paper figure (fig4 | fig5 | eta)
 //!   report    — print artifact + kernel-roofline info
@@ -13,6 +15,8 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use std::sync::Arc;
+use std::time::Instant;
 
 use mr_apriori::prelude::*;
 use mr_apriori::{apriori, coordinator, data, engine, perfmodel, runtime};
@@ -33,6 +37,8 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "generate" => cmd_generate(&flags),
         "mine" => cmd_mine(&flags),
+        "rules" => cmd_rules(&flags),
+        "serve" => cmd_serve(&flags),
         "simulate" => cmd_simulate(&flags),
         "bench" => cmd_bench(&flags),
         "report" => cmd_report(&flags),
@@ -60,6 +66,10 @@ USAGE:
              [--min-support F] [--max-k K] [--engine hash-tree|trie|naive|tensor]
              [--split-tx N] [--transactions N | --input FILE] [--rules CONF]
              [--pipeline true|false] [--batch-levels 1|2]
+  repro rules  <mine flags> [--min-confidence F] [--top N]
+  repro serve  <mine flags> [--min-confidence F] [--top K] [--workers N]
+               [--queue-depth N] [--queries N] [--check true|false]
+               [--refresh-batches B] [--refresh-tx N]
   repro simulate [--config FILE] [--preset P] [--nodes N] [--transactions N]
                  [--pipeline true|false]
   repro bench --figure fig4|fig5|eta
@@ -142,6 +152,39 @@ fn experiment_config(flags: &Flags) -> Result<ExperimentConfig, String> {
         }
         cfg.pipeline.batch_levels = b;
     }
+    if let Some(w) = flags.parse_opt::<usize>("workers")? {
+        if w == 0 {
+            return Err("--workers: must be >= 1".into());
+        }
+        cfg.serve.workers = w;
+    }
+    if let Some(d) = flags.parse_opt::<usize>("queue-depth")? {
+        if d == 0 {
+            return Err("--queue-depth: must be >= 1".into());
+        }
+        cfg.serve.queue_depth = d;
+    }
+    if let Some(k) = flags.parse_opt::<usize>("top")? {
+        if k == 0 {
+            return Err("--top: must be >= 1".into());
+        }
+        cfg.serve.top_k = k;
+    }
+    if let Some(c) = flags.parse_opt::<f64>("min-confidence")? {
+        if !(0.0..=1.0).contains(&c) {
+            return Err("--min-confidence: must be in [0, 1]".into());
+        }
+        cfg.serve.min_confidence = c;
+    }
+    if let Some(n) = flags.parse_opt::<usize>("refresh-tx")? {
+        if n == 0 {
+            return Err("--refresh-tx: must be >= 1".into());
+        }
+        cfg.serve.refresh_tx = n;
+    }
+    if let Some(b) = flags.parse_opt::<usize>("refresh-batches")? {
+        cfg.serve.refresh_batches = b;
+    }
     Ok(cfg)
 }
 
@@ -166,6 +209,16 @@ fn build_engine_for(cfg: &ExperimentConfig) -> Result<Box<dyn SupportEngine>, St
     } else {
         Ok(engine::build_engine(cfg.engine, None))
     }
+}
+
+/// Assemble the Map/Reduce driver a config describes (mine/rules/serve
+/// all run the same mining stack underneath).
+fn build_driver(cfg: &ExperimentConfig) -> Result<MrApriori, String> {
+    Ok(MrApriori::new(cfg.cluster(), cfg.apriori.clone())
+        .with_engine(build_engine_for(cfg)?)
+        .with_job(cfg.job.clone())
+        .with_pipeline(cfg.pipeline.clone())
+        .with_split_tx(cfg.split_tx))
 }
 
 fn cmd_generate(flags: &Flags) -> Result<(), String> {
@@ -196,13 +249,13 @@ fn cmd_generate(flags: &Flags) -> Result<(), String> {
 fn cmd_mine(flags: &Flags) -> Result<(), String> {
     let cfg = experiment_config(flags)?;
     let db = load_or_generate(flags, &cfg)?;
-    let engine = build_engine_for(&cfg)?;
+    let driver = build_driver(&cfg)?;
     println!(
         "mining {} transactions on {:?}/{} nodes (engine={}, min_support={}, schedule={})",
         db.len(),
         cfg.preset,
         cfg.cluster().n_nodes(),
-        engine.name(),
+        cfg.engine,
         cfg.apriori.min_support,
         if cfg.pipeline.enabled {
             "pipelined"
@@ -210,11 +263,6 @@ fn cmd_mine(flags: &Flags) -> Result<(), String> {
             "synchronous"
         },
     );
-    let driver = MrApriori::new(cfg.cluster(), cfg.apriori.clone())
-        .with_engine(engine)
-        .with_job(cfg.job.clone())
-        .with_pipeline(cfg.pipeline.clone())
-        .with_split_tx(cfg.split_tx);
     let report = driver.mine(&db).map_err(|e| e.to_string())?;
 
     println!("\nlevel | candidates | frequent | wall(s)");
@@ -246,6 +294,132 @@ fn cmd_mine(flags: &Flags) -> Result<(), String> {
         if rules.len() > 20 {
             println!("  ... ({} more)", rules.len() - 20);
         }
+    }
+    Ok(())
+}
+
+fn cmd_rules(flags: &Flags) -> Result<(), String> {
+    let cfg = experiment_config(flags)?;
+    let top: usize = flags.parse_opt("top")?.unwrap_or(50);
+    let db = load_or_generate(flags, &cfg)?;
+    let driver = build_driver(&cfg)?;
+    let report = driver.mine(&db).map_err(|e| e.to_string())?;
+    let conf = cfg.serve.min_confidence;
+    let rules = generate_rules(&report.result, conf);
+    println!(
+        "{} association rules at confidence >= {conf} ({} frequent itemsets, {} tx):",
+        rules.len(),
+        report.result.frequent.len(),
+        db.len(),
+    );
+    for r in rules.iter().take(top) {
+        println!("{}", format_rule(r));
+    }
+    if rules.len() > top {
+        println!("... ({} more; raise --top to see them)", rules.len() - top);
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> Result<(), String> {
+    let cfg = experiment_config(flags)?;
+    let queries: usize = flags.parse_opt("queries")?.unwrap_or(200);
+    let check: bool = flags.parse_opt("check")?.unwrap_or(false);
+    let mut db = load_or_generate(flags, &cfg)?;
+    let driver = build_driver(&cfg)?;
+    println!("mining {} transactions for the serving snapshot ...", db.len());
+    let report = driver.mine(&db).map_err(|e| e.to_string())?;
+    let s = cfg.serve.clone();
+    let index = RuleIndex::build(&report.result, s.min_confidence);
+    println!(
+        "snapshot gen 0: {} itemsets, {} rules at confidence >= {}",
+        index.n_itemsets(),
+        index.n_rules(),
+        s.min_confidence,
+    );
+    let direct = check.then(|| generate_rules(&report.result, s.min_confidence));
+
+    let singles: Vec<u32> = report.result.level(1).map(|(is, _)| is[0]).collect();
+    if singles.is_empty() {
+        return Err("nothing frequent to query; lower --min-support".into());
+    }
+    let baskets = synth_baskets(&singles, queries, cfg.seed ^ 0x5E21_E5E2);
+
+    let cell = Arc::new(SnapshotCell::new(Arc::new(index)));
+    let server = RuleServer::start(
+        Arc::clone(&cell),
+        ServeOptions { workers: s.workers, queue_depth: s.queue_depth },
+    );
+
+    // Optional concurrent micro-batch refresh (the db moves to that
+    // thread; queries keep hitting whatever snapshot is current).
+    let refresh_handle = if s.refresh_batches > 0 {
+        let refresher = Refresher::new(build_driver(&cfg)?, s.min_confidence);
+        let batches: Vec<Vec<data::Transaction>> = (0..s.refresh_batches)
+            .map(|b| synth_delta(s.refresh_tx, db.n_items, cfg.seed ^ (b as u64 + 1)))
+            .collect();
+        let cell = Arc::clone(&cell);
+        let mut moved_db = std::mem::take(&mut db);
+        Some(std::thread::spawn(move || {
+            refresher.run_micro_batches(&mut moved_db, batches, &cell)
+        }))
+    } else {
+        None
+    };
+
+    let t0 = Instant::now();
+    let mut checked = 0u64;
+    for basket in &baskets {
+        match server.query(basket, s.top_k) {
+            Ok(resp) => {
+                if let Some(direct) = &direct {
+                    if resp.generation == 0 {
+                        let want = render_lines(&reference_recommend(direct, basket, s.top_k));
+                        if resp.render() != want {
+                            return Err(format!("differential mismatch for basket {basket:?}"));
+                        }
+                        checked += 1;
+                    }
+                }
+            }
+            // shedding is load behaviour, not a failure (counted below)
+            Err(ServeError::QueueFull) => {}
+            Err(e) => return Err(e.to_string()),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    if let Some(handle) = refresh_handle {
+        let refresh_stats = handle
+            .join()
+            .map_err(|_| "refresh thread panicked".to_string())?
+            .map_err(|e| e.to_string())?;
+        for st in &refresh_stats {
+            println!(
+                "refresh gen {}: +{} tx -> {} tx, {} itemsets, {} rules \
+                 (mine {:.3}s, build {:.3}s)",
+                st.generation,
+                st.delta_tx,
+                st.total_tx,
+                st.n_frequent,
+                st.n_rules,
+                st.mine_secs,
+                st.build_secs,
+            );
+        }
+    }
+
+    let stats = server.shutdown();
+    let (p50, p95, p99) = stats.latency.p50_p95_p99();
+    println!(
+        "\nserved {} of {queries} queries in {wall:.3}s ({:.0} QPS closed-loop), shed {}",
+        stats.served,
+        stats.served as f64 / wall.max(1e-9),
+        stats.rejected,
+    );
+    println!("latency p50 {p50:?} | p95 {p95:?} | p99 {p99:?}");
+    if check {
+        println!("differential check: {checked} answers byte-identical to direct generate_rules");
     }
     Ok(())
 }
@@ -373,6 +547,32 @@ mod tests {
     }
 
     #[test]
+    fn serve_flags_apply_and_validate() {
+        let f = flags(&[
+            "--workers", "6", "--queue-depth", "32", "--top", "7",
+            "--min-confidence", "0.8", "--refresh-tx", "100", "--refresh-batches", "3",
+        ])
+        .unwrap();
+        let cfg = experiment_config(&f).unwrap();
+        assert_eq!(cfg.serve.workers, 6);
+        assert_eq!(cfg.serve.queue_depth, 32);
+        assert_eq!(cfg.serve.top_k, 7);
+        assert_eq!(cfg.serve.min_confidence, 0.8);
+        assert_eq!(cfg.serve.refresh_tx, 100);
+        assert_eq!(cfg.serve.refresh_batches, 3);
+        for bad in [
+            ["--workers", "0"],
+            ["--queue-depth", "0"],
+            ["--top", "0"],
+            ["--min-confidence", "1.5"],
+            ["--refresh-tx", "0"],
+        ] {
+            let f = flags(&bad).unwrap();
+            assert!(experiment_config(&f).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
     fn experiment_config_rejects_bad_values() {
         let f = flags(&["--engine", "gpu"]).unwrap();
         assert!(experiment_config(&f).is_err());
@@ -382,7 +582,12 @@ mod tests {
 
     #[test]
     fn shipped_config_files_parse() {
-        for name in ["fig5_fhssc3.toml", "tensor_smoke.toml", "standalone_baseline.toml"] {
+        for name in [
+            "fig5_fhssc3.toml",
+            "tensor_smoke.toml",
+            "standalone_baseline.toml",
+            "serve_smoke.toml",
+        ] {
             let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
                 .join("configs")
                 .join(name);

@@ -1,0 +1,211 @@
+//! Lock-free log-linear latency histogram — the serving layer's tail
+//! instrument (p50/p95/p99 over request latencies).
+//!
+//! Values (nanoseconds) are bucketed into power-of-two octaves, each
+//! subdivided into 4 linear sub-buckets, HDR-style: 252 fixed buckets
+//! cover the full `u64` range with <= 25% relative error per bucket.
+//! Recording is a single relaxed atomic increment, so every server worker
+//! shares one histogram with no lock on the request path. Quantiles are
+//! computed from an immutable [`HistogramSnapshot`]; snapshots subtract
+//! (`diff`) so a closed-loop bench can report per-phase tails from one
+//! continuously recording histogram. In-tree because the offline crate
+//! set has no hdrhistogram (DESIGN.md §Substitutions).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Sub-buckets per octave (2 bits of mantissa below the leading bit).
+const SUBS: usize = 4;
+/// Octaves 2..=63 get `SUBS` buckets each; values < `SUBS` are exact.
+const BUCKETS: usize = 63 * SUBS;
+
+/// Bucket index for a nanosecond value. Monotone in `n`.
+fn bucket_of(n: u64) -> usize {
+    if n < SUBS as u64 {
+        return n as usize;
+    }
+    let octave = 63 - n.leading_zeros() as usize; // >= 2
+    let sub = ((n >> (octave - 2)) & 0b11) as usize;
+    (octave - 1) * SUBS + sub
+}
+
+/// Inclusive upper bound of a bucket — quantiles report this value, so
+/// the coarsening never *under*-states a tail.
+fn bucket_upper(b: usize) -> u64 {
+    if b < SUBS {
+        return b as u64;
+    }
+    let octave = b / SUBS + 1;
+    let sub = (b % SUBS) as u64;
+    let width = 1u64 << (octave - 2);
+    // The true bound is <= u64::MAX, but the top bucket's intermediate
+    // sum is exactly 2^64; wrapping arithmetic lands on the right value.
+    (1u64 << octave)
+        .wrapping_add((sub + 1) * width)
+        .wrapping_sub(1)
+}
+
+/// Concurrent recording side. `record` is wait-free; readers take a
+/// [`snapshot`](Self::snapshot) and query that.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Record one latency observation.
+    pub fn record(&self, latency: Duration) {
+        let nanos = latency.as_nanos().min(u64::MAX as u128) as u64;
+        self.buckets[bucket_of(nanos)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A point-in-time copy of the bucket counts.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Immutable bucket counts; all quantile math happens here.
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    buckets: [u64; BUCKETS],
+}
+
+impl HistogramSnapshot {
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Observations recorded since `earlier` (per-bucket saturating
+    /// subtraction) — the per-phase view of a shared histogram.
+    pub fn diff(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].saturating_sub(earlier.buckets[i])
+            }),
+        }
+    }
+
+    /// The `q`-quantile (`q` clamped to [0, 1]) as a duration, reported
+    /// at the covering bucket's upper bound. Empty snapshot -> zero.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return Duration::from_nanos(bucket_upper(b));
+            }
+        }
+        Duration::from_nanos(bucket_upper(BUCKETS - 1))
+    }
+
+    /// The standard serving triple.
+    pub fn p50_p95_p99(&self) -> (Duration, Duration, Duration) {
+        (self.quantile(0.50), self.quantile(0.95), self.quantile(0.99))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotone_and_bounded() {
+        let mut prev = 0;
+        for n in (0..4096u64).chain([1 << 20, 1 << 40, u64::MAX / 2, u64::MAX]) {
+            let b = bucket_of(n);
+            assert!(b >= prev, "bucket_of not monotone at {n}");
+            assert!(b < BUCKETS);
+            assert!(bucket_upper(b) >= n, "upper bound below value at {n}");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn bucket_relative_error_bounded() {
+        for n in [10u64, 100, 1_000, 50_000, 1_000_000, 123_456_789] {
+            let upper = bucket_upper(bucket_of(n));
+            assert!(upper >= n);
+            assert!(
+                (upper - n) as f64 <= 0.25 * n as f64 + 1.0,
+                "bucket too coarse at {n}: upper {upper}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantiles_of_uniform_stream() {
+        let h = LatencyHistogram::new();
+        for us in 1..=1000u64 {
+            h.record(Duration::from_micros(us));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 1000);
+        let (p50, p95, p99) = s.p50_p95_p99();
+        assert!(p50 >= Duration::from_micros(500) && p50 <= Duration::from_micros(625));
+        assert!(p95 >= Duration::from_micros(950) && p95 <= Duration::from_micros(1188));
+        assert!(p99 >= p95 && p95 >= p50);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = LatencyHistogram::new().snapshot();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn diff_isolates_a_phase() {
+        let h = LatencyHistogram::new();
+        for _ in 0..100 {
+            h.record(Duration::from_micros(10));
+        }
+        let mid = h.snapshot();
+        for _ in 0..100 {
+            h.record(Duration::from_millis(10));
+        }
+        let phase2 = h.snapshot().diff(&mid);
+        assert_eq!(phase2.count(), 100);
+        // phase 2 saw only the slow requests
+        assert!(phase2.quantile(0.5) >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(Duration::from_nanos(100 + t * 1000 + i));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.snapshot().count(), 4000);
+    }
+}

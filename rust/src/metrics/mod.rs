@@ -1,8 +1,9 @@
-//! Metrics and reporting: wall-clock timers, counters, and the bench-table
+//! Metrics and reporting: wall-clock timers, counters, the bench-table
 //! emitter that prints paper-style rows (markdown + CSV) for every figure
-//! reproduction.
+//! reproduction, and the serving layer's tail-latency histogram.
 
 pub mod bench;
+pub mod histogram;
 
 use std::time::Instant;
 

@@ -1,0 +1,319 @@
+//! The immutable rule snapshot: everything a query needs, precomputed.
+//!
+//! [`RuleIndex::build`] runs [`generate_rules`] once over a
+//! [`MiningResult`] and freezes the output into two lookup structures:
+//!
+//! * an itemset -> support hash map (O(1) vs the `MiningResult`'s linear
+//!   `support_of` scan);
+//! * an antecedent-keyed rule index, so a basket query enumerates the
+//!   basket's subsets (bounded by the longest antecedent actually mined)
+//!   and resolves each with one hash probe — sublinear in the number of
+//!   rules, which is what dominates at serving min-confidence levels.
+//!
+//! The index preserves `generate_rules`' deterministic global order
+//! (confidence desc, then antecedent, then consequent), so
+//! [`RuleIndex::recommend`] returns byte-identical answers to the direct
+//! [`reference_recommend`] path — the differential property the serving
+//! tests and `benches/ablation_serving.rs` pin.
+
+use std::collections::HashMap;
+
+use crate::apriori::rules::{format_rule, generate_rules, Rule};
+use crate::apriori::{Itemset, MiningResult};
+use crate::data::{is_subset, ItemId};
+
+/// Basket sizes up to this use indexed subset enumeration (at most
+/// 2^16 hash probes, further pruned by antecedent length); larger
+/// baskets fall back to a full rule scan with identical output.
+const MAX_INDEXED_BASKET: usize = 16;
+
+/// Are sorted `a` and sorted `b` disjoint?
+fn is_disjoint(a: &[ItemId], b: &[ItemId]) -> bool {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Equal => return false,
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+        }
+    }
+    true
+}
+
+/// Does rule `r` apply to `basket`? The serving semantics: the user holds
+/// every antecedent item and none of the consequent items (recommending
+/// something already in the basket is useless).
+fn applies(r: &Rule, basket: &[ItemId]) -> bool {
+    is_subset(&r.antecedent, basket) && is_disjoint(&r.consequent, basket)
+}
+
+/// Sort + dedup a basket into the canonical itemset form.
+fn normalize_basket(basket: &[ItemId]) -> Itemset {
+    let mut b = basket.to_vec();
+    b.sort_unstable();
+    b.dedup();
+    b
+}
+
+/// An immutable, query-ready snapshot of one mining generation.
+#[derive(Debug)]
+pub struct RuleIndex {
+    /// All rules meeting `min_confidence`, in `generate_rules` order.
+    rules: Vec<Rule>,
+    /// Itemset -> absolute support, for every frequent itemset.
+    support: HashMap<Itemset, u64>,
+    /// Antecedent -> indices into `rules` (ascending, i.e. global order).
+    by_antecedent: HashMap<Itemset, Vec<u32>>,
+    /// Longest antecedent present — the subset-enumeration prune bound.
+    max_antecedent_len: usize,
+    /// |D| of the generation this snapshot was mined from.
+    pub n_transactions: usize,
+    /// The confidence floor the snapshot was built with.
+    pub min_confidence: f64,
+}
+
+impl RuleIndex {
+    /// Freeze a mining result into a serving snapshot.
+    pub fn build(result: &MiningResult, min_confidence: f64) -> Self {
+        let rules = generate_rules(result, min_confidence);
+        let mut by_antecedent: HashMap<Itemset, Vec<u32>> = HashMap::new();
+        let mut max_antecedent_len = 0;
+        for (i, r) in rules.iter().enumerate() {
+            max_antecedent_len = max_antecedent_len.max(r.antecedent.len());
+            by_antecedent.entry(r.antecedent.clone()).or_default().push(i as u32);
+        }
+        let mut support = HashMap::with_capacity(result.frequent.len());
+        for (is, s) in &result.frequent {
+            support.insert(is.clone(), *s);
+        }
+        Self {
+            support,
+            rules,
+            by_antecedent,
+            max_antecedent_len,
+            n_transactions: result.n_transactions,
+            min_confidence,
+        }
+    }
+
+    pub fn n_rules(&self) -> usize {
+        self.rules.len()
+    }
+
+    pub fn n_itemsets(&self) -> usize {
+        self.support.len()
+    }
+
+    /// O(1) support lookup (the `MiningResult` scan, precomputed).
+    pub fn support_of(&self, itemset: &[ItemId]) -> Option<u64> {
+        self.support.get(itemset).copied()
+    }
+
+    /// Top-k recommendations for a basket: rules whose antecedent the
+    /// basket covers and whose consequent it lacks, in the global
+    /// (confidence desc, antecedent, consequent) order, truncated to `k`.
+    /// Identical to [`reference_recommend`] over the same generation.
+    pub fn recommend(&self, basket: &[ItemId], top_k: usize) -> Vec<Rule> {
+        let basket = normalize_basket(basket);
+        if basket.is_empty() || top_k == 0 {
+            return Vec::new();
+        }
+        if basket.len() > MAX_INDEXED_BASKET {
+            // Rare oversized basket: full scan, same order, same output.
+            return self
+                .rules
+                .iter()
+                .filter(|r| applies(r, &basket))
+                .take(top_k)
+                .cloned()
+                .collect();
+        }
+        // Enumerate only the basket subsets a mined antecedent can match
+        // (sizes 1..=max_antecedent_len), one hash probe each. Gosper's
+        // hack walks the masks of each fixed popcount directly instead of
+        // filtering all 2^m masks.
+        let m = basket.len();
+        let limit = 1u32 << m;
+        let mut hits: Vec<u32> = Vec::new();
+        for s in 1..=self.max_antecedent_len.min(m) {
+            let mut mask = (1u32 << s) - 1;
+            while mask < limit {
+                let subset: Itemset = (0..m)
+                    .filter(|&i| mask & (1 << i) != 0)
+                    .map(|i| basket[i])
+                    .collect();
+                if let Some(ids) = self.by_antecedent.get(&subset) {
+                    hits.extend_from_slice(ids);
+                }
+                // next mask with the same popcount, in increasing order
+                let c = mask & mask.wrapping_neg();
+                let r = mask + c;
+                mask = (((r ^ mask) >> 2) / c) | r;
+            }
+        }
+        // Ascending rule ids == the deterministic global rule order.
+        hits.sort_unstable();
+        hits.iter()
+            .map(|&i| &self.rules[i as usize])
+            .filter(|r| is_disjoint(&r.consequent, &basket))
+            .take(top_k)
+            .cloned()
+            .collect()
+    }
+}
+
+/// The direct (index-free) answer: filter `generate_rules` output for the
+/// basket. This is the serving layer's correctness oracle — `recommend`
+/// must match it byte-for-byte after [`render_lines`].
+pub fn reference_recommend(rules: &[Rule], basket: &[ItemId], top_k: usize) -> Vec<Rule> {
+    let basket = normalize_basket(basket);
+    if basket.is_empty() || top_k == 0 {
+        return Vec::new();
+    }
+    rules
+        .iter()
+        .filter(|r| applies(r, &basket))
+        .take(top_k)
+        .cloned()
+        .collect()
+}
+
+/// Canonical wire rendering of an answer: one `format_rule` line per
+/// recommendation. Byte equality of two renders is the differential
+/// check's definition of "identical answers".
+pub fn render_lines(rules: &[Rule]) -> String {
+    rules.iter().map(format_rule).collect::<Vec<_>>().join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::classical::{tests::textbook_db, ClassicalApriori};
+    use crate::apriori::AprioriConfig;
+    use crate::util::proptest::check;
+
+    fn mined() -> MiningResult {
+        ClassicalApriori::default().mine(
+            &textbook_db(),
+            &AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 },
+        )
+    }
+
+    #[test]
+    fn subset_and_disjoint_merges() {
+        assert!(is_subset(&[], &[1]));
+        assert!(is_subset(&[1, 3], &[1, 2, 3]));
+        assert!(!is_subset(&[1, 4], &[1, 2, 3]));
+        assert!(is_subset(&[2], &[2]));
+        assert!(is_disjoint(&[1, 3], &[2, 4]));
+        assert!(!is_disjoint(&[1, 3], &[3]));
+        assert!(is_disjoint(&[], &[1]));
+    }
+
+    #[test]
+    fn support_lookup_matches_result() {
+        let r = mined();
+        let idx = RuleIndex::build(&r, 0.5);
+        for (is, sup) in &r.frequent {
+            assert_eq!(idx.support_of(is), Some(*sup));
+        }
+        assert_eq!(idx.support_of(&[99]), None);
+        assert_eq!(idx.n_itemsets(), r.frequent.len());
+    }
+
+    #[test]
+    fn recommend_matches_reference_on_textbook_baskets() {
+        let r = mined();
+        let idx = RuleIndex::build(&r, 0.2);
+        let rules = generate_rules(&r, 0.2);
+        for basket in [
+            vec![0u32],
+            vec![0, 1],
+            vec![0, 4],
+            vec![1, 2, 3],
+            vec![0, 1, 2, 3, 4],
+            vec![7, 8], // no frequent items at all
+        ] {
+            for k in [1, 3, 100] {
+                let served = idx.recommend(&basket, k);
+                let direct = reference_recommend(&rules, &basket, k);
+                assert_eq!(
+                    render_lines(&served),
+                    render_lines(&direct),
+                    "basket {basket:?} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_recommend_equals_reference_on_random_baskets() {
+        let r = mined();
+        let idx = RuleIndex::build(&r, 0.0);
+        let rules = generate_rules(&r, 0.0);
+        check(
+            "index equals direct generate_rules filter",
+            0x5EED,
+            300,
+            |rng| {
+                let len = rng.range_usize(0, 6);
+                (0..len)
+                    .map(|_| rng.gen_range(6) as ItemId)
+                    .collect::<Vec<_>>()
+            },
+            |basket| {
+                let served = render_lines(&idx.recommend(basket, 5));
+                let direct = render_lines(&reference_recommend(&rules, basket, 5));
+                if served == direct {
+                    Ok(())
+                } else {
+                    Err(format!("served:\n{served}\ndirect:\n{direct}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn gosper_enumeration_matches_reference_on_wider_baskets() {
+        let r = mined();
+        let idx = RuleIndex::build(&r, 0.0);
+        let rules = generate_rules(&r, 0.0);
+        // 10 distinct items (indexed path), frequent ones plus noise
+        let basket: Vec<ItemId> = vec![0, 1, 2, 3, 4, 10, 20, 30, 40, 50];
+        assert_eq!(
+            render_lines(&idx.recommend(&basket, 50)),
+            render_lines(&reference_recommend(&rules, &basket, 50))
+        );
+    }
+
+    #[test]
+    fn oversized_basket_falls_back_to_scan() {
+        let r = mined();
+        let idx = RuleIndex::build(&r, 0.0);
+        let rules = generate_rules(&r, 0.0);
+        // 20 distinct items > MAX_INDEXED_BASKET, includes the frequent ones
+        let basket: Vec<ItemId> = (0..20).collect();
+        let served = idx.recommend(&basket, 10);
+        let direct = reference_recommend(&rules, &basket, 10);
+        assert_eq!(render_lines(&served), render_lines(&direct));
+    }
+
+    #[test]
+    fn consequent_items_already_held_are_not_recommended() {
+        let r = mined();
+        let idx = RuleIndex::build(&r, 0.0);
+        let basket = vec![0u32, 1, 2, 4];
+        for rec in idx.recommend(&basket, 50) {
+            assert!(is_disjoint(&rec.consequent, &basket));
+            assert!(is_subset(&rec.antecedent, &basket));
+        }
+    }
+
+    #[test]
+    fn empty_basket_and_zero_k_yield_nothing() {
+        let idx = RuleIndex::build(&mined(), 0.0);
+        assert!(idx.recommend(&[], 5).is_empty());
+        assert!(idx.recommend(&[0, 1], 0).is_empty());
+        assert!(idx.n_rules() > 0);
+    }
+}

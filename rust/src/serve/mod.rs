@@ -1,0 +1,61 @@
+//! The online rule-serving subsystem — the consumption side of the KDD
+//! pipeline the paper's Figure 1 ends with.
+//!
+//! The mining stack below this layer produces a batch [`MiningResult`];
+//! this layer turns it into a queryable, refreshable, concurrent product:
+//!
+//! * [`index`] — [`index::RuleIndex`], an immutable snapshot holding
+//!   itemset supports plus an antecedent-keyed rule index; basket
+//!   queries return top-k consequents in sublinear time, byte-identical
+//!   to the direct `generate_rules` path;
+//! * [`snapshot`] — [`snapshot::SnapshotCell`], the atomic hot-swap cell
+//!   (hand-rolled arc-swap) that lets a refresh publish a new generation
+//!   without readers ever blocking;
+//! * [`server`] — [`server::RuleServer`], a worker pool over a bounded
+//!   admission-controlled queue, recording per-request latency into the
+//!   `metrics` p50/p95/p99 histogram;
+//! * [`refresh`] — [`refresh::Refresher`], the micro-batch loop:
+//!   append delta transactions, re-mine in the background through the
+//!   Map/Reduce driver, rebuild the index, hot-swap it in.
+//!
+//! `repro serve` wires the four together as a one-shot closed-loop run;
+//! `benches/ablation_serving.rs` measures QPS and tail latency with and
+//! without a concurrent refresh and asserts the differential property.
+//!
+//! [`MiningResult`]: crate::apriori::MiningResult
+
+pub mod index;
+pub mod refresh;
+pub mod server;
+pub mod snapshot;
+
+/// `[serve]` section of an experiment config: worker-pool sizing,
+/// admission bounds, query shape, and the micro-batch refresh knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads answering queries.
+    pub workers: usize,
+    /// Bounded request-queue depth (admission control threshold).
+    pub queue_depth: usize,
+    /// Recommendations returned per query.
+    pub top_k: usize,
+    /// Confidence floor for the rules the index serves.
+    pub min_confidence: f64,
+    /// Delta transactions appended per micro-batch refresh.
+    pub refresh_tx: usize,
+    /// Micro-batch refresh cycles to run (0 = serve a frozen snapshot).
+    pub refresh_batches: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            queue_depth: 64,
+            top_k: 5,
+            min_confidence: 0.6,
+            refresh_tx: 500,
+            refresh_batches: 0,
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Micro-batch refresh: keep the serving snapshot tracking a growing
+//! transaction stream without ever pausing reads.
+//!
+//! Each cycle of the [`Refresher`]:
+//!
+//! 1. appends a delta of transactions to the [`TransactionDb`]
+//!    ([`TransactionDb::append`]);
+//! 2. re-mines the whole database in the background through the existing
+//!    Map/Reduce driver ([`MrApriori`], pipelined config welcome) — the
+//!    snapshot in service is untouched while this runs;
+//! 3. rebuilds a fresh [`RuleIndex`] from the new [`MiningResult`] and
+//!    rules;
+//! 4. publishes it with one [`SnapshotCell::store`] — readers that
+//!    loaded mid-rebuild keep the old generation, the next load sees the
+//!    new one, and nothing in between exists.
+//!
+//! Full re-mining is deliberately the v1 strategy: it reuses the whole
+//! verified mining stack and keeps the served answers byte-identical to a
+//! from-scratch batch run over the union database — the differential
+//! property `benches/ablation_serving.rs` asserts. Delta-aware
+//! incremental mining (FUP-style border maintenance) is a ROADMAP item.
+
+use std::sync::Arc;
+
+use crate::coordinator::{MineError, MrApriori, RunReport};
+use crate::data::{ItemId, Transaction, TransactionDb};
+use crate::metrics::Timer;
+use crate::util::rng::Xoshiro256;
+
+use super::index::RuleIndex;
+use super::snapshot::SnapshotCell;
+
+/// What one completed refresh cycle did.
+#[derive(Debug, Clone)]
+pub struct RefreshStats {
+    /// Generation the new snapshot was published as.
+    pub generation: u64,
+    /// Transactions appended this cycle.
+    pub delta_tx: usize,
+    /// Database size after the append.
+    pub total_tx: usize,
+    /// Frequent itemsets / rules in the new snapshot.
+    pub n_frequent: usize,
+    pub n_rules: usize,
+    /// Background cost split: full re-mine vs index rebuild.
+    pub mine_secs: f64,
+    pub build_secs: f64,
+}
+
+/// Owns the mining driver and the confidence floor; stateless across
+/// cycles beyond what lives in the database and the snapshot cell.
+pub struct Refresher {
+    driver: MrApriori,
+    min_confidence: f64,
+}
+
+impl Refresher {
+    pub fn new(driver: MrApriori, min_confidence: f64) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&min_confidence),
+            "min_confidence must be in [0, 1]"
+        );
+        Self { driver, min_confidence }
+    }
+
+    /// One micro-batch cycle: append, re-mine, rebuild, hot-swap.
+    /// Returns the mining report (the differential tests query its
+    /// `result` directly) alongside the cycle stats.
+    pub fn refresh_once(
+        &self,
+        db: &mut TransactionDb,
+        delta: Vec<Transaction>,
+        cell: &SnapshotCell<RuleIndex>,
+    ) -> Result<(RunReport, RefreshStats), MineError> {
+        let delta_tx = delta.len();
+        let (old_len, old_n_items) = (db.len(), db.n_items);
+        db.append(delta);
+        let mine_timer = Timer::start();
+        let report = match self.driver.mine(db) {
+            Ok(report) => report,
+            Err(e) => {
+                // Roll the append back so a failed cycle leaves the
+                // database matching the still-served snapshot; retrying
+                // with the same delta must not double-append it.
+                db.transactions.truncate(old_len);
+                db.n_items = old_n_items;
+                return Err(e);
+            }
+        };
+        let mine_secs = mine_timer.secs();
+        let build_timer = Timer::start();
+        let index = RuleIndex::build(&report.result, self.min_confidence);
+        let build_secs = build_timer.secs();
+        let (n_frequent, n_rules) = (index.n_itemsets(), index.n_rules());
+        let generation = cell.store(Arc::new(index));
+        let stats = RefreshStats {
+            generation,
+            delta_tx,
+            total_tx: db.len(),
+            n_frequent,
+            n_rules,
+            mine_secs,
+            build_secs,
+        };
+        Ok((report, stats))
+    }
+
+    /// Run a bounded sequence of micro-batches back-to-back — the
+    /// serving CLI's one-shot refresh loop and the bench's concurrent
+    /// refresh phase.
+    pub fn run_micro_batches(
+        &self,
+        db: &mut TransactionDb,
+        batches: Vec<Vec<Transaction>>,
+        cell: &SnapshotCell<RuleIndex>,
+    ) -> Result<Vec<RefreshStats>, MineError> {
+        batches
+            .into_iter()
+            .map(|delta| self.refresh_once(db, delta, cell).map(|(_, s)| s))
+            .collect()
+    }
+}
+
+/// Deterministic delta traffic: `n` noise-like baskets of 3..=8 uniform
+/// items over `n_items`. Deliberately pattern-free — a refresh must keep
+/// served answers exact even when the delta shifts every support, which
+/// uniform noise does to all of them at once.
+pub fn synth_delta(n: usize, n_items: usize, seed: u64) -> Vec<Transaction> {
+    assert!(n_items > 0, "need a non-empty item universe");
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let len = rng.range_usize(3, 9).min(n_items);
+            Transaction::new((0..len).map(|_| rng.gen_range(n_items as u64) as ItemId))
+        })
+        .collect()
+}
+
+/// Deterministic query traffic: `n` baskets of 1..=3 distinct items drawn
+/// from `singles` (typically the frequent 1-itemsets of the generation
+/// being served). Shared by `repro serve` and `benches/ablation_serving`
+/// so the CLI smoke and the bench drive the same workload shape.
+pub fn synth_baskets(singles: &[ItemId], n: usize, seed: u64) -> Vec<Vec<ItemId>> {
+    assert!(!singles.is_empty(), "need at least one item to query");
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let len = rng.range_usize(1, 4).min(singles.len());
+            rng.sample_distinct(singles.len(), len)
+                .into_iter()
+                .map(|i| singles[i])
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::classical::{tests::textbook_db, ClassicalApriori};
+    use crate::apriori::rules::generate_rules;
+    use crate::apriori::AprioriConfig;
+    use crate::cluster::ClusterConfig;
+    use crate::serve::index::{reference_recommend, render_lines};
+
+    fn cfg() -> AprioriConfig {
+        AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 }
+    }
+
+    #[test]
+    fn synth_delta_is_deterministic_and_well_formed() {
+        let a = synth_delta(50, 20, 7);
+        let b = synth_delta(50, 20, 7);
+        assert_eq!(a, b);
+        assert_ne!(a, synth_delta(50, 20, 8));
+        for t in &a {
+            assert!(!t.is_empty() && t.len() <= 8);
+            assert!(t.items.iter().all(|&i| (i as usize) < 20));
+        }
+    }
+
+    #[test]
+    fn synth_baskets_deterministic_and_bounded() {
+        let singles = vec![3u32, 5, 9, 11];
+        let a = synth_baskets(&singles, 50, 42);
+        assert_eq!(a, synth_baskets(&singles, 50, 42));
+        assert_ne!(a, synth_baskets(&singles, 50, 43));
+        for b in &a {
+            assert!((1..=3).contains(&b.len()));
+            assert!(b.iter().all(|i| singles.contains(i)));
+        }
+        // fewer singles than the basket length bound still works
+        for b in synth_baskets(&[7], 10, 1) {
+            assert_eq!(b, vec![7]);
+        }
+    }
+
+    #[test]
+    fn db_and_snapshot_stay_consistent_after_a_cycle() {
+        // The cycle's contract: after refresh_once returns Ok, the db and
+        // the published snapshot describe the same generation (a failed
+        // mine rolls the append back, so Err leaves both untouched).
+        let mut db = textbook_db();
+        let result0 = ClassicalApriori::default().mine(&db, &cfg());
+        let cell = SnapshotCell::new(Arc::new(RuleIndex::build(&result0, 0.5)));
+        let driver = MrApriori::new(ClusterConfig::standalone(), cfg()).with_split_tx(4);
+        let refresher = Refresher::new(driver, 0.5);
+        let (_, stats) = refresher
+            .refresh_once(&mut db, synth_delta(4, db.n_items, 1), &cell)
+            .unwrap();
+        assert_eq!(stats.total_tx, db.len());
+        assert_eq!(cell.load().n_transactions, db.len());
+    }
+
+    #[test]
+    fn refresh_swaps_in_the_union_databases_rules() {
+        let mut db = textbook_db();
+        let result0 = ClassicalApriori::default().mine(&db, &cfg());
+        let cell = SnapshotCell::new(Arc::new(RuleIndex::build(&result0, 0.3)));
+        let held = cell.load(); // a reader mid-request across the swap
+
+        let driver = MrApriori::new(ClusterConfig::standalone(), cfg()).with_split_tx(4);
+        let refresher = Refresher::new(driver, 0.3);
+        let delta = synth_delta(6, db.n_items, 42);
+        let (report, stats) = refresher.refresh_once(&mut db, delta, &cell).unwrap();
+
+        assert_eq!(stats.generation, 1);
+        assert_eq!(cell.generation(), 1);
+        assert_eq!(stats.delta_tx, 6);
+        assert_eq!(stats.total_tx, 15);
+        assert_eq!(db.len(), 15);
+        assert_eq!(stats.n_rules, generate_rules(&report.result, 0.3).len());
+
+        // the swapped-in index answers exactly like a direct batch mine
+        // of the union database
+        let union_result = ClassicalApriori::default().mine(&db, &cfg());
+        assert_eq!(report.result.frequent, union_result.frequent);
+        let rules = generate_rules(&union_result, 0.3);
+        let idx = cell.load();
+        for basket in [vec![0u32, 1], vec![1, 2], vec![0, 4]] {
+            assert_eq!(
+                render_lines(&idx.recommend(&basket, 5)),
+                render_lines(&reference_recommend(&rules, &basket, 5))
+            );
+        }
+        // the pre-swap reader still holds a valid generation-0 snapshot
+        assert_eq!(held.n_transactions, 9);
+        assert_eq!(idx.n_transactions, 15);
+    }
+
+    #[test]
+    fn micro_batches_advance_generations_monotonically() {
+        let mut db = textbook_db();
+        let result0 = ClassicalApriori::default().mine(&db, &cfg());
+        let cell = SnapshotCell::new(Arc::new(RuleIndex::build(&result0, 0.5)));
+        let driver = MrApriori::new(ClusterConfig::standalone(), cfg()).with_split_tx(8);
+        let refresher = Refresher::new(driver, 0.5);
+        let batches = vec![
+            synth_delta(3, db.n_items, 1),
+            synth_delta(4, db.n_items, 2),
+            synth_delta(5, db.n_items, 3),
+        ];
+        let stats = refresher.run_micro_batches(&mut db, batches, &cell).unwrap();
+        assert_eq!(stats.len(), 3);
+        assert_eq!(
+            stats.iter().map(|s| s.generation).collect::<Vec<_>>(),
+            vec![1, 2, 3]
+        );
+        assert_eq!(stats.last().unwrap().total_tx, 9 + 3 + 4 + 5);
+        assert_eq!(cell.generation(), 3);
+    }
+}

@@ -1,0 +1,418 @@
+//! The online front-end: a multi-threaded [`RuleServer`] draining a
+//! bounded request queue against the current [`RuleIndex`] snapshot.
+//!
+//! Shape, mirroring a production rule-serving tier:
+//!
+//! * **admission control** — [`BoundedQueue::try_push`] never blocks the
+//!   caller: a full queue rejects the request (load shedding) instead of
+//!   growing an unbounded backlog, and the rejection is counted;
+//! * **worker pool** — `workers` OS threads pop requests, [`load`] the
+//!   snapshot once per request (one `Arc` clone; never blocked by a
+//!   concurrent refresh), answer from the immutable index, and reply
+//!   through a per-request channel;
+//! * **tail latency** — every request records enqueue-to-answer latency
+//!   into a shared wait-free [`LatencyHistogram`], so p50/p95/p99 come
+//!   from the server itself, not the load generator.
+//!
+//! [`load`]: super::snapshot::SnapshotCell::load
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::apriori::rules::Rule;
+use crate::data::ItemId;
+use crate::metrics::histogram::{HistogramSnapshot, LatencyHistogram};
+
+use super::index::{render_lines, RuleIndex};
+use super::snapshot::SnapshotCell;
+
+/// Why a request was not (or will never be) answered.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control shed the request: the queue was at capacity.
+    QueueFull,
+    /// The server is shutting down and accepts no new requests.
+    Closed,
+    /// The worker disappeared before replying (it panicked).
+    Lost,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::QueueFull => write!(f, "request rejected: queue at capacity"),
+            Self::Closed => write!(f, "server is shut down"),
+            Self::Lost => write!(f, "worker dropped the request"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Rejected push, handing the item back to the caller.
+#[derive(Debug)]
+pub enum PushError<T> {
+    Full(T),
+    Closed(T),
+}
+
+/// A bounded MPMC queue: non-blocking producers (admission control),
+/// blocking consumers (worker parking). Close-able for shutdown.
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    ready: Condvar,
+    capacity: usize,
+}
+
+#[derive(Debug)]
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "queue capacity must be >= 1");
+        Self {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Admit `item` if there is room; never blocks.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if st.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        st.items.push_back(item);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block until an item is available; `None` once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    /// Stop admitting; consumers drain the backlog, then see `None`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One answered basket query.
+#[derive(Debug, Clone)]
+pub struct QueryResponse {
+    /// Snapshot generation the answer was computed from.
+    pub generation: u64,
+    /// Top-k rules, in the index's deterministic global order.
+    pub recommendations: Vec<Rule>,
+}
+
+impl QueryResponse {
+    /// Canonical wire form — what the differential checks byte-compare.
+    pub fn render(&self) -> String {
+        render_lines(&self.recommendations)
+    }
+}
+
+/// A submitted request's reply handle.
+#[derive(Debug)]
+pub struct QueryTicket {
+    rx: mpsc::Receiver<QueryResponse>,
+}
+
+impl QueryTicket {
+    /// Block until the worker answers.
+    pub fn wait(self) -> Result<QueryResponse, ServeError> {
+        self.rx.recv().map_err(|_| ServeError::Lost)
+    }
+}
+
+/// Worker-pool sizing and admission bounds.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub workers: usize,
+    pub queue_depth: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { workers: 2, queue_depth: 64 }
+    }
+}
+
+/// Counters + latency view at one point in time.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub served: u64,
+    pub rejected: u64,
+    pub latency: HistogramSnapshot,
+}
+
+struct Job {
+    basket: Vec<ItemId>,
+    top_k: usize,
+    enqueued: Instant,
+    reply: mpsc::Sender<QueryResponse>,
+}
+
+struct ServerInner {
+    snapshot: Arc<SnapshotCell<RuleIndex>>,
+    queue: BoundedQueue<Job>,
+    served: AtomicU64,
+    rejected: AtomicU64,
+    latency: LatencyHistogram,
+}
+
+/// The serving tier. Start it over a [`SnapshotCell`]; refreshes swap the
+/// cell underneath while this keeps answering.
+pub struct RuleServer {
+    inner: Arc<ServerInner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl RuleServer {
+    /// Spawn the worker pool.
+    pub fn start(snapshot: Arc<SnapshotCell<RuleIndex>>, opts: ServeOptions) -> Self {
+        assert!(opts.workers > 0, "need at least one worker");
+        let inner = Arc::new(ServerInner {
+            snapshot,
+            queue: BoundedQueue::new(opts.queue_depth),
+            served: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            latency: LatencyHistogram::new(),
+        });
+        let workers = (0..opts.workers)
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                std::thread::spawn(move || worker_loop(&inner))
+            })
+            .collect();
+        Self { inner, workers }
+    }
+
+    /// Non-blocking admission: `Err(QueueFull)` is load shedding, not a
+    /// failure of the server.
+    pub fn submit(&self, basket: &[ItemId], top_k: usize) -> Result<QueryTicket, ServeError> {
+        let (tx, rx) = mpsc::channel();
+        let job = Job {
+            basket: basket.to_vec(),
+            top_k,
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        match self.inner.queue.try_push(job) {
+            Ok(()) => Ok(QueryTicket { rx }),
+            Err(PushError::Full(_)) => {
+                self.inner.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(ServeError::QueueFull)
+            }
+            Err(PushError::Closed(_)) => Err(ServeError::Closed),
+        }
+    }
+
+    /// Closed-loop convenience: submit and wait.
+    pub fn query(&self, basket: &[ItemId], top_k: usize) -> Result<QueryResponse, ServeError> {
+        self.submit(basket, top_k)?.wait()
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            served: self.inner.served.load(Ordering::Relaxed),
+            rejected: self.inner.rejected.load(Ordering::Relaxed),
+            latency: self.inner.latency.snapshot(),
+        }
+    }
+
+    /// Stop admitting, drain the backlog, join the pool.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.drain();
+        self.stats()
+    }
+
+    fn drain(&mut self) {
+        self.inner.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for RuleServer {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+fn worker_loop(inner: &ServerInner) {
+    while let Some(job) = inner.queue.pop() {
+        // One Arc clone per request; a concurrent refresh never blocks
+        // this (SnapshotCell's critical section is the clone itself).
+        let (index, generation) = inner.snapshot.load_with_generation();
+        let recommendations = index.recommend(&job.basket, job.top_k);
+        inner.latency.record(job.enqueued.elapsed());
+        inner.served.fetch_add(1, Ordering::Relaxed);
+        // A dropped ticket just means the client stopped waiting.
+        let _ = job.reply.send(QueryResponse { generation, recommendations });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::classical::{tests::textbook_db, ClassicalApriori};
+    use crate::apriori::rules::generate_rules;
+    use crate::apriori::AprioriConfig;
+    use crate::serve::index::reference_recommend;
+
+    fn textbook_index(min_confidence: f64) -> (Arc<SnapshotCell<RuleIndex>>, Vec<Rule>) {
+        let result = ClassicalApriori::default().mine(
+            &textbook_db(),
+            &AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 },
+        );
+        let rules = generate_rules(&result, min_confidence);
+        let index = RuleIndex::build(&result, min_confidence);
+        (Arc::new(SnapshotCell::new(Arc::new(index))), rules)
+    }
+
+    #[test]
+    fn bounded_queue_rejects_when_full_and_drains_in_order() {
+        let q = BoundedQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        match q.try_push(3) {
+            Err(PushError::Full(item)) => assert_eq!(item, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(4).is_ok());
+        q.close();
+        match q.try_push(5) {
+            Err(PushError::Closed(item)) => assert_eq!(item, 5),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // backlog drains even after close, then the sentinel
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn bounded_queue_unblocks_consumers_across_threads() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let consumer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(x) = q.pop() {
+                    got.push(x);
+                }
+                got
+            })
+        };
+        for i in 0..20 {
+            while q.try_push(i).is_err() {
+                std::thread::yield_now();
+            }
+        }
+        q.close();
+        let got = consumer.join().unwrap();
+        assert_eq!(got, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn served_answers_equal_direct_reference() {
+        let (cell, rules) = textbook_index(0.3);
+        let server = RuleServer::start(Arc::clone(&cell), ServeOptions::default());
+        for basket in [vec![0u32], vec![0, 1], vec![1, 3], vec![0, 2, 4]] {
+            let resp = server.query(&basket, 5).unwrap();
+            assert_eq!(resp.generation, 0);
+            assert_eq!(
+                resp.render(),
+                render_lines(&reference_recommend(&rules, &basket, 5)),
+                "basket {basket:?}"
+            );
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 4);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.latency.count(), 4);
+    }
+
+    #[test]
+    fn concurrent_clients_all_get_answers() {
+        let (cell, _) = textbook_index(0.0);
+        let server = Arc::new(RuleServer::start(
+            cell,
+            ServeOptions { workers: 3, queue_depth: 128 },
+        ));
+        let clients: Vec<_> = (0..4)
+            .map(|c| {
+                let server = Arc::clone(&server);
+                std::thread::spawn(move || {
+                    let mut answered = 0;
+                    for i in 0..50u32 {
+                        let basket = vec![(c + i) % 5, i % 3];
+                        match server.query(&basket, 3) {
+                            Ok(_) => answered += 1,
+                            Err(ServeError::QueueFull) => {}
+                            Err(e) => panic!("unexpected error: {e}"),
+                        }
+                    }
+                    answered
+                })
+            })
+            .collect();
+        let answered: u64 = clients.into_iter().map(|c| c.join().unwrap()).sum();
+        // Closed-loop clients never overrun a 128-deep queue.
+        assert_eq!(answered, 200);
+        let stats = server.stats();
+        assert_eq!(stats.served, 200);
+        assert_eq!(stats.latency.count(), 200);
+    }
+
+    #[test]
+    fn responses_follow_a_snapshot_swap() {
+        let (cell, _) = textbook_index(0.3);
+        let server = RuleServer::start(Arc::clone(&cell), ServeOptions::default());
+        let before = server.query(&[0, 1], 5).unwrap();
+        assert_eq!(before.generation, 0);
+        // swap in an empty index (simulates a refresh to a new generation)
+        let empty = RuleIndex::build(&crate::apriori::MiningResult::default(), 0.3);
+        cell.store(Arc::new(empty));
+        let after = server.query(&[0, 1], 5).unwrap();
+        assert_eq!(after.generation, 1);
+        assert!(after.recommendations.is_empty());
+        assert!(!before.recommendations.is_empty());
+    }
+}
