@@ -25,6 +25,18 @@ use super::Itemset;
 pub struct ItemCountApp {
     /// Absolute min-support threshold (already scaled by |D|).
     pub threshold: u64,
+    /// Emit *all* counted items from reduce, below-threshold ones
+    /// included — the state-capture mode the incremental subsystem uses
+    /// to learn negative-border supports. The frequent/border split then
+    /// happens at the coordinator, which also zero-fills items the map
+    /// never saw.
+    pub capture_all: bool,
+}
+
+impl ItemCountApp {
+    pub fn new(threshold: u64) -> Self {
+        Self { threshold, capture_all: false }
+    }
 }
 
 impl MapReduceApp for ItemCountApp {
@@ -45,7 +57,7 @@ impl MapReduceApp for ItemCountApp {
 
     fn reduce(&self, _k: &Itemset, values: &[u64]) -> Option<u64> {
         let support: u64 = values.iter().sum();
-        (support >= self.threshold).then_some(support)
+        (self.capture_all || support >= self.threshold).then_some(support)
     }
 
     fn map_cost_hint(&self, n_tx: usize) -> f64 {
@@ -72,6 +84,11 @@ pub struct CandidateCountApp<'e> {
     /// Dictionary width for the engine (tensor tile selection).
     pub n_items: usize,
     pub threshold: u64,
+    /// Keep below-threshold counts in the reduce output (state capture /
+    /// targeted exact scans). Zero-count candidates are still absent —
+    /// the map never emits them — so callers zero-fill from the known
+    /// candidate list.
+    pub capture_all: bool,
 }
 
 impl<'e> CandidateCountApp<'e> {
@@ -88,7 +105,15 @@ impl<'e> CandidateCountApp<'e> {
             engine,
             n_items,
             threshold,
+            capture_all: false,
         }
+    }
+
+    /// State-capture mode: reduce emits every counted candidate, the
+    /// threshold only partitions frequent from border at the caller.
+    pub fn with_capture(mut self) -> Self {
+        self.capture_all = true;
+        self
     }
 }
 
@@ -116,7 +141,7 @@ impl<'e> MapReduceApp for CandidateCountApp<'e> {
 
     fn reduce(&self, _k: &Itemset, values: &[u64]) -> Option<u64> {
         let support: u64 = values.iter().sum();
-        (support >= self.threshold).then_some(support)
+        (self.capture_all || support >= self.threshold).then_some(support)
     }
 
     fn map_cost_hint(&self, n_tx: usize) -> f64 {
@@ -158,7 +183,7 @@ mod tests {
     #[test]
     fn item_count_level1_matches_textbook() {
         let cfg = AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 };
-        let out = run_app(&ItemCountApp { threshold: cfg.threshold(9) }, 3);
+        let out = run_app(&ItemCountApp::new(cfg.threshold(9)), 3);
         assert_eq!(
             out,
             vec![
@@ -220,15 +245,38 @@ mod tests {
 
     #[test]
     fn threshold_filters_in_reduce() {
-        let app = ItemCountApp { threshold: 7 };
+        let app = ItemCountApp::new(7);
         let out = run_app(&app, 2);
         assert_eq!(out, vec![(vec![1], 7)]); // only item 1 reaches 7
+    }
+
+    #[test]
+    fn capture_mode_keeps_below_threshold_counts() {
+        // capture_all bypasses only the reduce filter: the same counts
+        // come back, plus every below-threshold key the maps emitted.
+        let filtered = run_app(&ItemCountApp::new(6), 3);
+        let captured = run_app(&ItemCountApp { threshold: 6, capture_all: true }, 3);
+        assert_eq!(captured.len(), 5); // all five items of the textbook db
+        for (is, s) in &filtered {
+            assert_eq!(captured.iter().find(|(c, _)| c == is), Some(&(is.clone(), *s)));
+        }
+        assert!(captured.iter().any(|(_, s)| *s < 6));
+
+        let f1: Vec<Itemset> = (0..5u32).map(|i| vec![i]).collect();
+        let c2 = candidates::generate(&f1);
+        let strict = run_app(&CandidateCountApp::new(c2.clone(), &HashTreeEngine, 5, 4), 3);
+        let capture =
+            run_app(&CandidateCountApp::new(c2, &HashTreeEngine, 5, 4).with_capture(), 3);
+        assert!(capture.len() > strict.len());
+        for (is, s) in &strict {
+            assert_eq!(capture.iter().find(|(c, _)| c == is), Some(&(is.clone(), *s)));
+        }
     }
 
     #[test]
     fn cost_hints_scale() {
         let app = CandidateCountApp::new(vec![vec![0, 1]; 50], &HashTreeEngine, 5, 1);
         assert_eq!(app.map_cost_hint(100), 5000.0);
-        assert!(ItemCountApp { threshold: 1 }.map_cost_hint(10) > 0.0);
+        assert!(ItemCountApp::new(1).map_cost_hint(10) > 0.0);
     }
 }

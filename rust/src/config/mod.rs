@@ -11,6 +11,7 @@ use crate::apriori::AprioriConfig;
 use crate::cluster::ClusterConfig;
 use crate::coordinator::PipelineConfig;
 use crate::engine::EngineKind;
+use crate::incremental::IncrementalConfig;
 use crate::mapreduce::JobConfig;
 use crate::serve::ServeConfig;
 
@@ -55,6 +56,9 @@ pub struct ExperimentConfig {
     pub pipeline: PipelineConfig,
     /// Online rule-serving layer (`[serve]` section; `repro serve`).
     pub serve: ServeConfig,
+    /// Delta-aware refresh strategy (`[incremental]` section;
+    /// `--refresh-mode incremental`).
+    pub incremental: IncrementalConfig,
     /// Workload: transactions to generate (Quest T10.I4) when no input
     /// file is given.
     pub transactions: usize,
@@ -72,6 +76,7 @@ impl Default for ExperimentConfig {
             job: JobConfig { n_reducers: 3, ..Default::default() },
             pipeline: PipelineConfig::default(),
             serve: ServeConfig::default(),
+            incremental: IncrementalConfig::default(),
             transactions: 10_000,
             seed: 0xACE5_2012,
         }
@@ -234,6 +239,22 @@ impl ExperimentConfig {
                     cfg.serve.refresh_batches =
                         value.parse().map_err(|_| bad("want integer"))?;
                 }
+                "serve.deadline_ms" => {
+                    cfg.serve.deadline_ms = value.parse().map_err(|_| bad("want integer"))?;
+                }
+                "incremental.enabled" => {
+                    cfg.incremental.enabled =
+                        value.parse().map_err(|_| bad("want true|false"))?;
+                }
+                "incremental.max_frontier_blowup" => {
+                    let v: f64 = value.parse().map_err(|_| bad("want float"))?;
+                    // NaN would make the guard comparison always-false,
+                    // silently unbounding frontier recounts.
+                    if !v.is_finite() || v < 0.0 {
+                        return Err(bad("must be a finite value >= 0"));
+                    }
+                    cfg.incremental.max_frontier_blowup = v;
+                }
                 other => {
                     return Err(ConfigError::BadValue {
                         key: other.to_string(),
@@ -248,10 +269,14 @@ impl ExperimentConfig {
 
 /// `key = value` lines; `#` comments; quoted or bare strings; `[name]`
 /// section headers prefix subsequent keys as `name.key` (TOML semantics
-/// for the flat one-level tables this config uses).
+/// for the flat one-level tables this config uses). Like TOML, opening
+/// the same section twice is an error — silently merging split tables
+/// hides copy-paste mistakes in experiment configs. A `[` without its
+/// closing `]` falls through to the `key = value` check and errors there.
 fn parse_kv(text: &str) -> Result<BTreeMap<String, String>, ConfigError> {
     let mut out = BTreeMap::new();
     let mut section = String::new();
+    let mut seen_sections = std::collections::BTreeSet::new();
     for (i, raw) in text.lines().enumerate() {
         let line = raw.split('#').next().unwrap_or("").trim();
         if line.is_empty() {
@@ -263,6 +288,12 @@ fn parse_kv(text: &str) -> Result<BTreeMap<String, String>, ConfigError> {
                 return Err(ConfigError::Parse {
                     line: i + 1,
                     msg: format!("bad section header '{line}'"),
+                });
+            }
+            if !seen_sections.insert(name.to_string()) {
+                return Err(ConfigError::Parse {
+                    line: i + 1,
+                    msg: format!("duplicate section '[{name}]'"),
                 });
             }
             section = format!("{name}.");
@@ -398,6 +429,109 @@ mod tests {
         assert!(ExperimentConfig::parse("[a=b]\nx = 1").is_err());
         // an empty section is a no-op
         assert!(ExperimentConfig::parse("[serve]").is_ok());
+    }
+
+    #[test]
+    fn unclosed_bracket_is_a_parse_error_with_the_line_number() {
+        let err = ExperimentConfig::parse("nodes = 2\n[serve\nworkers = 4").unwrap_err();
+        match err {
+            ConfigError::Parse { line, msg } => {
+                assert_eq!(line, 2);
+                assert!(msg.contains("[serve"), "{msg}");
+            }
+            other => panic!("expected Parse error, got {other}"),
+        }
+        // same with the bracket eaten by an inline comment
+        assert!(ExperimentConfig::parse("[serve # ]\nworkers = 4").is_err());
+    }
+
+    #[test]
+    fn duplicate_section_rejected_even_with_distinct_keys() {
+        let err = ExperimentConfig::parse(
+            "[serve]\nworkers = 2\n[incremental]\nenabled = true\n[serve]\ntop_k = 3\n",
+        )
+        .unwrap_err();
+        match err {
+            ConfigError::Parse { line, msg } => {
+                assert_eq!(line, 5);
+                assert!(msg.contains("duplicate section '[serve]'"), "{msg}");
+            }
+            other => panic!("expected Parse error, got {other}"),
+        }
+        // distinct sections with the same keys are fine
+        assert!(ExperimentConfig::parse("[serve]\nworkers = 2\n[incremental]\nenabled = true")
+            .is_ok());
+    }
+
+    #[test]
+    fn keys_before_any_section_stay_top_level() {
+        // top-level keys may precede every section header; a section never
+        // retroactively captures them
+        let cfg = ExperimentConfig::parse(
+            "nodes = 6\nmin_support = 0.03\n[serve]\nworkers = 3\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.nodes, 6);
+        assert_eq!(cfg.apriori.min_support, 0.03);
+        assert_eq!(cfg.serve.workers, 3);
+        // ...but a top-level key *after* a section header is prefixed and
+        // therefore unknown — sections run to end of file
+        let err = ExperimentConfig::parse("[serve]\nworkers = 3\nnodes = 6").unwrap_err();
+        assert!(matches!(err, ConfigError::BadValue { key, .. } if key == "serve.nodes"));
+    }
+
+    #[test]
+    fn incremental_section_parses_and_validates() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+            [incremental]
+            enabled = true
+            max_frontier_blowup = 2.5
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.incremental.enabled);
+        assert_eq!(cfg.incremental.max_frontier_blowup, 2.5);
+        // defaults hold when the section is absent
+        let d = ExperimentConfig::default().incremental;
+        assert!(!d.enabled);
+        assert_eq!(d.max_frontier_blowup, 1.0);
+        // validations
+        assert!(ExperimentConfig::parse("[incremental]\nenabled = maybe").is_err());
+        assert!(ExperimentConfig::parse("[incremental]\nmax_frontier_blowup = -1").is_err());
+        assert!(ExperimentConfig::parse("[incremental]\nmax_frontier_blowup = nan").is_err());
+        assert!(ExperimentConfig::parse("[incremental]\nmax_frontier_blowup = inf").is_err());
+        assert!(ExperimentConfig::parse("[incremental]\nmax_frontier_blowup = 0").is_ok());
+    }
+
+    #[test]
+    fn full_sectioned_config_round_trips_every_field() {
+        // One config exercising every section; parsing it twice must give
+        // identical values, and each value lands in its struct unchanged.
+        let text = r#"
+            preset = "fhssc"
+            nodes = 4
+            min_support = 0.04
+            transactions = 900
+            [serve]
+            workers = 5
+            queue_depth = 128
+            deadline_ms = 250
+            [incremental]
+            enabled = true
+            max_frontier_blowup = 3.0
+            "#;
+        let a = ExperimentConfig::parse(text).unwrap();
+        let b = ExperimentConfig::parse(text).unwrap();
+        assert_eq!(a.nodes, 4);
+        assert_eq!(a.apriori.min_support, 0.04);
+        assert_eq!(a.transactions, 900);
+        assert_eq!(a.serve.workers, 5);
+        assert_eq!(a.serve.queue_depth, 128);
+        assert_eq!(a.serve.deadline_ms, 250);
+        assert!(a.incremental.enabled);
+        assert_eq!(a.incremental.max_frontier_blowup, 3.0);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
     }
 
     #[test]

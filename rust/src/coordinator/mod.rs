@@ -40,7 +40,7 @@ use crate::apriori::{candidates, AprioriConfig, Itemset, LevelStats, MiningResul
 use crate::cluster::ClusterConfig;
 use crate::data::split::{plan_splits, Split};
 use crate::data::TransactionDb;
-use crate::dfs::{Dfs, DfsError};
+use crate::dfs::{BlockId, Dfs, DfsError};
 use crate::engine::{EngineKind, SupportEngine};
 use crate::mapreduce::app::MapReduceApp;
 use crate::mapreduce::{
@@ -80,6 +80,15 @@ impl From<DfsError> for MineError {
 impl From<JobError> for MineError {
     fn from(e: JobError) -> Self {
         Self::Job(e)
+    }
+}
+
+impl From<crate::mapreduce::AdhocJobError> for MineError {
+    fn from(e: crate::mapreduce::AdhocJobError) -> Self {
+        match e {
+            crate::mapreduce::AdhocJobError::Dfs(e) => Self::Dfs(e),
+            crate::mapreduce::AdhocJobError::Job(e) => Self::Job(e),
+        }
     }
 }
 
@@ -141,6 +150,29 @@ pub struct WorkloadProfile {
     pub n_tx: usize,
     pub db_bytes: usize,
     pub levels: Vec<LevelProfile>,
+}
+
+/// One level's full count capture: *every* candidate the level counted,
+/// with its exact support — the frequent ones meet the threshold, the
+/// rest are the level's negative border. Zero-count candidates (never
+/// emitted by any map task) are zero-filled, so `counted` always aligns
+/// with the exact candidate list, sorted.
+#[derive(Debug, Clone)]
+pub struct LevelCapture {
+    pub k: usize,
+    pub counted: Vec<(Itemset, u64)>,
+}
+
+/// The per-level captures of one [`MrApriori::mine_captured`] run —
+/// everything `incremental::MinedState` needs to seed FUP-style border
+/// maintenance.
+#[derive(Debug, Clone)]
+pub struct MiningCapture {
+    /// Item-universe width the level-1 capture spans (ids `0..n_items`).
+    pub n_items: usize,
+    /// Absolute threshold the frequent/border split used.
+    pub threshold: u64,
+    pub levels: Vec<LevelCapture>,
 }
 
 /// Everything one coordinated run produces.
@@ -214,6 +246,12 @@ impl MrApriori {
         self
     }
 
+    /// The counting engine map tasks run (the incremental delta jobs
+    /// reuse it so the delta path counts exactly like the batch path).
+    pub fn engine(&self) -> &dyn SupportEngine {
+        self.engine.as_ref()
+    }
+
     /// Mine `db`: real multi-threaded MapReduce execution, synchronous or
     /// pipelined per [`PipelineConfig`]. Both modes produce identical
     /// frequent itemsets.
@@ -225,8 +263,56 @@ impl MrApriori {
         }
     }
 
+    /// Synchronous mine that additionally captures every level's full
+    /// count table (frequent **and** negative border, zero-filled) — the
+    /// seed state for the incremental subsystem. The mining result is
+    /// byte-identical to [`mine`](Self::mine) (both run the same
+    /// [`Self::mine_level_loop`]); only the job shuffle carries the
+    /// extra below-threshold records, so the captured run's
+    /// `WorkloadProfile` is not comparable to a baseline profile.
+    pub fn mine_captured(
+        &self,
+        db: &TransactionDb,
+    ) -> Result<(RunReport, MiningCapture), MineError> {
+        let (report, capture) = self.mine_level_loop(db, true)?;
+        Ok((report, capture.expect("capture mode returns a capture")))
+    }
+
+    /// Targeted scan: exact supports for an arbitrary (possibly
+    /// mixed-length, possibly duplicated) itemset list over `db`, as one
+    /// unfiltered counting job through the engine's shared-scan path.
+    /// Counts align with the input order; itemsets no transaction
+    /// contains come back 0. One-shot wrapper over [`ExactCounter`] —
+    /// callers issuing several scans against the same database (the
+    /// incremental frontier walk) should hold an `ExactCounter` instead
+    /// so splits are planned and blocks placed once.
+    pub fn count_exact(
+        &self,
+        db: &TransactionDb,
+        itemsets: &[Itemset],
+    ) -> Result<Vec<u64>, MineError> {
+        if itemsets.is_empty() || db.is_empty() {
+            return Ok(vec![0; itemsets.len()]);
+        }
+        ExactCounter::new(self, db)?.count(db, itemsets)
+    }
+
     /// The paper's baseline: run job k to completion, then plan job k+1.
     fn mine_sync(&self, db: &TransactionDb) -> Result<RunReport, MineError> {
+        self.mine_level_loop(db, false).map(|(report, _)| report)
+    }
+
+    /// The synchronous level loop behind [`Self::mine_sync`] and
+    /// [`Self::mine_captured`]. With `capture` set, every counting job
+    /// keeps below-threshold reduce output (`capture_all`), the
+    /// frequent filter moves here, and the zero-filled per-level count
+    /// tables come back as a [`MiningCapture`]; the mining result is
+    /// identical either way.
+    fn mine_level_loop(
+        &self,
+        db: &TransactionDb,
+        capture: bool,
+    ) -> Result<(RunReport, Option<MiningCapture>), MineError> {
         let t0 = Instant::now();
         let threshold = self.apriori.threshold(db.len());
         let splits = plan_splits(db, self.split_tx);
@@ -240,11 +326,24 @@ impl MrApriori {
         };
         let mut jobs = Vec::new();
         let mut profiles = Vec::new();
+        let mut captures = Vec::new();
 
         // ---- level 1 ----
-        let app = ItemCountApp { threshold };
+        let app = ItemCountApp { threshold, capture_all: capture };
         let lt0 = Instant::now();
-        let (f1, stats) = runner.run(&app, db, &splits, &self.job)?;
+        let (out, stats) = runner.run(&app, db, &splits, &self.job)?;
+        let f1 = if capture {
+            let counted = zero_fill(candidates::unit_candidates(db.n_items), &out);
+            let f1: Vec<(Itemset, u64)> = counted
+                .iter()
+                .filter(|(_, s)| *s >= threshold)
+                .cloned()
+                .collect();
+            captures.push(LevelCapture { k: 1, counted });
+            f1
+        } else {
+            out
+        };
         push_level(
             &mut result,
             &mut profiles,
@@ -267,15 +366,29 @@ impl MrApriori {
             if cands.is_empty() {
                 break;
             }
-            let app =
+            let n_cands = cands.len();
+            let mut app =
                 CandidateCountApp::new(cands.clone(), self.engine.as_ref(), db.n_items, threshold);
+            app.capture_all = capture;
             let lt0 = Instant::now();
-            let (fk, stats) = runner.run(&app, db, &splits, &self.job)?;
+            let (out, stats) = runner.run(&app, db, &splits, &self.job)?;
+            let fk = if capture {
+                let counted = zero_fill(cands, &out);
+                let fk: Vec<(Itemset, u64)> = counted
+                    .iter()
+                    .filter(|(_, s)| *s >= threshold)
+                    .cloned()
+                    .collect();
+                captures.push(LevelCapture { k, counted });
+                fk
+            } else {
+                out
+            };
             push_level(
                 &mut result,
                 &mut profiles,
                 k,
-                cands.len(),
+                n_cands,
                 &fk,
                 &stats,
                 app.map_cost_hint(avg_split(&splits)),
@@ -289,7 +402,7 @@ impl MrApriori {
         }
         result.normalize();
 
-        Ok(RunReport {
+        let report = RunReport {
             result,
             jobs,
             profile: WorkloadProfile {
@@ -299,7 +412,13 @@ impl MrApriori {
             },
             wall_secs: t0.elapsed().as_secs_f64(),
             spill_fraction: dfs.spill_fraction(),
-        })
+        };
+        let capture_out = capture.then(|| MiningCapture {
+            n_items: db.n_items,
+            threshold,
+            levels: captures,
+        });
+        Ok((report, capture_out))
     }
 
     /// The pipelined job DAG.
@@ -331,7 +450,7 @@ impl MrApriori {
         let mut profiles: Vec<LevelProfile> = Vec::new();
 
         // ---- level 1 (synchronous root of the DAG) ----
-        let app = ItemCountApp { threshold };
+        let app = ItemCountApp::new(threshold);
         let lt0 = Instant::now();
         let (f1, stats) = runner.run(&app, db, &splits, &self.job)?;
         push_level(
@@ -488,6 +607,55 @@ impl MrApriori {
     }
 }
 
+/// A reusable targeted-scan context over one database: splits planned
+/// and blocks placed **once**, then any number of unfiltered exact
+/// counting jobs run against the same placement. The incremental
+/// subsystem's frontier walk creates one per delta and reuses it for
+/// every level's recount instead of re-planning the full database each
+/// time.
+pub struct ExactCounter<'a> {
+    driver: &'a MrApriori,
+    splits: Vec<Split>,
+    dfs: Dfs,
+    blocks: Vec<BlockId>,
+}
+
+impl<'a> ExactCounter<'a> {
+    pub fn new(driver: &'a MrApriori, db: &TransactionDb) -> Result<Self, MineError> {
+        let splits = plan_splits(db, driver.split_tx);
+        let mut dfs = Dfs::new(&driver.cluster);
+        let blocks = dfs.write_splits(&splits)?;
+        Ok(Self { driver, splits, dfs, blocks })
+    }
+
+    /// Exact supports for `itemsets` over the database this counter was
+    /// planned for (pass the same `db`), aligned with the input order.
+    /// Duplicates in the list are fine: counting runs over the
+    /// deduplicated set and results scatter back per entry.
+    pub fn count(
+        &self,
+        db: &TransactionDb,
+        itemsets: &[Itemset],
+    ) -> Result<Vec<u64>, MineError> {
+        if itemsets.is_empty() || db.is_empty() {
+            return Ok(vec![0; itemsets.len()]);
+        }
+        let mut unique = itemsets.to_vec();
+        unique.sort();
+        unique.dedup();
+        let app = CandidateCountApp::new(unique, self.driver.engine.as_ref(), db.n_items, 0)
+            .with_capture();
+        let runner = JobRunner::new(&self.driver.cluster, &self.dfs, &self.blocks);
+        let (out, _stats) = runner.run(&app, db, &self.splits, &self.driver.job)?;
+        let counts: std::collections::HashMap<&Itemset, u64> =
+            out.iter().map(|(is, s)| (is, *s)).collect();
+        Ok(itemsets
+            .iter()
+            .map(|c| counts.get(c).copied().unwrap_or(0))
+            .collect())
+    }
+}
+
 /// Fold one finished (possibly multi-level) counting job back into the
 /// mining state: for each level the job counted, intersect its
 /// threshold-filtered counts with the exact candidate set generated from
@@ -559,6 +727,20 @@ fn resolve_job(
     }
     jobs.push((base_k, stats));
     dead
+}
+
+/// Align a job's (sparse) reduce output with the exact candidate list:
+/// candidates no map task emitted get support 0.
+fn zero_fill(cands: Vec<Itemset>, out: &[(Itemset, u64)]) -> Vec<(Itemset, u64)> {
+    use std::collections::HashMap;
+    let counts: HashMap<&Itemset, u64> = out.iter().map(|(is, s)| (is, *s)).collect();
+    cands
+        .into_iter()
+        .map(|c| {
+            let s = counts.get(&c).copied().unwrap_or(0);
+            (c, s)
+        })
+        .collect()
 }
 
 fn avg_split(splits: &[Split]) -> usize {
@@ -890,6 +1072,57 @@ mod tests {
                 hom.total_secs
             );
         }
+    }
+
+    #[test]
+    fn mine_captured_matches_mine_and_captures_border() {
+        let db = textbook_db();
+        let cfg = AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 };
+        let driver = MrApriori::new(ClusterConfig::fhssc(3), cfg).with_split_tx(3);
+        let plain = driver.mine(&db).unwrap();
+        let (report, capture) = driver.mine_captured(&db).unwrap();
+        assert_eq!(report.result.frequent, plain.result.frequent);
+        assert_eq!(capture.n_items, db.n_items);
+        assert_eq!(capture.threshold, 2);
+        // level 1 covers the whole universe, supports exact
+        let l1 = &capture.levels[0];
+        assert_eq!(l1.k, 1);
+        assert_eq!(l1.counted.len(), db.n_items);
+        for (is, s) in &l1.counted {
+            assert_eq!(*s, db.support(is) as u64, "{is:?}");
+        }
+        // every deeper level = exact candidate set, frequent + border
+        for lc in &capture.levels[1..] {
+            let n_frequent = lc.counted.iter().filter(|(_, s)| *s >= 2).count();
+            assert_eq!(n_frequent, report.result.level(lc.k).count());
+            for (is, s) in &lc.counted {
+                assert_eq!(*s, db.support(is) as u64, "{is:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn count_exact_matches_oracle_on_mixed_lengths() {
+        let db = textbook_db();
+        let cfg = AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 };
+        let driver = MrApriori::new(ClusterConfig::standalone(), cfg).with_split_tx(4);
+        let itemsets: Vec<Itemset> = vec![
+            vec![0],
+            vec![3],
+            vec![0, 1],
+            vec![3, 4], // never co-occur -> 0
+            vec![0, 1, 2],
+            vec![7], // beyond any transaction -> 0
+            vec![0], // duplicate entry: counted once, reported per entry
+        ];
+        let counts = driver.count_exact(&db, &itemsets).unwrap();
+        let want: Vec<u64> = itemsets.iter().map(|is| db.support(is) as u64).collect();
+        assert_eq!(counts, want);
+        assert!(driver.count_exact(&db, &[]).unwrap().is_empty());
+        // a reusable counter over the same placement answers identically
+        let counter = ExactCounter::new(&driver, &db).unwrap();
+        assert_eq!(counter.count(&db, &itemsets).unwrap(), want);
+        assert_eq!(counter.count(&db, &[vec![1]]).unwrap(), vec![db.support(&[1]) as u64]);
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! Negative-border bookkeeping: the frequent/border split per level and
+//! the invariant checker the differential tests lean on.
+//!
+//! The **negative border** of a frequent-itemset collection is the set of
+//! itemsets that are not frequent themselves but whose every proper
+//! subset is — level 1's infrequent singletons, plus, for each k ≥ 2, the
+//! apriori-gen candidates of F(k-1) that missed the threshold. Tracking
+//! the border **with exact supports** is what makes FUP-style updates
+//! sound: after a delta, any itemset that newly crosses min-support is
+//! either already tracked (frequent or border, so one delta-only count
+//! updates it exactly) or a candidate generated from a *promoted* border
+//! itemset (the frontier, re-counted against the full database once).
+//! Nothing outside those two classes can become frequent, by downward
+//! closure.
+
+use crate::apriori::{candidates, Itemset};
+use crate::data::TransactionDb;
+
+use super::state::MinedState;
+
+/// One level of tracked state: the frequent itemsets and the level's
+/// negative border, both with exact absolute supports over the full
+/// database, both sorted lexicographically.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LevelState {
+    pub frequent: Vec<(Itemset, u64)>,
+    pub border: Vec<(Itemset, u64)>,
+}
+
+impl LevelState {
+    /// Every tracked itemset of the level (frequent first, then border).
+    pub fn tracked(&self) -> impl Iterator<Item = &(Itemset, u64)> {
+        self.frequent.iter().chain(self.border.iter())
+    }
+}
+
+/// Partition one level's full count table by the threshold. `counted`
+/// must be sorted (the coordinator's capture and the delta rebuild both
+/// emit candidate-list order, which is sorted), so both halves stay
+/// sorted.
+pub fn split_level(counted: &[(Itemset, u64)], threshold: u64) -> LevelState {
+    let mut level = LevelState::default();
+    for (is, s) in counted {
+        if *s >= threshold {
+            level.frequent.push((is.clone(), *s));
+        } else {
+            level.border.push((is.clone(), *s));
+        }
+    }
+    level
+}
+
+/// Check the full state invariant against the database oracle:
+///
+/// 1. the tracked universe is exactly `unit_candidates ∪ generate(F_k)`
+///    level by level (frequent ⊎ border, no gaps, no strays);
+/// 2. every tracked support equals `db.support` (exactness);
+/// 3. the threshold splits frequent from border correctly;
+/// 4. the level chain extends as far as apriori-gen produces candidates
+///    (within `max_k`).
+///
+/// O(|tracked| · |D|) — a test/debug tool, not a serving-path check.
+pub fn verify_invariant(state: &MinedState, db: &TransactionDb) -> Result<(), String> {
+    if state.n_transactions != db.len() {
+        return Err(format!(
+            "state covers {} transactions, db has {}",
+            state.n_transactions,
+            db.len()
+        ));
+    }
+    if state.n_items != db.n_items {
+        return Err(format!(
+            "state universe {} != db universe {}",
+            state.n_items, db.n_items
+        ));
+    }
+    let threshold = state.apriori.threshold(state.n_transactions);
+    let mut prev_frequent: Vec<Itemset> = Vec::new();
+    for (i, level) in state.levels.iter().enumerate() {
+        let k = i + 1;
+        if !state.apriori.level_allowed(k) {
+            return Err(format!("level {k} tracked past max_k"));
+        }
+        let expect: Vec<Itemset> = if k == 1 {
+            candidates::unit_candidates(state.n_items)
+        } else {
+            candidates::generate(&prev_frequent)
+        };
+        let tracked: Vec<Itemset> = {
+            let mut all: Vec<Itemset> =
+                level.tracked().map(|(is, _)| is.clone()).collect();
+            all.sort();
+            all
+        };
+        if tracked != expect {
+            return Err(format!(
+                "level {k}: tracked set != candidate set ({} vs {} itemsets)",
+                tracked.len(),
+                expect.len()
+            ));
+        }
+        for (is, s) in level.tracked() {
+            let oracle = db.support(is) as u64;
+            if *s != oracle {
+                return Err(format!("level {k}: {is:?} support {s} != oracle {oracle}"));
+            }
+        }
+        if let Some((is, s)) = level.frequent.iter().find(|(_, s)| *s < threshold) {
+            return Err(format!("level {k}: frequent {is:?} below threshold ({s})"));
+        }
+        if let Some((is, s)) = level.border.iter().find(|(_, s)| *s >= threshold) {
+            return Err(format!("level {k}: border {is:?} at/above threshold ({s})"));
+        }
+        prev_frequent = level.frequent.iter().map(|(is, _)| is.clone()).collect();
+    }
+    // The chain must not stop early: if the last level still has frequent
+    // itemsets, the next level's candidate set must be empty or gated.
+    if !prev_frequent.is_empty() {
+        let next_k = state.levels.len() + 1;
+        if state.apriori.level_allowed(next_k) && !candidates::generate(&prev_frequent).is_empty()
+        {
+            return Err(format!("level chain stops at {} with candidates left", next_k - 1));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::classical::{tests::textbook_db, ClassicalApriori};
+    use crate::apriori::AprioriConfig;
+    use crate::cluster::ClusterConfig;
+    use crate::coordinator::MrApriori;
+
+    #[test]
+    fn split_level_partitions_by_threshold() {
+        let counted = vec![
+            (vec![0], 5),
+            (vec![1], 2),
+            (vec![2], 0),
+            (vec![3], 3),
+        ];
+        let level = split_level(&counted, 3);
+        assert_eq!(level.frequent, vec![(vec![0], 5), (vec![3], 3)]);
+        assert_eq!(level.border, vec![(vec![1], 2), (vec![2], 0)]);
+        assert_eq!(level.tracked().count(), 4);
+    }
+
+    #[test]
+    fn captured_textbook_state_passes_the_invariant() {
+        let db = textbook_db();
+        let cfg = AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 };
+        let driver = MrApriori::new(ClusterConfig::standalone(), cfg.clone()).with_split_tx(3);
+        let (report, state) = MinedState::capture(&driver, &db).unwrap();
+        verify_invariant(&state, &db).unwrap();
+        let classical = ClassicalApriori::default().mine(&db, &cfg);
+        assert_eq!(state.to_result().frequent, classical.frequent);
+        assert_eq!(report.result.frequent, classical.frequent);
+    }
+
+    #[test]
+    fn invariant_rejects_a_tampered_state() {
+        let db = textbook_db();
+        let cfg = AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 };
+        let driver = MrApriori::new(ClusterConfig::standalone(), cfg).with_split_tx(3);
+        let (_, state) = MinedState::capture(&driver, &db).unwrap();
+
+        let mut wrong_support = state.clone();
+        wrong_support.levels[0].frequent[0].1 += 1;
+        assert!(verify_invariant(&wrong_support, &db).is_err());
+
+        let mut missing_border = state.clone();
+        missing_border.levels[0].border.pop();
+        assert!(verify_invariant(&missing_border, &db).is_err());
+
+        let mut stale_size = state;
+        stale_size.n_transactions += 1;
+        assert!(verify_invariant(&stale_size, &db).is_err());
+    }
+}

@@ -1,0 +1,144 @@
+//! The delta counting job: one MapReduce pass over **Δ only**.
+//!
+//! [`DeltaCountApp`] counts every tracked itemset (frequent + negative
+//! border, all levels mixed) against the delta's splits. Unlike the
+//! level jobs it never threshold-filters — the point is the exact delta
+//! increment of every tracked support, which the state layer adds to the
+//! stored base counts. Counting goes through the same
+//! [`SupportEngine::count_batch`] shared-scan machinery as the batched
+//! pipelined jobs ([`crate::engine::LevelGroups`]): one matcher per
+//! itemset length, each delta transaction streamed through all of them
+//! in a single pass.
+
+use std::collections::HashMap;
+
+use crate::apriori::mr::CandidateCountApp;
+use crate::apriori::Itemset;
+use crate::coordinator::{MineError, MrApriori};
+use crate::data::{split::Split, Transaction, TransactionDb};
+use crate::engine::SupportEngine;
+use crate::mapreduce::{app::MapReduceApp, run_adhoc, JobStats};
+
+/// Count a fixed (possibly mixed-length) tracked-itemset list over the
+/// delta with no threshold filter. A thin wrapper over
+/// [`CandidateCountApp`] in capture mode with threshold 0 — the delta
+/// path must count byte-for-byte like the batch path it increments, so
+/// it delegates rather than re-implementing the shared-scan map task.
+pub struct DeltaCountApp<'e> {
+    inner: CandidateCountApp<'e>,
+}
+
+impl<'e> DeltaCountApp<'e> {
+    pub fn new(tracked: Vec<Itemset>, engine: &'e dyn SupportEngine, n_items: usize) -> Self {
+        // Threshold 0 + capture_all: a delta job never filters — every
+        // tracked itemset's increment matters (absent from the output
+        // simply means +0).
+        Self {
+            inner: CandidateCountApp::new(tracked, engine, n_items, 0).with_capture(),
+        }
+    }
+
+    /// The tracked itemsets this job counts, in job order.
+    pub fn tracked(&self) -> &[Itemset] {
+        &self.inner.candidates
+    }
+}
+
+impl MapReduceApp for DeltaCountApp<'_> {
+    type K = Itemset;
+    type V = u64;
+
+    fn map(&self, s: &Split, input: &[Transaction], emit: &mut dyn FnMut(Itemset, u64)) {
+        self.inner.map(s, input, emit);
+    }
+
+    fn combine(&self, k: &Itemset, values: &[u64]) -> Option<u64> {
+        self.inner.combine(k, values)
+    }
+
+    fn reduce(&self, k: &Itemset, values: &[u64]) -> Option<u64> {
+        self.inner.reduce(k, values)
+    }
+
+    fn map_cost_hint(&self, n_tx: usize) -> f64 {
+        self.inner.map_cost_hint(n_tx)
+    }
+
+    fn reduce_cost_hint(&self, n_values: usize) -> f64 {
+        self.inner.reduce_cost_hint(n_values)
+    }
+
+    fn record_bytes_hint(&self) -> usize {
+        self.inner.record_bytes_hint()
+    }
+}
+
+/// Run the delta job with the driver's cluster/engine/job settings and
+/// return the per-itemset delta counts (itemsets the delta never touches
+/// are simply absent — their increment is 0). An empty delta or an empty
+/// tracked set short-circuits without scheduling a job.
+pub fn run_delta_count(
+    driver: &MrApriori,
+    delta: &[Transaction],
+    n_items: usize,
+    tracked: &[Itemset],
+) -> Result<(HashMap<Itemset, u64>, JobStats), MineError> {
+    if delta.is_empty() || tracked.is_empty() {
+        return Ok((HashMap::new(), JobStats::default()));
+    }
+    let delta_db = TransactionDb {
+        transactions: delta.to_vec(),
+        n_items,
+    };
+    let app = DeltaCountApp::new(tracked.to_vec(), driver.engine(), n_items);
+    let (out, stats) = run_adhoc(&driver.cluster, &delta_db, driver.split_tx, &app, &driver.job)?;
+    Ok((out.into_iter().collect(), stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::classical::tests::textbook_db;
+    use crate::apriori::AprioriConfig;
+    use crate::cluster::ClusterConfig;
+    use crate::serve::refresh::synth_delta;
+
+    fn driver() -> MrApriori {
+        let cfg = AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 };
+        MrApriori::new(ClusterConfig::fhssc(2), cfg).with_split_tx(4)
+    }
+
+    #[test]
+    fn delta_counts_match_oracle_over_mixed_levels() {
+        let base = textbook_db();
+        let delta = synth_delta(25, base.n_items, 11);
+        let delta_db = TransactionDb { transactions: delta.clone(), n_items: base.n_items };
+        let tracked: Vec<Itemset> = vec![
+            vec![0],
+            vec![4],
+            vec![0, 1],
+            vec![1, 2],
+            vec![0, 1, 2],
+        ];
+        let (counts, stats) = run_delta_count(&driver(), &delta, base.n_items, &tracked).unwrap();
+        assert!(stats.maps_total >= 1);
+        for is in &tracked {
+            let want = delta_db.support(is) as u64;
+            assert_eq!(counts.get(is).copied().unwrap_or(0), want, "{is:?}");
+        }
+        // only delta occurrences count — the base db is never scanned
+        assert!(counts.values().all(|&c| c <= delta.len() as u64));
+    }
+
+    #[test]
+    fn empty_delta_or_tracked_set_short_circuits() {
+        let base = textbook_db();
+        let (counts, stats) =
+            run_delta_count(&driver(), &[], base.n_items, &[vec![0]]).unwrap();
+        assert!(counts.is_empty());
+        assert_eq!(stats.maps_total, 0);
+        let delta = synth_delta(3, base.n_items, 1);
+        let (counts, _) = run_delta_count(&driver(), &delta, base.n_items, &[]).unwrap();
+        assert!(counts.is_empty());
+    }
+}

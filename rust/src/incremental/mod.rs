@@ -1,0 +1,56 @@
+//! Delta-aware incremental mining: FUP-style border maintenance so a
+//! refresh costs O(|Δ|) instead of O(|D|).
+//!
+//! The batch stack below this module is stateless — every run scans the
+//! whole database. This module adds the one piece of state that makes
+//! micro-batch refresh scale: a [`MinedState`] holding the frequent
+//! itemsets, their exact supports, **and the negative border** (the
+//! infrequent itemsets all of whose proper subsets are frequent, with
+//! exact supports too). On a delta:
+//!
+//! * [`delta_job`] runs one MapReduce counting job **over Δ only**
+//!   ([`DeltaCountApp`], shared-scan via `SupportEngine::count_batch`)
+//!   and the stored base counts absorb the increments;
+//! * [`state`] rebuilds the levels under the new threshold, promoting
+//!   border itemsets that crossed it and demoting frequent ones that
+//!   fell below, re-counting only the *promoted frontier* (candidates
+//!   that exist solely because of a promotion) against the full
+//!   database via targeted scan jobs;
+//! * [`border`] keeps the border invariant checkable — the differential
+//!   tests assert the state equals a from-scratch mine after every
+//!   generation.
+//!
+//! `serve::refresh::Refresher` drives this as its `incremental` mode,
+//! falling back to a full capture-mine whenever the frontier trips
+//! [`IncrementalConfig::max_frontier_blowup`].
+
+pub mod border;
+pub mod delta_job;
+pub mod state;
+
+pub use border::{split_level, verify_invariant, LevelState};
+pub use delta_job::{run_delta_count, DeltaCountApp};
+pub use state::{DeltaApply, DeltaStats, MinedState};
+
+/// `[incremental]` section of an experiment config.
+#[derive(Debug, Clone)]
+pub struct IncrementalConfig {
+    /// Route micro-batch refreshes through border maintenance instead of
+    /// full re-mining.
+    pub enabled: bool,
+    /// Fall back to a full re-mine when the promoted frontier (itemsets
+    /// needing a full-database recount) exceeds this multiple of the
+    /// tracked-set size. 0 disables incremental application entirely
+    /// (any frontier falls back); larger values tolerate bigger
+    /// promotion cascades before giving up.
+    pub max_frontier_blowup: f64,
+}
+
+impl Default for IncrementalConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            max_frontier_blowup: 1.0,
+        }
+    }
+}

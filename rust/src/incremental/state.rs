@@ -1,0 +1,459 @@
+//! The stateful mining layer: a [`MinedState`] that tracks frequent
+//! itemsets **and** the negative border with exact supports, and folds
+//! transaction deltas in with cost proportional to the delta.
+//!
+//! The update per delta Δ (FUP for insertions, level-wise):
+//!
+//! 1. **Delta scan** — one MapReduce job over Δ only
+//!    ([`run_delta_count`]) increments every tracked support exactly;
+//!    singletons for item ids Δ introduces enter with base support 0.
+//! 2. **Level-wise rebuild** — with the new threshold
+//!    `ceil(min_support · |D ∪ Δ|)`, recompute each level's candidate
+//!    set from the (new) previous frequent level. Tracked candidates
+//!    have exact supports already; the untracked remainder is the
+//!    **promoted frontier** — candidates that exist only because a
+//!    border itemset crossed the threshold — and is re-counted against
+//!    the full database via one targeted scan job per level (a shared
+//!    [`ExactCounter`], so splits are planned and blocks placed once
+//!    per delta). Demotions cascade for free: a demoted itemset's
+//!    supersets drop out of the candidate sets.
+//! 3. **Blowup guard** — if the cumulative frontier exceeds
+//!    [`IncrementalConfig::max_frontier_blowup`] × the tracked-set size,
+//!    the update aborts untouched and the caller full re-mines
+//!    ([`MinedState::capture`]); incremental refresh must never cost
+//!    more than the batch path it replaces.
+//!
+//! Soundness: by downward closure, an itemset can only become frequent
+//! if all its proper subsets are; walking levels bottom-up, every new
+//! frequent itemset is either tracked (exact support via step 1) or in
+//! the frontier (exact support via step 2), so the resulting state is
+//! byte-identical to a from-scratch mine of the union database —
+//! `tests/incremental.rs` proves it property-style, churn included.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::apriori::{candidates, AprioriConfig, Itemset, LevelStats, MiningResult};
+use crate::coordinator::{ExactCounter, MineError, MiningCapture, MrApriori, RunReport};
+use crate::data::{ItemId, Transaction, TransactionDb};
+
+use super::border::{split_level, LevelState};
+use super::delta_job::run_delta_count;
+use super::IncrementalConfig;
+
+/// What one applied delta did to the state.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaStats {
+    pub delta_tx: usize,
+    /// Itemsets whose delta increments one shared-scan Δ-job counted.
+    pub tracked: usize,
+    /// Promoted-frontier itemsets re-counted against the full database —
+    /// the number the ablation compares to the total frequent count.
+    pub frontier_recounted: usize,
+    /// Border itemsets that crossed min-support.
+    pub promoted: usize,
+    /// Previously frequent itemsets that fell below it (or lost a
+    /// frequent subset).
+    pub demoted: usize,
+    pub n_frequent: usize,
+}
+
+/// Outcome of [`MinedState::apply_delta`].
+#[derive(Debug)]
+pub enum DeltaApply {
+    /// Folded in; the state now describes the union database.
+    Applied(DeltaStats),
+    /// The promoted frontier tripped the blowup guard; the state is
+    /// untouched and the caller should fall back to a full re-mine.
+    FrontierBlowup { frontier: usize, tracked: usize },
+}
+
+/// The persistent mining state: frequent itemsets + negative border,
+/// exact supports, per level. Everything the next delta needs and
+/// nothing derived (rules/indexes are rebuilt downstream per snapshot).
+#[derive(Debug, Clone)]
+pub struct MinedState {
+    pub apriori: AprioriConfig,
+    /// |D| the supports are exact over.
+    pub n_transactions: usize,
+    /// Item-universe width (level-1 tracking spans ids `0..n_items`).
+    pub n_items: usize,
+    /// `levels[i]` holds k = i + 1. The chain ends at the first level
+    /// with no frequent itemsets (its border is still tracked) or where
+    /// apriori-gen yields no candidates.
+    pub levels: Vec<LevelState>,
+}
+
+impl MinedState {
+    /// Seed a state from a capture-mode mining run.
+    pub fn from_capture(
+        apriori: AprioriConfig,
+        n_transactions: usize,
+        capture: &MiningCapture,
+    ) -> Self {
+        debug_assert_eq!(capture.threshold, apriori.threshold(n_transactions));
+        let levels = capture
+            .levels
+            .iter()
+            .map(|lc| split_level(&lc.counted, capture.threshold))
+            .collect();
+        Self {
+            apriori,
+            n_transactions,
+            n_items: capture.n_items,
+            levels,
+        }
+    }
+
+    /// Full capture-mine of `db` — the cold-start path and the blowup
+    /// fallback. Returns the report too so callers can build a serving
+    /// index without re-deriving anything.
+    pub fn capture(
+        driver: &MrApriori,
+        db: &TransactionDb,
+    ) -> Result<(RunReport, MinedState), MineError> {
+        let (report, capture) = driver.mine_captured(db)?;
+        let state = Self::from_capture(driver.apriori.clone(), db.len(), &capture);
+        Ok((report, state))
+    }
+
+    /// Absolute threshold the current generation's split uses.
+    pub fn threshold(&self) -> u64 {
+        self.apriori.threshold(self.n_transactions)
+    }
+
+    pub fn n_frequent(&self) -> usize {
+        self.levels.iter().map(|l| l.frequent.len()).sum()
+    }
+
+    pub fn n_border(&self) -> usize {
+        self.levels.iter().map(|l| l.border.len()).sum()
+    }
+
+    /// Total tracked itemsets (what every delta job scans for).
+    pub fn n_tracked(&self) -> usize {
+        self.n_frequent() + self.n_border()
+    }
+
+    /// The state as a canonical [`MiningResult`] — byte-identical
+    /// `frequent` to a from-scratch mine of the same database. Level
+    /// stats carry counts only (no wall/work: no full scan happened).
+    pub fn to_result(&self) -> MiningResult {
+        let mut result = MiningResult {
+            n_transactions: self.n_transactions,
+            ..Default::default()
+        };
+        for (i, level) in self.levels.iter().enumerate() {
+            result.levels.push(LevelStats {
+                k: i + 1,
+                n_candidates: level.frequent.len() + level.border.len(),
+                n_frequent: level.frequent.len(),
+                work_units: 0.0,
+                wall_secs: 0.0,
+            });
+            result.frequent.extend(level.frequent.iter().cloned());
+        }
+        result.normalize();
+        result
+    }
+
+    /// Fold a delta in. `union_db` must already contain the delta (the
+    /// refresher appends before calling); `driver` supplies the cluster,
+    /// engine and job settings for the Δ-scan and frontier jobs and must
+    /// carry the same `AprioriConfig` the state was captured with.
+    pub fn apply_delta(
+        &mut self,
+        driver: &MrApriori,
+        union_db: &TransactionDb,
+        delta: &[Transaction],
+        guard: &IncrementalConfig,
+    ) -> Result<DeltaApply, MineError> {
+        assert_eq!(
+            union_db.len(),
+            self.n_transactions + delta.len(),
+            "apply_delta expects the delta already appended to the union database"
+        );
+        let n_new = union_db.len();
+        let t_new = self.apriori.threshold(n_new);
+        let n_items_new = union_db.n_items;
+
+        // -- tracked support table, plus the delta's new singletons --
+        let mut support: HashMap<Itemset, u64> = HashMap::new();
+        for level in &self.levels {
+            for (is, s) in level.tracked() {
+                support.insert(is.clone(), *s);
+            }
+        }
+        for id in self.n_items..n_items_new {
+            support.insert(vec![id as ItemId], 0);
+        }
+        let tracked_total = support.len();
+
+        // -- one shared-scan counting job over Δ only --
+        let tracked_list: Vec<Itemset> = {
+            let mut v: Vec<Itemset> = support.keys().cloned().collect();
+            v.sort_by(|a, b| (a.len(), a).cmp(&(b.len(), b)));
+            v
+        };
+        let (delta_counts, _job) =
+            run_delta_count(driver, delta, n_items_new, &tracked_list)?;
+        for (is, c) in delta_counts {
+            if let Some(s) = support.get_mut(&is) {
+                *s += c;
+            }
+        }
+
+        // -- level-wise rebuild, re-counting only the promoted frontier --
+        // One scan context for all frontier levels: splits planned and
+        // blocks placed once per delta, lazily (deltas without
+        // promotions never touch the full database at all).
+        let mut counter: Option<ExactCounter<'_>> = None;
+        let mut new_levels: Vec<LevelState> = Vec::new();
+        let mut frontier_total = 0usize;
+        let mut prev: Vec<Itemset> = Vec::new();
+        let mut k = 1usize;
+        while self.apriori.level_allowed(k) {
+            let cands: Vec<Itemset> = if k == 1 {
+                candidates::unit_candidates(n_items_new)
+            } else {
+                candidates::generate(&prev)
+            };
+            if cands.is_empty() {
+                break;
+            }
+            let unknown: Vec<Itemset> = cands
+                .iter()
+                .filter(|c| !support.contains_key(*c))
+                .cloned()
+                .collect();
+            frontier_total += unknown.len();
+            if frontier_total as f64 > guard.max_frontier_blowup * tracked_total.max(1) as f64 {
+                return Ok(DeltaApply::FrontierBlowup {
+                    frontier: frontier_total,
+                    tracked: tracked_total,
+                });
+            }
+            if !unknown.is_empty() {
+                if counter.is_none() {
+                    counter = Some(ExactCounter::new(driver, union_db)?);
+                }
+                let counts = counter
+                    .as_ref()
+                    .expect("just seeded")
+                    .count(union_db, &unknown)?;
+                for (is, c) in unknown.into_iter().zip(counts) {
+                    support.insert(is, c);
+                }
+            }
+            let mut level = LevelState::default();
+            for c in cands {
+                let s = support[&c];
+                if s >= t_new {
+                    level.frequent.push((c, s));
+                } else {
+                    level.border.push((c, s));
+                }
+            }
+            let chain_done = level.frequent.is_empty();
+            prev = level.frequent.iter().map(|(is, _)| is.clone()).collect();
+            new_levels.push(level);
+            if chain_done {
+                break;
+            }
+            k += 1;
+        }
+
+        // -- promote/demote accounting, then commit --
+        let old_frequent: HashSet<&Itemset> = self
+            .levels
+            .iter()
+            .flat_map(|l| l.frequent.iter().map(|(is, _)| is))
+            .collect();
+        let mut promoted = 0usize;
+        let mut survived: HashSet<&Itemset> = HashSet::new();
+        for level in &new_levels {
+            for (is, _) in &level.frequent {
+                if old_frequent.contains(is) {
+                    survived.insert(is);
+                } else {
+                    promoted += 1;
+                }
+            }
+        }
+        let demoted = old_frequent.len() - survived.len();
+        let stats = DeltaStats {
+            delta_tx: delta.len(),
+            tracked: tracked_total,
+            frontier_recounted: frontier_total,
+            promoted,
+            demoted,
+            n_frequent: new_levels.iter().map(|l| l.frequent.len()).sum(),
+        };
+        self.levels = new_levels;
+        self.n_transactions = n_new;
+        self.n_items = n_items_new;
+        Ok(DeltaApply::Applied(stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::classical::ClassicalApriori;
+    use crate::cluster::ClusterConfig;
+    use crate::data::Transaction;
+    use crate::incremental::border::verify_invariant;
+
+    fn tx(items: &[u32]) -> Transaction {
+        Transaction::new(items.iter().copied())
+    }
+
+    fn tiny_db() -> TransactionDb {
+        TransactionDb::new(vec![tx(&[0, 1]), tx(&[0, 1]), tx(&[0]), tx(&[2])])
+    }
+
+    fn driver(min_support: f64) -> MrApriori {
+        let cfg = AprioriConfig { min_support, max_k: 0 };
+        MrApriori::new(ClusterConfig::standalone(), cfg).with_split_tx(2)
+    }
+
+    fn assert_matches_full_mine(state: &MinedState, db: &TransactionDb) {
+        let full = ClassicalApriori::default().mine(db, &state.apriori);
+        assert_eq!(state.to_result().frequent, full.frequent);
+        verify_invariant(state, db).unwrap();
+    }
+
+    #[test]
+    fn promotion_demotion_and_frontier_recount_hand_worked() {
+        // Base (t = ceil(0.5·4) = 2): F1 = {0}:3 {1}:2, border {2}:1;
+        // F2 = {0,1}:2.
+        let mut db = tiny_db();
+        let driver = driver(0.5);
+        let (_, mut state) = MinedState::capture(&driver, &db).unwrap();
+        assert_eq!(state.n_frequent(), 3);
+        assert_matches_full_mine(&state, &db);
+
+        // Δ1 = two {2} baskets: t rises to 3. {1} demotes (kills {0,1}),
+        // {2} promotes from the border, and the fresh candidate {0,2}
+        // is the frontier — re-counted against the full db (support 0).
+        let delta1 = vec![tx(&[2]), tx(&[2])];
+        db.append(delta1.clone());
+        let outcome = state
+            .apply_delta(&driver, &db, &delta1, &IncrementalConfig::default())
+            .unwrap();
+        let stats = match outcome {
+            DeltaApply::Applied(s) => s,
+            other => panic!("expected Applied, got {other:?}"),
+        };
+        assert_eq!(stats.promoted, 1); // {2}
+        assert_eq!(stats.demoted, 2); // {1} and {0,1}
+        assert_eq!(stats.frontier_recounted, 1); // {0,2}
+        assert_eq!(state.n_frequent(), 2); // {0}, {2}
+        assert_matches_full_mine(&state, &db);
+
+        // Δ2 re-promotes pressure on {0,1}: it was dropped from tracking
+        // when {1} demoted, so it must come back via the frontier path.
+        let delta2 = vec![tx(&[0, 1]), tx(&[0, 1]), tx(&[0, 1])];
+        db.append(delta2.clone());
+        let outcome = state
+            .apply_delta(&driver, &db, &delta2, &IncrementalConfig::default())
+            .unwrap();
+        let stats = match outcome {
+            DeltaApply::Applied(s) => s,
+            other => panic!("expected Applied, got {other:?}"),
+        };
+        // t = ceil(0.5·9) = 5: {0}:6 and {1}:5 frequent, {2}:3 demoted
+        // again, and the revived candidate {0,1} (support 5) promotes
+        // through a frontier recount.
+        assert!(stats.frontier_recounted >= 1);
+        assert_eq!(state.n_frequent(), 3);
+        assert_matches_full_mine(&state, &db);
+    }
+
+    #[test]
+    fn delta_with_new_items_grows_the_universe() {
+        let mut db = tiny_db();
+        let driver = driver(0.25);
+        let (_, mut state) = MinedState::capture(&driver, &db).unwrap();
+        assert_eq!(state.n_items, 3);
+        let delta = vec![tx(&[5]), tx(&[5]), tx(&[0, 5])];
+        db.append(delta.clone());
+        let outcome = state
+            .apply_delta(&driver, &db, &delta, &IncrementalConfig::default())
+            .unwrap();
+        assert!(matches!(outcome, DeltaApply::Applied(_)));
+        assert_eq!(state.n_items, 6);
+        // t = ceil(0.25·7) = 2; {5}:3 is frequent despite base support 0
+        assert!(state.levels[0]
+            .frequent
+            .iter()
+            .any(|(is, s)| is == &vec![5] && *s == 3));
+        assert_matches_full_mine(&state, &db);
+    }
+
+    #[test]
+    fn empty_delta_is_a_noop_rebuild() {
+        let mut db = tiny_db();
+        let driver = driver(0.5);
+        let (_, mut state) = MinedState::capture(&driver, &db).unwrap();
+        let before = state.clone();
+        let outcome = state
+            .apply_delta(&driver, &db, &[], &IncrementalConfig::default())
+            .unwrap();
+        let stats = match outcome {
+            DeltaApply::Applied(s) => s,
+            other => panic!("expected Applied, got {other:?}"),
+        };
+        assert_eq!(stats.delta_tx, 0);
+        assert_eq!(stats.frontier_recounted, 0);
+        assert_eq!((stats.promoted, stats.demoted), (0, 0));
+        assert_eq!(state.levels, before.levels);
+        assert_matches_full_mine(&state, &db);
+    }
+
+    #[test]
+    fn zero_blowup_guard_forces_fallback_on_any_frontier() {
+        let mut db = tiny_db();
+        let driver = driver(0.5);
+        let (_, mut state) = MinedState::capture(&driver, &db).unwrap();
+        let before = state.clone();
+        let guard = IncrementalConfig { enabled: true, max_frontier_blowup: 0.0 };
+        // the Δ1 from the hand-worked test creates a 1-itemset frontier
+        let delta = vec![tx(&[2]), tx(&[2])];
+        db.append(delta.clone());
+        match state.apply_delta(&driver, &db, &delta, &guard).unwrap() {
+            DeltaApply::FrontierBlowup { frontier, tracked } => {
+                assert_eq!(frontier, 1);
+                assert_eq!(tracked, before.n_tracked());
+            }
+            other => panic!("expected FrontierBlowup, got {other:?}"),
+        }
+        // the state is untouched — the caller now captures from scratch
+        assert_eq!(state.levels, before.levels);
+        assert_eq!(state.n_transactions, before.n_transactions);
+        let (_, fresh) = MinedState::capture(&driver, &db).unwrap();
+        assert_matches_full_mine(&fresh, &db);
+    }
+
+    #[test]
+    fn max_k_caps_the_incremental_chain_too() {
+        let db0 = TransactionDb::new(vec![
+            tx(&[0, 1, 2]),
+            tx(&[0, 1, 2]),
+            tx(&[0, 1, 2]),
+            tx(&[3]),
+        ]);
+        let cfg = AprioriConfig { min_support: 0.5, max_k: 2 };
+        let driver = MrApriori::new(ClusterConfig::standalone(), cfg.clone()).with_split_tx(2);
+        let mut db = db0;
+        let (_, mut state) = MinedState::capture(&driver, &db).unwrap();
+        assert!(state.levels.len() <= 2);
+        let delta = vec![tx(&[0, 1, 2])];
+        db.append(delta.clone());
+        state
+            .apply_delta(&driver, &db, &delta, &IncrementalConfig::default())
+            .unwrap();
+        assert!(state.levels.len() <= 2);
+        let full = ClassicalApriori::default().mine(&db, &cfg);
+        assert_eq!(state.to_result().frequent, full.frequent);
+    }
+}

@@ -17,6 +17,9 @@
 //!   snapshots over the mined output, atomic hot-swap, a worker-pool
 //!   query server with admission control, and micro-batch background
 //!   refresh that re-mines without pausing reads.
+//! * **incremental** — the stateful mining layer: FUP-style border
+//!   maintenance so a refresh counts the delta (plus a promoted
+//!   frontier), not the whole database.
 //!
 //! See `DESIGN.md` for the module inventory and the experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
@@ -28,6 +31,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dfs;
 pub mod engine;
+pub mod incremental;
 pub mod mapreduce;
 pub mod metrics;
 pub mod perfmodel;
@@ -59,6 +63,9 @@ pub mod prelude {
     };
     pub use crate::dfs::Dfs;
     pub use crate::engine::{build_engine, EngineKind, SupportEngine};
+    pub use crate::incremental::{
+        DeltaApply, DeltaStats, IncrementalConfig, LevelState, MinedState,
+    };
     pub use crate::mapreduce::{JobConfig, JobStats, SimReport, Simulator};
     pub use crate::metrics::bench::{BenchTable, Series};
     pub use crate::metrics::histogram::{HistogramSnapshot, LatencyHistogram};
@@ -66,7 +73,7 @@ pub mod prelude {
     pub use crate::runtime::{ArtifactManifest, TensorService, TensorServiceHandle};
     pub use crate::serve::{
         index::{reference_recommend, render_lines, RuleIndex},
-        refresh::{synth_baskets, synth_delta, Refresher, RefreshStats},
+        refresh::{synth_baskets, synth_delta, RefreshMode, Refresher, RefreshStats},
         server::{QueryResponse, RuleServer, ServeError, ServeOptions, ServerStats},
         snapshot::SnapshotCell,
         ServeConfig,

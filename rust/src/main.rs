@@ -68,8 +68,9 @@ USAGE:
              [--pipeline true|false] [--batch-levels 1|2]
   repro rules  <mine flags> [--min-confidence F] [--top N]
   repro serve  <mine flags> [--min-confidence F] [--top K] [--workers N]
-               [--queue-depth N] [--queries N] [--check true|false]
-               [--refresh-batches B] [--refresh-tx N]
+               [--queue-depth N] [--deadline-ms MS] [--queries N]
+               [--check true|false] [--refresh-batches B] [--refresh-tx N]
+               [--refresh-mode full|incremental] [--check-final true|false]
   repro simulate [--config FILE] [--preset P] [--nodes N] [--transactions N]
                  [--pipeline true|false]
   repro bench --figure fig4|fig5|eta
@@ -184,6 +185,12 @@ fn experiment_config(flags: &Flags) -> Result<ExperimentConfig, String> {
     }
     if let Some(b) = flags.parse_opt::<usize>("refresh-batches")? {
         cfg.serve.refresh_batches = b;
+    }
+    if let Some(ms) = flags.parse_opt::<u64>("deadline-ms")? {
+        cfg.serve.deadline_ms = ms;
+    }
+    if let Some(mode) = flags.parse_opt::<RefreshMode>("refresh-mode")? {
+        cfg.incremental.enabled = mode == RefreshMode::Incremental;
     }
     Ok(cfg)
 }
@@ -325,6 +332,7 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
     let cfg = experiment_config(flags)?;
     let queries: usize = flags.parse_opt("queries")?.unwrap_or(200);
     let check: bool = flags.parse_opt("check")?.unwrap_or(false);
+    let check_final: bool = flags.parse_opt("check-final")?.unwrap_or(false);
     let mut db = load_or_generate(flags, &cfg)?;
     let driver = build_driver(&cfg)?;
     println!("mining {} transactions for the serving snapshot ...", db.len());
@@ -332,10 +340,11 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
     let s = cfg.serve.clone();
     let index = RuleIndex::build(&report.result, s.min_confidence);
     println!(
-        "snapshot gen 0: {} itemsets, {} rules at confidence >= {}",
+        "snapshot gen 0: {} itemsets, {} rules at confidence >= {} (refresh mode: {})",
         index.n_itemsets(),
         index.n_rules(),
         s.min_confidence,
+        if cfg.incremental.enabled { "incremental" } else { "full" },
     );
     let direct = check.then(|| generate_rules(&report.result, s.min_confidence));
 
@@ -348,20 +357,28 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
     let cell = Arc::new(SnapshotCell::new(Arc::new(index)));
     let server = RuleServer::start(
         Arc::clone(&cell),
-        ServeOptions { workers: s.workers, queue_depth: s.queue_depth },
+        ServeOptions {
+            workers: s.workers,
+            queue_depth: s.queue_depth,
+            deadline: (s.deadline_ms > 0)
+                .then(|| std::time::Duration::from_millis(s.deadline_ms)),
+        },
     );
 
     // Optional concurrent micro-batch refresh (the db moves to that
-    // thread; queries keep hitting whatever snapshot is current).
+    // thread and comes back with the outcome; queries keep hitting
+    // whatever snapshot is current).
     let refresh_handle = if s.refresh_batches > 0 {
-        let refresher = Refresher::new(build_driver(&cfg)?, s.min_confidence);
+        let refresher = Refresher::new(build_driver(&cfg)?, s.min_confidence)
+            .with_incremental(cfg.incremental.clone());
         let batches: Vec<Vec<data::Transaction>> = (0..s.refresh_batches)
             .map(|b| synth_delta(s.refresh_tx, db.n_items, cfg.seed ^ (b as u64 + 1)))
             .collect();
         let cell = Arc::clone(&cell);
         let mut moved_db = std::mem::take(&mut db);
         Some(std::thread::spawn(move || {
-            refresher.run_micro_batches(&mut moved_db, batches, &cell)
+            let outcome = refresher.run_micro_batches(&mut moved_db, batches, &cell);
+            (outcome, moved_db)
         }))
     } else {
         None
@@ -383,21 +400,30 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
                 }
             }
             // shedding is load behaviour, not a failure (counted below)
-            Err(ServeError::QueueFull) => {}
+            Err(ServeError::QueueFull) | Err(ServeError::DeadlineExceeded) => {}
             Err(e) => return Err(e.to_string()),
         }
     }
     let wall = t0.elapsed().as_secs_f64();
 
+    let mut final_db = None;
     if let Some(handle) = refresh_handle {
-        let refresh_stats = handle
+        let (outcome, moved_db) = handle
             .join()
-            .map_err(|_| "refresh thread panicked".to_string())?
-            .map_err(|e| e.to_string())?;
+            .map_err(|_| "refresh thread panicked".to_string())?;
+        let refresh_stats = outcome.map_err(|e| e.to_string())?;
         for st in &refresh_stats {
+            let strategy = match (&st.incremental, st.fell_back) {
+                (Some(inc), _) => format!(
+                    "delta-applied: {} tracked, {} frontier recounts, +{} promoted, -{} demoted",
+                    inc.tracked, inc.frontier_recounted, inc.promoted, inc.demoted
+                ),
+                (None, true) => "full re-mine (frontier blowup fallback)".into(),
+                (None, false) => "full re-mine".into(),
+            };
             println!(
                 "refresh gen {}: +{} tx -> {} tx, {} itemsets, {} rules \
-                 (mine {:.3}s, build {:.3}s)",
+                 (mine {:.3}s, build {:.3}s; {strategy})",
                 st.generation,
                 st.delta_tx,
                 st.total_tx,
@@ -407,19 +433,55 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
                 st.build_secs,
             );
         }
+        final_db = Some(moved_db);
     }
 
     let stats = server.shutdown();
     let (p50, p95, p99) = stats.latency.p50_p95_p99();
     println!(
-        "\nserved {} of {queries} queries in {wall:.3}s ({:.0} QPS closed-loop), shed {}",
+        "\nserved {} of {queries} queries in {wall:.3}s ({:.0} QPS closed-loop), \
+         shed {} (overflow) + {} (deadline)",
         stats.served,
         stats.served as f64 / wall.max(1e-9),
         stats.rejected,
+        stats.deadline_shed,
     );
     println!("latency p50 {p50:?} | p95 {p95:?} | p99 {p99:?}");
     if check {
         println!("differential check: {checked} answers byte-identical to direct generate_rules");
+    }
+    if check_final {
+        // The published snapshot must equal a from-scratch batch mine of
+        // the final database — the end-to-end proof that N refresh
+        // cycles (incremental or full) drifted nothing.
+        let final_db = final_db.as_ref().unwrap_or(&db);
+        let full = build_driver(&cfg)?.mine(final_db).map_err(|e| e.to_string())?;
+        let rebuilt = RuleIndex::build(&full.result, s.min_confidence);
+        let served = cell.load();
+        if served.n_itemsets() != rebuilt.n_itemsets() || served.n_rules() != rebuilt.n_rules() {
+            return Err(format!(
+                "final-state mismatch: served {} itemsets / {} rules, \
+                 from-scratch mine has {} / {}",
+                served.n_itemsets(),
+                served.n_rules(),
+                rebuilt.n_itemsets(),
+                rebuilt.n_rules()
+            ));
+        }
+        for basket in &baskets {
+            let a = render_lines(&served.recommend(basket, s.top_k));
+            let b = render_lines(&rebuilt.recommend(basket, s.top_k));
+            if a != b {
+                return Err(format!("final-state mismatch for basket {basket:?}"));
+            }
+        }
+        println!(
+            "final-state check: served snapshot ({} itemsets, {} rules) byte-identical \
+             to a from-scratch mine of the final {} transactions",
+            served.n_itemsets(),
+            served.n_rules(),
+            final_db.len(),
+        );
     }
     Ok(())
 }
@@ -570,6 +632,18 @@ mod tests {
             let f = flags(&bad).unwrap();
             assert!(experiment_config(&f).is_err(), "{bad:?} must be rejected");
         }
+    }
+
+    #[test]
+    fn refresh_mode_and_deadline_flags_apply() {
+        let f = flags(&["--refresh-mode", "incremental", "--deadline-ms", "250"]).unwrap();
+        let cfg = experiment_config(&f).unwrap();
+        assert!(cfg.incremental.enabled);
+        assert_eq!(cfg.serve.deadline_ms, 250);
+        let f = flags(&["--refresh-mode", "full"]).unwrap();
+        assert!(!experiment_config(&f).unwrap().incremental.enabled);
+        let f = flags(&["--refresh-mode", "magic"]).unwrap();
+        assert!(experiment_config(&f).is_err());
     }
 
     #[test]

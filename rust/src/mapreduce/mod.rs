@@ -24,3 +24,68 @@ pub mod sim;
 pub use app::MapReduceApp;
 pub use runner::{JobConfig, JobError, JobRunner, JobStats, MapOutputs};
 pub use sim::{SimJobSpec, SimMapTask, SimReport, Simulator};
+
+use crate::cluster::ClusterConfig;
+use crate::data::split::plan_splits;
+use crate::data::TransactionDb;
+use crate::dfs::{Dfs, DfsError};
+
+/// What a one-shot ad-hoc job can fail with: block placement or job
+/// execution (the coordinator's `MineError` wraps the same pair).
+#[derive(Debug)]
+pub enum AdhocJobError {
+    Dfs(DfsError),
+    Job(JobError),
+}
+
+impl std::fmt::Display for AdhocJobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Dfs(e) => write!(f, "dfs: {e}"),
+            Self::Job(e) => write!(f, "job: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for AdhocJobError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Dfs(e) => Some(e),
+            Self::Job(e) => Some(e),
+        }
+    }
+}
+
+impl From<DfsError> for AdhocJobError {
+    fn from(e: DfsError) -> Self {
+        Self::Dfs(e)
+    }
+}
+
+impl From<JobError> for AdhocJobError {
+    fn from(e: JobError) -> Self {
+        Self::Job(e)
+    }
+}
+
+/// Run one app over an ad-hoc database outside the coordinator's level
+/// loop: plan splits, place them in a fresh DFS, execute to completion.
+/// An empty database runs zero map tasks and returns an empty output.
+///
+/// This is the one-shot wiring the incremental subsystem's delta jobs
+/// (`incremental::delta_job`) use — plan, place, run, discard. Repeated
+/// scans over the same database belong on `coordinator::ExactCounter`
+/// instead, which keeps the placement across jobs.
+pub fn run_adhoc<A: MapReduceApp>(
+    cluster: &ClusterConfig,
+    db: &TransactionDb,
+    split_tx: usize,
+    app: &A,
+    cfg: &JobConfig,
+) -> Result<(Vec<(A::K, A::V)>, JobStats), AdhocJobError> {
+    let splits = plan_splits(db, split_tx);
+    let mut dfs = Dfs::new(cluster);
+    let blocks = dfs.write_splits(&splits)?;
+    let runner = JobRunner::new(cluster, &dfs, &blocks);
+    Ok(runner.run(app, db, &splits, cfg)?)
+}

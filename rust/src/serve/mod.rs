@@ -45,6 +45,9 @@ pub struct ServeConfig {
     pub refresh_tx: usize,
     /// Micro-batch refresh cycles to run (0 = serve a frozen snapshot).
     pub refresh_batches: usize,
+    /// Queue deadline in milliseconds: requests older than this when a
+    /// worker dequeues them are shed (0 = no deadline).
+    pub deadline_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -56,6 +59,7 @@ impl Default for ServeConfig {
             min_confidence: 0.6,
             refresh_tx: 500,
             refresh_batches: 0,
+            deadline_ms: 0,
         }
     }
 }

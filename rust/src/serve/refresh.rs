@@ -5,30 +5,66 @@
 //!
 //! 1. appends a delta of transactions to the [`TransactionDb`]
 //!    ([`TransactionDb::append`]);
-//! 2. re-mines the whole database in the background through the existing
-//!    Map/Reduce driver ([`MrApriori`], pipelined config welcome) — the
-//!    snapshot in service is untouched while this runs;
+//! 2. refreshes the mining output in the background — the snapshot in
+//!    service is untouched while this runs. Two strategies:
+//!    * **full** ([`RefreshMode::Full`], the default): re-mine the whole
+//!      union database through the existing Map/Reduce driver
+//!      ([`MrApriori`], pipelined config welcome);
+//!    * **incremental** ([`RefreshMode::Incremental`]): FUP-style border
+//!      maintenance over a persistent [`MinedState`] — one counting job
+//!      over the delta plus targeted scans for the promoted frontier,
+//!      falling back to a full capture-mine when the frontier trips the
+//!      [`IncrementalConfig`] blowup guard (and on the first cycle,
+//!      which seeds the state);
 //! 3. rebuilds a fresh [`RuleIndex`] from the new [`MiningResult`] and
 //!    rules;
 //! 4. publishes it with one [`SnapshotCell::store`] — readers that
 //!    loaded mid-rebuild keep the old generation, the next load sees the
 //!    new one, and nothing in between exists.
 //!
-//! Full re-mining is deliberately the v1 strategy: it reuses the whole
-//! verified mining stack and keeps the served answers byte-identical to a
-//! from-scratch batch run over the union database — the differential
-//! property `benches/ablation_serving.rs` asserts. Delta-aware
-//! incremental mining (FUP-style border maintenance) is a ROADMAP item.
+//! Both strategies publish byte-identical snapshots to a from-scratch
+//! batch run over the union database — `benches/ablation_serving.rs`
+//! asserts it for full mode, `tests/incremental.rs` for incremental mode
+//! across randomized promote/demote churn.
+//!
+//! [`MinedState`]: crate::incremental::MinedState
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-use crate::coordinator::{MineError, MrApriori, RunReport};
+use crate::coordinator::{MineError, MrApriori, RunReport, WorkloadProfile};
 use crate::data::{ItemId, Transaction, TransactionDb};
+use crate::incremental::{DeltaApply, DeltaStats, IncrementalConfig, MinedState};
 use crate::metrics::Timer;
 use crate::util::rng::Xoshiro256;
 
 use super::index::RuleIndex;
 use super::snapshot::SnapshotCell;
+
+/// How a refresh cycle recomputes the mining output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RefreshMode {
+    /// Re-mine the whole union database every cycle (the verified v1
+    /// strategy; refresh latency grows with |D|).
+    #[default]
+    Full,
+    /// FUP-style border maintenance: cost scales with the delta and the
+    /// promoted frontier, with automatic full-re-mine fallback.
+    Incremental,
+}
+
+impl std::str::FromStr for RefreshMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "full" => Ok(Self::Full),
+            "incremental" => Ok(Self::Incremental),
+            other => Err(format!(
+                "unknown refresh mode '{other}' (want full|incremental)"
+            )),
+        }
+    }
+}
 
 /// What one completed refresh cycle did.
 #[derive(Debug, Clone)]
@@ -42,16 +78,26 @@ pub struct RefreshStats {
     /// Frequent itemsets / rules in the new snapshot.
     pub n_frequent: usize,
     pub n_rules: usize,
-    /// Background cost split: full re-mine vs index rebuild.
+    /// Background cost split: mining (full or delta) vs index rebuild.
     pub mine_secs: f64,
     pub build_secs: f64,
+    /// Delta-application accounting when the cycle went through border
+    /// maintenance; `None` for full re-mine cycles (including the
+    /// incremental mode's seed and fallback cycles).
+    pub incremental: Option<DeltaStats>,
+    /// An incremental cycle gave up (frontier blowup) and re-mined.
+    pub fell_back: bool,
 }
 
-/// Owns the mining driver and the confidence floor; stateless across
-/// cycles beyond what lives in the database and the snapshot cell.
+/// Owns the mining driver and the confidence floor. In incremental mode
+/// it also carries the [`MinedState`] across cycles (behind a mutex so
+/// the `&self` API stays shareable with the serving threads; refreshes
+/// are serialized by design, so the lock is uncontended).
 pub struct Refresher {
     driver: MrApriori,
     min_confidence: f64,
+    incremental: IncrementalConfig,
+    state: Mutex<Option<MinedState>>,
 }
 
 impl Refresher {
@@ -60,12 +106,40 @@ impl Refresher {
             (0.0..=1.0).contains(&min_confidence),
             "min_confidence must be in [0, 1]"
         );
-        Self { driver, min_confidence }
+        Self {
+            driver,
+            min_confidence,
+            incremental: IncrementalConfig::default(),
+            state: Mutex::new(None),
+        }
     }
 
-    /// One micro-batch cycle: append, re-mine, rebuild, hot-swap.
-    /// Returns the mining report (the differential tests query its
-    /// `result` directly) alongside the cycle stats.
+    /// Switch to incremental (border-maintenance) refresh with the given
+    /// guard settings (a disabled config keeps full mode). The state
+    /// seeds itself on the first cycle.
+    pub fn with_incremental(mut self, cfg: IncrementalConfig) -> Self {
+        self.incremental = cfg;
+        self
+    }
+
+    /// Derived from the config so the routing flag cannot drift from it.
+    pub fn mode(&self) -> RefreshMode {
+        if self.incremental.enabled {
+            RefreshMode::Incremental
+        } else {
+            RefreshMode::Full
+        }
+    }
+
+    /// A copy of the current mined state (incremental mode only; `None`
+    /// before the first cycle or in full mode). Test/debug hook.
+    pub fn state(&self) -> Option<MinedState> {
+        self.state.lock().unwrap().clone()
+    }
+
+    /// One micro-batch cycle: append, re-mine (or delta-apply), rebuild,
+    /// hot-swap. Returns the mining report (the differential tests query
+    /// its `result` directly) alongside the cycle stats.
     pub fn refresh_once(
         &self,
         db: &mut TransactionDb,
@@ -76,8 +150,12 @@ impl Refresher {
         let (old_len, old_n_items) = (db.len(), db.n_items);
         db.append(delta);
         let mine_timer = Timer::start();
-        let report = match self.driver.mine(db) {
-            Ok(report) => report,
+        let mined = match self.mode() {
+            RefreshMode::Full => self.driver.mine(db).map(|r| (r, None, false)),
+            RefreshMode::Incremental => self.refresh_incremental(db, old_len),
+        };
+        let (report, incremental, fell_back) = match mined {
+            Ok(out) => out,
             Err(e) => {
                 // Roll the append back so a failed cycle leaves the
                 // database matching the still-served snapshot; retrying
@@ -101,8 +179,40 @@ impl Refresher {
             n_rules,
             mine_secs,
             build_secs,
+            incremental,
+            fell_back,
         };
         Ok((report, stats))
+    }
+
+    /// The incremental strategy: delta-apply against the carried state,
+    /// seeding or falling back to a full capture-mine as needed. The
+    /// state is only replaced on success, so an `Err` leaves it
+    /// consistent with the rolled-back database.
+    fn refresh_incremental(
+        &self,
+        db: &TransactionDb,
+        old_len: usize,
+    ) -> Result<(RunReport, Option<DeltaStats>, bool), MineError> {
+        let mut slot = self.state.lock().unwrap();
+        let delta = &db.transactions[old_len..];
+        if let Some(state) = slot.as_mut() {
+            match state.apply_delta(&self.driver, db, delta, &self.incremental)? {
+                DeltaApply::Applied(stats) => {
+                    let report = synthesize_report(state, db);
+                    return Ok((report, Some(stats), false));
+                }
+                DeltaApply::FrontierBlowup { .. } => {
+                    let (report, fresh) = MinedState::capture(&self.driver, db)?;
+                    *slot = Some(fresh);
+                    return Ok((report, None, true));
+                }
+            }
+        }
+        // First cycle: seed the state with a full capture-mine.
+        let (report, fresh) = MinedState::capture(&self.driver, db)?;
+        *slot = Some(fresh);
+        Ok((report, None, false))
     }
 
     /// Run a bounded sequence of micro-batches back-to-back — the
@@ -118,6 +228,24 @@ impl Refresher {
             .into_iter()
             .map(|delta| self.refresh_once(db, delta, cell).map(|(_, s)| s))
             .collect()
+    }
+}
+
+/// A [`RunReport`] for a delta-applied generation: the result comes from
+/// the state (byte-identical `frequent` to a full re-mine), while the
+/// job/profile sections stay empty — no full scan happened, so there is
+/// no replayable workload profile to report.
+fn synthesize_report(state: &MinedState, db: &TransactionDb) -> RunReport {
+    RunReport {
+        result: state.to_result(),
+        jobs: Vec::new(),
+        profile: WorkloadProfile {
+            n_tx: db.len(),
+            db_bytes: db.approx_bytes(),
+            levels: Vec::new(),
+        },
+        wall_secs: 0.0,
+        spill_fraction: 0.0,
     }
 }
 
@@ -246,6 +374,97 @@ mod tests {
         // the pre-swap reader still holds a valid generation-0 snapshot
         assert_eq!(held.n_transactions, 9);
         assert_eq!(idx.n_transactions, 15);
+    }
+
+    #[test]
+    fn refresh_mode_parses_and_defaults_full() {
+        use std::str::FromStr;
+        assert_eq!(RefreshMode::from_str("full").unwrap(), RefreshMode::Full);
+        assert_eq!(
+            RefreshMode::from_str("incremental").unwrap(),
+            RefreshMode::Incremental
+        );
+        assert!(RefreshMode::from_str("magic").is_err());
+        let driver = MrApriori::new(ClusterConfig::standalone(), cfg());
+        assert_eq!(Refresher::new(driver, 0.5).mode(), RefreshMode::Full);
+    }
+
+    #[test]
+    fn incremental_mode_publishes_the_same_snapshot_as_full_remine() {
+        let mut db = textbook_db();
+        let result0 = ClassicalApriori::default().mine(&db, &cfg());
+        let cell = SnapshotCell::new(Arc::new(RuleIndex::build(&result0, 0.3)));
+        let driver = MrApriori::new(ClusterConfig::standalone(), cfg()).with_split_tx(4);
+        let refresher = Refresher::new(driver, 0.3).with_incremental(IncrementalConfig {
+            enabled: true,
+            ..Default::default()
+        });
+        assert_eq!(refresher.mode(), RefreshMode::Incremental);
+        assert!(refresher.state().is_none());
+
+        // cycle 1 seeds the state (full capture-mine, no delta stats)
+        let (r1, s1) = refresher
+            .refresh_once(&mut db, synth_delta(5, db.n_items, 3), &cell)
+            .unwrap();
+        assert!(s1.incremental.is_none());
+        assert!(!s1.fell_back);
+        assert!(refresher.state().is_some());
+        assert_eq!(
+            r1.result.frequent,
+            ClassicalApriori::default().mine(&db, &cfg()).frequent
+        );
+
+        // cycle 2 applies the delta through border maintenance
+        let (r2, s2) = refresher
+            .refresh_once(&mut db, synth_delta(6, db.n_items, 4), &cell)
+            .unwrap();
+        let inc = s2.incremental.expect("delta-applied cycle");
+        assert_eq!(inc.delta_tx, 6);
+        assert_eq!(inc.n_frequent, r2.result.frequent.len());
+        let full = ClassicalApriori::default().mine(&db, &cfg());
+        assert_eq!(r2.result.frequent, full.frequent);
+        // the published snapshot serves the union generation's rules
+        let rules = generate_rules(&full, 0.3);
+        let idx = cell.load();
+        for basket in [vec![0u32, 1], vec![1, 2], vec![0, 4]] {
+            assert_eq!(
+                render_lines(&idx.recommend(&basket, 5)),
+                render_lines(&reference_recommend(&rules, &basket, 5))
+            );
+        }
+        assert_eq!(cell.generation(), 2);
+    }
+
+    #[test]
+    fn incremental_zero_guard_falls_back_on_a_promoted_frontier() {
+        let mut db = textbook_db();
+        let result0 = ClassicalApriori::default().mine(&db, &cfg());
+        let cell = SnapshotCell::new(Arc::new(RuleIndex::build(&result0, 0.5)));
+        let driver = MrApriori::new(ClusterConfig::standalone(), cfg()).with_split_tx(4);
+        let refresher = Refresher::new(driver, 0.5).with_incremental(IncrementalConfig {
+            enabled: true,
+            max_frontier_blowup: 0.0,
+        });
+        // cycle 1 seeds the state
+        refresher
+            .refresh_once(&mut db, synth_delta(4, db.n_items, 10), &cell)
+            .unwrap();
+        // cycle 2: a delta dominated by a brand-new item makes that item
+        // frequent, minting pair candidates the state has never counted
+        // — a guaranteed nonzero frontier, which a zero blowup guard
+        // must reject in favor of a full re-mine
+        let new_item = db.n_items as u32;
+        let delta: Vec<Transaction> =
+            (0..8).map(|_| Transaction::new([0, new_item])).collect();
+        let (report, stats) = refresher.refresh_once(&mut db, delta, &cell).unwrap();
+        assert!(stats.fell_back, "zero guard must reject the promoted frontier");
+        assert!(stats.incremental.is_none());
+        assert_eq!(
+            report.result.frequent,
+            ClassicalApriori::default().mine(&db, &cfg()).frequent
+        );
+        // the fallback re-seeded the state, ready for the next delta
+        assert_eq!(refresher.state().unwrap().n_transactions, db.len());
     }
 
     #[test]

@@ -30,10 +30,13 @@ use super::index::{render_lines, RuleIndex};
 use super::snapshot::SnapshotCell;
 
 /// Why a request was not (or will never be) answered.
-#[derive(Debug, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ServeError {
     /// Admission control shed the request: the queue was at capacity.
     QueueFull,
+    /// The request aged past the configured deadline while queued; the
+    /// worker shed it instead of computing a stale answer.
+    DeadlineExceeded,
     /// The server is shutting down and accepts no new requests.
     Closed,
     /// The worker disappeared before replying (it panicked).
@@ -44,6 +47,7 @@ impl std::fmt::Display for ServeError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Self::QueueFull => write!(f, "request rejected: queue at capacity"),
+            Self::DeadlineExceeded => write!(f, "request shed: deadline exceeded in queue"),
             Self::Closed => write!(f, "server is shut down"),
             Self::Lost => write!(f, "worker dropped the request"),
         }
@@ -146,26 +150,38 @@ impl QueryResponse {
 /// A submitted request's reply handle.
 #[derive(Debug)]
 pub struct QueryTicket {
-    rx: mpsc::Receiver<QueryResponse>,
+    rx: mpsc::Receiver<Result<QueryResponse, ServeError>>,
 }
 
 impl QueryTicket {
-    /// Block until the worker answers.
+    /// Block until the worker answers (or sheds the request — a queued
+    /// request that outlives the deadline waits out as
+    /// [`ServeError::DeadlineExceeded`]).
     pub fn wait(self) -> Result<QueryResponse, ServeError> {
-        self.rx.recv().map_err(|_| ServeError::Lost)
+        self.rx.recv().map_err(|_| ServeError::Lost)?
     }
 }
 
-/// Worker-pool sizing and admission bounds.
+/// Worker-pool sizing, admission bounds, and the queue deadline.
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
     pub workers: usize,
     pub queue_depth: usize,
+    /// Shed a request that has waited in the queue at least this long by
+    /// the time a worker picks it up — bounded staleness under overload,
+    /// counted separately from queue-overflow sheds. `None` disables it;
+    /// `Some(Duration::ZERO)` sheds unconditionally (the comparison is
+    /// inclusive, so it cannot depend on clock granularity).
+    pub deadline: Option<std::time::Duration>,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { workers: 2, queue_depth: 64 }
+        Self {
+            workers: 2,
+            queue_depth: 64,
+            deadline: None,
+        }
     }
 }
 
@@ -173,7 +189,12 @@ impl Default for ServeOptions {
 #[derive(Debug, Clone)]
 pub struct ServerStats {
     pub served: u64,
+    /// Overflow sheds: admission control turned the request away.
     pub rejected: u64,
+    /// Deadline sheds: admitted, but aged out before a worker got to it.
+    /// Never recorded into the latency histogram — tails describe
+    /// answered requests only.
+    pub deadline_shed: u64,
     pub latency: HistogramSnapshot,
 }
 
@@ -181,14 +202,16 @@ struct Job {
     basket: Vec<ItemId>,
     top_k: usize,
     enqueued: Instant,
-    reply: mpsc::Sender<QueryResponse>,
+    reply: mpsc::Sender<Result<QueryResponse, ServeError>>,
 }
 
 struct ServerInner {
     snapshot: Arc<SnapshotCell<RuleIndex>>,
     queue: BoundedQueue<Job>,
+    deadline: Option<std::time::Duration>,
     served: AtomicU64,
     rejected: AtomicU64,
+    deadline_shed: AtomicU64,
     latency: LatencyHistogram,
 }
 
@@ -206,8 +229,10 @@ impl RuleServer {
         let inner = Arc::new(ServerInner {
             snapshot,
             queue: BoundedQueue::new(opts.queue_depth),
+            deadline: opts.deadline,
             served: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            deadline_shed: AtomicU64::new(0),
             latency: LatencyHistogram::new(),
         });
         let workers = (0..opts.workers)
@@ -248,6 +273,7 @@ impl RuleServer {
         ServerStats {
             served: self.inner.served.load(Ordering::Relaxed),
             rejected: self.inner.rejected.load(Ordering::Relaxed),
+            deadline_shed: self.inner.deadline_shed.load(Ordering::Relaxed),
             latency: self.inner.latency.snapshot(),
         }
     }
@@ -274,6 +300,19 @@ impl Drop for RuleServer {
 
 fn worker_loop(inner: &ServerInner) {
     while let Some(job) = inner.queue.pop() {
+        // Deadline check at dequeue: under overload a request can age out
+        // while queued; answering it would spend worker time on a reply
+        // the client has likely abandoned. Shed it (counted apart from
+        // overflow sheds; no latency sample — tails are answers only).
+        if let Some(deadline) = inner.deadline {
+            // Inclusive: Instant is only guaranteed non-decreasing, so a
+            // zero deadline must not hinge on elapsed() being nonzero.
+            if job.enqueued.elapsed() >= deadline {
+                inner.deadline_shed.fetch_add(1, Ordering::Relaxed);
+                let _ = job.reply.send(Err(ServeError::DeadlineExceeded));
+                continue;
+            }
+        }
         // One Arc clone per request; a concurrent refresh never blocks
         // this (SnapshotCell's critical section is the clone itself).
         let (index, generation) = inner.snapshot.load_with_generation();
@@ -281,7 +320,7 @@ fn worker_loop(inner: &ServerInner) {
         inner.latency.record(job.enqueued.elapsed());
         inner.served.fetch_add(1, Ordering::Relaxed);
         // A dropped ticket just means the client stopped waiting.
-        let _ = job.reply.send(QueryResponse { generation, recommendations });
+        let _ = job.reply.send(Ok(QueryResponse { generation, recommendations }));
     }
 }
 
@@ -374,7 +413,7 @@ mod tests {
         let (cell, _) = textbook_index(0.0);
         let server = Arc::new(RuleServer::start(
             cell,
-            ServeOptions { workers: 3, queue_depth: 128 },
+            ServeOptions { workers: 3, queue_depth: 128, ..Default::default() },
         ));
         let clients: Vec<_> = (0..4)
             .map(|c| {
@@ -399,6 +438,48 @@ mod tests {
         let stats = server.stats();
         assert_eq!(stats.served, 200);
         assert_eq!(stats.latency.count(), 200);
+    }
+
+    #[test]
+    fn zero_deadline_sheds_every_request_and_counts_separately() {
+        let (cell, _) = textbook_index(0.3);
+        let server = RuleServer::start(
+            cell,
+            ServeOptions {
+                workers: 2,
+                queue_depth: 16,
+                deadline: Some(std::time::Duration::ZERO),
+            },
+        );
+        for _ in 0..5 {
+            assert_eq!(server.query(&[0, 1], 5), Err(ServeError::DeadlineExceeded));
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 0);
+        assert_eq!(stats.rejected, 0); // admission accepted everything
+        assert_eq!(stats.deadline_shed, 5); // ...the workers shed it all
+        assert_eq!(stats.latency.count(), 0); // sheds leave no samples
+    }
+
+    #[test]
+    fn generous_deadline_changes_nothing_under_light_load() {
+        let (cell, rules) = textbook_index(0.3);
+        let server = RuleServer::start(
+            cell,
+            ServeOptions {
+                workers: 2,
+                queue_depth: 16,
+                deadline: Some(std::time::Duration::from_secs(30)),
+            },
+        );
+        let basket = vec![0u32, 1];
+        let resp = server.query(&basket, 5).unwrap();
+        assert_eq!(
+            resp.render(),
+            render_lines(&reference_recommend(&rules, &basket, 5))
+        );
+        let stats = server.shutdown();
+        assert_eq!((stats.served, stats.deadline_shed), (1, 0));
     }
 
     #[test]

@@ -1,0 +1,215 @@
+//! Differential invariants of the incremental mining subsystem: after
+//! every delta in a randomized sequence, the maintained [`MinedState`]
+//! must be byte-identical to a from-scratch full re-mine of the union
+//! database — same frequent itemsets, same exact supports, same derived
+//! rules — and the negative-border invariant must hold, through both
+//! border promotions and frequent-itemset demotions (a rising absolute
+//! threshold under noise deltas demotes; pattern-heavy deltas promote).
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use mr_apriori::data::Transaction;
+use mr_apriori::incremental::verify_invariant;
+use mr_apriori::prelude::*;
+use mr_apriori::util::proptest::check;
+use mr_apriori::util::rng::Xoshiro256;
+
+const MIN_SUPPORT: f64 = 0.2;
+const MIN_CONFIDENCE: f64 = 0.5;
+
+fn mine_cfg() -> AprioriConfig {
+    AprioriConfig { min_support: MIN_SUPPORT, max_k: 0 }
+}
+
+fn driver() -> MrApriori {
+    MrApriori::new(ClusterConfig::standalone(), mine_cfg()).with_split_tx(16)
+}
+
+/// Small skewed base: low item ids are much more common, so the base
+/// generation has real frequent structure to promote against.
+fn base_db() -> TransactionDb {
+    let mut rng = Xoshiro256::seed_from_u64(0xBA5E_D0);
+    let txs: Vec<Transaction> = (0..40)
+        .map(|_| {
+            let len = rng.range_usize(2, 5);
+            Transaction::new((0..len).map(|_| {
+                let a = rng.gen_range(10) as u32;
+                let b = rng.gen_range(10) as u32;
+                a.min(b) // skew toward low ids
+            }))
+        })
+        .collect();
+    TransactionDb::new(txs)
+}
+
+/// One randomized delta batch: pattern-heavy (promotes), uniform noise
+/// over a slightly larger universe (raises the threshold -> demotes,
+/// and can introduce new item ids), or near-empty.
+fn gen_delta(rng: &mut Xoshiro256) -> Vec<Transaction> {
+    match rng.gen_range(3) {
+        0 => {
+            let pattern: Vec<u32> = {
+                let len = rng.range_usize(2, 4);
+                (0..len).map(|_| rng.gen_range(4) as u32).collect()
+            };
+            (0..rng.range_usize(2, 7))
+                .map(|_| {
+                    let mut items = pattern.clone();
+                    items.push(rng.gen_range(10) as u32);
+                    Transaction::new(items)
+                })
+                .collect()
+        }
+        1 => (0..rng.range_usize(2, 9))
+            .map(|_| {
+                let len = rng.range_usize(1, 5);
+                Transaction::new((0..len).map(|_| rng.gen_range(12) as u32))
+            })
+            .collect(),
+        _ => (0..rng.range_usize(0, 2))
+            .map(|_| Transaction::new([rng.gen_range(12) as u32]))
+            .collect(),
+    }
+}
+
+#[test]
+fn prop_incremental_state_equals_full_remine_after_every_delta() {
+    let driver = driver();
+    let base = base_db();
+    // churn accounting across all cases: the sweep must exercise both
+    // sides of the border, and at least some deltas must take the
+    // incremental (non-fallback) path for the property to mean anything
+    let promoted = RefCell::new(0usize);
+    let demoted = RefCell::new(0usize);
+    let applied = RefCell::new(0usize);
+    check(
+        "incremental MinedState == full re-mine across delta sequences",
+        0x1CF0,
+        20,
+        |rng| (0..rng.range_usize(1, 5)).map(|_| gen_delta(rng)).collect::<Vec<_>>(),
+        |batches| {
+            let mut db = base.clone();
+            let (_, mut state) =
+                MinedState::capture(&driver, &db).map_err(|e| e.to_string())?;
+            for (gen, delta) in batches.iter().enumerate() {
+                db.append(delta.clone());
+                let guard = IncrementalConfig { enabled: true, ..Default::default() };
+                match state
+                    .apply_delta(&driver, &db, delta, &guard)
+                    .map_err(|e| e.to_string())?
+                {
+                    DeltaApply::Applied(stats) => {
+                        *promoted.borrow_mut() += stats.promoted;
+                        *demoted.borrow_mut() += stats.demoted;
+                        *applied.borrow_mut() += 1;
+                    }
+                    DeltaApply::FrontierBlowup { .. } => {
+                        let (_, fresh) =
+                            MinedState::capture(&driver, &db).map_err(|e| e.to_string())?;
+                        state = fresh;
+                    }
+                }
+                let full = ClassicalApriori::default().mine(&db, &mine_cfg());
+                let incremental = state.to_result();
+                if incremental.frequent != full.frequent {
+                    return Err(format!(
+                        "generation {gen}: {} incremental vs {} full itemsets (or supports \
+                         differ)",
+                        incremental.frequent.len(),
+                        full.frequent.len()
+                    ));
+                }
+                let inc_rules = generate_rules(&incremental, MIN_CONFIDENCE);
+                let full_rules = generate_rules(&full, MIN_CONFIDENCE);
+                if render_lines(&inc_rules) != render_lines(&full_rules) {
+                    return Err(format!("generation {gen}: derived rules differ"));
+                }
+                verify_invariant(&state, &db)
+                    .map_err(|e| format!("generation {gen}: border invariant: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+    assert!(*applied.borrow() > 0, "no delta took the incremental path");
+    assert!(*promoted.borrow() > 0, "sweep never promoted a border itemset");
+    assert!(*demoted.borrow() > 0, "sweep never demoted a frequent itemset");
+}
+
+#[test]
+fn incremental_refresher_serves_byte_identical_answers_across_generations() {
+    // The serving-layer integration: an incremental-mode Refresher must
+    // publish snapshots whose answers are byte-identical to the direct
+    // generate_rules path over a from-scratch mine — the same check the
+    // full-mode serving tests pin.
+    let mut db = QuestGenerator::new(QuestParams::goswami_2k()).generate();
+    let cfg = AprioriConfig { min_support: 0.05, max_k: 3 };
+    let result0 = ClassicalApriori::default().mine(&db, &cfg);
+    let cell = Arc::new(SnapshotCell::new(Arc::new(RuleIndex::build(&result0, 0.4))));
+
+    let driver = MrApriori::new(ClusterConfig::fhssc(2), cfg.clone()).with_split_tx(200);
+    let refresher = Refresher::new(driver, 0.4).with_incremental(IncrementalConfig {
+        enabled: true,
+        ..Default::default()
+    });
+    assert_eq!(refresher.mode(), RefreshMode::Incremental);
+
+    let mut saw_delta_applied = false;
+    for round in 0..3u64 {
+        let delta = synth_delta(120, db.n_items, 40 + round);
+        let (report, stats) = refresher.refresh_once(&mut db, delta, &cell).unwrap();
+        if let Some(inc) = &stats.incremental {
+            saw_delta_applied = true;
+            // the blowup guard bounds full-db recounts on every applied
+            // cycle: at most max_frontier_blowup (1.0) x the tracked set
+            assert!(
+                inc.frontier_recounted <= inc.tracked.max(1),
+                "frontier {} vs {} tracked",
+                inc.frontier_recounted,
+                inc.tracked
+            );
+        }
+        let full = ClassicalApriori::default().mine(&db, &cfg);
+        assert_eq!(report.result.frequent, full.frequent, "round {round}");
+        let rules = generate_rules(&full, 0.4);
+        let idx = cell.load();
+        let mut rng = Xoshiro256::seed_from_u64(7 + round);
+        for _ in 0..40 {
+            let len = rng.range_usize(1, 5);
+            let basket: Vec<u32> = (0..len).map(|_| rng.gen_range(120) as u32).collect();
+            assert_eq!(
+                render_lines(&idx.recommend(&basket, 5)),
+                render_lines(&reference_recommend(&rules, &basket, 5)),
+                "round {round}, basket {basket:?}"
+            );
+        }
+        // state stays exact after each generation (oracle-checked)
+        verify_invariant(&refresher.state().expect("seeded"), &db).unwrap();
+    }
+    assert!(saw_delta_applied, "at least one cycle must take the delta path");
+    assert_eq!(cell.generation(), 3);
+}
+
+#[test]
+fn failed_incremental_cycle_rolls_the_database_back() {
+    // Same rollback contract the full mode has: an Err leaves the db (and
+    // the carried state) describing the still-served snapshot. Force the
+    // error with a poisoned cluster: zero reducers make every job fail.
+    let mut db = base_db();
+    let cfg = mine_cfg();
+    let bad_driver = MrApriori::new(ClusterConfig::standalone(), cfg.clone())
+        .with_job(JobConfig { n_reducers: 0, ..Default::default() })
+        .with_split_tx(16);
+    let result0 = ClassicalApriori::default().mine(&db, &cfg);
+    let cell = SnapshotCell::new(Arc::new(RuleIndex::build(&result0, 0.4)));
+    let refresher = Refresher::new(bad_driver, 0.4).with_incremental(IncrementalConfig {
+        enabled: true,
+        ..Default::default()
+    });
+    let before_len = db.len();
+    let delta = synth_delta(10, db.n_items, 1);
+    assert!(refresher.refresh_once(&mut db, delta, &cell).is_err());
+    assert_eq!(db.len(), before_len);
+    assert!(refresher.state().is_none(), "failed seed must not install state");
+    assert_eq!(cell.generation(), 0);
+}

@@ -30,7 +30,7 @@ fn prop_served_answers_equal_direct_generate_rules() {
     let cell = Arc::new(SnapshotCell::new(Arc::new(RuleIndex::build(&result, 0.4))));
     let server = RuleServer::start(
         Arc::clone(&cell),
-        ServeOptions { workers: 2, queue_depth: 32 },
+        ServeOptions { workers: 2, queue_depth: 32, ..Default::default() },
     );
     check(
         "serve == direct over random baskets",
@@ -101,7 +101,7 @@ fn concurrent_load_across_swaps_sees_only_published_generations() {
     let cell = Arc::new(SnapshotCell::new(Arc::new(RuleIndex::build(&result0, 0.4))));
     let server = Arc::new(RuleServer::start(
         Arc::clone(&cell),
-        ServeOptions { workers: 3, queue_depth: 64 },
+        ServeOptions { workers: 3, queue_depth: 64, ..Default::default() },
     ));
 
     // precompute every generation's direct answers
