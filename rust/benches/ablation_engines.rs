@@ -1,23 +1,59 @@
 //! Ablation A1: candidate-matcher engines on the level-2 counting hot
-//! path — hash tree vs trie vs naive scan vs the Pallas/PJRT tensor
-//! engine (when artifacts are built). Reports per-call counting time on
-//! one map-split worth of transactions across candidate-set widths.
+//! path — hash tree vs trie vs the vertical TID-bitset engine vs naive
+//! scan vs the Pallas/PJRT tensor engine (when artifacts are built).
+//! Reports per-call counting time on one map-split worth of transactions
+//! across candidate-set widths, plus a batched two-level shared-scan row.
+//!
+//! Run with `--quick` for the CI bench smoke: a smaller deterministic
+//! workload whose results land in `BENCH_engines.json` (override the
+//! directory with `BENCH_OUT_DIR`) — one row per engine with wall-clock,
+//! scan counts and peak index bytes, so the perf trajectory is tracked
+//! per push. Inline assertions prove every engine agrees with the naive
+//! oracle at every width, that `engine = vertical` produces byte-identical
+//! `MiningResult`s to hash-tree on the classical, pipelined and
+//! incremental mining paths, and that vertical beats hash-tree on this
+//! dense synthetic workload.
 
 use std::time::Instant;
 
 use mr_apriori::apriori::candidates;
 use mr_apriori::prelude::*;
 use mr_apriori::runtime::TensorService;
+use mr_apriori::util::json::Json;
+
+/// One engine's measured row for `BENCH_engines.json`.
+struct EngineRow {
+    name: &'static str,
+    /// Per-width best-of-iters count() wall-clock, ms (aligned with
+    /// `widths`; minimum is robust to CI runner noise).
+    wall_ms: Vec<f64>,
+    /// Batched two-level shared-scan wall-clock, ms.
+    batch_ms: f64,
+    /// Logical passes over the split during the timed sections.
+    scans: usize,
+    /// Peak counting-structure footprint for the widest candidate set
+    /// (measured for vertical/tensor; itemset-payload estimate for the
+    /// pointer-based matchers).
+    peak_index_bytes: usize,
+}
 
 fn main() {
-    println!("== Ablation A1: support-count engines ==\n");
-    // A 64-item dictionary so the tensor small-variant fits directly.
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (n_tx, split_len, iters) = if quick { (600, 384, 3) } else { (1_000, 512, 5) };
+    println!(
+        "== Ablation A1: support-count engines{} ==\n",
+        if quick { " (quick mode)" } else { "" }
+    );
+
+    // A 64-item dictionary so the tensor small-variant fits directly —
+    // and the dense synthetic workload the vertical engine's bitset rows
+    // are built for.
     let db = QuestGenerator::new(QuestParams {
         n_items: 64,
-        ..QuestParams::dense(1_000)
+        ..QuestParams::dense(n_tx)
     })
     .generate();
-    let split = &db.transactions[..512];
+    let split = &db.transactions[..split_len];
 
     // Level-2 candidates from the actual frequent items.
     let cfg = AprioriConfig { min_support: 0.05, max_k: 1 };
@@ -32,9 +68,10 @@ fn main() {
     );
 
     let tensor_service = TensorService::start_default().ok();
-    let mut engines: Vec<(&str, Box<dyn SupportEngine>)> = vec![
+    let mut engines: Vec<(&'static str, Box<dyn SupportEngine>)> = vec![
         ("hash-tree", build_engine(EngineKind::HashTree, None)),
         ("trie", build_engine(EngineKind::Trie, None)),
+        ("vertical", build_engine(EngineKind::Vertical, None)),
         ("naive", build_engine(EngineKind::Naive, None)),
     ];
     if let Some(svc) = &tensor_service {
@@ -49,7 +86,10 @@ fn main() {
         .filter(|&w| w <= all_c2.len())
         .collect();
     let mut table = BenchTable::new(
-        "A1 — counting time (ms) vs candidate count, one 512-tx split",
+        format!(
+            "A1 — counting time (ms) vs candidate count, one {}-tx split",
+            split.len()
+        ),
         "candidates",
         widths.iter().map(|&w| w as f64).collect(),
     );
@@ -63,22 +103,178 @@ fn main() {
         })
         .collect();
 
+    // Batched two-level groups for the shared-scan row: the widest c2
+    // slice plus the level-3 candidates it generates.
+    let batch_c2 = all_c2[..widths.last().copied().unwrap_or(all_c2.len())].to_vec();
+    let batch_c3 = candidates::generate(&batch_c2);
+    let groups = vec![batch_c2.clone(), batch_c3.clone()];
+    let batch_reference: Vec<Vec<u64>> = groups
+        .iter()
+        .map(|g| {
+            build_engine(EngineKind::Naive, None)
+                .count(split, g, db.n_items)
+                .unwrap()
+        })
+        .collect();
+
+    let mut rows: Vec<EngineRow> = Vec::new();
     for (name, engine) in &engines {
         let mut times = Vec::new();
+        let mut scans = 0usize;
         for (wi, &w) in widths.iter().enumerate() {
             let cands = &all_c2[..w];
             // warmup + correctness check against the naive oracle
             let counts = engine.count(split, cands, db.n_items).unwrap();
             assert_eq!(counts, reference[wi], "{name} wrong at width {w}");
-            let iters = 5;
-            let t0 = Instant::now();
+            // Best-of-N: the minimum is robust to scheduler noise on
+            // shared CI runners, where this binary gates the push.
+            let mut best = f64::INFINITY;
             for _ in 0..iters {
+                let t0 = Instant::now();
                 std::hint::black_box(engine.count(split, cands, db.n_items).unwrap());
+                best = best.min(t0.elapsed().as_secs_f64() * 1e3);
             }
-            times.push(t0.elapsed().as_secs_f64() * 1e3 / iters as f64);
+            scans += iters; // one pass over the split per count() call
+            times.push(best);
         }
+
+        // Shared scan: both levels in one pass over the split.
+        let t0 = Instant::now();
+        let batched = engine.count_batch(split, &groups, db.n_items).unwrap();
+        let batch_ms = t0.elapsed().as_secs_f64() * 1e3;
+        scans += 1;
+        assert_eq!(batched, batch_reference, "{name} wrong on the batched scan");
+
+        let widest = widths.last().copied().unwrap_or(0);
+        let peak_index_bytes = match *name {
+            "vertical" => {
+                VerticalIndex::build(&FlatBlock::from_transactions(split, db.n_items)).bytes()
+            }
+            "tensor" => BitmapBlock::encode(split, db.n_items, 256)
+                .map(|b| b.bytes())
+                .unwrap_or(0),
+            // Pointer-based matchers: itemset payload + per-candidate
+            // node overhead estimate (they expose no exact footprint).
+            "hash-tree" | "trie" => all_c2[..widest]
+                .iter()
+                .map(|c| c.len() * 4 + 16)
+                .sum(),
+            _ => 0,
+        };
+        rows.push(EngineRow {
+            name: *name,
+            wall_ms: times.clone(),
+            batch_ms,
+            scans,
+            peak_index_bytes,
+        });
         table.push_series(Series::new(*name, times));
     }
     table.emit();
-    println!("all engines agree with the naive oracle at every width");
+    println!("all engines agree with the naive oracle at every width (batched scan included)");
+
+    // -- the headline comparison: vertical must beat hash-tree on this
+    //    dense workload, per width-summed wall-clock --
+    let total = |n: &str| -> f64 {
+        rows.iter()
+            .find(|r| r.name == n)
+            .map(|r| r.wall_ms.iter().sum())
+            .expect("row present")
+    };
+    let (ht, vert) = (total("hash-tree"), total("vertical"));
+    println!(
+        "\nvertical {:.3} ms vs hash-tree {:.3} ms across widths ({:.1}x)",
+        vert,
+        ht,
+        ht / vert.max(1e-9)
+    );
+    assert!(
+        vert < ht,
+        "vertical ({vert:.3} ms) must beat hash-tree ({ht:.3} ms) on the dense workload"
+    );
+
+    // -- inline path equivalence: classical, pipelined, incremental --
+    let mine_cfg = AprioriConfig { min_support: 0.05, max_k: 4 };
+    let driver = |kind: EngineKind| {
+        MrApriori::new(ClusterConfig::fhssc(2), mine_cfg.clone())
+            .with_engine(build_engine(kind, None))
+            .with_split_tx(150)
+    };
+    let base = driver(EngineKind::HashTree).mine(&db).unwrap();
+    let sync = driver(EngineKind::Vertical).mine(&db).unwrap();
+    assert_eq!(
+        base.result.frequent, sync.result.frequent,
+        "vertical diverged on the classical path"
+    );
+    let piped = driver(EngineKind::Vertical)
+        .with_pipeline(PipelineConfig::pipelined())
+        .mine(&db)
+        .unwrap();
+    assert_eq!(
+        base.result.frequent, piped.result.frequent,
+        "vertical diverged on the pipelined path"
+    );
+    let mut inc_db = TransactionDb::new(db.transactions[..n_tx / 2].to_vec());
+    let vertical_driver = driver(EngineKind::Vertical);
+    let (_, mut state) = MinedState::capture(&vertical_driver, &inc_db).unwrap();
+    let delta = synth_delta(60, inc_db.n_items, 0xA1);
+    inc_db.append(delta.clone());
+    if let DeltaApply::FrontierBlowup { .. } = state
+        .apply_delta(&vertical_driver, &inc_db, &delta, &IncrementalConfig::default())
+        .unwrap()
+    {
+        let (_, fresh) = MinedState::capture(&vertical_driver, &inc_db).unwrap();
+        state = fresh;
+    }
+    let inc_base = driver(EngineKind::HashTree).mine(&inc_db).unwrap();
+    assert_eq!(
+        state.to_result().frequent,
+        inc_base.result.frequent,
+        "vertical diverged on the incremental path"
+    );
+    println!(
+        "engine = vertical byte-identical to hash-tree on classical, pipelined and \
+         incremental paths"
+    );
+
+    // -- BENCH_engines.json: the tracked perf trajectory --
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("engine", Json::str(r.name)),
+                (
+                    "wall_ms",
+                    Json::Arr(r.wall_ms.iter().map(|&t| Json::num(t)).collect()),
+                ),
+                ("total_wall_ms", Json::num(r.wall_ms.iter().sum())),
+                ("batch_ms", Json::num(r.batch_ms)),
+                ("scans", Json::num(r.scans as f64)),
+                ("peak_index_bytes", Json::num(r.peak_index_bytes as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("ablation_engines")),
+        ("mode", Json::str(if quick { "quick" } else { "full" })),
+        ("split_tx", Json::num(split.len() as f64)),
+        ("n_items", Json::num(db.n_items as f64)),
+        (
+            "widths",
+            Json::Arr(widths.iter().map(|&w| Json::num(w as f64)).collect()),
+        ),
+        (
+            "batch_levels",
+            Json::Arr(vec![
+                Json::num(batch_c2.len() as f64),
+                Json::num(batch_c3.len() as f64),
+            ]),
+        ),
+        ("vertical_speedup_vs_hash_tree", Json::num(ht / vert.max(1e-9))),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let dir = std::env::var("BENCH_OUT_DIR").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&dir).join("BENCH_engines.json");
+    std::fs::write(&path, format!("{doc}\n")).expect("write BENCH_engines.json");
+    println!("wrote {}", path.display());
 }

@@ -15,21 +15,13 @@ use super::{AprioriConfig, Itemset, LevelStats, MiningResult};
 /// Sorted transaction-id list.
 type TidSet = Vec<u32>;
 
-/// Sorted-merge intersection.
+/// Tidset intersection through the shared galloping primitive
+/// ([`crate::data::intersect_sorted_into`]) — the same code the vertical
+/// engine's sparse TID index intersects with, so an optimization there
+/// benefits this miner too.
 fn intersect(a: &TidSet, b: &TidSet) -> TidSet {
     let mut out = Vec::with_capacity(a.len().min(b.len()));
-    let (mut i, mut j) = (0, 0);
-    while i < a.len() && j < b.len() {
-        match a[i].cmp(&b[j]) {
-            std::cmp::Ordering::Less => i += 1,
-            std::cmp::Ordering::Greater => j += 1,
-            std::cmp::Ordering::Equal => {
-                out.push(a[i]);
-                i += 1;
-                j += 1;
-            }
-        }
-    }
+    crate::data::intersect_sorted_into(a, b, &mut out);
     out
 }
 

@@ -166,7 +166,7 @@ mod tests {
     use crate::cluster::ClusterConfig;
     use crate::data::split::plan_splits;
     use crate::dfs::Dfs;
-    use crate::engine::{HashTreeEngine, NaiveEngine};
+    use crate::engine::{HashTreeEngine, NaiveEngine, VerticalEngine};
     use crate::mapreduce::{JobConfig, JobRunner};
 
     fn run_app<A: MapReduceApp>(app: &A, n_nodes: usize) -> Vec<(A::K, A::V)> {
@@ -220,7 +220,24 @@ mod tests {
         let f1: Vec<Itemset> = (0..5u32).map(|i| vec![i]).collect();
         let c2 = candidates::generate(&f1);
         let a = run_app(&CandidateCountApp::new(c2.clone(), &HashTreeEngine, 5, 1), 2);
-        let b = run_app(&CandidateCountApp::new(c2, &NaiveEngine, 5, 1), 2);
+        let b = run_app(&CandidateCountApp::new(c2.clone(), &NaiveEngine, 5, 1), 2);
+        let c = run_app(&CandidateCountApp::new(c2, &VerticalEngine, 5, 1), 2);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn batched_job_counts_identically_through_the_vertical_engine() {
+        // The vertical engine's count_batch shares one index build across
+        // both levels of a batched job; the job output must still be
+        // byte-identical to the horizontal matcher's.
+        let f1: Vec<Itemset> = (0..5u32).map(|i| vec![i]).collect();
+        let c2 = candidates::generate(&f1);
+        let c3 = candidates::generate(&c2);
+        let mut mixed = c2;
+        mixed.extend(c3);
+        let a = run_app(&CandidateCountApp::new(mixed.clone(), &HashTreeEngine, 5, 1), 3);
+        let b = run_app(&CandidateCountApp::new(mixed, &VerticalEngine, 5, 1), 3);
         assert_eq!(a, b);
     }
 

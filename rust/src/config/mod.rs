@@ -535,6 +535,14 @@ mod tests {
     }
 
     #[test]
+    fn engine_key_selects_the_vertical_engine() {
+        let cfg = ExperimentConfig::parse("engine = \"vertical\"").unwrap();
+        assert_eq!(cfg.engine, crate::engine::EngineKind::Vertical);
+        // round-trips through the Display name the CLI prints
+        assert_eq!(cfg.engine.to_string(), "vertical");
+    }
+
+    #[test]
     fn unknown_key_rejected() {
         let err = ExperimentConfig::parse("bogus = 1").unwrap_err();
         assert!(matches!(err, ConfigError::BadValue { key, .. } if key == "bogus"));

@@ -1133,11 +1133,13 @@ mod tests {
             .with_split_tx(100)
             .mine(&db)
             .unwrap();
-        let trie = MrApriori::new(ClusterConfig::fhssc(2), cfg)
-            .with_engine(crate::engine::build_engine(EngineKind::Trie, None))
-            .with_split_tx(100)
-            .mine(&db)
-            .unwrap();
-        assert_eq!(base.result.frequent, trie.result.frequent);
+        for kind in [EngineKind::Trie, EngineKind::Vertical] {
+            let alt = MrApriori::new(ClusterConfig::fhssc(2), cfg.clone())
+                .with_engine(crate::engine::build_engine(kind, None))
+                .with_split_tx(100)
+                .mine(&db)
+                .unwrap();
+            assert_eq!(base.result.frequent, alt.result.frequent, "{kind}");
+        }
     }
 }

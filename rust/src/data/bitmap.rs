@@ -9,6 +9,32 @@
 
 use super::{ItemId, Transaction};
 
+/// An item id fell outside the encoder's dictionary width — the caller
+/// failed to project the database before encoding. Typed (rather than a
+/// panic) because the width is a runtime artifact property: a serving
+/// node fed an unprojected delta must surface a counting error, not die.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EncodeError {
+    /// The offending item id.
+    pub item: ItemId,
+    /// The encoder width it did not fit (`items must be < width`).
+    pub width: usize,
+    /// Which matrix was being encoded ("transaction" | "candidate").
+    pub what: &'static str,
+}
+
+impl std::fmt::Display for EncodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} item {} out of encoder width {}",
+            self.what, self.item, self.width
+        )
+    }
+}
+
+impl std::error::Error for EncodeError {}
+
 /// A padded, bitmap-encoded transaction block ready for PJRT upload.
 #[derive(Debug, Clone)]
 pub struct BitmapBlock {
@@ -24,9 +50,13 @@ pub struct BitmapBlock {
 
 impl BitmapBlock {
     /// Encode `transactions` into a block padded up to a multiple of
-    /// `t_pad_to` rows (and at least one tile). Items `>= n_items` panic —
+    /// `t_pad_to` rows (and at least one tile). Items `>= n_items` error —
     /// the caller must have projected the db to the engine's item width.
-    pub fn encode(transactions: &[Transaction], n_items: usize, t_pad_to: usize) -> Self {
+    pub fn encode(
+        transactions: &[Transaction],
+        n_items: usize,
+        t_pad_to: usize,
+    ) -> Result<Self, EncodeError> {
         assert!(t_pad_to > 0);
         let n_live = transactions.len();
         let t_pad = pad_up(n_live.max(1), t_pad_to);
@@ -35,14 +65,13 @@ impl BitmapBlock {
         for (r, t) in transactions.iter().enumerate() {
             mask[r] = 1.0;
             for &item in &t.items {
-                assert!(
-                    (item as usize) < n_items,
-                    "item {item} out of encoder width {n_items}"
-                );
+                if (item as usize) >= n_items {
+                    return Err(EncodeError { item, width: n_items, what: "transaction" });
+                }
                 tx[r * n_items + item as usize] = 1.0;
             }
         }
-        Self { tx, mask, t_pad, n_items, n_live }
+        Ok(Self { tx, mask, t_pad, n_items, n_live })
     }
 
     /// VMEM-style footprint of the block in bytes (f32).
@@ -66,8 +95,13 @@ pub struct CandidateBlock {
 
 impl CandidateBlock {
     /// Encode sorted candidate itemsets, padding up to a multiple of
-    /// `c_pad_to` rows.
-    pub fn encode(candidates: &[Vec<ItemId>], n_items: usize, c_pad_to: usize) -> Self {
+    /// `c_pad_to` rows. Items `>= n_items` error, like
+    /// [`BitmapBlock::encode`].
+    pub fn encode(
+        candidates: &[Vec<ItemId>],
+        n_items: usize,
+        c_pad_to: usize,
+    ) -> Result<Self, EncodeError> {
         assert!(c_pad_to > 0);
         let n_live = candidates.len();
         let c_pad = pad_up(n_live.max(1), c_pad_to);
@@ -79,14 +113,13 @@ impl CandidateBlock {
         for (r, items) in candidates.iter().enumerate() {
             sizes[r] = items.len() as f32;
             for &item in items {
-                assert!(
-                    (item as usize) < n_items,
-                    "candidate item {item} out of encoder width {n_items}"
-                );
+                if (item as usize) >= n_items {
+                    return Err(EncodeError { item, width: n_items, what: "candidate" });
+                }
                 cand[r * n_items + item as usize] = 1.0;
             }
         }
-        Self { cand, sizes, c_pad, n_items, n_live }
+        Ok(Self { cand, sizes, c_pad, n_items, n_live })
     }
 
     pub fn bytes(&self) -> usize {
@@ -144,7 +177,7 @@ mod tests {
 
     #[test]
     fn encode_shapes_and_mask() {
-        let b = BitmapBlock::encode(&[tx(&[0, 2]), tx(&[1])], 4, 8);
+        let b = BitmapBlock::encode(&[tx(&[0, 2]), tx(&[1])], 4, 8).unwrap();
         assert_eq!(b.t_pad, 8);
         assert_eq!(b.n_live, 2);
         assert_eq!(b.tx.len(), 8 * 4);
@@ -155,7 +188,7 @@ mod tests {
 
     #[test]
     fn empty_block_still_one_tile() {
-        let b = BitmapBlock::encode(&[], 4, 8);
+        let b = BitmapBlock::encode(&[], 4, 8).unwrap();
         assert_eq!(b.t_pad, 8);
         assert_eq!(b.n_live, 0);
         assert!(b.mask.iter().all(|&m| m == 0.0));
@@ -163,12 +196,12 @@ mod tests {
 
     #[test]
     fn candidate_padding_is_unmatchable() {
-        let c = CandidateBlock::encode(&[vec![0]], 4, 8);
+        let c = CandidateBlock::encode(&[vec![0]], 4, 8).unwrap();
         assert_eq!(c.c_pad, 8);
         assert_eq!(c.sizes[0], 1.0);
         // padding rows: size 5 (=n_items+1) with all-zero row
         assert!(c.sizes[1..].iter().all(|&s| s == 5.0));
-        let b = BitmapBlock::encode(&[tx(&[0, 1, 2, 3])], 4, 8);
+        let b = BitmapBlock::encode(&[tx(&[0, 1, 2, 3])], 4, 8).unwrap();
         let counts = count_on_host(&b, &c);
         assert_eq!(counts[0], 1);
         assert!(counts[1..].iter().all(|&x| x == 0));
@@ -183,8 +216,8 @@ mod tests {
             tx(&[0, 1, 2, 3]),
         ]);
         let cands = vec![vec![0], vec![0, 2], vec![1, 2], vec![3]];
-        let b = BitmapBlock::encode(&db.transactions, 4, 4);
-        let c = CandidateBlock::encode(&cands, 4, 4);
+        let b = BitmapBlock::encode(&db.transactions, 4, 4).unwrap();
+        let c = CandidateBlock::encode(&cands, 4, 4).unwrap();
         let counts = count_on_host(&b, &c);
         for (i, cand) in cands.iter().enumerate() {
             assert_eq!(counts[i] as usize, db.support(cand), "cand {cand:?}");
@@ -192,8 +225,14 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "out of encoder width")]
-    fn oversized_item_panics() {
-        BitmapBlock::encode(&[tx(&[9])], 4, 4);
+    fn oversized_item_is_a_typed_error_not_a_panic() {
+        let err = BitmapBlock::encode(&[tx(&[9])], 4, 4).unwrap_err();
+        assert_eq!(err, EncodeError { item: 9, width: 4, what: "transaction" });
+        assert!(err.to_string().contains("out of encoder width 4"), "{err}");
+        let err = CandidateBlock::encode(&[vec![2, 7]], 4, 4).unwrap_err();
+        assert_eq!(err, EncodeError { item: 7, width: 4, what: "candidate" });
+        // and it surfaces through the engine error type
+        let engine_err = crate::engine::EngineError::from(err);
+        assert!(engine_err.to_string().contains("bitmap encode"), "{engine_err}");
     }
 }

@@ -1,0 +1,153 @@
+//! Columnar (CSR) transaction block layout — the cache-friendly form of
+//! a map split.
+//!
+//! A `Vec<Transaction>` slice is a pointer chase: every transaction is
+//! its own heap allocation, so a counting inner loop that streams the
+//! whole split touches one allocation per row. [`FlatBlock`] flattens a
+//! split once into two dense arrays — `items` (every item occurrence,
+//! transaction-major) and `offsets` (CSR row starts) — so index builds
+//! and per-transaction scans walk contiguous memory. The vertical
+//! engine ([`crate::engine::VerticalEngine`]) builds its item→TID index
+//! from this layout, and the block's occupancy statistics
+//! ([`density`](FlatBlock::density)) drive its dense/sparse cutover.
+
+use super::{ItemId, Transaction};
+
+/// A flattened transaction block: CSR over item occurrences.
+#[derive(Debug, Clone)]
+pub struct FlatBlock {
+    /// Every item occurrence, transaction-major; row `t` occupies
+    /// `items[offsets[t]..offsets[t+1]]` and inherits the transaction's
+    /// sorted order.
+    items: Vec<ItemId>,
+    /// Row starts, `len() + 1` entries, `offsets[0] == 0`. `u32` keeps
+    /// the block half the size of `usize` offsets; a map split holds
+    /// far fewer than 2^32 item occurrences.
+    offsets: Vec<u32>,
+    /// Dictionary width the block spans: at least the caller's hint,
+    /// grown to cover any item id actually present.
+    n_items: usize,
+}
+
+impl FlatBlock {
+    /// Flatten a transaction slice. `n_items_hint` is the projected
+    /// dictionary width the caller counts over; ids beyond it grow the
+    /// block's width rather than erroring (the naive oracle ignores the
+    /// hint too, and the engines must agree with it byte-for-byte).
+    pub fn from_transactions(txs: &[Transaction], n_items_hint: usize) -> Self {
+        let total: usize = txs.iter().map(|t| t.len()).sum();
+        assert!(
+            total < u32::MAX as usize,
+            "flat block overflows u32 offsets ({total} item occurrences)"
+        );
+        let mut items = Vec::with_capacity(total);
+        let mut offsets = Vec::with_capacity(txs.len() + 1);
+        offsets.push(0u32);
+        let mut n_items = n_items_hint;
+        for t in txs {
+            if let Some(&max) = t.items.last() {
+                n_items = n_items.max(max as usize + 1);
+            }
+            items.extend_from_slice(&t.items);
+            offsets.push(items.len() as u32);
+        }
+        Self { items, offsets, n_items }
+    }
+
+    /// Number of transactions (rows).
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dictionary width the block spans (hint grown to max id + 1).
+    pub fn n_items(&self) -> usize {
+        self.n_items
+    }
+
+    /// Total item occurrences across all rows.
+    pub fn total_items(&self) -> usize {
+        self.items.len()
+    }
+
+    /// One transaction's (sorted) items.
+    pub fn tx(&self, t: usize) -> &[ItemId] {
+        &self.items[self.offsets[t] as usize..self.offsets[t + 1] as usize]
+    }
+
+    /// Iterate rows in transaction order.
+    pub fn iter(&self) -> impl Iterator<Item = &[ItemId]> + '_ {
+        (0..self.len()).map(move |t| self.tx(t))
+    }
+
+    /// Occupancy of the (n_tx × n_items) bit matrix this block describes
+    /// — the vertical engine's dense/sparse cutover signal.
+    pub fn density(&self) -> f64 {
+        let cells = self.len() * self.n_items;
+        if cells == 0 {
+            return 0.0;
+        }
+        self.items.len() as f64 / cells as f64
+    }
+
+    /// Resident size of the flattened arrays in bytes.
+    pub fn bytes(&self) -> usize {
+        (self.items.len() + self.offsets.len()) * std::mem::size_of::<u32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tx(items: &[u32]) -> Transaction {
+        Transaction::new(items.iter().copied())
+    }
+
+    #[test]
+    fn flattens_rows_in_order() {
+        let txs = vec![tx(&[2, 0, 5]), tx(&[]), tx(&[1])];
+        let b = FlatBlock::from_transactions(&txs, 6);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.total_items(), 4);
+        assert_eq!(b.tx(0), &[0, 2, 5]);
+        assert_eq!(b.tx(1), &[] as &[u32]);
+        assert_eq!(b.tx(2), &[1]);
+        let rows: Vec<&[u32]> = b.iter().collect();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0], &[0, 2, 5]);
+    }
+
+    #[test]
+    fn width_grows_past_the_hint() {
+        let b = FlatBlock::from_transactions(&[tx(&[9])], 4);
+        assert_eq!(b.n_items(), 10);
+        // and the hint holds when it already covers the data
+        let b = FlatBlock::from_transactions(&[tx(&[1])], 4);
+        assert_eq!(b.n_items(), 4);
+    }
+
+    #[test]
+    fn empty_block() {
+        let b = FlatBlock::from_transactions(&[], 7);
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 0);
+        assert_eq!(b.n_items(), 7);
+        assert_eq!(b.density(), 0.0);
+        assert_eq!(b.iter().count(), 0);
+    }
+
+    #[test]
+    fn density_and_bytes() {
+        // 2 rows × 4 items, 4 occurrences -> density 0.5
+        let b = FlatBlock::from_transactions(&[tx(&[0, 1, 2]), tx(&[3])], 4);
+        assert_eq!(b.density(), 0.5);
+        assert_eq!(b.bytes(), (4 + 3) * 4);
+        // width-0 hint with empty rows: no cells, density 0
+        let b = FlatBlock::from_transactions(&[tx(&[])], 0);
+        assert_eq!(b.density(), 0.0);
+    }
+}

@@ -1,9 +1,11 @@
 //! Transaction data substrate: item dictionary, transaction database,
 //! IBM Quest-style synthetic workload generator, on-disk `.dat` format,
-//! bitmap block encoding for the tensor engine, and the split planner that
-//! carves a database into HDFS-block-sized map splits.
+//! bitmap block encoding for the tensor engine, the columnar (CSR)
+//! flattened block the vertical engine indexes from, and the split
+//! planner that carves a database into HDFS-block-sized map splits.
 
 pub mod bitmap;
+pub mod columnar;
 pub mod io;
 pub mod quest;
 pub mod split;
@@ -30,6 +32,80 @@ pub fn is_subset(a: &[ItemId], b: &[ItemId]) -> bool {
         return false;
     }
     true
+}
+
+/// First index `>= lo` with `b[idx] >= x` (or `b.len()`), by exponential
+/// probe + binary search — the galloping step that makes skewed-size
+/// sorted-list intersections cost `O(small · log large)`.
+fn gallop(b: &[u32], lo: usize, x: u32) -> usize {
+    if lo >= b.len() || b[lo] >= x {
+        return lo;
+    }
+    // Invariant: b[prev] < x; probe doubles until it overshoots.
+    let mut prev = lo;
+    let mut step = 1usize;
+    loop {
+        let cur = prev + step;
+        if cur >= b.len() {
+            break;
+        }
+        if b[cur] >= x {
+            break;
+        }
+        prev = cur;
+        step *= 2;
+    }
+    let hi = (prev + step).min(b.len());
+    let (mut l, mut r) = (prev + 1, hi);
+    while l < r {
+        let m = l + (r - l) / 2;
+        if b[m] < x {
+            l = m + 1;
+        } else {
+            r = m;
+        }
+    }
+    l
+}
+
+/// Galloping intersection of two sorted `u32` lists into `out`
+/// (cleared). The shared primitive behind the vertical engine's sparse
+/// TID index and [`crate::apriori::intersection::IntersectionApriori`]'s
+/// tidset miner — like [`is_subset`], one copy for every sorted-merge
+/// consumer.
+pub fn intersect_sorted_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+    out.clear();
+    let (small, large) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+    let mut lo = 0usize;
+    for &x in small {
+        lo = gallop(large, lo, x);
+        if lo == large.len() {
+            break;
+        }
+        if large[lo] == x {
+            out.push(x);
+            lo += 1;
+        }
+    }
+}
+
+/// Galloping count-only intersection of two sorted `u32` lists — nothing
+/// is materialized.
+pub fn intersect_sorted_count(a: &[u32], b: &[u32]) -> u64 {
+    let (small, large) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+    let mut count = 0u64;
+    let mut lo = 0usize;
+    for &x in small {
+        lo = gallop(large, lo, x);
+        if lo == large.len() {
+            break;
+        }
+        if large[lo] == x {
+            count += 1;
+            lo += 1;
+        }
+    }
+    count
 }
 
 /// One transaction: a sorted, deduplicated set of item ids.
@@ -183,6 +259,36 @@ mod tests {
         let t = tx(&[]);
         assert!(t.contains_all(&[]));
         assert!(!t.contains_all(&[0]));
+    }
+
+    #[test]
+    fn gallop_finds_lower_bound() {
+        let b = [2u32, 4, 4, 8, 16, 32, 64];
+        assert_eq!(gallop(&b, 0, 1), 0);
+        assert_eq!(gallop(&b, 0, 2), 0);
+        assert_eq!(gallop(&b, 0, 3), 1);
+        assert_eq!(gallop(&b, 0, 9), 4);
+        assert_eq!(gallop(&b, 0, 64), 6);
+        assert_eq!(gallop(&b, 0, 65), 7);
+        assert_eq!(gallop(&b, 3, 4), 3); // lo already at the match stays put
+        assert_eq!(gallop(&[], 0, 5), 0);
+    }
+
+    #[test]
+    fn sorted_intersections_match_sorted_merge() {
+        let a = vec![1u32, 3, 5, 7, 9, 100, 200];
+        let b = vec![3u32, 4, 5, 8, 9, 200, 201];
+        let mut out = Vec::new();
+        intersect_sorted_into(&a, &b, &mut out);
+        assert_eq!(out, vec![3, 5, 9, 200]);
+        assert_eq!(intersect_sorted_count(&a, &b), 4);
+        // skew (galloping path) both ways
+        let big: Vec<u32> = (0..1000).collect();
+        intersect_sorted_into(&[500, 999], &big, &mut out);
+        assert_eq!(out, vec![500, 999]);
+        assert_eq!(intersect_sorted_count(&big, &[0, 1000]), 1);
+        intersect_sorted_into(&[], &big, &mut out);
+        assert!(out.is_empty());
     }
 
     #[test]

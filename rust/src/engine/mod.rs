@@ -2,9 +2,13 @@
 //!
 //! A [`SupportEngine`] answers one question: given a slice of transactions
 //! and a level's candidate itemsets, how many transactions contain each
-//! candidate? Three interchangeable implementations:
+//! candidate? Interchangeable implementations:
 //!
-//! * [`HashTreeEngine`] / [`TrieEngine`] — pure-rust CPU matchers;
+//! * [`HashTreeEngine`] / [`TrieEngine`] — pure-rust horizontal CPU
+//!   matchers (per-transaction structure probes);
+//! * [`VerticalEngine`] — word-parallel vertical counting: one item→TID
+//!   bitset (or sparse TID-list) index per slice, candidates answered by
+//!   row intersection with shared-prefix reuse (see [`vertical`]);
 //! * [`TensorEngine`] — bitmap-encodes the slice and candidates and runs
 //!   the AOT-compiled Pallas kernel through the PJRT runtime (the
 //!   three-layer hot path);
@@ -14,12 +18,16 @@
 //! tasktracker thread (the tensor engine funnels into the PJRT service
 //! thread internally).
 
+pub mod vertical;
+
 use crate::apriori::hash_tree::HashTree;
 use crate::apriori::trie::CandidateTrie;
 use crate::apriori::Itemset;
-use crate::data::bitmap::{BitmapBlock, CandidateBlock};
+use crate::data::bitmap::{BitmapBlock, CandidateBlock, EncodeError};
 use crate::data::Transaction;
 use crate::runtime::{CountRequest, TensorServiceHandle};
+
+pub use vertical::{VerticalEngine, VerticalIndex};
 
 /// Engine selector for configs and CLIs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -27,6 +35,8 @@ pub enum EngineKind {
     #[default]
     HashTree,
     Trie,
+    /// Vertical TID-bitset counting (word-parallel, shared-prefix reuse).
+    Vertical,
     Naive,
     /// The Pallas/PJRT path (requires built artifacts).
     Tensor,
@@ -39,10 +49,11 @@ impl std::str::FromStr for EngineKind {
         match s {
             "hash-tree" | "hashtree" => Ok(Self::HashTree),
             "trie" => Ok(Self::Trie),
+            "vertical" => Ok(Self::Vertical),
             "naive" => Ok(Self::Naive),
             "tensor" => Ok(Self::Tensor),
             other => Err(format!(
-                "unknown engine '{other}' (want hash-tree|trie|naive|tensor)"
+                "unknown engine '{other}' (want hash-tree|trie|vertical|naive|tensor)"
             )),
         }
     }
@@ -54,6 +65,7 @@ impl std::fmt::Display for EngineKind {
         f.write_str(match self {
             Self::HashTree => "hash-tree",
             Self::Trie => "trie",
+            Self::Vertical => "vertical",
             Self::Naive => "naive",
             Self::Tensor => "tensor",
         })
@@ -63,12 +75,16 @@ impl std::fmt::Display for EngineKind {
 #[derive(Debug)]
 pub enum EngineError {
     Tensor(crate::runtime::service::ServiceError),
+    /// Bitmap encoding rejected an item outside the encoder width (the
+    /// caller failed to project the db to the engine's dictionary).
+    Encode(EncodeError),
 }
 
 impl std::fmt::Display for EngineError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Self::Tensor(e) => write!(f, "tensor runtime: {e}"),
+            Self::Encode(e) => write!(f, "bitmap encode: {e}"),
         }
     }
 }
@@ -77,6 +93,7 @@ impl std::error::Error for EngineError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             Self::Tensor(e) => Some(e),
+            Self::Encode(e) => Some(e),
         }
     }
 }
@@ -84,6 +101,12 @@ impl std::error::Error for EngineError {
 impl From<crate::runtime::service::ServiceError> for EngineError {
     fn from(e: crate::runtime::service::ServiceError) -> Self {
         Self::Tensor(e)
+    }
+}
+
+impl From<EncodeError> for EngineError {
+    fn from(e: EncodeError) -> Self {
+        Self::Encode(e)
     }
 }
 
@@ -348,8 +371,8 @@ impl SupportEngine for TensorEngine {
         if candidates.is_empty() {
             return Ok(Vec::new());
         }
-        let block = BitmapBlock::encode(txs, n_items, self.pad_to);
-        let cands = CandidateBlock::encode(candidates, n_items, 64);
+        let block = BitmapBlock::encode(txs, n_items, self.pad_to)?;
+        let cands = CandidateBlock::encode(candidates, n_items, 64)?;
         let counts = self.handle.count(CountRequest {
             graph: "count_split".into(),
             block,
@@ -368,7 +391,7 @@ impl SupportEngine for TensorEngine {
         groups: &[Vec<Itemset>],
         n_items: usize,
     ) -> Result<Vec<Vec<u64>>, EngineError> {
-        let mut block = Some(BitmapBlock::encode(txs, n_items, self.pad_to));
+        let mut block = Some(BitmapBlock::encode(txs, n_items, self.pad_to)?);
         let last = groups.iter().rposition(|g| !g.is_empty());
         groups
             .iter()
@@ -384,7 +407,7 @@ impl SupportEngine for TensorEngine {
                 } else {
                     block.as_ref().expect("not yet taken").clone()
                 };
-                let cands = CandidateBlock::encode(g, n_items, 64);
+                let cands = CandidateBlock::encode(g, n_items, 64)?;
                 let counts = self.handle.count(CountRequest {
                     graph: "count_split".into(),
                     block,
@@ -408,6 +431,7 @@ pub fn build_engine(
     match kind {
         EngineKind::HashTree => Box::new(HashTreeEngine),
         EngineKind::Trie => Box::new(TrieEngine),
+        EngineKind::Vertical => Box::new(VerticalEngine),
         EngineKind::Naive => Box::new(NaiveEngine),
         EngineKind::Tensor => Box::new(TensorEngine::new(
             tensor.expect("tensor engine requires a TensorServiceHandle"),
@@ -452,6 +476,7 @@ mod tests {
         let naive = NaiveEngine.count(&txs, &cands, 60).unwrap();
         assert_eq!(HashTreeEngine.count(&txs, &cands, 60).unwrap(), naive);
         assert_eq!(TrieEngine.count(&txs, &cands, 60).unwrap(), naive);
+        assert_eq!(VerticalEngine.count(&txs, &cands, 60).unwrap(), naive);
     }
 
     #[test]
@@ -493,7 +518,12 @@ mod tests {
     #[test]
     fn empty_candidates_ok() {
         let (txs, _) = sample(30);
-        for e in [EngineKind::HashTree, EngineKind::Trie, EngineKind::Naive] {
+        for e in [
+            EngineKind::HashTree,
+            EngineKind::Trie,
+            EngineKind::Vertical,
+            EngineKind::Naive,
+        ] {
             let engine = build_engine(e, None);
             assert!(engine.count(&txs, &[], 30).unwrap().is_empty());
         }
@@ -514,7 +544,12 @@ mod tests {
         let (txs, cands) = sample(60);
         let groups = level_groups(&cands);
         assert!(groups.len() > 1, "sample should span several levels");
-        for e in [EngineKind::HashTree, EngineKind::Trie, EngineKind::Naive] {
+        for e in [
+            EngineKind::HashTree,
+            EngineKind::Trie,
+            EngineKind::Vertical,
+            EngineKind::Naive,
+        ] {
             let engine = build_engine(e, None);
             let batched = engine.count_batch(&txs, &groups, 60).unwrap();
             assert_eq!(batched.len(), groups.len(), "{}", engine.name());
@@ -529,7 +564,12 @@ mod tests {
     fn count_mixed_preserves_caller_order() {
         let (txs, cands) = sample(50);
         let want = NaiveEngine.count(&txs, &cands, 50).unwrap();
-        for e in [EngineKind::HashTree, EngineKind::Trie, EngineKind::Naive] {
+        for e in [
+            EngineKind::HashTree,
+            EngineKind::Trie,
+            EngineKind::Vertical,
+            EngineKind::Naive,
+        ] {
             let engine = build_engine(e, None);
             let got = count_mixed(engine.as_ref(), &txs, &cands, 50).unwrap();
             assert_eq!(got, want, "{}", engine.name());
@@ -545,7 +585,12 @@ mod tests {
         let (txs, cands) = sample(40);
         let pairs: Vec<Itemset> = cands.iter().filter(|c| c.len() == 2).cloned().collect();
         let groups = vec![pairs.clone(), Vec::new()];
-        for e in [EngineKind::HashTree, EngineKind::Trie, EngineKind::Naive] {
+        for e in [
+            EngineKind::HashTree,
+            EngineKind::Trie,
+            EngineKind::Vertical,
+            EngineKind::Naive,
+        ] {
             let engine = build_engine(e, None);
             let batched = engine.count_batch(&txs, &groups, 40).unwrap();
             assert_eq!(batched[0], NaiveEngine.count(&txs, &pairs, 40).unwrap());
@@ -557,6 +602,7 @@ mod tests {
     fn kind_parses() {
         assert_eq!("hash-tree".parse::<EngineKind>().unwrap(), EngineKind::HashTree);
         assert_eq!("trie".parse::<EngineKind>().unwrap(), EngineKind::Trie);
+        assert_eq!("vertical".parse::<EngineKind>().unwrap(), EngineKind::Vertical);
         assert_eq!("naive".parse::<EngineKind>().unwrap(), EngineKind::Naive);
         assert_eq!("tensor".parse::<EngineKind>().unwrap(), EngineKind::Tensor);
         assert!("x".parse::<EngineKind>().is_err());
@@ -567,6 +613,7 @@ mod tests {
         for e in [
             EngineKind::HashTree,
             EngineKind::Trie,
+            EngineKind::Vertical,
             EngineKind::Naive,
             EngineKind::Tensor,
         ] {

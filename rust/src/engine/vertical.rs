@@ -1,0 +1,407 @@
+//! The vertical TID-bitset counting engine.
+//!
+//! Every other CPU engine matches candidates *horizontally*: stream each
+//! transaction through a matcher structure and increment the candidates
+//! it contains. This engine flips the layout (Apriori-TID / Eclat): one
+//! pass over the split builds a per-item **TID index** — which
+//! transactions contain item *i* — and each candidate's support is then
+//! the size of the intersection of its k item rows, with no further
+//! touches of the transaction data at all.
+//!
+//! Two interchangeable index representations, chosen per split by
+//! occupancy ([`FlatBlock::density`]):
+//!
+//! * **dense** — one `Vec<u64>` bitset row per item (`ceil(n_tx/64)`
+//!   words); a candidate is answered by word-wise AND + popcount, 64
+//!   transactions per instruction;
+//! * **sparse** — one sorted TID list per item, intersected by galloping
+//!   (exponential-probe) merge; wins when rows would be mostly empty
+//!   and the dense matrix mostly zero words.
+//!
+//! Candidates are processed in (length, lexicographic) order so
+//! lexicographic siblings share their (k−1)-prefix: the prefix
+//! intersection is computed once into a scratch accumulator and reused
+//! for every sibling, leaving one AND+popcount (or one galloping
+//! count-intersection) per candidate. [`VerticalEngine::count_batch`] is
+//! a genuine shared scan — the index is built **once** and answers every
+//! level of a batched multi-level job.
+
+use crate::apriori::Itemset;
+use crate::data::columnar::FlatBlock;
+use crate::data::{intersect_sorted_count, intersect_sorted_into, ItemId, Transaction};
+
+use super::{EngineError, SupportEngine};
+
+/// Use dense bitset rows once a 64-transaction word carries at least one
+/// expected set bit; below that the dense matrix is mostly zero words
+/// and sorted TID lists are both smaller and faster to intersect.
+const DENSE_MIN_DENSITY: f64 = 1.0 / 64.0;
+
+enum Repr {
+    /// `rows[item * words .. (item + 1) * words]` is item's TID bitset.
+    Dense { words: usize, rows: Vec<u64> },
+    /// `lists[item]` is item's sorted TID list.
+    Sparse { lists: Vec<Vec<u32>> },
+}
+
+/// A built item→TID index over one transaction slice.
+pub struct VerticalIndex {
+    repr: Repr,
+    n_tx: usize,
+    n_items: usize,
+}
+
+impl VerticalIndex {
+    /// Build the index from a flattened block, picking the dense or
+    /// sparse representation by occupancy.
+    pub fn build(block: &FlatBlock) -> Self {
+        let n_items = block.n_items();
+        let n_tx = block.len();
+        let repr = if block.density() >= DENSE_MIN_DENSITY {
+            let words = n_tx.div_ceil(64);
+            let mut rows = vec![0u64; n_items * words];
+            for (tid, tx) in block.iter().enumerate() {
+                let (word, bit) = (tid / 64, tid % 64);
+                for &item in tx {
+                    rows[item as usize * words + word] |= 1u64 << bit;
+                }
+            }
+            Repr::Dense { words, rows }
+        } else {
+            // Pre-size each list from a counting pass so the build never
+            // regrows mid-insert.
+            let mut lens = vec![0usize; n_items];
+            for tx in block.iter() {
+                for &item in tx {
+                    lens[item as usize] += 1;
+                }
+            }
+            let mut lists: Vec<Vec<u32>> =
+                lens.iter().map(|&n| Vec::with_capacity(n)).collect();
+            for (tid, tx) in block.iter().enumerate() {
+                for &item in tx {
+                    lists[item as usize].push(tid as u32);
+                }
+            }
+            Repr::Sparse { lists }
+        };
+        Self { repr, n_tx, n_items }
+    }
+
+    /// Did occupancy pick the bitset representation?
+    pub fn is_dense(&self) -> bool {
+        matches!(self.repr, Repr::Dense { .. })
+    }
+
+    /// Resident index size in bytes — the number the ablation reports as
+    /// "peak index bytes" per split.
+    pub fn bytes(&self) -> usize {
+        match &self.repr {
+            Repr::Dense { rows, .. } => std::mem::size_of_val(rows.as_slice()),
+            Repr::Sparse { lists } => lists
+                .iter()
+                .map(|l| std::mem::size_of_val(l.as_slice()))
+                .sum(),
+        }
+    }
+
+    /// Count every candidate into `counts` (aligned with `candidates`).
+    /// Candidates are visited in (length, lexicographic) order
+    /// internally so prefix reuse kicks in regardless of input order;
+    /// results scatter back to the caller's order.
+    pub fn count_into(&self, candidates: &[Itemset], counts: &mut [u64]) {
+        debug_assert_eq!(candidates.len(), counts.len());
+        let mut order: Vec<usize> = (0..candidates.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (ca, cb) = (&candidates[a], &candidates[b]);
+            (ca.len(), ca).cmp(&(cb.len(), cb))
+        });
+        match &self.repr {
+            Repr::Dense { words, rows } => {
+                self.count_dense(*words, rows, candidates, &order, counts)
+            }
+            Repr::Sparse { lists } => self.count_sparse(lists, candidates, &order, counts),
+        }
+    }
+
+    /// A candidate the index can't match: an item beyond the dictionary
+    /// (never occurs → support 0) or a non-canonical itemset. Canonical
+    /// itemsets are strictly ascending; the sorted-merge oracle
+    /// (`Transaction::contains_all`) matches nothing otherwise, and the
+    /// vertical path must agree byte-for-byte.
+    fn unmatchable(&self, cand: &[ItemId]) -> bool {
+        cand.iter().any(|&i| (i as usize) >= self.n_items)
+            || cand.windows(2).any(|w| w[0] >= w[1])
+    }
+
+    fn count_dense(
+        &self,
+        words: usize,
+        rows: &[u64],
+        candidates: &[Itemset],
+        order: &[usize],
+        counts: &mut [u64],
+    ) {
+        let row = |item: ItemId| &rows[item as usize * words..(item as usize + 1) * words];
+        // The shared (k−1)-prefix accumulator; valid for `prefix_key`.
+        let mut acc: Vec<u64> = vec![0; words];
+        let mut prefix_key: Option<&[ItemId]> = None;
+        for &ci in order {
+            let cand = &candidates[ci];
+            counts[ci] = match cand.len() {
+                // The empty itemset is contained in every transaction.
+                0 => self.n_tx as u64,
+                _ if self.unmatchable(cand) => 0,
+                1 => row(cand[0]).iter().map(|w| w.count_ones() as u64).sum(),
+                k => {
+                    let prefix = &cand[..k - 1];
+                    if prefix_key != Some(prefix) {
+                        acc.copy_from_slice(row(prefix[0]));
+                        for &item in &prefix[1..] {
+                            for (a, w) in acc.iter_mut().zip(row(item)) {
+                                *a &= w;
+                            }
+                        }
+                        prefix_key = Some(prefix);
+                    }
+                    acc.iter()
+                        .zip(row(cand[k - 1]))
+                        .map(|(a, w)| (a & w).count_ones() as u64)
+                        .sum()
+                }
+            };
+        }
+    }
+
+    fn count_sparse(
+        &self,
+        lists: &[Vec<u32>],
+        candidates: &[Itemset],
+        order: &[usize],
+        counts: &mut [u64],
+    ) {
+        // Shared prefix accumulator + ping-pong scratch, reused across
+        // the whole candidate list (no per-candidate allocation).
+        let mut acc: Vec<u32> = Vec::new();
+        let mut tmp: Vec<u32> = Vec::new();
+        let mut prefix_key: Option<&[ItemId]> = None;
+        for &ci in order {
+            let cand = &candidates[ci];
+            counts[ci] = match cand.len() {
+                0 => self.n_tx as u64,
+                _ if self.unmatchable(cand) => 0,
+                1 => lists[cand[0] as usize].len() as u64,
+                k => {
+                    let prefix = &cand[..k - 1];
+                    if prefix_key != Some(prefix) {
+                        acc.clear();
+                        acc.extend_from_slice(&lists[prefix[0] as usize]);
+                        for &item in &prefix[1..] {
+                            intersect_sorted_into(&acc, &lists[item as usize], &mut tmp);
+                            std::mem::swap(&mut acc, &mut tmp);
+                        }
+                        prefix_key = Some(prefix);
+                    }
+                    intersect_sorted_count(&acc, &lists[cand[k - 1] as usize])
+                }
+            };
+        }
+    }
+}
+
+/// The vertical engine: build the TID index per call (the one pass over
+/// the slice), answer candidates by row intersection. Mixed-length
+/// candidate lists are native — no per-length structure is needed — and
+/// the batched path shares one index build across every group.
+pub struct VerticalEngine;
+
+impl VerticalEngine {
+    fn build_index(txs: &[Transaction], n_items: usize) -> VerticalIndex {
+        VerticalIndex::build(&FlatBlock::from_transactions(txs, n_items))
+    }
+}
+
+impl SupportEngine for VerticalEngine {
+    fn count(
+        &self,
+        txs: &[Transaction],
+        candidates: &[Itemset],
+        n_items: usize,
+    ) -> Result<Vec<u64>, EngineError> {
+        if candidates.is_empty() {
+            return Ok(Vec::new());
+        }
+        let index = Self::build_index(txs, n_items);
+        let mut counts = vec![0u64; candidates.len()];
+        index.count_into(candidates, &mut counts);
+        Ok(counts)
+    }
+
+    /// Genuine shared scan: the transaction slice is read **once** (the
+    /// index build) and the same index answers every level's group.
+    fn count_batch(
+        &self,
+        txs: &[Transaction],
+        groups: &[Vec<Itemset>],
+        n_items: usize,
+    ) -> Result<Vec<Vec<u64>>, EngineError> {
+        let index = Self::build_index(txs, n_items);
+        Ok(groups
+            .iter()
+            .map(|g| {
+                let mut counts = vec![0u64; g.len()];
+                index.count_into(g, &mut counts);
+                counts
+            })
+            .collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "vertical"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TransactionDb;
+    use crate::engine::NaiveEngine;
+
+    fn tx(items: &[u32]) -> Transaction {
+        Transaction::new(items.iter().copied())
+    }
+
+    fn check_against_naive(txs: &[Transaction], cands: &[Itemset], n_items: usize) {
+        let naive = NaiveEngine.count(txs, cands, n_items).unwrap();
+        let vertical = VerticalEngine.count(txs, cands, n_items).unwrap();
+        assert_eq!(vertical, naive);
+    }
+
+    #[test]
+    fn dense_and_sparse_picked_by_occupancy() {
+        // 4 items over 4 txs, every tx full -> density 1 -> dense
+        let dense_txs: Vec<Transaction> = (0..4).map(|_| tx(&[0, 1, 2, 3])).collect();
+        let idx = VerticalIndex::build(&FlatBlock::from_transactions(&dense_txs, 4));
+        assert!(idx.is_dense());
+        assert!(idx.bytes() > 0);
+        // 1 item occurrence over a 10_000-wide dictionary -> sparse
+        let sparse_txs = vec![tx(&[9_999])];
+        let idx = VerticalIndex::build(&FlatBlock::from_transactions(&sparse_txs, 10_000));
+        assert!(!idx.is_dense());
+        assert_eq!(idx.bytes(), 4);
+    }
+
+    #[test]
+    fn counts_match_naive_on_both_representations() {
+        let db = TransactionDb::new(vec![
+            tx(&[0, 1, 2]),
+            tx(&[0, 2]),
+            tx(&[1]),
+            tx(&[]),
+            tx(&[0, 1, 2, 3]),
+        ]);
+        let cands: Vec<Itemset> = vec![
+            vec![],
+            vec![0],
+            vec![3],
+            vec![0, 1],
+            vec![0, 2],
+            vec![1, 3],
+            vec![0, 1, 2],
+            vec![0, 1, 2, 3],
+            vec![7], // beyond the dictionary
+        ];
+        // dense (narrow dictionary)
+        check_against_naive(&db.transactions, &cands, db.n_items);
+        // sparse: same data under a very wide dictionary hint
+        check_against_naive(&db.transactions, &cands, 50_000);
+    }
+
+    #[test]
+    fn non_canonical_candidates_count_zero() {
+        let txs = vec![tx(&[0, 1, 2])];
+        for cands in [vec![vec![1u32, 1]], vec![vec![2u32, 1]]] {
+            check_against_naive(&txs, &cands, 3);
+            assert_eq!(VerticalEngine.count(&txs, &cands, 3).unwrap(), vec![0]);
+        }
+    }
+
+    #[test]
+    fn word_boundary_transaction_counts() {
+        // n_tx straddling the u64 word edge: 63, 64, 65, 128, 129.
+        for n_tx in [63usize, 64, 65, 128, 129] {
+            let txs: Vec<Transaction> = (0..n_tx)
+                .map(|i| tx(&[(i % 3) as u32, 3, (i % 5) as u32 + 4]))
+                .collect();
+            let cands: Vec<Itemset> =
+                vec![vec![3], vec![0, 3], vec![2, 3], vec![0, 3, 4], vec![1, 2]];
+            check_against_naive(&txs, &cands, 9);
+        }
+    }
+
+    #[test]
+    fn prefix_reuse_spans_lexicographic_siblings() {
+        // Many siblings sharing the prefix [0, 1]; processed unsorted to
+        // exercise the internal ordering + scatter-back.
+        let txs: Vec<Transaction> = (0..70)
+            .map(|i| tx(&[0, 1, 2 + (i % 4) as u32, 6 + (i % 3) as u32]))
+            .collect();
+        let cands: Vec<Itemset> = vec![
+            vec![0, 1, 5],
+            vec![0, 1, 2],
+            vec![0, 1, 7],
+            vec![0, 1, 3],
+            vec![0, 2, 3],
+            vec![0, 1, 4],
+        ];
+        check_against_naive(&txs, &cands, 9);
+    }
+
+    #[test]
+    fn empty_slice_and_empty_candidates() {
+        assert!(VerticalEngine.count(&[], &[], 5).unwrap().is_empty());
+        let counts = VerticalEngine
+            .count(&[], &[vec![0], vec![0, 1]], 5)
+            .unwrap();
+        assert_eq!(counts, vec![0, 0]);
+    }
+
+    #[test]
+    fn batch_shares_one_index_and_matches_per_group_counts() {
+        let txs: Vec<Transaction> = (0..100)
+            .map(|i| tx(&[(i % 7) as u32, (i % 11) as u32, (i % 13) as u32]))
+            .collect();
+        let groups: Vec<Vec<Itemset>> = vec![
+            (0..13u32).map(|i| vec![i]).collect(),
+            vec![vec![0, 1], vec![1, 2], vec![3, 5]],
+            Vec::new(),
+            vec![vec![0, 1, 2]],
+        ];
+        let batched = VerticalEngine.count_batch(&txs, &groups, 13).unwrap();
+        assert_eq!(batched.len(), groups.len());
+        for (group, got) in groups.iter().zip(&batched) {
+            let want = NaiveEngine.count(&txs, group, 13).unwrap();
+            assert_eq!(got, &want);
+        }
+        assert!(batched[2].is_empty());
+    }
+
+    #[test]
+    fn long_candidates_cross_the_u32_mask_regime() {
+        // k >= 32: supports must stay exact far past any 32-bit subset
+        // mask (the regime where horizontal matchers hit edge cases).
+        let spine: Vec<u32> = (0..40).collect();
+        let mut txs: Vec<Transaction> = (0..5).map(|_| tx(&spine)).collect();
+        txs.push(tx(&spine[..33]));
+        txs.push(tx(&[1, 2, 3]));
+        let cands: Vec<Itemset> = vec![
+            spine[..31].to_vec(),
+            spine[..32].to_vec(),
+            spine[..33].to_vec(),
+            spine.clone(),
+        ];
+        let counts = VerticalEngine.count(&txs, &cands, 40).unwrap();
+        assert_eq!(counts, vec![6, 6, 6, 5]);
+        check_against_naive(&txs, &cands, 40);
+    }
+}

@@ -59,10 +59,13 @@ pub mod prelude {
         simulate, simulate_pipelined, MrApriori, PipelineConfig, RunReport, WorkloadProfile,
     };
     pub use crate::data::{
-        bitmap::BitmapBlock, quest::QuestGenerator, quest::QuestParams, TransactionDb,
+        bitmap::BitmapBlock, columnar::FlatBlock, quest::QuestGenerator, quest::QuestParams,
+        TransactionDb,
     };
     pub use crate::dfs::Dfs;
-    pub use crate::engine::{build_engine, EngineKind, SupportEngine};
+    pub use crate::engine::{
+        build_engine, EngineKind, SupportEngine, VerticalEngine, VerticalIndex,
+    };
     pub use crate::incremental::{
         DeltaApply, DeltaStats, IncrementalConfig, LevelState, MinedState,
     };

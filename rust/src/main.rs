@@ -63,7 +63,7 @@ repro — Map/Reduce Apriori (ACIJ 2012 reproduction)
 USAGE:
   repro generate --transactions N [--profile t10i4|dense|goswami] [--seed S] --out FILE
   repro mine [--config FILE] [--preset standalone|pseudo|fhssc|fhdsc] [--nodes N]
-             [--min-support F] [--max-k K] [--engine hash-tree|trie|naive|tensor]
+             [--min-support F] [--max-k K] [--engine hash-tree|trie|vertical|naive|tensor]
              [--split-tx N] [--transactions N | --input FILE] [--rules CONF]
              [--pipeline true|false] [--batch-levels 1|2]
   repro rules  <mine flags> [--min-confidence F] [--top N]
@@ -659,6 +659,7 @@ mod tests {
         for name in [
             "fig5_fhssc3.toml",
             "tensor_smoke.toml",
+            "vertical_smoke.toml",
             "standalone_baseline.toml",
             "serve_smoke.toml",
         ] {

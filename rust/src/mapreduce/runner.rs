@@ -23,7 +23,7 @@ use crate::data::TransactionDb;
 use crate::dfs::{BlockId, Dfs};
 
 use super::app::MapReduceApp;
-use super::shuffle::{combine_local, group_by_key, partition_output};
+use super::shuffle::{combine_local_in_place, group_by_key, partition_drain};
 
 /// Knobs of one job submission (Hadoop's `JobConf` analogue).
 #[derive(Debug, Clone)]
@@ -241,19 +241,30 @@ impl<'a> JobRunner<'a> {
         map_outputs: MapOutputs<A::K, A::V>,
         cfg: &JobConfig,
     ) -> Result<(Vec<(A::K, A::V)>, JobStats), JobError> {
-        let MapOutputs { outputs, mut stats } = map_outputs;
+        let MapOutputs { mut outputs, mut stats } = map_outputs;
 
         // Shuffle: reducer r pulls partition r of every map output, in
-        // task order (determinism).
+        // task order (determinism). Each reducer's input buffer is sized
+        // up front from the per-partition record totals, and the parked
+        // map outputs are moved in, never cloned.
         let t1 = Instant::now();
-        let mut reduce_inputs: Vec<Vec<(A::K, A::V)>> =
-            (0..cfg.n_reducers).map(|_| Vec::new()).collect();
         let mut task_ids: Vec<usize> = outputs.keys().copied().collect();
         task_ids.sort_unstable();
+        let mut part_sizes = vec![0usize; cfg.n_reducers];
+        for parts in outputs.values() {
+            for (r, part) in parts.iter().enumerate() {
+                part_sizes[r] += part.len();
+            }
+        }
+        let mut reduce_inputs: Vec<Vec<(A::K, A::V)>> = part_sizes
+            .iter()
+            .map(|&n| Vec::with_capacity(n))
+            .collect();
         for tid in task_ids {
-            for (r, part) in outputs[&tid].iter().enumerate() {
+            let parts = outputs.remove(&tid).expect("task id came from the key set");
+            for (r, part) in parts.into_iter().enumerate() {
                 stats.shuffle_records += part.len();
-                reduce_inputs[r].extend(part.iter().cloned());
+                reduce_inputs[r].extend(part);
             }
         }
 
@@ -283,8 +294,9 @@ impl<'a> JobRunner<'a> {
             running: HashMap::new(),
             attempts_started: HashMap::new(),
             completed: HashSet::new(),
-            completed_durations: Vec::new(),
-            outputs: HashMap::new(),
+            completed_durations: Vec::with_capacity(n_tasks),
+            // One entry per map task — sized once, never rehashed.
+            outputs: HashMap::with_capacity(n_tasks),
             stats: JobStats {
                 maps_total: n_tasks,
                 reduces_total: cfg.n_reducers,
@@ -324,6 +336,12 @@ impl<'a> JobRunner<'a> {
         state: &Mutex<MapPhase<A::K, A::V>>,
         cv: &Condvar,
     ) {
+        // Per-slot scratch reused across every split this worker runs:
+        // the map-output buffer and the combiner's value scratch keep
+        // their capacity between attempts, so steady-state map execution
+        // allocates only the partition buckets it hands to the shuffle.
+        let mut records: Vec<(A::K, A::V)> = Vec::new();
+        let mut combine_scratch: Vec<A::V> = Vec::new();
         loop {
             // --- pick a task under the lock ---
             let picked: Option<(usize, usize, bool)> = {
@@ -404,14 +422,18 @@ impl<'a> JobRunner<'a> {
             let result = if failed {
                 None
             } else {
-                let mut records: Vec<(A::K, A::V)> = Vec::new();
+                records.clear();
                 app.map(&splits[task], split_transactions(db, &splits[task]), &mut |k, v| {
                     records.push((k, v))
                 });
                 if cfg.enable_combiner {
-                    records = combine_local(records, |k, vs| app.combine(k, vs));
+                    combine_local_in_place(
+                        &mut records,
+                        |k, vs| app.combine(k, vs),
+                        &mut combine_scratch,
+                    );
                 }
-                Some(partition_output(records, cfg.n_reducers))
+                Some(partition_drain(&mut records, cfg.n_reducers))
             };
 
             // --- report under the lock ---
@@ -476,12 +498,20 @@ impl<'a> JobRunner<'a> {
         let state = Mutex::new(RedState::<A::K, A::V> {
             pending: (0..n).collect(),
             attempts: HashMap::new(),
-            done: HashMap::new(),
+            done: HashMap::with_capacity(n),
             failures: 0,
             attempts_total: 0,
             abort: None,
         });
-        let inputs = &reduce_inputs;
+        // Each reduce task consumes its input by move (a successful
+        // attempt takes it; failed attempts never touch it), so the
+        // shuffle's buffers are the ones the sort-merge runs on — no
+        // per-task clone of the whole partition.
+        let inputs = reduce_inputs
+            .into_iter()
+            .map(|v| Mutex::new(Some(v)))
+            .collect::<Vec<_>>();
+        let inputs = &inputs;
 
         std::thread::scope(|scope| {
             for profile in self.cluster.nodes.iter() {
@@ -524,8 +554,19 @@ impl<'a> JobRunner<'a> {
                             }
                             continue;
                         }
+                        // Invariant: a task is popped from `pending` at
+                        // most once and failure is decided before the
+                        // take, so the input is always present here. If
+                        // reduce-side speculation is ever added, twin
+                        // attempts must learn to share — loudly, not by
+                        // silently dropping the task.
+                        let input = inputs[task]
+                            .lock()
+                            .unwrap()
+                            .take()
+                            .expect("reduce input consumed twice");
                         let mut out: Vec<(A::K, A::V)> = Vec::new();
-                        for (k, vs) in group_by_key(inputs[task].clone()) {
+                        for (k, vs) in group_by_key(input) {
                             if let Some(v) = app.reduce(&k, &vs) {
                                 out.push((k, v));
                             }

@@ -19,9 +19,27 @@ pub fn partition<K: Hash>(key: &K, n_reducers: usize) -> usize {
 }
 
 /// Partition one map task's output into `n_reducers` buckets.
-pub fn partition_output<K: Hash, V>(records: Vec<(K, V)>, n_reducers: usize) -> Vec<Vec<(K, V)>> {
-    let mut parts: Vec<Vec<(K, V)>> = (0..n_reducers).map(|_| Vec::new()).collect();
-    for (k, v) in records {
+pub fn partition_output<K: Hash, V>(
+    mut records: Vec<(K, V)>,
+    n_reducers: usize,
+) -> Vec<Vec<(K, V)>> {
+    partition_drain(&mut records, n_reducers)
+}
+
+/// Partition by draining a reusable record buffer: the buckets are fresh
+/// (they outlive the map task, parked until the shuffle pulls them) but
+/// the source buffer keeps its capacity for the slot's next split.
+/// Buckets are pre-sized from the map-output cardinality — an even-split
+/// estimate, since the partitioner is built to spread keys.
+pub fn partition_drain<K: Hash, V>(
+    records: &mut Vec<(K, V)>,
+    n_reducers: usize,
+) -> Vec<Vec<(K, V)>> {
+    let per_part = records.len() / n_reducers + 1;
+    let mut parts: Vec<Vec<(K, V)>> = (0..n_reducers)
+        .map(|_| Vec::with_capacity(per_part))
+        .collect();
+    for (k, v) in records.drain(..) {
         let p = partition(&k, n_reducers);
         parts[p].push((k, v));
     }
@@ -45,17 +63,51 @@ pub fn group_by_key<K: Ord + Clone, V>(mut records: Vec<(K, V)>) -> Vec<(K, Vec<
 /// each group to a single record. `combine` returning `None` passes the
 /// group through unchanged (no combiner configured for the app).
 pub fn combine_local<K: Ord + Clone, V: Clone>(
-    records: Vec<(K, V)>,
+    mut records: Vec<(K, V)>,
     combine: impl Fn(&K, &[V]) -> Option<V>,
 ) -> Vec<(K, V)> {
-    let mut out = Vec::new();
-    for (k, vs) in group_by_key(records) {
-        match combine(&k, &vs) {
-            Some(v) => out.push((k, v)),
-            None => out.extend(vs.into_iter().map(|v| (k.clone(), v))),
+    combine_local_in_place(&mut records, combine, &mut Vec::new());
+    records
+}
+
+/// The allocation-free combiner the map workers run per split: sort the
+/// record buffer by key, fold each key run through `combine`, and
+/// compact the survivors in place. `scratch` holds one run's values and
+/// keeps its capacity across calls, so a worker slot combining thousands
+/// of splits allocates nothing after the first.
+pub fn combine_local_in_place<K: Ord, V: Clone>(
+    records: &mut Vec<(K, V)>,
+    combine: impl Fn(&K, &[V]) -> Option<V>,
+    scratch: &mut Vec<V>,
+) {
+    records.sort_by(|a, b| a.0.cmp(&b.0));
+    let n = records.len();
+    let mut write = 0usize;
+    let mut read = 0usize;
+    while read < n {
+        let mut end = read + 1;
+        while end < n && records[end].0 == records[read].0 {
+            end += 1;
         }
+        scratch.clear();
+        scratch.extend(records[read..end].iter().map(|(_, v)| v.clone()));
+        match combine(&records[read].0, scratch) {
+            Some(v) => {
+                records.swap(write, read);
+                records[write].1 = v;
+                write += 1;
+            }
+            None => {
+                // No combiner: keep the whole (key-sorted) run.
+                for idx in read..end {
+                    records.swap(write, idx);
+                    write += 1;
+                }
+            }
+        }
+        read = end;
     }
-    out
+    records.truncate(write);
 }
 
 #[cfg(test)]
@@ -128,6 +180,39 @@ mod tests {
         let recs = vec![(1u32, 1u64), (1, 2), (2, 3)];
         let out = combine_local(recs.clone(), |_k, _vs| None);
         assert_eq!(out, vec![(1, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn combine_in_place_matches_combine_local_and_reuses_buffers() {
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let mut scratch: Vec<u64> = Vec::new();
+        for _ in 0..50 {
+            let records: Vec<(u32, u64)> = (0..rng.range_usize(0, 200))
+                .map(|_| (rng.gen_range(15) as u32, rng.gen_range(5)))
+                .collect();
+            let want = combine_local(records.clone(), |_k, vs| Some(vs.iter().sum()));
+            let mut got = records.clone();
+            combine_local_in_place(&mut got, |_k, vs| Some(vs.iter().sum()), &mut scratch);
+            assert_eq!(got, want);
+            // passthrough (no combiner) keeps every record, key-sorted
+            let want = combine_local(records.clone(), |_k, _vs: &[u64]| None);
+            let mut got = records;
+            combine_local_in_place(&mut got, |_k, _vs| None, &mut scratch);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn partition_drain_empties_but_keeps_capacity() {
+        let mut records: Vec<(u32, u64)> = (0..100).map(|i| (i, 1)).collect();
+        let cap = records.capacity();
+        let parts = partition_drain(&mut records, 4);
+        assert!(records.is_empty());
+        assert_eq!(records.capacity(), cap, "scratch capacity must survive the drain");
+        assert_eq!(parts.iter().map(Vec::len).sum::<usize>(), 100);
+        for part in &parts {
+            assert!(part.capacity() >= 100 / 4, "buckets pre-sized from cardinality");
+        }
     }
 
     #[test]

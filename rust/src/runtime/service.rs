@@ -315,8 +315,8 @@ mod tests {
         let cands = vec![vec![0u32], vec![0, 2], vec![1, 2], vec![3]];
         CountRequest {
             graph: graph.into(),
-            block: BitmapBlock::encode(&txs, 64, 64),
-            cands: CandidateBlock::encode(&cands, 64, 8),
+            block: BitmapBlock::encode(&txs, 64, 64).unwrap(),
+            cands: CandidateBlock::encode(&cands, 64, 8).unwrap(),
         }
     }
 
@@ -357,8 +357,8 @@ mod tests {
                 v
             })
             .collect();
-        let block = BitmapBlock::encode(&db.transactions, 64, 256);
-        let cblock = CandidateBlock::encode(&cands, 64, 64);
+        let block = BitmapBlock::encode(&db.transactions, 64, 256).unwrap();
+        let cblock = CandidateBlock::encode(&cands, 64, 64).unwrap();
         let host = count_on_host(&block, &cblock);
         let got = h
             .count(CountRequest {
@@ -377,8 +377,8 @@ mod tests {
         let h = svc.handle();
         let req = CountRequest {
             graph: "count_split".into(),
-            block: BitmapBlock::encode(&[Transaction::new([0u32])], 64, 64),
-            cands: CandidateBlock::encode(&[vec![0u32]], 32, 8),
+            block: BitmapBlock::encode(&[Transaction::new([0u32])], 64, 64).unwrap(),
+            cands: CandidateBlock::encode(&[vec![0u32]], 32, 8).unwrap(),
         };
         assert!(matches!(
             h.count(req),

@@ -1,0 +1,210 @@
+//! Differential coverage for the vertical TID-bitset engine: the naive
+//! scan is the oracle, and every counting path the system exposes —
+//! direct `count`, the mixed-length shared-scan regrouping, the
+//! classical and pipelined MapReduce drivers, and the incremental
+//! FUP-style state — must be byte-identical under `engine = vertical`.
+
+use mr_apriori::data::Transaction;
+use mr_apriori::engine::{count_mixed, NaiveEngine};
+use mr_apriori::prelude::*;
+use mr_apriori::util::proptest::check;
+use mr_apriori::util::rng::Xoshiro256;
+
+fn tx(items: &[u32]) -> Transaction {
+    Transaction::new(items.iter().copied())
+}
+
+/// A randomized database stressing the engine's edges: empty
+/// transactions, duplicate items fed to the constructor, a long "spine"
+/// pattern so candidates with k ≥ 32 have non-zero support, and a
+/// dictionary that is either narrow (dense bitset rows) or very wide
+/// (sparse TID lists).
+fn build_db(seed: u64, n_tx: usize, wide_dict: bool) -> (Vec<Transaction>, usize, Vec<u32>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    // Narrow enough to stay on dense bitset rows but wide enough that the
+    // 36-item spine (the k >= 32 candidates) fits either way.
+    let n_items = if wide_dict { 5_000 } else { 40 };
+    // Spine: 36 distinct items the long candidates slice from.
+    let mut spine: Vec<u32> = rng
+        .sample_distinct(n_items, 36.min(n_items))
+        .into_iter()
+        .map(|x| x as u32)
+        .collect();
+    spine.sort_unstable();
+    let mut txs = Vec::with_capacity(n_tx);
+    for _ in 0..n_tx {
+        let roll = rng.gen_range(10);
+        let items: Vec<u32> = if roll == 0 {
+            Vec::new() // empty transaction
+        } else if roll <= 2 {
+            spine.clone() // spine superset rows keep k>=32 supports > 0
+        } else {
+            // duplicates on purpose — Transaction::new must dedup them
+            let len = rng.range_usize(1, 12);
+            (0..len)
+                .flat_map(|_| {
+                    let i = rng.gen_range(n_items as u64) as u32;
+                    [i, i]
+                })
+                .collect()
+        };
+        txs.push(tx(&items));
+    }
+    (txs, n_items, spine)
+}
+
+/// Random candidate list mixing lengths 1..=3, out-of-dictionary ids,
+/// duplicate entries, and k ∈ {31, 32, 33, 36} spine slices.
+fn build_candidates(seed: u64, n_items: usize, spine: &[u32]) -> Vec<Itemset> {
+    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xC0FFEE);
+    let mut cands: Vec<Itemset> = Vec::new();
+    for _ in 0..60 {
+        let k = rng.range_usize(1, 4);
+        let mut c: Vec<u32> = rng
+            .sample_distinct(n_items, k.min(n_items))
+            .into_iter()
+            .map(|x| x as u32)
+            .collect();
+        c.sort_unstable();
+        cands.push(c);
+    }
+    // u64-row boundary regime: candidates at and past 32 items
+    for k in [31usize, 32, 33, 36] {
+        if k <= spine.len() {
+            cands.push(spine[..k].to_vec());
+        }
+    }
+    cands.push(vec![n_items as u32 + 7]); // beyond the dictionary
+    if let Some(first) = cands.first().cloned() {
+        cands.push(first); // duplicate entry, counted per position
+    }
+    cands
+}
+
+#[test]
+fn prop_vertical_matches_naive_oracle() {
+    check(
+        "vertical-vs-naive",
+        0x7E12_41CA,
+        24,
+        |rng| {
+            vec![
+                rng.next_u64(),                   // content seed
+                rng.range_usize(0, 200) as u64,   // n_tx
+                rng.range_usize(0, 2) as u64,     // narrow or wide dictionary
+            ]
+        },
+        |params| {
+            let (txs, n_items, spine) = build_db(params[0], params[1] as usize, params[2] == 1);
+            let cands = build_candidates(params[0], n_items, &spine);
+            let want = NaiveEngine.count(&txs, &cands, n_items).unwrap();
+            let direct = VerticalEngine.count(&txs, &cands, n_items).unwrap();
+            if direct != want {
+                return Err("direct count diverged from naive".into());
+            }
+            // the shared-scan regrouping path must scatter back identically
+            let mixed = count_mixed(&VerticalEngine, &txs, &cands, n_items).unwrap();
+            if mixed != want {
+                return Err("count_mixed diverged from naive".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn word_boundary_slice_sizes_match_naive() {
+    // n_tx pinned at the u64-word edges the dense rows pack into.
+    for n_tx in [0usize, 1, 63, 64, 65, 127, 128, 129] {
+        let (txs, n_items, spine) = build_db(0xB0DA + n_tx as u64, n_tx, false);
+        let cands = build_candidates(0xB0DA, n_items, &spine);
+        let want = NaiveEngine.count(&txs, &cands, n_items).unwrap();
+        let got = VerticalEngine.count(&txs, &cands, n_items).unwrap();
+        assert_eq!(got, want, "n_tx={n_tx}");
+    }
+}
+
+fn driver(kind: EngineKind, cfg: &AprioriConfig) -> MrApriori {
+    MrApriori::new(ClusterConfig::fhssc(2), cfg.clone())
+        .with_engine(build_engine(kind, None))
+        .with_split_tx(61)
+}
+
+#[test]
+fn prop_classical_and_pipelined_paths_identical_under_vertical() {
+    check(
+        "vertical-mr-paths",
+        0x5EED_0CA7,
+        6,
+        |rng| vec![rng.next_u64(), rng.range_usize(60, 260) as u64],
+        |params| {
+            let db = QuestGenerator::new(
+                QuestParams::dense(params[1] as usize).with_seed(params[0]),
+            )
+            .generate();
+            let cfg = AprioriConfig { min_support: 0.08, max_k: 4 };
+            let base = driver(EngineKind::HashTree, &cfg).mine(&db).map_err(|e| e.to_string())?;
+            // classical (synchronous) schedule
+            let sync = driver(EngineKind::Vertical, &cfg).mine(&db).map_err(|e| e.to_string())?;
+            if sync.result.frequent != base.result.frequent {
+                return Err("synchronous vertical mine diverged".into());
+            }
+            // pipelined schedule with two-level batched shared scans
+            let piped = driver(EngineKind::Vertical, &cfg)
+                .with_pipeline(PipelineConfig::pipelined())
+                .mine(&db)
+                .map_err(|e| e.to_string())?;
+            if piped.result.frequent != base.result.frequent {
+                return Err("pipelined vertical mine diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn incremental_path_identical_under_vertical() {
+    // Capture + delta maintenance driven entirely through the vertical
+    // engine (Δ-scan jobs and frontier ExactCounter recounts included)
+    // must track a from-scratch mine exactly, generation by generation.
+    let cfg = AprioriConfig { min_support: 0.3, max_k: 0 };
+    let mut db = TransactionDb::new(vec![
+        tx(&[0, 1]),
+        tx(&[0, 1, 2]),
+        tx(&[0]),
+        tx(&[2, 3]),
+        tx(&[1, 2]),
+    ]);
+    let vertical = MrApriori::new(ClusterConfig::standalone(), cfg.clone())
+        .with_engine(build_engine(EngineKind::Vertical, None))
+        .with_split_tx(2);
+    let (_, mut state) = MinedState::capture(&vertical, &db).unwrap();
+    let mut rng = Xoshiro256::seed_from_u64(0x1D_E17A);
+    for generation in 0..4 {
+        let delta: Vec<Transaction> = (0..rng.range_usize(1, 6))
+            .map(|_| {
+                let len = rng.range_usize(1, 4);
+                let items: Vec<u32> =
+                    (0..len).map(|_| rng.gen_range(5) as u32).collect();
+                tx(&items)
+            })
+            .collect();
+        db.append(delta.clone());
+        match state
+            .apply_delta(&vertical, &db, &delta, &IncrementalConfig::default())
+            .unwrap()
+        {
+            DeltaApply::Applied(_) => {}
+            DeltaApply::FrontierBlowup { .. } => {
+                let (_, fresh) = MinedState::capture(&vertical, &db).unwrap();
+                state = fresh;
+            }
+        }
+        let full = ClassicalApriori::new(MatcherKind::Naive).mine(&db, &cfg);
+        assert_eq!(
+            state.to_result().frequent,
+            full.frequent,
+            "generation {generation} diverged"
+        );
+    }
+}

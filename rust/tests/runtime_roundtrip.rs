@@ -61,8 +61,8 @@ fn prop_tensor_service_matches_host_reference_at_chunk_boundaries() {
         |params| {
             let mut rng = Xoshiro256::seed_from_u64(params[0]);
             let (txs, cands) = random_case(&mut rng, 64);
-            let block = BitmapBlock::encode(&txs, 64, 256);
-            let cblock = CandidateBlock::encode(&cands, 64, 64);
+            let block = BitmapBlock::encode(&txs, 64, 256).unwrap();
+            let cblock = CandidateBlock::encode(&cands, 64, 64).unwrap();
             let host = count_on_host(&block, &cblock);
             let got = h
                 .count(CountRequest {
@@ -103,8 +103,8 @@ fn exact_tile_boundary_shapes() {
                 v
             })
             .collect();
-        let block = BitmapBlock::encode(&txs, 64, 256);
-        let cblock = CandidateBlock::encode(&cands, 64, 64);
+        let block = BitmapBlock::encode(&txs, 64, 256).unwrap();
+        let cblock = CandidateBlock::encode(&cands, 64, 64).unwrap();
         let host = count_on_host(&block, &cblock);
         let got = h
             .count(CountRequest {
@@ -148,8 +148,8 @@ fn pallas_and_ref_graphs_agree_through_pjrt() {
     let (txs, cands) = random_case(&mut rng, 64);
     let mk = |graph: &str| CountRequest {
         graph: graph.into(),
-        block: BitmapBlock::encode(&txs, 64, 256),
-        cands: CandidateBlock::encode(&cands, 64, 64),
+        block: BitmapBlock::encode(&txs, 64, 256).unwrap(),
+        cands: CandidateBlock::encode(&cands, 64, 64).unwrap(),
     };
     let a = h.count(mk("count_split")).unwrap();
     let b = h.count(mk("count_split_ref")).unwrap();
