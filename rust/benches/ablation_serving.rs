@@ -76,7 +76,7 @@ fn open_loop_phase(
 ) -> (u64, u64, u64, f64, HistogramSnapshot) {
     let server = RuleServer::start(
         Arc::clone(cell),
-        ServeOptions { workers: 1, queue_depth: 32, deadline },
+        ServeOptions { workers: 1, queue_depth: 32, deadline, ..Default::default() },
     );
     let start = Instant::now();
     let mut tickets = Vec::with_capacity(requests);

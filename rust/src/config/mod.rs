@@ -14,6 +14,7 @@ use crate::engine::EngineKind;
 use crate::incremental::IncrementalConfig;
 use crate::mapreduce::JobConfig;
 use crate::serve::ServeConfig;
+use crate::store::StoreConfig;
 
 /// Deployment preset (paper §3.1 + fig 4/5 series).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -59,6 +60,8 @@ pub struct ExperimentConfig {
     /// Delta-aware refresh strategy (`[incremental]` section;
     /// `--refresh-mode incremental`).
     pub incremental: IncrementalConfig,
+    /// Durable snapshot store (`[store]` section; `--store-dir`).
+    pub store: StoreConfig,
     /// Workload: transactions to generate (Quest T10.I4) when no input
     /// file is given.
     pub transactions: usize,
@@ -71,12 +74,15 @@ impl Default for ExperimentConfig {
             preset: Preset::Fhssc,
             nodes: 3,
             apriori: AprioriConfig::default(),
-            engine: EngineKind::HashTree,
+            // The measured-fastest engine (EXPERIMENTS.md §Perf); the
+            // paper-faithful baselines remain `engine = trie|hash-tree`.
+            engine: EngineKind::Vertical,
             split_tx: 1000,
             job: JobConfig { n_reducers: 3, ..Default::default() },
             pipeline: PipelineConfig::default(),
             serve: ServeConfig::default(),
             incremental: IncrementalConfig::default(),
+            store: StoreConfig::default(),
             transactions: 10_000,
             seed: 0xACE5_2012,
         }
@@ -216,6 +222,13 @@ impl ExperimentConfig {
                         return Err(bad("must be >= 1"));
                     }
                 }
+                "serve.internal_queue_depth" => {
+                    cfg.serve.internal_queue_depth =
+                        value.parse().map_err(|_| bad("want integer"))?;
+                    if cfg.serve.internal_queue_depth == 0 {
+                        return Err(bad("must be >= 1"));
+                    }
+                }
                 "serve.top_k" => {
                     cfg.serve.top_k = value.parse().map_err(|_| bad("want integer"))?;
                     if cfg.serve.top_k == 0 {
@@ -254,6 +267,19 @@ impl ExperimentConfig {
                         return Err(bad("must be a finite value >= 0"));
                     }
                     cfg.incremental.max_frontier_blowup = v;
+                }
+                "store.dir" => {
+                    cfg.store.dir = Some(std::path::PathBuf::from(value));
+                }
+                "store.retain" => {
+                    cfg.store.retain = value.parse().map_err(|_| bad("want integer"))?;
+                    if cfg.store.retain == 0 {
+                        return Err(bad("must be >= 1"));
+                    }
+                }
+                "store.no_persist" => {
+                    cfg.store.no_persist =
+                        value.parse().map_err(|_| bad("want true|false"))?;
                 }
                 other => {
                     return Err(ConfigError::BadValue {
@@ -532,6 +558,43 @@ mod tests {
         assert!(a.incremental.enabled);
         assert_eq!(a.incremental.max_frontier_blowup, 3.0);
         assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn store_section_parses_and_validates() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+            [store]
+            dir = "/tmp/snapshots"
+            retain = 3
+            no_persist = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.store.dir.as_deref(), Some(std::path::Path::new("/tmp/snapshots")));
+        assert_eq!(cfg.store.retain, 3);
+        assert!(!cfg.store.no_persist);
+        assert!(cfg.store.writes_enabled());
+        // defaults: persistence off, sane retain window
+        let d = ExperimentConfig::default().store;
+        assert!(d.dir.is_none());
+        assert_eq!(d.retain, crate::store::StoreConfig::DEFAULT_RETAIN);
+        assert!(!d.writes_enabled());
+        // validations
+        assert!(ExperimentConfig::parse("[store]\nretain = 0").is_err());
+        assert!(ExperimentConfig::parse("[store]\nno_persist = maybe").is_err());
+        // no_persist freezes an otherwise-enabled store
+        let frozen =
+            ExperimentConfig::parse("[store]\ndir = \"/tmp/x\"\nno_persist = true").unwrap();
+        assert!(!frozen.store.writes_enabled());
+    }
+
+    #[test]
+    fn internal_queue_depth_parses_and_validates() {
+        let cfg = ExperimentConfig::parse("[serve]\ninternal_queue_depth = 8").unwrap();
+        assert_eq!(cfg.serve.internal_queue_depth, 8);
+        assert_eq!(ExperimentConfig::default().serve.internal_queue_depth, 16);
+        assert!(ExperimentConfig::parse("[serve]\ninternal_queue_depth = 0").is_err());
     }
 
     #[test]

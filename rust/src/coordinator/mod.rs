@@ -203,7 +203,7 @@ pub struct MrApriori {
 type ReduceOutcome = Result<(Vec<(Itemset, u64)>, JobStats), JobError>;
 
 impl MrApriori {
-    /// Driver with the default (trie) engine.
+    /// Driver with the default (vertical TID-bitset) engine.
     pub fn new(cluster: ClusterConfig, apriori: AprioriConfig) -> Self {
         Self {
             cluster,
@@ -211,9 +211,12 @@ impl MrApriori {
             job: JobConfig { n_reducers: 3, ..Default::default() },
             pipeline: PipelineConfig::default(),
             split_tx: 1000,
-            // Trie is the measured-fastest CPU matcher on every A1 width
-            // (EXPERIMENTS.md §Perf); hash-tree/naive/tensor via with_engine.
-            engine: crate::engine::build_engine(EngineKind::Trie, None),
+            // Vertical is the measured-fastest CPU engine (EXPERIMENTS.md
+            // §Perf; BENCH_engines.json asserts the win per CI run), and
+            // every engine is byte-identical on every mining path. The
+            // paper-faithful horizontal matchers stay one `--engine trie`
+            // / `with_engine` away.
+            engine: crate::engine::build_engine(EngineKind::Vertical, None),
         }
     }
 

@@ -22,6 +22,25 @@ use crate::data::split::Split;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct BlockId(pub u64);
 
+/// `split_id` marker for blocks that back no input split (e.g. the
+/// durable snapshot store's checkpoint blocks).
+pub const NO_SPLIT: usize = usize::MAX;
+
+/// The thin byte-level storage interface the durable snapshot store
+/// (`store::SnapshotStore`) charges its writes through, so checkpoint
+/// bytes count against simulated datanode capacity exactly like input
+/// splits do (and show up in `spill_fraction` once disks over-commit).
+pub trait BlockStore {
+    /// Account `bytes` as one replicated block; returns its id.
+    fn put_bytes(&mut self, bytes: u64) -> Result<BlockId, DfsError>;
+    /// Release a block's replicas (the namenode delete) — the snapshot
+    /// store credits pruned generations through this, so long-running
+    /// serves don't accumulate phantom usage.
+    fn remove_block(&mut self, id: BlockId) -> Result<(), DfsError>;
+    /// Cluster-wide storage utilization in `[0, ∞)`: used / capacity.
+    fn utilization(&self) -> f64;
+}
+
 /// Namenode metadata for one block.
 #[derive(Debug, Clone)]
 pub struct BlockMeta {
@@ -128,6 +147,14 @@ impl Dfs {
     /// least usage. Single-rack clusters (the paper's testbed) degrade to
     /// plain least-used placement. Deterministic tie-break on node id.
     pub fn put_block(&mut self, split: &Split) -> Result<BlockId, DfsError> {
+        self.place_block(split.bytes as u64, split.id)
+    }
+
+    /// Placement core shared by [`put_block`] (input splits) and the
+    /// [`BlockStore`] byte interface (splitless checkpoint blocks).
+    ///
+    /// [`put_block`]: Self::put_block
+    fn place_block(&mut self, bytes: u64, split_id: usize) -> Result<BlockId, DfsError> {
         let live = self.live_nodes();
         if live.len() < self.replication {
             return Err(DfsError::NotEnoughNodes {
@@ -174,7 +201,6 @@ impl Dfs {
 
         let id = BlockId(self.next_id);
         self.next_id += 1;
-        let bytes = split.bytes as u64;
         let mut spilled = false;
         for &n in &chosen {
             let dn = &mut self.nodes[n];
@@ -185,7 +211,7 @@ impl Dfs {
         let meta = BlockMeta {
             id,
             bytes,
-            split_id: split.id,
+            split_id,
             replicas: chosen,
             spilled,
         };
@@ -247,6 +273,26 @@ impl Dfs {
         used as f64 / cap as f64
     }
 
+    /// Account splitless bytes (checkpoint blocks) as one replicated
+    /// block — the [`BlockStore`] entry point, also directly usable.
+    pub fn put_bytes(&mut self, bytes: u64) -> Result<BlockId, DfsError> {
+        self.place_block(bytes, NO_SPLIT)
+    }
+
+    /// Delete a block: free its bytes on every replica holder and drop
+    /// the namenode metadata. Spill flags on *other* blocks are
+    /// placement-time history and stay as recorded.
+    pub fn remove_block(&mut self, id: BlockId) -> Result<(), DfsError> {
+        let meta = self.blocks.remove(&id).ok_or(DfsError::UnknownBlock(id))?;
+        for &n in &meta.replicas {
+            let dn = &mut self.nodes[n];
+            dn.used = dn.used.saturating_sub(meta.bytes);
+            dn.blocks.retain(|&b| b != id);
+        }
+        self.order.retain(|&b| b != id);
+        Ok(())
+    }
+
     /// Decommission a node: mark it dead and re-replicate every block it
     /// held onto other live nodes (namenode behaviour on datanode loss).
     /// Returns the number of re-replicated block replicas.
@@ -282,6 +328,20 @@ impl Dfs {
         self.nodes[node].used = 0;
         self.nodes[node].blocks.clear();
         Ok(moved)
+    }
+}
+
+impl BlockStore for Dfs {
+    fn put_bytes(&mut self, bytes: u64) -> Result<BlockId, DfsError> {
+        Dfs::put_bytes(self, bytes)
+    }
+
+    fn remove_block(&mut self, id: BlockId) -> Result<(), DfsError> {
+        Dfs::remove_block(self, id)
+    }
+
+    fn utilization(&self) -> f64 {
+        Dfs::utilization(self)
     }
 }
 
@@ -425,6 +485,37 @@ mod tests {
         let max = *used.iter().max().unwrap() as f64;
         let min = *used.iter().min().unwrap() as f64;
         assert!(max / min.max(1.0) < 1.5, "balance kept: {used:?}");
+    }
+
+    #[test]
+    fn splitless_bytes_account_like_blocks_and_spill_past_capacity() {
+        let cluster = ClusterConfig::fhssc(3).with_storage_per_node(1000);
+        let mut dfs = Dfs::new(&cluster);
+        let id = dfs.put_bytes(600).unwrap();
+        let meta = dfs.meta(id).unwrap();
+        assert_eq!(meta.split_id, NO_SPLIT);
+        assert_eq!(meta.bytes, 600);
+        assert_eq!(meta.replicas.len(), 3);
+        assert!(!meta.spilled);
+        assert!(dfs.utilization() > 0.0);
+        // a second checkpoint block overflows the 1000-byte nodes
+        let id2 = dfs.put_bytes(600).unwrap();
+        assert!(dfs.meta(id2).unwrap().spilled);
+        assert!(dfs.spill_fraction() > 0.0);
+        // the trait object view agrees with the inherent methods
+        let bs: &mut dyn BlockStore = &mut dfs;
+        let id3 = bs.put_bytes(10).unwrap();
+        assert!(bs.utilization() > 1.0);
+        assert!(id3 > id2);
+        // removal credits every replica holder and forgets the block
+        bs.remove_block(id2).unwrap();
+        assert!(matches!(bs.remove_block(id2), Err(DfsError::UnknownBlock(_))));
+        assert!(dfs.utilization() < 1.0);
+        assert_eq!(dfs.n_blocks(), 2);
+        assert!(!dfs.is_local(id2, 0));
+        dfs.remove_block(id).unwrap();
+        dfs.remove_block(id3).unwrap();
+        assert_eq!(dfs.utilization(), 0.0);
     }
 
     #[test]

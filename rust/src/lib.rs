@@ -20,6 +20,11 @@
 //! * **incremental** — the stateful mining layer: FUP-style border
 //!   maintenance so a refresh counts the delta (plus a promoted
 //!   frontier), not the whole database.
+//! * **store** — the durable snapshot store: a versioned checksummed
+//!   codec, a crash-consistent generation store (write-temp → fsync →
+//!   atomic rename, manifest last), and warm restart that resumes
+//!   serving and incremental refresh at the last published generation
+//!   instead of cold re-mining.
 //!
 //! See `DESIGN.md` for the module inventory and the experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
@@ -38,6 +43,7 @@ pub mod perfmodel;
 pub mod runtime;
 pub mod serve;
 pub mod simnet;
+pub mod store;
 pub mod util;
 
 /// Convenience re-exports covering the public API surface used by the
@@ -62,7 +68,7 @@ pub mod prelude {
         bitmap::BitmapBlock, columnar::FlatBlock, quest::QuestGenerator, quest::QuestParams,
         TransactionDb,
     };
-    pub use crate::dfs::Dfs;
+    pub use crate::dfs::{BlockStore, Dfs};
     pub use crate::engine::{
         build_engine, EngineKind, SupportEngine, VerticalEngine, VerticalIndex,
     };
@@ -76,9 +82,17 @@ pub mod prelude {
     pub use crate::runtime::{ArtifactManifest, TensorService, TensorServiceHandle};
     pub use crate::serve::{
         index::{reference_recommend, render_lines, RuleIndex},
-        refresh::{synth_baskets, synth_delta, RefreshMode, Refresher, RefreshStats},
-        server::{QueryResponse, RuleServer, ServeError, ServeOptions, ServerStats},
+        refresh::{
+            synth_baskets, synth_delta, RefreshError, RefreshMode, Refresher, RefreshStats,
+        },
+        server::{
+            QueryClass, QueryResponse, RuleServer, ServeError, ServeOptions, ServerStats,
+        },
         snapshot::SnapshotCell,
         ServeConfig,
+    };
+    pub use crate::store::{
+        resume_serving, warm_start, BaseRef, CodecError, CommitStep, Manifest, Resumed,
+        Snapshot, SnapshotRef, SnapshotStore, StoreConfig, StoreError, WarmStart,
     };
 }

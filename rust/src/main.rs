@@ -66,11 +66,14 @@ USAGE:
              [--min-support F] [--max-k K] [--engine hash-tree|trie|vertical|naive|tensor]
              [--split-tx N] [--transactions N | --input FILE] [--rules CONF]
              [--pipeline true|false] [--batch-levels 1|2]
+             [--store-dir DIR] [--retain N] [--min-confidence F]
   repro rules  <mine flags> [--min-confidence F] [--top N]
   repro serve  <mine flags> [--min-confidence F] [--top K] [--workers N]
-               [--queue-depth N] [--deadline-ms MS] [--queries N]
-               [--check true|false] [--refresh-batches B] [--refresh-tx N]
-               [--refresh-mode full|incremental] [--check-final true|false]
+               [--queue-depth N] [--internal-queue-depth N] [--deadline-ms MS]
+               [--queries N] [--check true|false] [--refresh-batches B]
+               [--refresh-tx N] [--refresh-mode full|incremental]
+               [--check-final true|false] [--store-dir DIR] [--retain N]
+               [--no-persist true|false]
   repro simulate [--config FILE] [--preset P] [--nodes N] [--transactions N]
                  [--pipeline true|false]
   repro bench --figure fig4|fig5|eta
@@ -192,7 +195,62 @@ fn experiment_config(flags: &Flags) -> Result<ExperimentConfig, String> {
     if let Some(mode) = flags.parse_opt::<RefreshMode>("refresh-mode")? {
         cfg.incremental.enabled = mode == RefreshMode::Incremental;
     }
+    if let Some(d) = flags.parse_opt::<usize>("internal-queue-depth")? {
+        if d == 0 {
+            return Err("--internal-queue-depth: must be >= 1".into());
+        }
+        cfg.serve.internal_queue_depth = d;
+    }
+    if let Some(dir) = flags.get("store-dir") {
+        cfg.store.dir = Some(PathBuf::from(dir));
+    }
+    if let Some(r) = flags.parse_opt::<usize>("retain")? {
+        if r == 0 {
+            return Err("--retain: must be >= 1".into());
+        }
+        cfg.store.retain = r;
+    }
+    if let Some(b) = flags.parse_opt::<bool>("no-persist")? {
+        cfg.store.no_persist = b;
+    }
     Ok(cfg)
+}
+
+/// Open the configured snapshot store (even with `--no-persist true` —
+/// warm restart still reads it; only writes are gated), with its bytes
+/// charged against a simulated DFS of the configured cluster.
+fn open_store(cfg: &ExperimentConfig) -> Result<Option<Arc<SnapshotStore>>, String> {
+    let Some(dir) = &cfg.store.dir else {
+        return Ok(None);
+    };
+    let store = SnapshotStore::open(dir, cfg.store.retain)
+        .map_err(|e| e.to_string())?
+        .with_block_accounting(Box::new(Dfs::new(&cfg.cluster())));
+    Ok(Some(Arc::new(store)))
+}
+
+/// Persist the cold-start (generation 0) snapshot — shared by
+/// `mine --store-dir` and `serve`'s cold-start path.
+fn publish_generation_zero(
+    store: &SnapshotStore,
+    cfg: &ExperimentConfig,
+    base: BaseRef,
+    result: &MiningResult,
+    state: Option<&MinedState>,
+    index: &RuleIndex,
+) -> Result<(), String> {
+    store
+        .publish(&SnapshotRef {
+            generation: 0,
+            base,
+            min_support: cfg.apriori.min_support,
+            max_k: cfg.apriori.max_k,
+            delta: &[],
+            result,
+            state,
+            index,
+        })
+        .map_err(|e| e.to_string())
 }
 
 fn load_or_generate(flags: &Flags, cfg: &ExperimentConfig) -> Result<TransactionDb, String> {
@@ -257,6 +315,9 @@ fn cmd_mine(flags: &Flags) -> Result<(), String> {
     let cfg = experiment_config(flags)?;
     let db = load_or_generate(flags, &cfg)?;
     let driver = build_driver(&cfg)?;
+    // Open (and thereby validate) the store *before* the mine — an
+    // unwritable --store-dir must not cost a completed mining run.
+    let store = if cfg.store.writes_enabled() { open_store(&cfg)? } else { None };
     println!(
         "mining {} transactions on {:?}/{} nodes (engine={}, min_support={}, schedule={})",
         db.len(),
@@ -270,7 +331,15 @@ fn cmd_mine(flags: &Flags) -> Result<(), String> {
             "synchronous"
         },
     );
-    let report = driver.mine(&db).map_err(|e| e.to_string())?;
+    // With a store attached, mine in capture mode (byte-identical
+    // result) so the border state lands in the generation-0 snapshot and
+    // an incremental `serve --store-dir` warm-starts without any mining.
+    let (report, captured_state) = if store.is_some() {
+        let (r, st) = MinedState::capture(&driver, &db).map_err(|e| e.to_string())?;
+        (r, Some(st))
+    } else {
+        (driver.mine(&db).map_err(|e| e.to_string())?, None)
+    };
 
     println!("\nlevel | candidates | frequent | wall(s)");
     for l in &report.result.levels {
@@ -301,6 +370,25 @@ fn cmd_mine(flags: &Flags) -> Result<(), String> {
         if rules.len() > 20 {
             println!("  ... ({} more)", rules.len() - 20);
         }
+    }
+    if let Some(state) = captured_state {
+        let store = store.expect("captured_state implies an open store");
+        let index = RuleIndex::build(&report.result, cfg.serve.min_confidence);
+        publish_generation_zero(
+            &store,
+            &cfg,
+            BaseRef::of(&db),
+            &report.result,
+            Some(&state),
+            &index,
+        )?;
+        println!(
+            "persisted generation 0 ({} itemsets, {} rules, {} border itemsets) to {}",
+            index.n_itemsets(),
+            index.n_rules(),
+            state.n_border(),
+            store.dir().display(),
+        );
     }
     Ok(())
 }
@@ -334,51 +422,193 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
     let check: bool = flags.parse_opt("check")?.unwrap_or(false);
     let check_final: bool = flags.parse_opt("check-final")?.unwrap_or(false);
     let mut db = load_or_generate(flags, &cfg)?;
-    let driver = build_driver(&cfg)?;
-    println!("mining {} transactions for the serving snapshot ...", db.len());
-    let report = driver.mine(&db).map_err(|e| e.to_string())?;
+    let base_tx = db.len();
+    let store = open_store(&cfg)?;
+    // Base identity before any recovered delta lands: the store journals
+    // cumulative deltas relative to this exact database. The O(|D|)
+    // fingerprint only runs when a store is actually configured.
+    let base_ref = store.as_ref().map(|_| BaseRef::of(&db));
+    let persist = cfg.store.writes_enabled();
     let s = cfg.serve.clone();
-    let index = RuleIndex::build(&report.result, s.min_confidence);
+
+    // Warm restart: resume at the newest intact persisted generation for
+    // this base instead of cold re-mining. A store written for different
+    // data refuses to resume (cold start with a warning); corrupt or
+    // truncated files already degraded inside `resume_serving`.
+    let mut resumed = None;
+    if let Some(store) = &store {
+        match mr_apriori::store::resume_serving(store, &mut db, base_ref.expect("store is open")) {
+            Ok(r) => resumed = r,
+            Err(StoreError::BaseMismatch { .. }) => eprintln!(
+                "warning: store at {} belongs to a different base database; cold-starting \
+                 (a store directory serves one dataset — use a fresh --store-dir)",
+                store.dir().display()
+            ),
+            Err(e) => return Err(e.to_string()),
+        }
+    }
+
+    let (cell, result, start_generation, seed_state) = match resumed {
+        Some(r) => {
+            // a persisted generation is exact only under the parameters
+            // it was produced with — refuse a silent drift (every
+            // snapshot carries them, state-less full-mode ones included)
+            if r.min_support != cfg.apriori.min_support || r.max_k != cfg.apriori.max_k {
+                return Err(format!(
+                    "store was mined with min_support {} / max_k {}; rerun with \
+                     matching flags or a fresh --store-dir",
+                    r.min_support, r.max_k
+                ));
+            }
+            if r.min_confidence != s.min_confidence {
+                return Err(format!(
+                    "store's serving index was built at min_confidence {}; rerun with \
+                     matching --min-confidence or a fresh --store-dir",
+                    r.min_confidence
+                ));
+            }
+            println!(
+                "warm restart: resumed generation {} from {} — {} tx ({} recovered delta), \
+                 {} itemsets, {} rules, no re-mine",
+                r.generation,
+                store.as_ref().expect("resumed implies a store").dir().display(),
+                db.len(),
+                db.len() - base_tx,
+                r.result.frequent.len(),
+                r.cell.load().n_rules(),
+            );
+            (r.cell, r.result, r.generation, r.state)
+        }
+        None => {
+            let driver = build_driver(&cfg)?;
+            println!("mining {} transactions for the serving snapshot ...", db.len());
+            // Capture the border state whenever it will be persisted (so
+            // a restarted incremental serve resumes from it) — results
+            // are byte-identical to a plain mine.
+            let (result, state0) = if persist && cfg.incremental.enabled {
+                let (report, st) = MinedState::capture(&driver, &db).map_err(|e| e.to_string())?;
+                (report.result, Some(st))
+            } else {
+                (driver.mine(&db).map_err(|e| e.to_string())?.result, None)
+            };
+            let index = RuleIndex::build(&result, s.min_confidence);
+            if persist {
+                let store = store.as_ref().expect("writes_enabled implies a dir");
+                publish_generation_zero(
+                    store,
+                    &cfg,
+                    base_ref.expect("persist implies an open store"),
+                    &result,
+                    state0.as_ref(),
+                    &index,
+                )?;
+            }
+            let cell = Arc::new(SnapshotCell::new(Arc::new(index)));
+            (cell, result, 0, state0)
+        }
+    };
     println!(
-        "snapshot gen 0: {} itemsets, {} rules at confidence >= {} (refresh mode: {})",
-        index.n_itemsets(),
-        index.n_rules(),
+        "snapshot gen {start_generation}: {} itemsets, {} rules at confidence >= {} \
+         (refresh mode: {}, persistence: {})",
+        cell.load().n_itemsets(),
+        cell.load().n_rules(),
         s.min_confidence,
         if cfg.incremental.enabled { "incremental" } else { "full" },
+        if persist { "on" } else { "off" },
     );
-    let direct = check.then(|| generate_rules(&report.result, s.min_confidence));
+    let direct = check.then(|| generate_rules(&result, s.min_confidence));
 
-    let singles: Vec<u32> = report.result.level(1).map(|(is, _)| is[0]).collect();
+    let singles: Vec<u32> = result.level(1).map(|(is, _)| is[0]).collect();
     if singles.is_empty() {
         return Err("nothing frequent to query; lower --min-support".into());
     }
     let baskets = synth_baskets(&singles, queries, cfg.seed ^ 0x5E21_E5E2);
 
-    let cell = Arc::new(SnapshotCell::new(Arc::new(index)));
-    let server = RuleServer::start(
+    let server = Arc::new(RuleServer::start(
         Arc::clone(&cell),
         ServeOptions {
             workers: s.workers,
             queue_depth: s.queue_depth,
+            internal_queue_depth: s.internal_queue_depth,
             deadline: (s.deadline_ms > 0)
                 .then(|| std::time::Duration::from_millis(s.deadline_ms)),
         },
-    );
+    ));
 
     // Optional concurrent micro-batch refresh (the db moves to that
     // thread and comes back with the outcome; queries keep hitting
-    // whatever snapshot is current).
+    // whatever snapshot is current). Each published generation is
+    // validated by probe queries on the server's *internal* lane — they
+    // can never crowd out user traffic.
     let refresh_handle = if s.refresh_batches > 0 {
         let refresher = Refresher::new(build_driver(&cfg)?, s.min_confidence)
             .with_incremental(cfg.incremental.clone());
+        let refresher = match (&store, persist) {
+            (Some(store), true) => refresher.with_store(
+                Arc::clone(store),
+                base_ref.expect("store is open"),
+                base_tx,
+            ),
+            _ => refresher,
+        };
+        if cfg.incremental.enabled {
+            if let Some(st) = seed_state {
+                refresher.seed_state(st);
+            }
+        }
         let batches: Vec<Vec<data::Transaction>> = (0..s.refresh_batches)
-            .map(|b| synth_delta(s.refresh_tx, db.n_items, cfg.seed ^ (b as u64 + 1)))
+            .map(|b| {
+                synth_delta(
+                    s.refresh_tx,
+                    db.n_items,
+                    cfg.seed ^ (start_generation + b as u64 + 1),
+                )
+            })
             .collect();
         let cell = Arc::clone(&cell);
+        let probe_server = Arc::clone(&server);
+        let probes: Vec<Vec<u32>> = baskets.iter().take(4).cloned().collect();
+        let top_k = s.top_k;
+        let min_confidence = s.min_confidence;
         let mut moved_db = std::mem::take(&mut db);
         Some(std::thread::spawn(move || {
-            let outcome = refresher.run_micro_batches(&mut moved_db, batches, &cell);
-            (outcome, moved_db)
+            let mut all = Vec::new();
+            for delta in batches {
+                let (report, st) = match refresher.refresh_once(&mut moved_db, delta, &cell) {
+                    Ok(out) => out,
+                    Err(e) => return (Err(e.to_string()), moved_db),
+                };
+                // Checked for real: the refresher is the only publisher,
+                // so every probe answer attributes to the generation just
+                // swapped in and must be byte-identical to the direct
+                // generate_rules path over that generation's result.
+                let direct = generate_rules(&report.result, min_confidence);
+                for basket in &probes {
+                    // shed probes are fine: the lane is bounded and
+                    // strictly lower priority by design
+                    let Ok(ticket) = probe_server.submit_internal(basket, top_k) else {
+                        continue;
+                    };
+                    let Ok(resp) = ticket.wait() else {
+                        continue;
+                    };
+                    if resp.generation == st.generation {
+                        let want = render_lines(&reference_recommend(&direct, basket, top_k));
+                        if resp.render() != want {
+                            return (
+                                Err(format!(
+                                    "post-swap probe mismatch at generation {} for basket \
+                                     {basket:?}",
+                                    st.generation
+                                )),
+                                moved_db,
+                            );
+                        }
+                    }
+                }
+                all.push(st);
+            }
+            (Ok(all), moved_db)
         }))
     } else {
         None
@@ -390,7 +620,7 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
         match server.query(basket, s.top_k) {
             Ok(resp) => {
                 if let Some(direct) = &direct {
-                    if resp.generation == 0 {
+                    if resp.generation == start_generation {
                         let want = render_lines(&reference_recommend(direct, basket, s.top_k));
                         if resp.render() != want {
                             return Err(format!("differential mismatch for basket {basket:?}"));
@@ -436,6 +666,7 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
         final_db = Some(moved_db);
     }
 
+    let server = Arc::into_inner(server).expect("refresh thread joined, no probe refs remain");
     let stats = server.shutdown();
     let (p50, p95, p99) = stats.latency.p50_p95_p99();
     println!(
@@ -447,6 +678,30 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
         stats.deadline_shed,
     );
     println!("latency p50 {p50:?} | p95 {p95:?} | p99 {p99:?}");
+    if stats.internal_served + stats.internal_rejected + stats.internal_deadline_shed > 0 {
+        println!(
+            "internal lane: {} probe answers, shed {} (overflow) + {} (deadline) — \
+             user tails above exclude all of these",
+            stats.internal_served,
+            stats.internal_rejected,
+            stats.internal_deadline_shed,
+        );
+    }
+    if let Some(store) = &store {
+        let mut gens = store.scan_generations().map_err(|e| e.to_string())?;
+        gens.sort_unstable();
+        println!(
+            "store {}: {} generation(s) retained {:?}, {} bytes committed{}",
+            store.dir().display(),
+            gens.len(),
+            gens,
+            store.bytes_written(),
+            store
+                .utilization()
+                .map(|u| format!(", simulated DFS utilization {:.2}%", u * 100.0))
+                .unwrap_or_default(),
+        );
+    }
     if check {
         println!("differential check: {checked} answers byte-identical to direct generate_rules");
     }
@@ -647,6 +902,31 @@ mod tests {
     }
 
     #[test]
+    fn store_and_lane_flags_apply_and_validate() {
+        let f = flags(&[
+            "--store-dir", "/tmp/snaps", "--retain", "2", "--no-persist", "true",
+            "--internal-queue-depth", "9",
+        ])
+        .unwrap();
+        let cfg = experiment_config(&f).unwrap();
+        assert_eq!(
+            cfg.store.dir.as_deref(),
+            Some(std::path::Path::new("/tmp/snaps"))
+        );
+        assert_eq!(cfg.store.retain, 2);
+        assert!(cfg.store.no_persist);
+        assert!(!cfg.store.writes_enabled());
+        assert_eq!(cfg.serve.internal_queue_depth, 9);
+        // without --no-persist a store dir enables writes
+        let f = flags(&["--store-dir", "/tmp/snaps"]).unwrap();
+        assert!(experiment_config(&f).unwrap().store.writes_enabled());
+        for bad in [["--retain", "0"], ["--internal-queue-depth", "0"]] {
+            let f = flags(&bad).unwrap();
+            assert!(experiment_config(&f).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
     fn experiment_config_rejects_bad_values() {
         let f = flags(&["--engine", "gpu"]).unwrap();
         assert!(experiment_config(&f).is_err());
@@ -662,6 +942,7 @@ mod tests {
             "vertical_smoke.toml",
             "standalone_baseline.toml",
             "serve_smoke.toml",
+            "store_smoke.toml",
         ] {
             let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
                 .join("configs")

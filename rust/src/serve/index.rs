@@ -75,23 +75,39 @@ pub struct RuleIndex {
 impl RuleIndex {
     /// Freeze a mining result into a serving snapshot.
     pub fn build(result: &MiningResult, min_confidence: f64) -> Self {
-        let rules = generate_rules(result, min_confidence);
+        Self::from_parts(
+            generate_rules(result, min_confidence),
+            result.frequent.clone(),
+            result.n_transactions,
+            min_confidence,
+        )
+    }
+
+    /// Assemble an index from its persisted parts (the `store` codec's
+    /// decode path). `rules` must be in `generate_rules`' global order —
+    /// the lookup structures are derived from it exactly as [`build`]
+    /// derives them, so a decoded index serves byte-identically to the
+    /// one that was encoded.
+    ///
+    /// [`build`]: Self::build
+    pub fn from_parts(
+        rules: Vec<Rule>,
+        support: Vec<(Itemset, u64)>,
+        n_transactions: usize,
+        min_confidence: f64,
+    ) -> Self {
         let mut by_antecedent: HashMap<Itemset, Vec<u32>> = HashMap::new();
         let mut max_antecedent_len = 0;
         for (i, r) in rules.iter().enumerate() {
             max_antecedent_len = max_antecedent_len.max(r.antecedent.len());
             by_antecedent.entry(r.antecedent.clone()).or_default().push(i as u32);
         }
-        let mut support = HashMap::with_capacity(result.frequent.len());
-        for (is, s) in &result.frequent {
-            support.insert(is.clone(), *s);
-        }
         Self {
-            support,
+            support: support.into_iter().collect(),
             rules,
             by_antecedent,
             max_antecedent_len,
-            n_transactions: result.n_transactions,
+            n_transactions,
             min_confidence,
         }
     }
@@ -102,6 +118,22 @@ impl RuleIndex {
 
     pub fn n_itemsets(&self) -> usize {
         self.support.len()
+    }
+
+    /// The rules in the deterministic global order (persistence +
+    /// diagnostics; not needed on the query path).
+    pub fn rules(&self) -> &[Rule] {
+        &self.rules
+    }
+
+    /// The support table in canonical (len, lexicographic) order, so two
+    /// identical indexes always serialize to identical bytes regardless
+    /// of hash-map iteration order.
+    pub fn support_entries(&self) -> Vec<(Itemset, u64)> {
+        let mut entries: Vec<(Itemset, u64)> =
+            self.support.iter().map(|(is, s)| (is.clone(), *s)).collect();
+        entries.sort_by(|a, b| (a.0.len(), &a.0).cmp(&(b.0.len(), &b.0)));
+        entries
     }
 
     /// O(1) support lookup (the `MiningResult` scan, precomputed).

@@ -37,6 +37,9 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Bounded request-queue depth (admission control threshold).
     pub queue_depth: usize,
+    /// Depth of the internal (background) admission lane — refresh
+    /// validation probes; strictly lower priority than user traffic.
+    pub internal_queue_depth: usize,
     /// Recommendations returned per query.
     pub top_k: usize,
     /// Confidence floor for the rules the index serves.
@@ -55,6 +58,7 @@ impl Default for ServeConfig {
         Self {
             workers: 2,
             queue_depth: 64,
+            internal_queue_depth: 16,
             top_k: 5,
             min_confidence: 0.6,
             refresh_tx: 500,

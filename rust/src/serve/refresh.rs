@@ -35,10 +35,53 @@ use crate::coordinator::{MineError, MrApriori, RunReport, WorkloadProfile};
 use crate::data::{ItemId, Transaction, TransactionDb};
 use crate::incremental::{DeltaApply, DeltaStats, IncrementalConfig, MinedState};
 use crate::metrics::Timer;
+use crate::store::{BaseRef, SnapshotRef, SnapshotStore, StoreError};
 use crate::util::rng::Xoshiro256;
 
 use super::index::RuleIndex;
 use super::snapshot::SnapshotCell;
+
+/// Why a refresh cycle failed. Either way the cycle's rollback contract
+/// holds: the database append is undone, the carried [`MinedState`] is
+/// restored, and the still-served snapshot stays untouched.
+#[derive(Debug)]
+pub enum RefreshError {
+    /// The background mine (full or delta) failed.
+    Mine(MineError),
+    /// The durable snapshot commit failed — the generation was never
+    /// published (a generation is only served once it is on disk).
+    Store(StoreError),
+}
+
+impl std::fmt::Display for RefreshError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Mine(e) => write!(f, "refresh mine failed: {e}"),
+            Self::Store(e) => write!(f, "snapshot persist failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RefreshError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Mine(e) => Some(e),
+            Self::Store(e) => Some(e),
+        }
+    }
+}
+
+impl From<MineError> for RefreshError {
+    fn from(e: MineError) -> Self {
+        Self::Mine(e)
+    }
+}
+
+impl From<StoreError> for RefreshError {
+    fn from(e: StoreError) -> Self {
+        Self::Store(e)
+    }
+}
 
 /// How a refresh cycle recomputes the mining output.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -98,6 +141,16 @@ pub struct Refresher {
     min_confidence: f64,
     incremental: IncrementalConfig,
     state: Mutex<Option<MinedState>>,
+    store: Option<StoreSink>,
+}
+
+/// Where (and relative to which base) published generations persist.
+struct StoreSink {
+    store: Arc<SnapshotStore>,
+    base: BaseRef,
+    /// Length of the immutable base database: `db.transactions[base_tx..]`
+    /// is the cumulative delta each snapshot journals.
+    base_tx: usize,
 }
 
 impl Refresher {
@@ -111,7 +164,18 @@ impl Refresher {
             min_confidence,
             incremental: IncrementalConfig::default(),
             state: Mutex::new(None),
+            store: None,
         }
+    }
+
+    /// Persist every generation this refresher publishes into `store`.
+    /// `base` identifies the immutable base database (`BaseRef::of` of
+    /// the pristine, pre-delta db) — the durable commit lands *before*
+    /// the in-memory hot swap, so a served generation is always
+    /// recoverable, and a failed commit rolls the whole cycle back.
+    pub fn with_store(mut self, store: Arc<SnapshotStore>, base: BaseRef, base_tx: usize) -> Self {
+        self.store = Some(StoreSink { store, base, base_tx });
+        self
     }
 
     /// Switch to incremental (border-maintenance) refresh with the given
@@ -137,18 +201,41 @@ impl Refresher {
         self.state.lock().unwrap().clone()
     }
 
+    /// Install a carried state directly — the warm-restart path: a
+    /// recovered [`MinedState`] makes the very next incremental cycle
+    /// take the delta path instead of the cold capture-mine that
+    /// otherwise seeds the state.
+    pub fn seed_state(&self, state: MinedState) {
+        *self.state.lock().unwrap() = Some(state);
+    }
+
     /// One micro-batch cycle: append, re-mine (or delta-apply), rebuild,
-    /// hot-swap. Returns the mining report (the differential tests query
-    /// its `result` directly) alongside the cycle stats.
+    /// **persist** (when a store is attached), hot-swap. Returns the
+    /// mining report (the differential tests query its `result`
+    /// directly) alongside the cycle stats.
+    ///
+    /// The durable commit happens *before* the in-memory swap, so every
+    /// generation a reader can observe is already recoverable. Any
+    /// failure — mine or persist — rolls the cycle back whole: the
+    /// append is undone, the carried state restored, and the old
+    /// snapshot stays in service; retrying with the same delta must not
+    /// double-append it.
     pub fn refresh_once(
         &self,
         db: &mut TransactionDb,
         delta: Vec<Transaction>,
         cell: &SnapshotCell<RuleIndex>,
-    ) -> Result<(RunReport, RefreshStats), MineError> {
+    ) -> Result<(RunReport, RefreshStats), RefreshError> {
         let delta_tx = delta.len();
         let (old_len, old_n_items) = (db.len(), db.n_items);
+        // Backup for the persist-failure rollback (the mine-failure path
+        // never mutates the state, so it only needs the db rollback).
+        let state_backup = self.store.as_ref().map(|_| self.state.lock().unwrap().clone());
         db.append(delta);
+        let rollback = |db: &mut TransactionDb| {
+            db.transactions.truncate(old_len);
+            db.n_items = old_n_items;
+        };
         let mine_timer = Timer::start();
         let mined = match self.mode() {
             RefreshMode::Full => self.driver.mine(db).map(|r| (r, None, false)),
@@ -157,12 +244,8 @@ impl Refresher {
         let (report, incremental, fell_back) = match mined {
             Ok(out) => out,
             Err(e) => {
-                // Roll the append back so a failed cycle leaves the
-                // database matching the still-served snapshot; retrying
-                // with the same delta must not double-append it.
-                db.transactions.truncate(old_len);
-                db.n_items = old_n_items;
-                return Err(e);
+                rollback(db);
+                return Err(e.into());
             }
         };
         let mine_secs = mine_timer.secs();
@@ -170,6 +253,29 @@ impl Refresher {
         let index = RuleIndex::build(&report.result, self.min_confidence);
         let build_secs = build_timer.secs();
         let (n_frequent, n_rules) = (index.n_itemsets(), index.n_rules());
+        if let Some(sink) = &self.store {
+            let generation = cell.generation() + 1;
+            let outcome = {
+                let state_guard = self.state.lock().unwrap();
+                sink.store.publish(&SnapshotRef {
+                    generation,
+                    base: sink.base,
+                    min_support: self.driver.apriori.min_support,
+                    max_k: self.driver.apriori.max_k,
+                    delta: &db.transactions[sink.base_tx..],
+                    result: &report.result,
+                    state: state_guard.as_ref(),
+                    index: &index,
+                })
+            };
+            if let Err(e) = outcome {
+                rollback(db);
+                if let Some(backup) = state_backup {
+                    *self.state.lock().unwrap() = backup;
+                }
+                return Err(e.into());
+            }
+        }
         let generation = cell.store(Arc::new(index));
         let stats = RefreshStats {
             generation,
@@ -215,15 +321,17 @@ impl Refresher {
         Ok((report, None, false))
     }
 
-    /// Run a bounded sequence of micro-batches back-to-back — the
-    /// serving CLI's one-shot refresh loop and the bench's concurrent
-    /// refresh phase.
+    /// Run a bounded sequence of micro-batches back-to-back, stopping at
+    /// the first failed cycle. Library convenience for callers that
+    /// don't need per-cycle work between refreshes (`repro serve`
+    /// hand-rolls the loop instead, to interleave its post-swap
+    /// validation probes).
     pub fn run_micro_batches(
         &self,
         db: &mut TransactionDb,
         batches: Vec<Vec<Transaction>>,
         cell: &SnapshotCell<RuleIndex>,
-    ) -> Result<Vec<RefreshStats>, MineError> {
+    ) -> Result<Vec<RefreshStats>, RefreshError> {
         batches
             .into_iter()
             .map(|delta| self.refresh_once(db, delta, cell).map(|(_, s)| s))
@@ -465,6 +573,82 @@ mod tests {
         );
         // the fallback re-seeded the state, ready for the next delta
         assert_eq!(refresher.state().unwrap().n_transactions, db.len());
+    }
+
+    use crate::util::tempdir::TempDir;
+
+    #[test]
+    fn refresher_persists_each_published_generation_before_serving_it() {
+        use crate::store::{BaseRef, SnapshotStore};
+        let tmp = TempDir::new("refresh_persist");
+        let store = Arc::new(SnapshotStore::open(tmp.path(), 4).unwrap());
+        let mut db = textbook_db();
+        let base = BaseRef::of(&db);
+        let base_tx = db.len();
+        let result0 = ClassicalApriori::default().mine(&db, &cfg());
+        let cell = SnapshotCell::new(Arc::new(RuleIndex::build(&result0, 0.3)));
+        let driver = MrApriori::new(ClusterConfig::standalone(), cfg()).with_split_tx(4);
+        let refresher = Refresher::new(driver, 0.3).with_store(Arc::clone(&store), base, base_tx);
+
+        let (r1, s1) = refresher
+            .refresh_once(&mut db, synth_delta(4, db.n_items, 1), &cell)
+            .unwrap();
+        let (r2, s2) = refresher
+            .refresh_once(&mut db, synth_delta(3, db.n_items, 2), &cell)
+            .unwrap();
+        assert_eq!((s1.generation, s2.generation), (1, 2));
+
+        let snap = store.load_latest().unwrap().expect("generation 2 durable");
+        assert_eq!(snap.generation, 2);
+        assert_eq!(snap.base, base);
+        // the journal is cumulative: both deltas, in append order
+        assert_eq!(snap.delta.len(), 7);
+        assert_eq!(snap.delta, db.transactions[base_tx..].to_vec());
+        assert_eq!(snap.result.frequent, r2.result.frequent);
+        assert!(snap.state.is_none(), "full mode persists no border state");
+        // generation 1 is retained history
+        assert_eq!(
+            store.load_generation(1).unwrap().result.frequent,
+            r1.result.frequent
+        );
+    }
+
+    #[test]
+    fn failed_persist_rolls_back_append_state_and_served_snapshot() {
+        use crate::store::{BaseRef, SnapshotStore};
+        let tmp = TempDir::new("refresh_persist_fail");
+        let store = Arc::new(SnapshotStore::open(tmp.path(), 4).unwrap());
+        let mut db = textbook_db();
+        let base = BaseRef::of(&db);
+        let base_tx = db.len();
+        let result0 = ClassicalApriori::default().mine(&db, &cfg());
+        let cell = SnapshotCell::new(Arc::new(RuleIndex::build(&result0, 0.3)));
+        let driver = MrApriori::new(ClusterConfig::standalone(), cfg()).with_split_tx(4);
+        let refresher = Refresher::new(driver, 0.3)
+            .with_incremental(IncrementalConfig { enabled: true, ..Default::default() })
+            .with_store(Arc::clone(&store), base, base_tx);
+
+        // cycle 1 succeeds and installs a carried state
+        refresher
+            .refresh_once(&mut db, synth_delta(4, db.n_items, 1), &cell)
+            .unwrap();
+        let state_before = refresher.state().expect("seeded");
+        let len_before = db.len();
+
+        // make the next durable commit fail: the store directory is gone
+        std::fs::remove_dir_all(tmp.path()).unwrap();
+        let err = refresher
+            .refresh_once(&mut db, synth_delta(5, db.n_items, 2), &cell)
+            .unwrap_err();
+        assert!(matches!(&err, RefreshError::Store(_)), "got {err}");
+        // full rollback: db, carried state, and the served snapshot
+        assert_eq!(db.len(), len_before);
+        assert_eq!(
+            format!("{:?}", refresher.state().unwrap().levels),
+            format!("{:?}", state_before.levels)
+        );
+        assert_eq!(cell.generation(), 1);
+        assert_eq!(cell.load().n_transactions, len_before);
     }
 
     #[test]

@@ -63,50 +63,96 @@ pub enum PushError<T> {
     Closed(T),
 }
 
-/// A bounded MPMC queue: non-blocking producers (admission control),
-/// blocking consumers (worker parking). Close-able for shutdown.
+/// Admission class of a request — which lane of the two-class queue it
+/// takes. Workers drain the user lane strictly first, so background
+/// traffic (refresh-triggered probe queries) can never starve user
+/// requests; each lane has its own capacity and its own shed counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueryClass {
+    /// Foreground traffic: the lane with strict priority.
+    #[default]
+    User,
+    /// Background traffic (refresh validation probes, warm-up): served
+    /// only when the user lane is empty, from its own smaller lane.
+    Internal,
+}
+
+/// A bounded two-class MPMC queue: non-blocking producers (admission
+/// control, per-lane capacity), blocking consumers (worker parking) that
+/// drain the user lane strictly before the internal one. Close-able for
+/// shutdown.
 #[derive(Debug)]
 pub struct BoundedQueue<T> {
     state: Mutex<QueueState<T>>,
     ready: Condvar,
     capacity: usize,
+    internal_capacity: usize,
 }
 
 #[derive(Debug)]
 struct QueueState<T> {
-    items: VecDeque<T>,
+    user: VecDeque<T>,
+    internal: VecDeque<T>,
     closed: bool,
 }
 
 impl<T> BoundedQueue<T> {
+    /// Single-class constructor: the internal lane gets the same
+    /// capacity as the user lane.
     pub fn new(capacity: usize) -> Self {
+        Self::with_lanes(capacity, capacity)
+    }
+
+    /// Two-class constructor with separate per-lane capacities.
+    pub fn with_lanes(capacity: usize, internal_capacity: usize) -> Self {
         assert!(capacity > 0, "queue capacity must be >= 1");
+        assert!(internal_capacity > 0, "internal queue capacity must be >= 1");
         Self {
-            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            state: Mutex::new(QueueState {
+                user: VecDeque::new(),
+                internal: VecDeque::new(),
+                closed: false,
+            }),
             ready: Condvar::new(),
             capacity,
+            internal_capacity,
         }
     }
 
-    /// Admit `item` if there is room; never blocks.
+    /// Admit `item` into the user lane if there is room; never blocks.
     pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        self.try_push_class(item, QueryClass::User)
+    }
+
+    /// Admit `item` into its class's lane if there is room; never
+    /// blocks, and never counts one lane's backlog against the other's
+    /// capacity.
+    pub fn try_push_class(&self, item: T, class: QueryClass) -> Result<(), PushError<T>> {
         let mut st = self.state.lock().unwrap();
         if st.closed {
             return Err(PushError::Closed(item));
         }
-        if st.items.len() >= self.capacity {
+        let (lane, cap) = match class {
+            QueryClass::User => (&mut st.user, self.capacity),
+            QueryClass::Internal => (&mut st.internal, self.internal_capacity),
+        };
+        if lane.len() >= cap {
             return Err(PushError::Full(item));
         }
-        st.items.push_back(item);
+        lane.push_back(item);
         self.ready.notify_one();
         Ok(())
     }
 
-    /// Block until an item is available; `None` once closed and drained.
+    /// Block until an item is available; user lane strictly first;
+    /// `None` once closed and both lanes drained.
     pub fn pop(&self) -> Option<T> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(item) = st.items.pop_front() {
+            if let Some(item) = st.user.pop_front() {
+                return Some(item);
+            }
+            if let Some(item) = st.internal.pop_front() {
                 return Some(item);
             }
             if st.closed {
@@ -122,8 +168,10 @@ impl<T> BoundedQueue<T> {
         self.ready.notify_all();
     }
 
+    /// Total queued items across both lanes.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        let st = self.state.lock().unwrap();
+        st.user.len() + st.internal.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -167,6 +215,10 @@ impl QueryTicket {
 pub struct ServeOptions {
     pub workers: usize,
     pub queue_depth: usize,
+    /// Capacity of the internal (background) lane. Internal traffic has
+    /// its own, typically smaller, admission bound and is only served
+    /// when the user lane is empty.
+    pub internal_queue_depth: usize,
     /// Shed a request that has waited in the queue at least this long by
     /// the time a worker picks it up — bounded staleness under overload,
     /// counted separately from queue-overflow sheds. `None` disables it;
@@ -180,27 +232,39 @@ impl Default for ServeOptions {
         Self {
             workers: 2,
             queue_depth: 64,
+            internal_queue_depth: 16,
             deadline: None,
         }
     }
 }
 
-/// Counters + latency view at one point in time.
+/// Counters + latency view at one point in time. All shed counters are
+/// per class: user traffic and internal (background) traffic never blur.
 #[derive(Debug, Clone)]
 pub struct ServerStats {
+    /// User requests answered.
     pub served: u64,
-    /// Overflow sheds: admission control turned the request away.
+    /// User overflow sheds: admission control turned the request away.
     pub rejected: u64,
-    /// Deadline sheds: admitted, but aged out before a worker got to it.
-    /// Never recorded into the latency histogram — tails describe
+    /// User deadline sheds: admitted, but aged out before a worker got
+    /// to it. Never recorded into the latency histogram — tails describe
     /// answered requests only.
     pub deadline_shed: u64,
+    /// Internal (background-lane) requests answered. Internal answers
+    /// are excluded from the latency histogram too: tails describe the
+    /// user-facing SLO.
+    pub internal_served: u64,
+    /// Internal overflow sheds (the internal lane's own capacity).
+    pub internal_rejected: u64,
+    /// Internal deadline sheds.
+    pub internal_deadline_shed: u64,
     pub latency: HistogramSnapshot,
 }
 
 struct Job {
     basket: Vec<ItemId>,
     top_k: usize,
+    class: QueryClass,
     enqueued: Instant,
     reply: mpsc::Sender<Result<QueryResponse, ServeError>>,
 }
@@ -212,6 +276,9 @@ struct ServerInner {
     served: AtomicU64,
     rejected: AtomicU64,
     deadline_shed: AtomicU64,
+    internal_served: AtomicU64,
+    internal_rejected: AtomicU64,
+    internal_deadline_shed: AtomicU64,
     latency: LatencyHistogram,
 }
 
@@ -228,11 +295,14 @@ impl RuleServer {
         assert!(opts.workers > 0, "need at least one worker");
         let inner = Arc::new(ServerInner {
             snapshot,
-            queue: BoundedQueue::new(opts.queue_depth),
+            queue: BoundedQueue::with_lanes(opts.queue_depth, opts.internal_queue_depth),
             deadline: opts.deadline,
             served: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             deadline_shed: AtomicU64::new(0),
+            internal_served: AtomicU64::new(0),
+            internal_rejected: AtomicU64::new(0),
+            internal_deadline_shed: AtomicU64::new(0),
             latency: LatencyHistogram::new(),
         });
         let workers = (0..opts.workers)
@@ -244,20 +314,45 @@ impl RuleServer {
         Self { inner, workers }
     }
 
-    /// Non-blocking admission: `Err(QueueFull)` is load shedding, not a
-    /// failure of the server.
+    /// Non-blocking admission into the user lane: `Err(QueueFull)` is
+    /// load shedding, not a failure of the server.
     pub fn submit(&self, basket: &[ItemId], top_k: usize) -> Result<QueryTicket, ServeError> {
+        self.submit_class(basket, top_k, QueryClass::User)
+    }
+
+    /// Non-blocking admission into the internal (background) lane: the
+    /// refresh loop's validation probes go here, so they can never crowd
+    /// user traffic out of admission or out of a worker.
+    pub fn submit_internal(
+        &self,
+        basket: &[ItemId],
+        top_k: usize,
+    ) -> Result<QueryTicket, ServeError> {
+        self.submit_class(basket, top_k, QueryClass::Internal)
+    }
+
+    fn submit_class(
+        &self,
+        basket: &[ItemId],
+        top_k: usize,
+        class: QueryClass,
+    ) -> Result<QueryTicket, ServeError> {
         let (tx, rx) = mpsc::channel();
         let job = Job {
             basket: basket.to_vec(),
             top_k,
+            class,
             enqueued: Instant::now(),
             reply: tx,
         };
-        match self.inner.queue.try_push(job) {
+        match self.inner.queue.try_push_class(job, class) {
             Ok(()) => Ok(QueryTicket { rx }),
             Err(PushError::Full(_)) => {
-                self.inner.rejected.fetch_add(1, Ordering::Relaxed);
+                let counter = match class {
+                    QueryClass::User => &self.inner.rejected,
+                    QueryClass::Internal => &self.inner.internal_rejected,
+                };
+                counter.fetch_add(1, Ordering::Relaxed);
                 Err(ServeError::QueueFull)
             }
             Err(PushError::Closed(_)) => Err(ServeError::Closed),
@@ -274,6 +369,9 @@ impl RuleServer {
             served: self.inner.served.load(Ordering::Relaxed),
             rejected: self.inner.rejected.load(Ordering::Relaxed),
             deadline_shed: self.inner.deadline_shed.load(Ordering::Relaxed),
+            internal_served: self.inner.internal_served.load(Ordering::Relaxed),
+            internal_rejected: self.inner.internal_rejected.load(Ordering::Relaxed),
+            internal_deadline_shed: self.inner.internal_deadline_shed.load(Ordering::Relaxed),
             latency: self.inner.latency.snapshot(),
         }
     }
@@ -303,12 +401,17 @@ fn worker_loop(inner: &ServerInner) {
         // Deadline check at dequeue: under overload a request can age out
         // while queued; answering it would spend worker time on a reply
         // the client has likely abandoned. Shed it (counted apart from
-        // overflow sheds; no latency sample — tails are answers only).
+        // overflow sheds, per class; no latency sample — tails are
+        // answers only).
         if let Some(deadline) = inner.deadline {
             // Inclusive: Instant is only guaranteed non-decreasing, so a
             // zero deadline must not hinge on elapsed() being nonzero.
             if job.enqueued.elapsed() >= deadline {
-                inner.deadline_shed.fetch_add(1, Ordering::Relaxed);
+                let counter = match job.class {
+                    QueryClass::User => &inner.deadline_shed,
+                    QueryClass::Internal => &inner.internal_deadline_shed,
+                };
+                counter.fetch_add(1, Ordering::Relaxed);
                 let _ = job.reply.send(Err(ServeError::DeadlineExceeded));
                 continue;
             }
@@ -317,8 +420,17 @@ fn worker_loop(inner: &ServerInner) {
         // this (SnapshotCell's critical section is the clone itself).
         let (index, generation) = inner.snapshot.load_with_generation();
         let recommendations = index.recommend(&job.basket, job.top_k);
-        inner.latency.record(job.enqueued.elapsed());
-        inner.served.fetch_add(1, Ordering::Relaxed);
+        match job.class {
+            QueryClass::User => {
+                // Only user answers feed the histogram: the tails are
+                // the user-facing SLO, not background probe latency.
+                inner.latency.record(job.enqueued.elapsed());
+                inner.served.fetch_add(1, Ordering::Relaxed);
+            }
+            QueryClass::Internal => {
+                inner.internal_served.fetch_add(1, Ordering::Relaxed);
+            }
+        }
         // A dropped ticket just means the client stopped waiting.
         let _ = job.reply.send(Ok(QueryResponse { generation, recommendations }));
     }
@@ -449,6 +561,7 @@ mod tests {
                 workers: 2,
                 queue_depth: 16,
                 deadline: Some(std::time::Duration::ZERO),
+                ..Default::default()
             },
         );
         for _ in 0..5 {
@@ -470,6 +583,7 @@ mod tests {
                 workers: 2,
                 queue_depth: 16,
                 deadline: Some(std::time::Duration::from_secs(30)),
+                ..Default::default()
             },
         );
         let basket = vec![0u32, 1];
@@ -480,6 +594,107 @@ mod tests {
         );
         let stats = server.shutdown();
         assert_eq!((stats.served, stats.deadline_shed), (1, 0));
+    }
+
+    #[test]
+    fn queue_drains_user_lane_strictly_before_internal() {
+        let q = BoundedQueue::with_lanes(4, 4);
+        q.try_push_class("bg-1", QueryClass::Internal).unwrap();
+        q.try_push_class("user-1", QueryClass::User).unwrap();
+        q.try_push_class("bg-2", QueryClass::Internal).unwrap();
+        q.try_push_class("user-2", QueryClass::User).unwrap();
+        q.close();
+        // every user item first, then the internal backlog, both FIFO
+        assert_eq!(q.pop(), Some("user-1"));
+        assert_eq!(q.pop(), Some("user-2"));
+        assert_eq!(q.pop(), Some("bg-1"));
+        assert_eq!(q.pop(), Some("bg-2"));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn lanes_have_independent_capacity() {
+        let q = BoundedQueue::with_lanes(2, 1);
+        // a full internal lane never blocks user admission...
+        q.try_push_class(0, QueryClass::Internal).unwrap();
+        assert!(matches!(
+            q.try_push_class(1, QueryClass::Internal),
+            Err(PushError::Full(1))
+        ));
+        q.try_push(2).unwrap();
+        q.try_push(3).unwrap();
+        // ...and a full user lane never blocks internal admission
+        assert!(matches!(q.try_push(4), Err(PushError::Full(4))));
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn internal_probes_answer_without_touching_user_counters() {
+        let (cell, rules) = textbook_index(0.3);
+        let server = RuleServer::start(Arc::clone(&cell), ServeOptions::default());
+        let basket = vec![0u32, 1];
+        let resp = server
+            .submit_internal(&basket, 5)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(
+            resp.render(),
+            render_lines(&reference_recommend(&rules, &basket, 5))
+        );
+        let user = server.query(&basket, 5).unwrap();
+        assert_eq!(user.render(), resp.render());
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 1);
+        assert_eq!(stats.internal_served, 1);
+        assert_eq!(stats.internal_rejected, 0);
+        // internal answers leave no latency samples — tails are user SLO
+        assert_eq!(stats.latency.count(), 1);
+    }
+
+    #[test]
+    fn internal_overflow_and_deadline_sheds_count_per_class() {
+        let (cell, _) = textbook_index(0.3);
+        // no workers pulling yet: start with 1 worker but flood admission
+        // first via a zero deadline so everything is shed at dequeue
+        let server = RuleServer::start(
+            cell,
+            ServeOptions {
+                workers: 1,
+                queue_depth: 16,
+                internal_queue_depth: 2,
+                deadline: Some(std::time::Duration::ZERO),
+            },
+        );
+        let mut admitted = 0;
+        let mut overflowed = 0;
+        let mut tickets = Vec::new();
+        for _ in 0..8 {
+            match server.submit_internal(&[0, 1], 5) {
+                Ok(t) => {
+                    admitted += 1;
+                    tickets.push(t);
+                }
+                Err(ServeError::QueueFull) => overflowed += 1,
+                Err(e) => panic!("unexpected: {e}"),
+            }
+        }
+        // conservation: every burst request either admitted or overflowed
+        // (the exact split races with the draining worker), and each
+        // class-specific counter matches its observed outcome exactly
+        assert_eq!(admitted + overflowed, 8);
+        assert!(admitted >= 2, "an empty 2-deep lane admits at least 2");
+        for t in tickets {
+            assert_eq!(t.wait(), Err(ServeError::DeadlineExceeded));
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.internal_rejected, overflowed);
+        assert_eq!(stats.internal_deadline_shed, admitted);
+        // nothing leaked into the user-class counters
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.deadline_shed, 0);
+        assert_eq!(stats.served, 0);
+        assert_eq!(stats.latency.count(), 0);
     }
 
     #[test]

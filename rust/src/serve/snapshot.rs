@@ -29,9 +29,16 @@ pub struct SnapshotCell<T> {
 impl<T> SnapshotCell<T> {
     /// Wrap an initial snapshot as generation 0.
     pub fn new(initial: Arc<T>) -> Self {
+        Self::with_generation(initial, 0)
+    }
+
+    /// Wrap an initial snapshot at an explicit generation — the warm
+    /// restart path: a recovered snapshot keeps its persisted generation
+    /// number, so response generations continue the pre-kill sequence.
+    pub fn with_generation(initial: Arc<T>, generation: u64) -> Self {
         Self {
             current: Mutex::new(initial),
-            generation: AtomicU64::new(0),
+            generation: AtomicU64::new(generation),
         }
     }
 
@@ -81,6 +88,16 @@ mod tests {
         assert_eq!(cell.generation(), 1);
         let (snap, generation) = cell.load_with_generation();
         assert_eq!((*snap, generation), (2, 1));
+    }
+
+    #[test]
+    fn with_generation_resumes_the_sequence() {
+        let cell = SnapshotCell::with_generation(Arc::new(7u64), 41);
+        assert_eq!(cell.generation(), 41);
+        assert_eq!(*cell.load(), 7);
+        assert_eq!(cell.store(Arc::new(8)), 42);
+        let (snap, generation) = cell.load_with_generation();
+        assert_eq!((*snap, generation), (8, 42));
     }
 
     #[test]

@@ -1,0 +1,776 @@
+//! Versioned, checksummed binary codec for the durable snapshot store.
+//!
+//! Zero dependencies (no serde in the offline crate set — DESIGN.md
+//! §Substitutions). Every top-level value is wrapped in one **frame**:
+//!
+//! ```text
+//! magic "MRAS" (4) | version u16 | tag u8 | payload_len u64
+//!   | payload (payload_len bytes) | fnv1a64(payload) u64
+//! ```
+//!
+//! all integers little-endian, floats as IEEE-754 bit patterns. The
+//! decoder verifies magic, version, tag, exact length and checksum
+//! *before* touching the payload, and every payload read is
+//! bounds-checked, so corruption of any kind — bit flips, truncated
+//! tails, appended garbage, a wrong file fed to the wrong decoder —
+//! surfaces as a typed [`CodecError`], never a panic, an allocation
+//! explosion, or a silently wrong value. (FNV-1a's per-byte step is
+//! XOR-then-multiply-by-odd-prime, both invertible mod 2^64, so any
+//! single-byte change is *guaranteed* to change the digest —
+//! `tests/store.rs` asserts the exhaustive bit-flip corpus.)
+//!
+//! Sequences are length-prefixed with a sanity bound: a decoded length
+//! may never imply more elements than the remaining bytes could hold, so
+//! a corrupt length field cannot trigger a huge allocation.
+
+use crate::apriori::rules::Rule;
+use crate::apriori::{AprioriConfig, Itemset, LevelStats, MiningResult};
+use crate::data::{ItemId, Transaction, TransactionDb};
+use crate::incremental::{LevelState, MinedState};
+use crate::serve::index::RuleIndex;
+
+use super::{BaseRef, Manifest, Snapshot, SnapshotRef};
+
+/// File magic: "MR Apriori Snapshot".
+pub const MAGIC: [u8; 4] = *b"MRAS";
+/// On-disk format version; bump on any layout change.
+pub const VERSION: u16 = 1;
+
+const HEADER_LEN: usize = 4 + 2 + 1 + 8;
+const CHECKSUM_LEN: usize = 8;
+
+/// Frame kind tags (one per persisted type).
+pub const TAG_MINING_RESULT: u8 = 1;
+pub const TAG_MINED_STATE: u8 = 2;
+pub const TAG_RULE_INDEX: u8 = 3;
+pub const TAG_DELTA: u8 = 4;
+pub const TAG_SNAPSHOT: u8 = 5;
+pub const TAG_MANIFEST: u8 = 6;
+
+/// Why a buffer failed to decode. Every variant is a detected corruption
+/// (or a wrong-file mistake); none of them can escape as a panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// Fewer bytes than the format requires at this point.
+    Truncated { need: usize, have: usize },
+    /// The frame does not start with [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// A version this build does not understand.
+    UnsupportedVersion(u16),
+    /// The frame holds a different type than the caller asked for.
+    WrongTag { want: u8, got: u8 },
+    /// Payload digest mismatch: the bytes changed after encoding.
+    Checksum { want: u64, got: u64 },
+    /// Bytes beyond the end of a well-formed frame.
+    TrailingBytes(usize),
+    /// A sequence length field implies more data than the buffer holds.
+    LengthOverflow { len: u64, remaining: usize },
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Truncated { need, have } => {
+                write!(f, "truncated: need {need} bytes, have {have}")
+            }
+            Self::BadMagic(m) => write!(f, "bad magic {m:?} (want {MAGIC:?})"),
+            Self::UnsupportedVersion(v) => {
+                write!(f, "unsupported format version {v} (this build reads {VERSION})")
+            }
+            Self::WrongTag { want, got } => {
+                write!(f, "frame holds tag {got}, caller wants tag {want}")
+            }
+            Self::Checksum { want, got } => {
+                write!(f, "checksum mismatch: stored {want:#018x}, computed {got:#018x}")
+            }
+            Self::TrailingBytes(n) => write!(f, "{n} trailing bytes after the frame"),
+            Self::LengthOverflow { len, remaining } => {
+                write!(f, "length {len} exceeds the {remaining} remaining bytes")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+// ---------------------------------------------------------------- fnv1a
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over a byte slice.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn fnv1a_u64(h: u64, v: u64) -> u64 {
+    let mut h = h;
+    for b in v.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Content fingerprint of a transaction database (order-sensitive: the
+/// delta journal is positional relative to the base).
+pub(crate) fn fingerprint_db(db: &TransactionDb) -> u64 {
+    let mut h = fnv1a_u64(FNV_OFFSET, db.len() as u64);
+    for t in &db.transactions {
+        h = fnv1a_u64(h, t.items.len() as u64);
+        for &i in &t.items {
+            h = fnv1a_u64(h, i as u64);
+        }
+    }
+    h
+}
+
+// ---------------------------------------------------------------- frame
+
+fn frame(tag: u8, payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + CHECKSUM_LEN);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(tag);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    let sum = fnv1a(&payload);
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+fn unframe(want_tag: u8, bytes: &[u8]) -> Result<&[u8], CodecError> {
+    if bytes.len() < HEADER_LEN + CHECKSUM_LEN {
+        return Err(CodecError::Truncated {
+            need: HEADER_LEN + CHECKSUM_LEN,
+            have: bytes.len(),
+        });
+    }
+    let magic: [u8; 4] = bytes[0..4].try_into().expect("4 bytes");
+    if magic != MAGIC {
+        return Err(CodecError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes(bytes[4..6].try_into().expect("2 bytes"));
+    if version != VERSION {
+        return Err(CodecError::UnsupportedVersion(version));
+    }
+    let tag = bytes[6];
+    if tag != want_tag {
+        return Err(CodecError::WrongTag { want: want_tag, got: tag });
+    }
+    let payload_len = u64::from_le_bytes(bytes[7..15].try_into().expect("8 bytes"));
+    // checked: a corrupt length near u64::MAX must be an error, not an
+    // arithmetic-overflow panic in debug builds
+    let Some(total) = payload_len.checked_add((HEADER_LEN + CHECKSUM_LEN) as u64) else {
+        return Err(CodecError::LengthOverflow {
+            len: payload_len,
+            remaining: bytes.len() - HEADER_LEN - CHECKSUM_LEN,
+        });
+    };
+    if (bytes.len() as u64) < total {
+        return Err(CodecError::LengthOverflow {
+            len: payload_len,
+            remaining: bytes.len() - HEADER_LEN - CHECKSUM_LEN,
+        });
+    }
+    if bytes.len() as u64 > total {
+        return Err(CodecError::TrailingBytes(bytes.len() - total as usize));
+    }
+    let payload = &bytes[HEADER_LEN..HEADER_LEN + payload_len as usize];
+    let stored =
+        u64::from_le_bytes(bytes[bytes.len() - CHECKSUM_LEN..].try_into().expect("8 bytes"));
+    let computed = fnv1a(payload);
+    if stored != computed {
+        return Err(CodecError::Checksum { want: stored, got: computed });
+    }
+    Ok(payload)
+}
+
+// ------------------------------------------------------------- writers
+
+fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+fn put_itemset(buf: &mut Vec<u8>, is: &[ItemId]) {
+    put_u64(buf, is.len() as u64);
+    for &i in is {
+        put_u32(buf, i);
+    }
+}
+
+fn put_counted(buf: &mut Vec<u8>, rows: &[(Itemset, u64)]) {
+    put_u64(buf, rows.len() as u64);
+    for (is, s) in rows {
+        put_itemset(buf, is);
+        put_u64(buf, *s);
+    }
+}
+
+fn put_transactions(buf: &mut Vec<u8>, txs: &[Transaction]) {
+    put_u64(buf, txs.len() as u64);
+    for t in txs {
+        put_itemset(buf, &t.items);
+    }
+}
+
+fn put_rule(buf: &mut Vec<u8>, r: &Rule) {
+    put_itemset(buf, &r.antecedent);
+    put_itemset(buf, &r.consequent);
+    put_u64(buf, r.support);
+    put_f64(buf, r.confidence);
+    put_f64(buf, r.lift);
+}
+
+fn put_mining_result(buf: &mut Vec<u8>, r: &MiningResult) {
+    put_u64(buf, r.n_transactions as u64);
+    put_u64(buf, r.levels.len() as u64);
+    for l in &r.levels {
+        put_u64(buf, l.k as u64);
+        put_u64(buf, l.n_candidates as u64);
+        put_u64(buf, l.n_frequent as u64);
+        put_f64(buf, l.work_units);
+        put_f64(buf, l.wall_secs);
+    }
+    put_counted(buf, &r.frequent);
+}
+
+fn put_mined_state(buf: &mut Vec<u8>, s: &MinedState) {
+    put_f64(buf, s.apriori.min_support);
+    put_u64(buf, s.apriori.max_k as u64);
+    put_u64(buf, s.n_transactions as u64);
+    put_u64(buf, s.n_items as u64);
+    put_u64(buf, s.levels.len() as u64);
+    for l in &s.levels {
+        put_counted(buf, &l.frequent);
+        put_counted(buf, &l.border);
+    }
+}
+
+fn put_rule_index(buf: &mut Vec<u8>, idx: &RuleIndex) {
+    put_u64(buf, idx.n_transactions as u64);
+    put_f64(buf, idx.min_confidence);
+    put_counted(buf, &idx.support_entries());
+    let rules = idx.rules();
+    put_u64(buf, rules.len() as u64);
+    for r in rules {
+        put_rule(buf, r);
+    }
+}
+
+// ------------------------------------------------------------- readers
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.remaining() < n {
+            return Err(CodecError::Truncated { need: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn usize(&mut self) -> Result<usize, CodecError> {
+        let v = self.u64()?;
+        usize::try_from(v)
+            .map_err(|_| CodecError::LengthOverflow { len: v, remaining: self.remaining() })
+    }
+
+    /// A sequence length whose elements take at least `min_elem_bytes`
+    /// each — bounds the implied size against the remaining buffer so a
+    /// corrupt length cannot drive a huge allocation.
+    fn seq_len(&mut self, min_elem_bytes: usize) -> Result<usize, CodecError> {
+        let len = self.u64()?;
+        let remaining = self.remaining();
+        let implied = len.checked_mul(min_elem_bytes.max(1) as u64);
+        match implied {
+            Some(bytes) if bytes <= remaining as u64 => Ok(len as usize),
+            _ => Err(CodecError::LengthOverflow { len, remaining }),
+        }
+    }
+
+    fn itemset(&mut self) -> Result<Itemset, CodecError> {
+        let n = self.seq_len(4)?;
+        let mut is = Vec::with_capacity(n);
+        for _ in 0..n {
+            is.push(self.u32()?);
+        }
+        Ok(is)
+    }
+
+    fn counted(&mut self) -> Result<Vec<(Itemset, u64)>, CodecError> {
+        // each row is at least an empty itemset (8) plus a count (8)
+        let n = self.seq_len(16)?;
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let is = self.itemset()?;
+            let s = self.u64()?;
+            rows.push((is, s));
+        }
+        Ok(rows)
+    }
+
+    fn transactions(&mut self) -> Result<Vec<Transaction>, CodecError> {
+        let n = self.seq_len(8)?;
+        let mut txs = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Transaction::new re-canonicalizes (sort + dedup); encoded
+            // transactions are already canonical, so this is the identity
+            // on round-trips and an invariant repair on anything else.
+            txs.push(Transaction::new(self.itemset()?));
+        }
+        Ok(txs)
+    }
+
+    fn rule(&mut self) -> Result<Rule, CodecError> {
+        Ok(Rule {
+            antecedent: self.itemset()?,
+            consequent: self.itemset()?,
+            support: self.u64()?,
+            confidence: self.f64()?,
+            lift: self.f64()?,
+        })
+    }
+
+    fn mining_result(&mut self) -> Result<MiningResult, CodecError> {
+        let n_transactions = self.usize()?;
+        let n_levels = self.seq_len(40)?;
+        let mut levels = Vec::with_capacity(n_levels);
+        for _ in 0..n_levels {
+            levels.push(LevelStats {
+                k: self.usize()?,
+                n_candidates: self.usize()?,
+                n_frequent: self.usize()?,
+                work_units: self.f64()?,
+                wall_secs: self.f64()?,
+            });
+        }
+        let frequent = self.counted()?;
+        Ok(MiningResult { frequent, levels, n_transactions })
+    }
+
+    fn mined_state(&mut self) -> Result<MinedState, CodecError> {
+        let min_support = self.f64()?;
+        let max_k = self.usize()?;
+        let n_transactions = self.usize()?;
+        let n_items = self.usize()?;
+        let n_levels = self.seq_len(16)?;
+        let mut levels = Vec::with_capacity(n_levels);
+        for _ in 0..n_levels {
+            levels.push(LevelState {
+                frequent: self.counted()?,
+                border: self.counted()?,
+            });
+        }
+        Ok(MinedState {
+            apriori: AprioriConfig { min_support, max_k },
+            n_transactions,
+            n_items,
+            levels,
+        })
+    }
+
+    fn rule_index(&mut self) -> Result<RuleIndex, CodecError> {
+        let n_transactions = self.usize()?;
+        let min_confidence = self.f64()?;
+        let support = self.counted()?;
+        let n_rules = self.seq_len(40)?;
+        let mut rules = Vec::with_capacity(n_rules);
+        for _ in 0..n_rules {
+            rules.push(self.rule()?);
+        }
+        Ok(RuleIndex::from_parts(rules, support, n_transactions, min_confidence))
+    }
+
+    fn done(&self) -> Result<(), CodecError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(CodecError::TrailingBytes(self.remaining()))
+        }
+    }
+}
+
+// ------------------------------------------------------ public framed API
+
+/// Encode a [`MiningResult`] as one framed buffer.
+pub fn encode_mining_result(r: &MiningResult) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_mining_result(&mut buf, r);
+    frame(TAG_MINING_RESULT, buf)
+}
+
+pub fn decode_mining_result(bytes: &[u8]) -> Result<MiningResult, CodecError> {
+    let mut r = Reader::new(unframe(TAG_MINING_RESULT, bytes)?);
+    let out = r.mining_result()?;
+    r.done()?;
+    Ok(out)
+}
+
+/// Encode a [`MinedState`] (frequent itemsets + negative border).
+pub fn encode_mined_state(s: &MinedState) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_mined_state(&mut buf, s);
+    frame(TAG_MINED_STATE, buf)
+}
+
+pub fn decode_mined_state(bytes: &[u8]) -> Result<MinedState, CodecError> {
+    let mut r = Reader::new(unframe(TAG_MINED_STATE, bytes)?);
+    let out = r.mined_state()?;
+    r.done()?;
+    Ok(out)
+}
+
+/// Encode a serving [`RuleIndex`]. The support table is written in the
+/// canonical (len, lexicographic) order so identical indexes encode to
+/// identical bytes regardless of hash-map iteration order.
+pub fn encode_rule_index(idx: &RuleIndex) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_rule_index(&mut buf, idx);
+    frame(TAG_RULE_INDEX, buf)
+}
+
+pub fn decode_rule_index(bytes: &[u8]) -> Result<RuleIndex, CodecError> {
+    let mut r = Reader::new(unframe(TAG_RULE_INDEX, bytes)?);
+    let out = r.rule_index()?;
+    r.done()?;
+    Ok(out)
+}
+
+/// Encode a transaction delta (the journal payload).
+pub fn encode_delta(delta: &[Transaction]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_transactions(&mut buf, delta);
+    frame(TAG_DELTA, buf)
+}
+
+pub fn decode_delta(bytes: &[u8]) -> Result<Vec<Transaction>, CodecError> {
+    let mut r = Reader::new(unframe(TAG_DELTA, bytes)?);
+    let out = r.transactions()?;
+    r.done()?;
+    Ok(out)
+}
+
+/// Encode one whole generation (delta + result + optional state + index).
+///
+/// `s.index` must have been built from `s.result` (every writer in this
+/// crate does exactly that): the index's support table *is*
+/// `result.frequent`, so only the rules are written and the table is
+/// reconstructed at decode — the dominant payload is stored once, not
+/// twice.
+pub fn encode_snapshot(s: &SnapshotRef<'_>) -> Vec<u8> {
+    // Hard precondition, checked in release too (O(1)): silently
+    // persisting an index that disagrees with `result` would decode to a
+    // *different* index — exactly the wrong-value class this codec
+    // promises cannot happen.
+    assert_eq!(
+        s.index.n_itemsets(),
+        s.result.frequent.len(),
+        "snapshot index must be built from the snapshot's result"
+    );
+    assert_eq!(
+        s.index.n_transactions, s.result.n_transactions,
+        "snapshot index must be built from the snapshot's result"
+    );
+    let mut buf = Vec::new();
+    put_u64(&mut buf, s.generation);
+    put_u64(&mut buf, s.base.n_tx);
+    put_u64(&mut buf, s.base.fingerprint);
+    put_f64(&mut buf, s.min_support);
+    put_u64(&mut buf, s.max_k as u64);
+    put_f64(&mut buf, s.index.min_confidence);
+    put_transactions(&mut buf, s.delta);
+    match s.state {
+        Some(state) => {
+            put_u8(&mut buf, 1);
+            put_mined_state(&mut buf, state);
+        }
+        None => put_u8(&mut buf, 0),
+    }
+    put_mining_result(&mut buf, s.result);
+    let rules = s.index.rules();
+    put_u64(&mut buf, rules.len() as u64);
+    for rule in rules {
+        put_rule(&mut buf, rule);
+    }
+    frame(TAG_SNAPSHOT, buf)
+}
+
+pub fn decode_snapshot(bytes: &[u8]) -> Result<Snapshot, CodecError> {
+    let mut r = Reader::new(unframe(TAG_SNAPSHOT, bytes)?);
+    let generation = r.u64()?;
+    let base = BaseRef { n_tx: r.u64()?, fingerprint: r.u64()? };
+    let min_support = r.f64()?;
+    let max_k = r.usize()?;
+    let min_confidence = r.f64()?;
+    let delta = r.transactions()?;
+    let state = match r.u8()? {
+        0 => None,
+        _ => Some(r.mined_state()?),
+    };
+    let result = r.mining_result()?;
+    let n_rules = r.seq_len(40)?;
+    let mut rules = Vec::with_capacity(n_rules);
+    for _ in 0..n_rules {
+        rules.push(r.rule()?);
+    }
+    r.done()?;
+    let index = RuleIndex::from_parts(
+        rules,
+        result.frequent.clone(),
+        result.n_transactions,
+        min_confidence,
+    );
+    Ok(Snapshot { generation, base, min_support, max_k, delta, result, state, index })
+}
+
+/// Encode the store manifest (live generation + retained history).
+pub fn encode_manifest(m: &Manifest) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u64(&mut buf, m.live);
+    put_u64(&mut buf, m.retained.len() as u64);
+    for &g in &m.retained {
+        put_u64(&mut buf, g);
+    }
+    frame(TAG_MANIFEST, buf)
+}
+
+pub fn decode_manifest(bytes: &[u8]) -> Result<Manifest, CodecError> {
+    let mut r = Reader::new(unframe(TAG_MANIFEST, bytes)?);
+    let live = r.u64()?;
+    let n = r.seq_len(8)?;
+    let mut retained = Vec::with_capacity(n);
+    for _ in 0..n {
+        retained.push(r.u64()?);
+    }
+    r.done()?;
+    Ok(Manifest { live, retained })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::classical::{tests::textbook_db, ClassicalApriori};
+    use crate::cluster::ClusterConfig;
+    use crate::coordinator::MrApriori;
+    use crate::serve::index::render_lines;
+
+    fn cfg() -> AprioriConfig {
+        AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 }
+    }
+
+    fn mined() -> MiningResult {
+        ClassicalApriori::default().mine(&textbook_db(), &cfg())
+    }
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // FNV-1a 64-bit reference values.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn mining_result_roundtrip_is_exact() {
+        let r = mined();
+        let bytes = encode_mining_result(&r);
+        let back = decode_mining_result(&bytes).unwrap();
+        assert_eq!(format!("{r:?}"), format!("{back:?}"));
+    }
+
+    #[test]
+    fn mined_state_roundtrip_is_exact() {
+        let db = textbook_db();
+        let driver = MrApriori::new(ClusterConfig::standalone(), cfg()).with_split_tx(3);
+        let (_, state) = MinedState::capture(&driver, &db).unwrap();
+        let bytes = encode_mined_state(&state);
+        let back = decode_mined_state(&bytes).unwrap();
+        assert_eq!(format!("{state:?}"), format!("{back:?}"));
+        assert_eq!(back.to_result().frequent, state.to_result().frequent);
+    }
+
+    #[test]
+    fn rule_index_roundtrip_serves_identically_and_encodes_canonically() {
+        let r = mined();
+        let idx = RuleIndex::build(&r, 0.3);
+        let bytes = encode_rule_index(&idx);
+        // hash-map iteration order must not leak into the encoding
+        assert_eq!(bytes, encode_rule_index(&idx));
+        let back = decode_rule_index(&bytes).unwrap();
+        assert_eq!(back.n_rules(), idx.n_rules());
+        assert_eq!(back.n_itemsets(), idx.n_itemsets());
+        assert_eq!(back.n_transactions, idx.n_transactions);
+        for basket in [vec![0u32], vec![0, 1], vec![1, 2, 3], vec![0, 1, 2, 3, 4]] {
+            assert_eq!(
+                render_lines(&back.recommend(&basket, 10)),
+                render_lines(&idx.recommend(&basket, 10)),
+                "basket {basket:?}"
+            );
+        }
+        for (is, s) in &r.frequent {
+            assert_eq!(back.support_of(is), Some(*s));
+        }
+    }
+
+    #[test]
+    fn delta_and_manifest_roundtrip() {
+        let delta = vec![
+            Transaction::new([3u32, 1, 4]),
+            Transaction::new([]),
+            Transaction::new([9u32]),
+        ];
+        assert_eq!(decode_delta(&encode_delta(&delta)).unwrap(), delta);
+        let m = Manifest { live: 7, retained: vec![5, 6, 7] };
+        assert_eq!(decode_manifest(&encode_manifest(&m)).unwrap(), m);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_with_and_without_state() {
+        let db = textbook_db();
+        let r = mined();
+        let idx = RuleIndex::build(&r, 0.3);
+        let driver = MrApriori::new(ClusterConfig::standalone(), cfg()).with_split_tx(3);
+        let (_, state) = MinedState::capture(&driver, &db).unwrap();
+        let delta = vec![Transaction::new([0u32, 1])];
+        for state_opt in [None, Some(&state)] {
+            let snap = SnapshotRef {
+                generation: 3,
+                base: BaseRef::of(&db),
+                min_support: 2.0 / 9.0,
+                max_k: 0,
+                delta: &delta,
+                result: &r,
+                state: state_opt,
+                index: &idx,
+            };
+            let back = decode_snapshot(&encode_snapshot(&snap)).unwrap();
+            assert_eq!(back.generation, 3);
+            assert_eq!(back.base, BaseRef::of(&db));
+            assert_eq!(back.min_support, 2.0 / 9.0);
+            assert_eq!(back.max_k, 0);
+            assert_eq!(back.delta, delta);
+            assert_eq!(format!("{:?}", back.result), format!("{r:?}"));
+            assert_eq!(back.state.is_some(), state_opt.is_some());
+            if let (Some(a), Some(b)) = (&back.state, state_opt) {
+                assert_eq!(format!("{a:?}"), format!("{b:?}"));
+            }
+            assert_eq!(back.index.n_rules(), idx.n_rules());
+        }
+    }
+
+    #[test]
+    fn wrong_tag_and_wrong_type_rejected() {
+        let bytes = encode_delta(&[]);
+        assert!(matches!(
+            decode_manifest(&bytes),
+            Err(CodecError::WrongTag { want: TAG_MANIFEST, got: TAG_DELTA })
+        ));
+        assert!(decode_mining_result(&bytes).is_err());
+    }
+
+    #[test]
+    fn header_corruptions_each_hit_their_typed_error() {
+        let good = encode_manifest(&Manifest { live: 1, retained: vec![1] });
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(matches!(decode_manifest(&bad_magic), Err(CodecError::BadMagic(_))));
+        let mut bad_version = good.clone();
+        bad_version[4] ^= 0x01;
+        assert!(matches!(
+            decode_manifest(&bad_version),
+            Err(CodecError::UnsupportedVersion(_))
+        ));
+        let mut bad_len = good.clone();
+        bad_len[7] ^= 0x01; // payload_len low byte
+        assert!(decode_manifest(&bad_len).is_err());
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(matches!(
+            decode_manifest(&trailing),
+            Err(CodecError::TrailingBytes(1))
+        ));
+        assert!(matches!(
+            decode_manifest(&good[..good.len() - 1]),
+            Err(CodecError::Truncated { .. }) | Err(CodecError::LengthOverflow { .. })
+        ));
+    }
+
+    #[test]
+    fn corrupt_length_field_cannot_allocate_past_the_buffer() {
+        // A huge in-payload sequence length must be rejected by the
+        // remaining-bytes bound, not attempted as an allocation. Build a
+        // valid frame whose payload *content* lies about its length —
+        // checksummed correctly, so only the bound catches it.
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 1); // live
+        put_u64(&mut payload, u64::MAX); // retained count: absurd
+        let bytes = frame(TAG_MANIFEST, payload);
+        assert!(matches!(
+            decode_manifest(&bytes),
+            Err(CodecError::LengthOverflow { .. })
+        ));
+    }
+
+    #[test]
+    fn nan_lift_rules_round_trip_bit_exactly() {
+        let rule = Rule {
+            antecedent: vec![1],
+            consequent: vec![2],
+            support: 3,
+            confidence: 0.5,
+            lift: f64::NAN,
+        };
+        let idx = RuleIndex::from_parts(vec![rule], vec![(vec![1], 3)], 10, 0.5);
+        let back = decode_rule_index(&encode_rule_index(&idx)).unwrap();
+        assert!(back.rules()[0].lift.is_nan());
+        assert_eq!(
+            back.rules()[0].lift.to_bits(),
+            idx.rules()[0].lift.to_bits()
+        );
+    }
+}

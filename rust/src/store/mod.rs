@@ -1,0 +1,201 @@
+//! Durable snapshot store: checkpoint/journal persistence + warm restart.
+//!
+//! The paper's premise is that voluminous data lives in a DFS precisely so
+//! work survives node churn — yet everything above the batch miner
+//! (serving snapshots, the incremental `MinedState`) was in-memory only: a
+//! restarted server had to cold re-mine the full database before answering
+//! a single query. This subsystem closes that gap:
+//!
+//! * [`codec`] — a zero-dependency, versioned, checksummed binary codec
+//!   for [`MiningResult`], [`MinedState`], [`RuleIndex`] and
+//!   [`TransactionDb`] deltas. Every frame is length-prefixed and
+//!   FNV-1a-checksummed; any bit flip or truncated tail decodes to a
+//!   typed [`CodecError`], never a panic or a silently wrong value.
+//! * [`snapshot_store`] — the generation-aware on-disk store. Each
+//!   published generation commits via **write-temp → fsync → atomic
+//!   rename**, then the `MANIFEST` (live generation + retained history)
+//!   commits the same way; a crash at any write boundary leaves the
+//!   previous generation fully readable.
+//! * [`recover`] — warm restart: rehydrate the newest intact generation
+//!   into a [`SnapshotCell`]`<RuleIndex>` at its persisted generation
+//!   number and re-seed the `Refresher`'s [`MinedState`], so incremental
+//!   refresh resumes from the persisted border instead of a cold
+//!   capture-mine.
+//!
+//! A snapshot is **self-contained**: it carries the cumulative delta
+//! relative to the immutable base database (identified by a
+//! [`BaseRef`] fingerprint), so any single intact generation file
+//! reconstructs the exact union database — pruning old generations never
+//! breaks recovery. A store directory belongs to **one base database**:
+//! recovery refuses a mismatched base, and mixing datasets in one
+//! directory leaves stale foreign generations competing for the retain
+//! window — use a fresh `--store-dir` per dataset. `serve --store-dir` /
+//! `mine --store-dir` wire it into the CLI; the `[store]` config section
+//! carries the same knobs.
+//!
+//! [`MiningResult`]: crate::apriori::MiningResult
+//! [`MinedState`]: crate::incremental::MinedState
+//! [`RuleIndex`]: crate::serve::index::RuleIndex
+//! [`TransactionDb`]: crate::data::TransactionDb
+//! [`SnapshotCell`]: crate::serve::snapshot::SnapshotCell
+//! [`CodecError`]: codec::CodecError
+
+pub mod codec;
+pub mod recover;
+pub mod snapshot_store;
+
+use std::path::PathBuf;
+
+use crate::apriori::MiningResult;
+use crate::data::{Transaction, TransactionDb};
+use crate::incremental::MinedState;
+use crate::serve::index::RuleIndex;
+
+pub use codec::CodecError;
+pub use recover::{resume_serving, warm_start, Resumed, WarmStart};
+pub use snapshot_store::{CommitStep, SnapshotStore, StoreError};
+
+/// `[store]` section of an experiment config: where (and whether) the
+/// serving stack persists its published generations.
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// Snapshot directory; `None` disables persistence entirely.
+    pub dir: Option<PathBuf>,
+    /// Generations retained on disk (older ones are pruned after each
+    /// successful commit). 0 is treated as 1 — the live generation is
+    /// always kept.
+    pub retain: usize,
+    /// Master off-switch: `--no-persist true` serves from an existing
+    /// store (warm restart still works) without writing new generations.
+    pub no_persist: bool,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        Self {
+            dir: None,
+            retain: Self::DEFAULT_RETAIN,
+            no_persist: false,
+        }
+    }
+}
+
+impl StoreConfig {
+    /// Default retained-generation window.
+    pub const DEFAULT_RETAIN: usize = 4;
+
+    /// Should this run write snapshots?
+    pub fn writes_enabled(&self) -> bool {
+        self.dir.is_some() && !self.no_persist
+    }
+}
+
+/// Identity of the immutable base database a snapshot's cumulative delta
+/// is relative to. A warm restart refuses to resume over a different base
+/// (that would silently serve answers about the wrong data).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BaseRef {
+    /// Transactions in the base database.
+    pub n_tx: u64,
+    /// FNV-1a fingerprint over the base's transactions.
+    pub fingerprint: u64,
+}
+
+impl BaseRef {
+    /// Fingerprint a (pristine, pre-delta) base database.
+    pub fn of(db: &TransactionDb) -> Self {
+        Self {
+            n_tx: db.len() as u64,
+            fingerprint: codec::fingerprint_db(db),
+        }
+    }
+}
+
+/// The manifest the store commits last: which generation is live and
+/// which are retained on disk.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// The published (durable) generation a restart resumes from.
+    pub live: u64,
+    /// Generations kept on disk, ascending (live included).
+    pub retained: Vec<u64>,
+}
+
+/// Borrowed view of one generation, as handed to
+/// [`SnapshotStore::publish`] — the writer never needs to clone the index
+/// or the mined state it is about to serve.
+#[derive(Debug, Clone, Copy)]
+pub struct SnapshotRef<'a> {
+    /// Generation number (matches the serving cell's counter).
+    pub generation: u64,
+    /// The base database this snapshot's delta is relative to.
+    pub base: BaseRef,
+    /// Mining parameters the generation was produced under — persisted
+    /// in every snapshot (not just state-carrying ones) so a restart
+    /// can refuse to resume under drifted flags.
+    pub min_support: f64,
+    pub max_k: usize,
+    /// Cumulative transactions appended since the base (the journal,
+    /// flattened: base ++ delta == the union database of `generation`).
+    pub delta: &'a [Transaction],
+    /// Canonical mining result of the generation.
+    pub result: &'a MiningResult,
+    /// Incremental border state, when the generation was produced by (or
+    /// seeds) border maintenance; `None` for full-re-mine generations.
+    pub state: Option<&'a MinedState>,
+    /// The serving index, persisted so recovery does not re-derive
+    /// rules. Must have been built from `result` — the codec stores the
+    /// rules only and reconstructs the (identical) support table from
+    /// `result.frequent` at decode.
+    pub index: &'a RuleIndex,
+}
+
+/// One fully decoded generation, as recovered from disk.
+#[derive(Debug)]
+pub struct Snapshot {
+    pub generation: u64,
+    pub base: BaseRef,
+    pub min_support: f64,
+    pub max_k: usize,
+    pub delta: Vec<Transaction>,
+    pub result: MiningResult,
+    pub state: Option<MinedState>,
+    pub index: RuleIndex,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Transaction;
+
+    fn tx(items: &[u32]) -> Transaction {
+        Transaction::new(items.iter().copied())
+    }
+
+    #[test]
+    fn base_ref_fingerprints_content_not_identity() {
+        let a = TransactionDb::new(vec![tx(&[0, 1]), tx(&[2])]);
+        let b = TransactionDb::new(vec![tx(&[0, 1]), tx(&[2])]);
+        assert_eq!(BaseRef::of(&a), BaseRef::of(&b));
+        let c = TransactionDb::new(vec![tx(&[0, 1]), tx(&[3])]);
+        assert_ne!(BaseRef::of(&a), BaseRef::of(&c));
+        // same multiset, different order is a different base (the delta
+        // journal is positional)
+        let d = TransactionDb::new(vec![tx(&[2]), tx(&[0, 1])]);
+        assert_ne!(BaseRef::of(&a), BaseRef::of(&d));
+    }
+
+    #[test]
+    fn store_config_gates() {
+        let off = StoreConfig::default();
+        assert!(!off.writes_enabled());
+        let on = StoreConfig {
+            dir: Some("/tmp/x".into()),
+            retain: 2,
+            no_persist: false,
+        };
+        assert!(on.writes_enabled());
+        let frozen = StoreConfig { no_persist: true, ..on };
+        assert!(!frozen.writes_enabled());
+    }
+}

@@ -1,0 +1,227 @@
+//! Warm restart: rehydrate the newest intact persisted generation into
+//! the serving/incremental stack.
+//!
+//! The contract the acceptance tests pin: a `serve` process killed at any
+//! point and restarted with the same base database and `--store-dir`
+//! resumes at the last *published* generation — the serving cell seeds at
+//! that generation number, the union database is reconstructed from the
+//! persisted cumulative delta, and (in incremental mode) the `Refresher`
+//! is re-seeded with the persisted [`MinedState`] border, so the next
+//! micro-batch refresh runs the delta path instead of a cold
+//! capture-mine of the full database. Served answers after recovery are
+//! byte-identical to an uninterrupted run at that generation.
+
+use std::sync::Arc;
+
+use crate::apriori::MiningResult;
+use crate::data::{Transaction, TransactionDb};
+use crate::incremental::MinedState;
+use crate::serve::index::RuleIndex;
+use crate::serve::snapshot::SnapshotCell;
+
+use super::{BaseRef, SnapshotStore, StoreError};
+
+/// Everything the newest intact generation holds, verified against the
+/// caller's base database.
+#[derive(Debug)]
+pub struct WarmStart {
+    /// The recovered generation number (the serving cell seeds here).
+    pub generation: u64,
+    /// Confidence floor the persisted index was built with.
+    pub min_confidence: f64,
+    /// Mining parameters the generation was produced under — callers
+    /// must refuse to resume refreshing under drifted flags.
+    pub min_support: f64,
+    pub max_k: usize,
+    /// Canonical mining result of the generation.
+    pub result: MiningResult,
+    /// Incremental border state, when the generation carried one.
+    pub state: Option<MinedState>,
+    /// The serving index, decoded — no `generate_rules` re-derivation.
+    pub index: RuleIndex,
+    /// Cumulative transactions to append to the base to rebuild the
+    /// union database of `generation`.
+    pub delta: Vec<Transaction>,
+}
+
+/// Load the newest intact generation and verify it belongs to the base
+/// identified by `want` (computed once by the caller via [`BaseRef::of`]
+/// — the O(|D|) fingerprint pass is not repeated here).
+///
+/// * `Ok(None)` — the store holds no intact generation (cold start).
+/// * `Err(BaseMismatch)` — the store was written for different data; the
+///   caller must not resume from it (serving answers about the wrong
+///   database is worse than a cold start).
+pub fn warm_start(store: &SnapshotStore, want: BaseRef) -> Result<Option<WarmStart>, StoreError> {
+    let Some(snap) = store.load_latest()? else {
+        return Ok(None);
+    };
+    if snap.base != want {
+        return Err(StoreError::BaseMismatch { want, got: snap.base });
+    }
+    let min_confidence = snap.index.min_confidence;
+    Ok(Some(WarmStart {
+        generation: snap.generation,
+        min_confidence,
+        min_support: snap.min_support,
+        max_k: snap.max_k,
+        result: snap.result,
+        state: snap.state,
+        index: snap.index,
+        delta: snap.delta,
+    }))
+}
+
+/// A warm-started serving stack, ready to answer queries.
+#[derive(Debug)]
+pub struct Resumed {
+    /// Serving cell seeded with the recovered index *at the recovered
+    /// generation number* — response generations continue the pre-kill
+    /// sequence instead of restarting at zero.
+    pub cell: Arc<SnapshotCell<RuleIndex>>,
+    pub generation: u64,
+    pub min_confidence: f64,
+    /// Mining parameters the generation was produced under.
+    pub min_support: f64,
+    pub max_k: usize,
+    pub result: MiningResult,
+    /// Seed for `Refresher::seed_state` in incremental mode.
+    pub state: Option<MinedState>,
+}
+
+/// One-call warm restart: `db` must be the pristine base database and
+/// `base` its [`BaseRef`]; on success `db` is extended to the persisted
+/// union and a serving cell is returned seeded at the recovered
+/// generation.
+pub fn resume_serving(
+    store: &SnapshotStore,
+    db: &mut TransactionDb,
+    base: BaseRef,
+) -> Result<Option<Resumed>, StoreError> {
+    let Some(warm) = warm_start(store, base)? else {
+        return Ok(None);
+    };
+    debug_assert_eq!(
+        db.len() + warm.delta.len(),
+        warm.result.n_transactions,
+        "persisted delta must extend the base to the generation's union"
+    );
+    db.append(warm.delta);
+    let cell = Arc::new(SnapshotCell::with_generation(
+        Arc::new(warm.index),
+        warm.generation,
+    ));
+    Ok(Some(Resumed {
+        cell,
+        generation: warm.generation,
+        min_confidence: warm.min_confidence,
+        min_support: warm.min_support,
+        max_k: warm.max_k,
+        result: warm.result,
+        state: warm.state,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::classical::{tests::textbook_db, ClassicalApriori};
+    use crate::apriori::AprioriConfig;
+    use crate::cluster::ClusterConfig;
+    use crate::coordinator::MrApriori;
+    use crate::serve::index::render_lines;
+    use crate::store::SnapshotRef;
+    use crate::util::tempdir::TempDir;
+
+    fn cfg() -> AprioriConfig {
+        AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 }
+    }
+
+    #[test]
+    fn resume_extends_db_and_seeds_cell_at_the_persisted_generation() {
+        let tmp = TempDir::new("recover_resume");
+        let store = SnapshotStore::open(tmp.path(), 4).unwrap();
+        let base = textbook_db();
+        let delta = vec![
+            crate::data::Transaction::new([0u32, 1]),
+            crate::data::Transaction::new([2u32, 4]),
+        ];
+        let mut union = base.clone();
+        union.append(delta.clone());
+        let driver = MrApriori::new(ClusterConfig::standalone(), cfg()).with_split_tx(4);
+        let (report, state) = MinedState::capture(&driver, &union).unwrap();
+        let index = RuleIndex::build(&report.result, 0.3);
+        store
+            .publish(&SnapshotRef {
+                generation: 2,
+                base: BaseRef::of(&base),
+                min_support: 2.0 / 9.0,
+                max_k: 0,
+                delta: &delta,
+                result: &report.result,
+                state: Some(&state),
+                index: &index,
+            })
+            .unwrap();
+
+        // "restart": pristine base, everything else from disk
+        let mut db = base.clone();
+        let resumed =
+            resume_serving(&store, &mut db, BaseRef::of(&base)).unwrap().expect("warm");
+        assert_eq!(resumed.generation, 2);
+        assert_eq!(db.len(), union.len());
+        assert_eq!(db.transactions, union.transactions);
+        assert_eq!(resumed.cell.generation(), 2);
+        assert_eq!(resumed.min_confidence, 0.3);
+        let recovered_state = resumed.state.expect("state persisted");
+        assert_eq!(
+            recovered_state.to_result().frequent,
+            ClassicalApriori::default().mine(&db, &cfg()).frequent
+        );
+        // the recovered index answers like a freshly built one
+        let fresh = RuleIndex::build(&report.result, 0.3);
+        let served = resumed.cell.load();
+        for basket in [vec![0u32, 1], vec![1, 2], vec![0, 4]] {
+            assert_eq!(
+                render_lines(&served.recommend(&basket, 5)),
+                render_lines(&fresh.recommend(&basket, 5))
+            );
+        }
+    }
+
+    #[test]
+    fn empty_store_is_a_cold_start() {
+        let tmp = TempDir::new("cold");
+        let store = SnapshotStore::open(tmp.path(), 4).unwrap();
+        let mut db = textbook_db();
+        assert!(resume_serving(&store, &mut db, BaseRef::of(&db)).unwrap().is_none());
+        assert_eq!(db.len(), 9);
+    }
+
+    #[test]
+    fn mismatched_base_refuses_to_resume() {
+        let tmp = TempDir::new("mismatch");
+        let store = SnapshotStore::open(tmp.path(), 4).unwrap();
+        let base = textbook_db();
+        let result = ClassicalApriori::default().mine(&base, &cfg());
+        let index = RuleIndex::build(&result, 0.3);
+        store
+            .publish(&SnapshotRef {
+                generation: 1,
+                base: BaseRef::of(&base),
+                min_support: 2.0 / 9.0,
+                max_k: 0,
+                delta: &[],
+                result: &result,
+                state: None,
+                index: &index,
+            })
+            .unwrap();
+        let mut other = base.clone();
+        other.transactions.pop();
+        assert!(matches!(
+            warm_start(&store, BaseRef::of(&other)),
+            Err(StoreError::BaseMismatch { .. })
+        ));
+    }
+}

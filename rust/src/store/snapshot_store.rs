@@ -1,0 +1,611 @@
+//! The generation-aware on-disk snapshot store and its crash-consistent
+//! commit protocol.
+//!
+//! Layout (all files in one directory):
+//!
+//! ```text
+//! <dir>/gen-00000042.snap   one framed Snapshot per generation
+//! <dir>/MANIFEST            framed Manifest: live generation + retained
+//! <dir>/*.tmp               in-flight writes (ignored by recovery)
+//! ```
+//!
+//! **Commit protocol** (per published generation g):
+//!
+//! 1. write `gen-g.tmp`, fsync it;
+//! 2. atomically rename it to `gen-g.snap` (+ best-effort dir fsync);
+//! 3. write `MANIFEST.tmp` (live = g, retained window), fsync it;
+//! 4. atomically rename it to `MANIFEST` (+ best-effort dir fsync);
+//! 5. prune generations outside the retained window.
+//!
+//! A crash at any boundary leaves either the old `MANIFEST` pointing at
+//! the previous intact generation, or the new one pointing at g whose
+//! file is already durable — never a manifest pointing at a missing or
+//! partial snapshot. Recovery ([`SnapshotStore::load_latest`]) trusts the
+//! manifest first; if the manifest is missing, corrupt, or points at a
+//! damaged file, it degrades to scanning for the newest generation that
+//! decodes intact. Corruption of any retained file therefore costs at
+//! most a fallback to an older generation — never a panic.
+//!
+//! [`publish_with_hook`](SnapshotStore::publish_with_hook) exposes every
+//! protocol boundary to tests, which kill the commit at each step and
+//! assert recovery still lands on a complete generation.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::dfs::BlockStore;
+
+use super::{codec, BaseRef, CodecError, Manifest, Snapshot, SnapshotRef};
+
+/// Why a store operation failed. Codec errors are wrapped with the file
+/// they came from; `load_latest` treats them as "skip this generation",
+/// so they only surface when *nothing* intact remains.
+#[derive(Debug)]
+pub enum StoreError {
+    Io { path: PathBuf, err: std::io::Error },
+    Codec { path: PathBuf, err: CodecError },
+    /// A generation file decoded to a different generation number than
+    /// its name claims — treated like corruption.
+    GenerationMismatch { path: PathBuf, want: u64, got: u64 },
+    /// The store was written against a different base database; warm
+    /// restart refuses to resume over the wrong data.
+    BaseMismatch { want: BaseRef, got: BaseRef },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io { path, err } => write!(f, "{}: {err}", path.display()),
+            Self::Codec { path, err } => write!(f, "{}: {err}", path.display()),
+            Self::GenerationMismatch { path, want, got } => write!(
+                f,
+                "{}: file named generation {want} decodes as generation {got}",
+                path.display()
+            ),
+            Self::BaseMismatch { want, got } => write!(
+                f,
+                "store was written for a different base database \
+                 (want {} tx / fingerprint {:#018x}, store has {} tx / {:#018x})",
+                want.n_tx, want.fingerprint, got.n_tx, got.fingerprint
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io { err, .. } => Some(err),
+            Self::Codec { err, .. } => Some(err),
+            _ => None,
+        }
+    }
+}
+
+/// One boundary of the commit protocol, in order. The publish hook fires
+/// *after* the step completes; returning `false` abandons the commit
+/// there — exactly the on-disk state a kill at that boundary leaves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommitStep {
+    /// Snapshot bytes written to the temp file (not yet synced).
+    SnapTempWritten,
+    /// Temp file fsynced.
+    SnapSynced,
+    /// Temp renamed to `gen-N.snap` — the generation is durable, but the
+    /// manifest still points at the previous one.
+    SnapRenamed,
+    /// New manifest written to `MANIFEST.tmp` (not yet synced).
+    ManifestTempWritten,
+    /// Manifest temp fsynced.
+    ManifestSynced,
+    /// Manifest renamed — generation N is now the published live one.
+    ManifestRenamed,
+}
+
+impl CommitStep {
+    /// Every boundary, in protocol order (tests iterate this).
+    pub const ALL: [CommitStep; 6] = [
+        CommitStep::SnapTempWritten,
+        CommitStep::SnapSynced,
+        CommitStep::SnapRenamed,
+        CommitStep::ManifestTempWritten,
+        CommitStep::ManifestSynced,
+        CommitStep::ManifestRenamed,
+    ];
+}
+
+/// The durable snapshot store for one serving/mining process.
+pub struct SnapshotStore {
+    dir: PathBuf,
+    retain: usize,
+    /// Total snapshot + manifest bytes committed (the restart ablation's
+    /// per-cycle write-overhead column).
+    bytes_written: AtomicU64,
+    /// Optional simulator hook: each committed snapshot is charged as one
+    /// block against the simulated datanode capacity; pruned (and
+    /// overwritten) generations are credited back, tracked per
+    /// generation in `charged`.
+    accounting: Mutex<Option<Box<dyn BlockStore + Send>>>,
+    charged: Mutex<std::collections::HashMap<u64, crate::dfs::BlockId>>,
+}
+
+impl std::fmt::Debug for SnapshotStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SnapshotStore")
+            .field("dir", &self.dir)
+            .field("retain", &self.retain)
+            .field("bytes_written", &self.bytes_written.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl SnapshotStore {
+    /// Open (creating if needed) a store directory, retaining up to
+    /// `retain` generations (0 is treated as 1: the live generation is
+    /// always kept).
+    pub fn open(dir: impl Into<PathBuf>, retain: usize) -> Result<Self, StoreError> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir).map_err(|err| StoreError::Io { path: dir.clone(), err })?;
+        Ok(Self {
+            dir,
+            retain: retain.max(1),
+            bytes_written: AtomicU64::new(0),
+            accounting: Mutex::new(None),
+            charged: Mutex::new(std::collections::HashMap::new()),
+        })
+    }
+
+    /// Charge each committed snapshot's bytes against a simulated block
+    /// store (the DFS capacity model); placement failures are ignored —
+    /// accounting is bookkeeping, never a reason to fail a commit.
+    pub fn with_block_accounting(self, block_store: Box<dyn BlockStore + Send>) -> Self {
+        *self.accounting.lock().unwrap() = Some(block_store);
+        self
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn retain(&self) -> usize {
+        self.retain
+    }
+
+    /// Snapshot + manifest bytes committed by this handle so far.
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written.load(Ordering::Relaxed)
+    }
+
+    /// Simulated storage utilization, when block accounting is attached.
+    pub fn utilization(&self) -> Option<f64> {
+        self.accounting.lock().unwrap().as_ref().map(|b| b.utilization())
+    }
+
+    fn generation_path(&self, generation: u64) -> PathBuf {
+        self.dir.join(format!("gen-{generation:08}.snap"))
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.dir.join("MANIFEST")
+    }
+
+    fn io_err(path: &Path) -> impl Fn(std::io::Error) -> StoreError + '_ {
+        move |err| StoreError::Io { path: path.to_path_buf(), err }
+    }
+
+    /// Best-effort directory fsync (makes the rename itself durable on
+    /// filesystems that need it; failure is not fatal for the simulator).
+    fn sync_dir(&self) {
+        if let Ok(d) = fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+    }
+
+    /// Commit one generation with the full protocol.
+    pub fn publish(&self, snap: &SnapshotRef<'_>) -> Result<(), StoreError> {
+        self.publish_with_hook(snap, &mut |_| true).map(|_| ())
+    }
+
+    /// Commit with a crash-injection hook: `keep_going` fires after each
+    /// [`CommitStep`]; returning `false` abandons the commit right there
+    /// (returning `Ok(false)`), leaving the disk exactly as a kill at
+    /// that boundary would. Production callers use [`publish`].
+    ///
+    /// [`publish`]: Self::publish
+    pub fn publish_with_hook(
+        &self,
+        snap: &SnapshotRef<'_>,
+        keep_going: &mut dyn FnMut(CommitStep) -> bool,
+    ) -> Result<bool, StoreError> {
+        let bytes = codec::encode_snapshot(snap);
+        let final_path = self.generation_path(snap.generation);
+        let tmp_path = self.dir.join(format!("gen-{:08}.tmp", snap.generation));
+
+        // 1-2: temp write + fsync
+        {
+            let mut f = fs::File::create(&tmp_path).map_err(Self::io_err(&tmp_path))?;
+            f.write_all(&bytes).map_err(Self::io_err(&tmp_path))?;
+            if !keep_going(CommitStep::SnapTempWritten) {
+                return Ok(false);
+            }
+            f.sync_all().map_err(Self::io_err(&tmp_path))?;
+        }
+        if !keep_going(CommitStep::SnapSynced) {
+            return Ok(false);
+        }
+
+        // 3: atomic rename — the generation becomes durable
+        fs::rename(&tmp_path, &final_path).map_err(Self::io_err(&final_path))?;
+        self.sync_dir();
+        if !keep_going(CommitStep::SnapRenamed) {
+            return Ok(false);
+        }
+
+        // 4-5: manifest temp write + fsync + rename — the generation
+        // becomes *published*
+        let manifest = {
+            let mut gens = self.scan_generations()?;
+            gens.sort_unstable();
+            let cut = gens.len().saturating_sub(self.retain);
+            let mut retained = gens.split_off(cut);
+            // The window is the newest `retain` generation *numbers* — but
+            // the just-published one is always kept, even when a previous
+            // session left higher-numbered files behind (e.g. a fresh
+            // generation 0 over an old store): pruning the live generation
+            // would leave the new manifest dangling. Evict the oldest
+            // non-live entry instead to hold the window size.
+            if !retained.contains(&snap.generation) {
+                retained.push(snap.generation);
+                retained.sort_unstable();
+                while retained.len() > self.retain {
+                    let Some(i) = retained.iter().position(|&g| g != snap.generation) else {
+                        break;
+                    };
+                    retained.remove(i);
+                }
+            }
+            Manifest { live: snap.generation, retained }
+        };
+        let mbytes = codec::encode_manifest(&manifest);
+        let mtmp = self.dir.join("MANIFEST.tmp");
+        {
+            let mut f = fs::File::create(&mtmp).map_err(Self::io_err(&mtmp))?;
+            f.write_all(&mbytes).map_err(Self::io_err(&mtmp))?;
+            if !keep_going(CommitStep::ManifestTempWritten) {
+                return Ok(false);
+            }
+            f.sync_all().map_err(Self::io_err(&mtmp))?;
+        }
+        if !keep_going(CommitStep::ManifestSynced) {
+            return Ok(false);
+        }
+        let mpath = self.manifest_path();
+        fs::rename(&mtmp, &mpath).map_err(Self::io_err(&mpath))?;
+        self.sync_dir();
+        if !keep_going(CommitStep::ManifestRenamed) {
+            return Ok(false);
+        }
+
+        // 6: prune outside the retained window (a crash mid-prune is
+        // harmless — stray intact generations are simply extra fallbacks)
+        let mut pruned = Vec::new();
+        for g in self.scan_generations()? {
+            if !manifest.retained.contains(&g) {
+                let _ = fs::remove_file(self.generation_path(g));
+                pruned.push(g);
+            }
+        }
+
+        self.bytes_written
+            .fetch_add((bytes.len() + mbytes.len()) as u64, Ordering::Relaxed);
+        // Simulated capacity accounting mirrors the on-disk lifecycle:
+        // charge the new generation (crediting whatever an earlier
+        // publish of the same number charged), credit the pruned ones.
+        if let Some(bs) = self.accounting.lock().unwrap().as_mut() {
+            let mut charged = self.charged.lock().unwrap();
+            if let Ok(id) = bs.put_bytes(bytes.len() as u64) {
+                if let Some(old) = charged.insert(snap.generation, id) {
+                    let _ = bs.remove_block(old);
+                }
+            }
+            for g in pruned {
+                if let Some(id) = charged.remove(&g) {
+                    let _ = bs.remove_block(id);
+                }
+            }
+        }
+        Ok(true)
+    }
+
+    /// The manifest, if present and intact.
+    pub fn load_manifest(&self) -> Option<Manifest> {
+        let bytes = fs::read(self.manifest_path()).ok()?;
+        codec::decode_manifest(&bytes).ok()
+    }
+
+    /// Generation numbers with a (named) snapshot file on disk, unsorted.
+    /// Unparseable names and `.tmp` leftovers are ignored.
+    pub fn scan_generations(&self) -> Result<Vec<u64>, StoreError> {
+        let entries =
+            fs::read_dir(&self.dir).map_err(|err| StoreError::Io { path: self.dir.clone(), err })?;
+        let mut gens = Vec::new();
+        for entry in entries {
+            let entry = entry.map_err(|err| StoreError::Io { path: self.dir.clone(), err })?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(g) = name
+                .strip_prefix("gen-")
+                .and_then(|s| s.strip_suffix(".snap"))
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                gens.push(g);
+            }
+        }
+        Ok(gens)
+    }
+
+    /// Read + fully verify one generation file.
+    pub fn load_generation(&self, generation: u64) -> Result<Snapshot, StoreError> {
+        let path = self.generation_path(generation);
+        let bytes = fs::read(&path).map_err(Self::io_err(&path))?;
+        let snap = codec::decode_snapshot(&bytes)
+            .map_err(|err| StoreError::Codec { path: path.clone(), err })?;
+        if snap.generation != generation {
+            return Err(StoreError::GenerationMismatch {
+                path,
+                want: generation,
+                got: snap.generation,
+            });
+        }
+        Ok(snap)
+    }
+
+    /// The newest recoverable generation: the manifest's live generation
+    /// when it is intact, otherwise (missing/corrupt manifest, or a
+    /// manifest pointing at a damaged file) the newest generation that
+    /// decodes intact, otherwise `None`. Truncated tails, bit flips and
+    /// half-committed publishes all degrade here — never a panic.
+    pub fn load_latest(&self) -> Result<Option<Snapshot>, StoreError> {
+        if let Some(manifest) = self.load_manifest() {
+            if let Ok(snap) = self.load_generation(manifest.live) {
+                return Ok(Some(snap));
+            }
+        }
+        let mut gens = self.scan_generations()?;
+        gens.sort_unstable();
+        for g in gens.into_iter().rev() {
+            if let Ok(snap) = self.load_generation(g) {
+                return Ok(Some(snap));
+            }
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::classical::{tests::textbook_db, ClassicalApriori};
+    use crate::apriori::{AprioriConfig, MiningResult};
+    use crate::data::{Transaction, TransactionDb};
+    use crate::serve::index::RuleIndex;
+    use crate::util::tempdir::TempDir;
+
+    fn mined(db: &TransactionDb) -> MiningResult {
+        ClassicalApriori::default()
+            .mine(db, &AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 })
+    }
+
+    /// A generation-`g` snapshot over the textbook base with `g` delta
+    /// transactions appended (distinct per generation so contents differ).
+    fn publish_gen(store: &SnapshotStore, base: &TransactionDb, g: u64) {
+        let delta: Vec<Transaction> =
+            (0..g).map(|i| Transaction::new([i as u32, (i + 1) as u32])).collect();
+        let mut union = base.clone();
+        union.append(delta.clone());
+        let result = mined(&union);
+        let index = RuleIndex::build(&result, 0.3);
+        store
+            .publish(&SnapshotRef {
+                generation: g,
+                base: BaseRef::of(base),
+                min_support: 2.0 / 9.0,
+                max_k: 0,
+                delta: &delta,
+                result: &result,
+                state: None,
+                index: &index,
+            })
+            .unwrap();
+    }
+
+    #[test]
+    fn publish_then_load_latest_roundtrips() {
+        let tmp = TempDir::new("roundtrip");
+        let store = SnapshotStore::open(tmp.path(), 4).unwrap();
+        let base = textbook_db();
+        assert!(store.load_latest().unwrap().is_none());
+        publish_gen(&store, &base, 1);
+        publish_gen(&store, &base, 2);
+        let snap = store.load_latest().unwrap().expect("two generations in");
+        assert_eq!(snap.generation, 2);
+        assert_eq!(snap.delta.len(), 2);
+        assert_eq!(snap.base, BaseRef::of(&base));
+        assert!(store.bytes_written() > 0);
+        let manifest = store.load_manifest().expect("manifest committed");
+        assert_eq!(manifest.live, 2);
+        assert_eq!(manifest.retained, vec![1, 2]);
+    }
+
+    #[test]
+    fn retain_window_prunes_old_generations() {
+        let tmp = TempDir::new("retain");
+        let store = SnapshotStore::open(tmp.path(), 2).unwrap();
+        let base = textbook_db();
+        for g in 1..=5 {
+            publish_gen(&store, &base, g);
+        }
+        let mut gens = store.scan_generations().unwrap();
+        gens.sort_unstable();
+        assert_eq!(gens, vec![4, 5]);
+        assert_eq!(store.load_manifest().unwrap().retained, vec![4, 5]);
+        // pruned generations are unreadable, the live one intact
+        assert!(store.load_generation(3).is_err());
+        assert_eq!(store.load_latest().unwrap().unwrap().generation, 5);
+    }
+
+    #[test]
+    fn publishing_a_lower_generation_over_an_old_store_never_prunes_itself() {
+        // Regression: the retained window is the newest generation
+        // *numbers*; a fresh session publishing generation 0 over leftover
+        // higher-numbered files must not prune its own live snapshot.
+        let tmp = TempDir::new("low_gen_republish");
+        let store = SnapshotStore::open(tmp.path(), 2).unwrap();
+        let base = textbook_db();
+        for g in 1..=3 {
+            publish_gen(&store, &base, g);
+        }
+        publish_gen(&store, &base, 0);
+        let manifest = store.load_manifest().expect("manifest committed");
+        assert_eq!(manifest.live, 0);
+        assert!(manifest.retained.contains(&0), "{:?}", manifest.retained);
+        assert!(manifest.retained.len() <= 2, "{:?}", manifest.retained);
+        // recovery serves the just-published generation, not a stale one
+        assert_eq!(store.load_latest().unwrap().unwrap().generation, 0);
+    }
+
+    #[test]
+    fn corrupt_live_generation_falls_back_to_previous() {
+        let tmp = TempDir::new("corrupt_live");
+        let store = SnapshotStore::open(tmp.path(), 4).unwrap();
+        let base = textbook_db();
+        publish_gen(&store, &base, 1);
+        publish_gen(&store, &base, 2);
+        // flip one byte mid-file: checksum must catch it
+        let path = store.generation_path(2);
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            store.load_generation(2),
+            Err(StoreError::Codec { .. })
+        ));
+        let snap = store.load_latest().unwrap().expect("gen 1 still intact");
+        assert_eq!(snap.generation, 1);
+    }
+
+    #[test]
+    fn truncated_tail_falls_back_to_previous() {
+        let tmp = TempDir::new("truncated");
+        let store = SnapshotStore::open(tmp.path(), 4).unwrap();
+        let base = textbook_db();
+        publish_gen(&store, &base, 1);
+        publish_gen(&store, &base, 2);
+        let path = store.generation_path(2);
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() / 3]).unwrap();
+        assert_eq!(store.load_latest().unwrap().unwrap().generation, 1);
+    }
+
+    #[test]
+    fn missing_or_corrupt_manifest_degrades_to_scan() {
+        let tmp = TempDir::new("manifest");
+        let store = SnapshotStore::open(tmp.path(), 4).unwrap();
+        let base = textbook_db();
+        publish_gen(&store, &base, 1);
+        publish_gen(&store, &base, 2);
+        fs::remove_file(store.manifest_path()).unwrap();
+        assert_eq!(store.load_latest().unwrap().unwrap().generation, 2);
+        fs::write(store.manifest_path(), b"not a manifest").unwrap();
+        assert_eq!(store.load_latest().unwrap().unwrap().generation, 2);
+    }
+
+    #[test]
+    fn interrupted_commit_before_rename_leaves_previous_generation_live() {
+        let tmp = TempDir::new("interrupt_early");
+        let store = SnapshotStore::open(tmp.path(), 4).unwrap();
+        let base = textbook_db();
+        publish_gen(&store, &base, 1);
+        let result = mined(&base);
+        let index = RuleIndex::build(&result, 0.3);
+        let snap = SnapshotRef {
+            generation: 2,
+            base: BaseRef::of(&base),
+            min_support: 2.0 / 9.0,
+            max_k: 0,
+            delta: &[],
+            result: &result,
+            state: None,
+            index: &index,
+        };
+        let committed = store
+            .publish_with_hook(&snap, &mut |step| step != CommitStep::SnapTempWritten)
+            .unwrap();
+        assert!(!committed);
+        // the temp file exists but recovery ignores it
+        assert_eq!(store.load_latest().unwrap().unwrap().generation, 1);
+        // a retried publish of the same generation succeeds cleanly
+        store.publish(&snap).unwrap();
+        assert_eq!(store.load_latest().unwrap().unwrap().generation, 2);
+    }
+
+    #[test]
+    fn interrupted_commit_after_rename_recovers_the_new_generation() {
+        let tmp = TempDir::new("interrupt_late");
+        let store = SnapshotStore::open(tmp.path(), 4).unwrap();
+        let base = textbook_db();
+        publish_gen(&store, &base, 1);
+        let result = mined(&base);
+        let index = RuleIndex::build(&result, 0.3);
+        let snap = SnapshotRef {
+            generation: 2,
+            base: BaseRef::of(&base),
+            min_support: 2.0 / 9.0,
+            max_k: 0,
+            delta: &[],
+            result: &result,
+            state: None,
+            index: &index,
+        };
+        // killed between snapshot rename and manifest rename: the stale
+        // manifest still points at gen 1 — the published generation —
+        // which is exactly what recovery must serve
+        store
+            .publish_with_hook(&snap, &mut |step| step != CommitStep::SnapRenamed)
+            .unwrap();
+        assert_eq!(store.load_latest().unwrap().unwrap().generation, 1);
+        // ...but if the manifest is also gone, the newest intact file wins
+        fs::remove_file(store.manifest_path()).unwrap();
+        assert_eq!(store.load_latest().unwrap().unwrap().generation, 2);
+    }
+
+    #[test]
+    fn block_accounting_charges_the_simulated_dfs_and_credits_pruned_generations() {
+        use crate::cluster::ClusterConfig;
+        use crate::dfs::Dfs;
+        let tmp = TempDir::new("accounting");
+        let store = SnapshotStore::open(tmp.path(), 1)
+            .unwrap()
+            .with_block_accounting(Box::new(Dfs::new(&ClusterConfig::fhssc(3))));
+        assert_eq!(store.utilization(), Some(0.0));
+        let base = textbook_db();
+        publish_gen(&store, &base, 1);
+        let one_gen = store.utilization().unwrap();
+        assert!(one_gen > 0.0);
+        // republishing the same generation replaces its charge exactly
+        // (identical content ⇒ identical bytes ⇒ identical utilization)
+        for _ in 0..4 {
+            publish_gen(&store, &base, 1);
+        }
+        assert_eq!(store.utilization().unwrap(), one_gen);
+        // with retain = 1, publishing gen 2 prunes (and credits) gen 1:
+        // usage tracks the retained snapshot set, it does not accumulate
+        publish_gen(&store, &base, 2);
+        assert!(store.utilization().unwrap() < one_gen * 1.8);
+        assert_eq!(store.scan_generations().unwrap(), vec![2]);
+    }
+}

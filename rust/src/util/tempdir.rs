@@ -1,0 +1,53 @@
+//! Self-cleaning scratch directories for tests and benches.
+//!
+//! Public (not `cfg(test)`) because integration tests and bench binaries
+//! are separate crates — the same reason `util::proptest` is public.
+
+use std::path::{Path, PathBuf};
+
+/// A uniquely named directory under the system temp root, removed (best
+/// effort) on drop. The name combines the caller's tag with the process
+/// id, so concurrent test binaries never collide as long as tags are
+/// unique within one process.
+#[derive(Debug)]
+pub struct TempDir(PathBuf);
+
+impl TempDir {
+    /// Reserve (and clear any stale copy of) `<tmp>/mr_apriori_<tag>_<pid>`.
+    /// The directory itself is created lazily by whatever uses the path
+    /// (e.g. `SnapshotStore::open`).
+    pub fn new(tag: &str) -> Self {
+        let path = std::env::temp_dir()
+            .join(format!("mr_apriori_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&path);
+        Self(path)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cleans_up_on_drop_and_names_are_tag_unique() {
+        let a = TempDir::new("util_a");
+        let b = TempDir::new("util_b");
+        assert_ne!(a.path(), b.path());
+        std::fs::create_dir_all(a.path()).unwrap();
+        std::fs::write(a.path().join("x"), b"x").unwrap();
+        let kept = a.path().to_path_buf();
+        drop(a);
+        assert!(!kept.exists());
+        drop(b);
+    }
+}

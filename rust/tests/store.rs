@@ -1,0 +1,539 @@
+//! Durable snapshot store invariants:
+//!
+//! * **codec round-trips** — randomized `MiningResult` / `MinedState` /
+//!   `RuleIndex` values survive encode→decode exactly (property-tested);
+//! * **corruption detection** — the exhaustive single-bit-flip corpus and
+//!   every truncation prefix of a snapshot decode to a typed error,
+//!   never a panic or a silently wrong value;
+//! * **crash consistency** — the commit protocol interrupted after every
+//!   write boundary still recovers a complete generation whose contents
+//!   equal the uninterrupted run's at that generation;
+//! * **warm restart** — a refresher killed mid-run and restarted from the
+//!   store resumes at the last published generation *on the incremental
+//!   delta path* (no re-mine of the base) and ends byte-identical to an
+//!   uninterrupted run; a corrupted newest generation degrades to the
+//!   previous one and still converges.
+
+use std::sync::Arc;
+
+use mr_apriori::data::Transaction;
+use mr_apriori::incremental::verify_invariant;
+use mr_apriori::prelude::*;
+use mr_apriori::store::codec;
+use mr_apriori::util::proptest::check;
+use mr_apriori::util::rng::Xoshiro256;
+use mr_apriori::util::tempdir::TempDir;
+
+const MIN_SUPPORT: f64 = 0.2;
+const MIN_CONF: f64 = 0.4;
+
+fn cfg() -> AprioriConfig {
+    AprioriConfig { min_support: MIN_SUPPORT, max_k: 0 }
+}
+
+fn driver() -> MrApriori {
+    MrApriori::new(ClusterConfig::standalone(), cfg()).with_split_tx(16)
+}
+
+/// Small skewed base: low item ids dominate, so there is real frequent
+/// structure for deltas to promote against.
+fn base_db() -> TransactionDb {
+    let mut rng = Xoshiro256::seed_from_u64(0xBA5E_D1);
+    let txs: Vec<Transaction> = (0..40)
+        .map(|_| {
+            let len = rng.range_usize(2, 5);
+            Transaction::new((0..len).map(|_| {
+                let a = rng.gen_range(10) as u32;
+                let b = rng.gen_range(10) as u32;
+                a.min(b)
+            }))
+        })
+        .collect();
+    TransactionDb::new(txs)
+}
+
+/// Deterministic random db for the codec round-trip properties.
+fn random_db(rng: &mut Xoshiro256) -> Vec<Vec<u32>> {
+    (0..rng.range_usize(1, 20))
+        .map(|_| {
+            (0..rng.range_usize(0, 6))
+                .map(|_| rng.gen_range(8) as u32)
+                .collect()
+        })
+        .collect()
+}
+
+fn db_of(spec: &[Vec<u32>]) -> TransactionDb {
+    TransactionDb::new(
+        spec.iter()
+            .map(|t| Transaction::new(t.iter().copied()))
+            .collect(),
+    )
+}
+
+/// Render a fixed random basket corpus against an index — the serving
+/// byte-identity fingerprint.
+fn render_corpus(idx: &RuleIndex, seed: u64) -> Vec<String> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..30)
+        .map(|_| {
+            let len = rng.range_usize(1, 5);
+            let basket: Vec<u32> = (0..len).map(|_| rng.gen_range(14) as u32).collect();
+            render_lines(&idx.recommend(&basket, 5))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------- round-trips
+
+#[test]
+fn prop_mining_result_codec_roundtrip() {
+    check(
+        "MiningResult encode/decode is the identity",
+        0x0DEC_1,
+        40,
+        random_db,
+        |spec| {
+            let result = ClassicalApriori::default().mine(&db_of(spec), &cfg());
+            let back = codec::decode_mining_result(&codec::encode_mining_result(&result))
+                .map_err(|e| e.to_string())?;
+            if format!("{result:?}") == format!("{back:?}") {
+                Ok(())
+            } else {
+                Err("decoded MiningResult differs".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_mined_state_codec_roundtrip() {
+    let driver = driver();
+    check(
+        "MinedState encode/decode is the identity",
+        0x0DEC_2,
+        25,
+        random_db,
+        |spec| {
+            let db = db_of(spec);
+            if db.n_items == 0 {
+                return Ok(()); // empty universe has no state to persist
+            }
+            let (_, state) = MinedState::capture(&driver, &db).map_err(|e| e.to_string())?;
+            let back = codec::decode_mined_state(&codec::encode_mined_state(&state))
+                .map_err(|e| e.to_string())?;
+            if format!("{state:?}") == format!("{back:?}") {
+                Ok(())
+            } else {
+                Err("decoded MinedState differs".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_rule_index_codec_roundtrip_serves_identically() {
+    check(
+        "decoded RuleIndex answers byte-identically",
+        0x0DEC_3,
+        25,
+        random_db,
+        |spec| {
+            let result = ClassicalApriori::default().mine(&db_of(spec), &cfg());
+            let idx = RuleIndex::build(&result, MIN_CONF);
+            let back = codec::decode_rule_index(&codec::encode_rule_index(&idx))
+                .map_err(|e| e.to_string())?;
+            if back.n_rules() != idx.n_rules() || back.n_itemsets() != idx.n_itemsets() {
+                return Err("decoded index sizes differ".into());
+            }
+            if render_corpus(&back, 7) == render_corpus(&idx, 7) {
+                Ok(())
+            } else {
+                Err("decoded index serves different answers".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_delta_codec_roundtrip() {
+    check(
+        "transaction-delta encode/decode is the identity",
+        0x0DEC_4,
+        60,
+        random_db,
+        |spec| {
+            let delta: Vec<Transaction> = spec
+                .iter()
+                .map(|t| Transaction::new(t.iter().copied()))
+                .collect();
+            let back =
+                codec::decode_delta(&codec::encode_delta(&delta)).map_err(|e| e.to_string())?;
+            if back == delta {
+                Ok(())
+            } else {
+                Err("decoded delta differs".into())
+            }
+        },
+    );
+}
+
+// --------------------------------------------------- corruption corpus
+
+/// One realistic snapshot encoding (delta + state + result + index).
+fn snapshot_bytes() -> Vec<u8> {
+    let base = base_db();
+    let delta = vec![Transaction::new([0u32, 1]), Transaction::new([2u32])];
+    let mut union = base.clone();
+    union.append(delta.clone());
+    let (report, state) = MinedState::capture(&driver(), &union).unwrap();
+    let index = RuleIndex::build(&report.result, MIN_CONF);
+    codec::encode_snapshot(&SnapshotRef {
+        generation: 5,
+        base: BaseRef::of(&base),
+        min_support: MIN_SUPPORT,
+        max_k: 0,
+        delta: &delta,
+        result: &report.result,
+        state: Some(&state),
+        index: &index,
+    })
+}
+
+#[test]
+fn every_single_bit_flip_is_detected_never_a_panic_or_wrong_decode() {
+    let good = snapshot_bytes();
+    assert!(codec::decode_snapshot(&good).is_ok());
+    // FNV-1a's byte step (xor, then multiply by an odd prime) is
+    // invertible, so any single corrupted byte must change the digest;
+    // header fields are covered by their own explicit checks. Flip the
+    // low and high bit of every byte and demand a typed error each time.
+    for i in 0..good.len() {
+        for mask in [0x01u8, 0x80] {
+            let mut bad = good.clone();
+            bad[i] ^= mask;
+            assert!(
+                codec::decode_snapshot(&bad).is_err(),
+                "bit flip at byte {i} (mask {mask:#04x}) decoded successfully"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_truncation_prefix_is_detected() {
+    let good = snapshot_bytes();
+    for len in 0..good.len() {
+        assert!(
+            codec::decode_snapshot(&good[..len]).is_err(),
+            "truncation to {len} of {} bytes decoded successfully",
+            good.len()
+        );
+    }
+}
+
+// -------------------------------------------------- crash consistency
+
+/// Deterministic content of generation `g` over the base: cumulative
+/// delta of `g` fixed transactions, mined + indexed.
+fn generation_parts(
+    base: &TransactionDb,
+    g: u64,
+) -> (Vec<Transaction>, MiningResult, RuleIndex) {
+    let delta: Vec<Transaction> = (0..g)
+        .map(|i| Transaction::new([(i % 5) as u32, (i % 5) as u32 + 1]))
+        .collect();
+    let mut union = base.clone();
+    union.append(delta.clone());
+    let result = ClassicalApriori::default().mine(&union, &cfg());
+    let index = RuleIndex::build(&result, MIN_CONF);
+    (delta, result, index)
+}
+
+#[test]
+fn commit_interrupted_at_every_boundary_recovers_an_intact_generation() {
+    let base = base_db();
+    for interrupt_at in 1..=3u64 {
+        for step in CommitStep::ALL {
+            let tmp = TempDir::new(&format!("crash_{interrupt_at}_{step:?}"));
+            let store = SnapshotStore::open(tmp.path(), 8).unwrap();
+            // publish generations 1..interrupt_at-1 cleanly
+            for g in 1..interrupt_at {
+                let (delta, result, index) = generation_parts(&base, g);
+                store
+                    .publish(&SnapshotRef {
+                        generation: g,
+                        base: BaseRef::of(&base),
+                        min_support: MIN_SUPPORT,
+                        max_k: 0,
+                        delta: &delta,
+                        result: &result,
+                        state: None,
+                        index: &index,
+                    })
+                    .unwrap();
+            }
+            // ...then kill the commit of `interrupt_at` at this boundary
+            let (delta, result, index) = generation_parts(&base, interrupt_at);
+            let committed = store
+                .publish_with_hook(
+                    &SnapshotRef {
+                        generation: interrupt_at,
+                        base: BaseRef::of(&base),
+                        min_support: MIN_SUPPORT,
+                        max_k: 0,
+                        delta: &delta,
+                        result: &result,
+                        state: None,
+                        index: &index,
+                    },
+                    &mut |s| s != step,
+                )
+                .unwrap();
+            // the hook aborts after completing `step`, so the call always
+            // reports an unfinished commit — even when the abort lands
+            // after the manifest rename (only pruning was skipped)
+            assert!(!committed);
+
+            // expected landing: before the snapshot rename the new file
+            // does not exist; after it but before the manifest rename the
+            // old manifest still names g-1 (except g=1, where no manifest
+            // exists yet and the scan finds the new intact file); after
+            // the manifest rename the new generation is published.
+            let expected = match step {
+                CommitStep::SnapTempWritten | CommitStep::SnapSynced => {
+                    interrupt_at.checked_sub(1).filter(|&g| g > 0)
+                }
+                CommitStep::SnapRenamed
+                | CommitStep::ManifestTempWritten
+                | CommitStep::ManifestSynced => {
+                    if interrupt_at == 1 {
+                        Some(1)
+                    } else {
+                        Some(interrupt_at - 1)
+                    }
+                }
+                CommitStep::ManifestRenamed => Some(interrupt_at),
+            };
+            let recovered = store.load_latest().unwrap();
+            match expected {
+                None => assert!(
+                    recovered.is_none(),
+                    "interrupt at {step:?} of gen {interrupt_at}: expected empty store"
+                ),
+                Some(g) => {
+                    let snap = recovered.unwrap_or_else(|| {
+                        panic!("interrupt at {step:?} of gen {interrupt_at}: nothing recovered")
+                    });
+                    assert_eq!(snap.generation, g, "interrupt at {step:?}");
+                    let (want_delta, want_result, _) = generation_parts(&base, g);
+                    assert_eq!(snap.delta, want_delta, "interrupt at {step:?}");
+                    assert_eq!(
+                        snap.result.frequent, want_result.frequent,
+                        "interrupt at {step:?}"
+                    );
+                }
+            }
+
+            // the restarted process republishes from the recovered point:
+            // the final state must equal a never-interrupted run's
+            let resume_from = expected.unwrap_or(0);
+            for g in resume_from + 1..=4 {
+                let (delta, result, index) = generation_parts(&base, g);
+                store
+                    .publish(&SnapshotRef {
+                        generation: g,
+                        base: BaseRef::of(&base),
+                        min_support: MIN_SUPPORT,
+                        max_k: 0,
+                        delta: &delta,
+                        result: &result,
+                        state: None,
+                        index: &index,
+                    })
+                    .unwrap();
+            }
+            let final_snap = store.load_latest().unwrap().unwrap();
+            assert_eq!(final_snap.generation, 4);
+            let (_, want, _) = generation_parts(&base, 4);
+            assert_eq!(final_snap.result.frequent, want.frequent);
+        }
+    }
+}
+
+// ------------------------------------------------------- warm restart
+
+fn delta_for(round: u64, n_items: usize) -> Vec<Transaction> {
+    synth_delta(6, n_items, 0xD117A + round)
+}
+
+fn store_refresher(store: &Arc<SnapshotStore>, base: &TransactionDb) -> Refresher {
+    Refresher::new(driver(), MIN_CONF)
+        .with_incremental(IncrementalConfig {
+            enabled: true,
+            // an unbounded guard keeps every cycle on the delta path, so
+            // "no re-mine after restart" is deterministic below
+            max_frontier_blowup: 1e9,
+        })
+        .with_store(Arc::clone(store), BaseRef::of(base), base.len())
+}
+
+/// Uninterrupted reference: N incremental refresh cycles with
+/// persistence; returns the per-generation corpus fingerprints, the
+/// final database, and the final served index fingerprint.
+fn reference_run(dir: &std::path::Path, rounds: u64) -> (Vec<Vec<String>>, TransactionDb) {
+    let base = base_db();
+    let store = Arc::new(SnapshotStore::open(dir, 8).unwrap());
+    let mut db = base.clone();
+    let result0 = ClassicalApriori::default().mine(&db, &cfg());
+    let cell = SnapshotCell::new(Arc::new(RuleIndex::build(&result0, MIN_CONF)));
+    let refresher = store_refresher(&store, &base);
+    let mut fingerprints = Vec::new();
+    for round in 0..rounds {
+        let delta = delta_for(round, 14);
+        refresher.refresh_once(&mut db, delta, &cell).unwrap();
+        fingerprints.push(render_corpus(&cell.load(), 99));
+    }
+    (fingerprints, db)
+}
+
+#[test]
+fn killed_and_restarted_refresher_serves_byte_identical_to_uninterrupted() {
+    let ref_dir = TempDir::new("warm_ref");
+    let (reference, reference_db) = reference_run(ref_dir.path(), 4);
+
+    // interrupted run: two cycles, then the process "dies" (everything
+    // in memory is dropped; only the store survives)
+    let tmp = TempDir::new("warm_kill");
+    let base = base_db();
+    {
+        let store = Arc::new(SnapshotStore::open(tmp.path(), 8).unwrap());
+        let mut db = base.clone();
+        let result0 = ClassicalApriori::default().mine(&db, &cfg());
+        let cell = SnapshotCell::new(Arc::new(RuleIndex::build(&result0, MIN_CONF)));
+        let refresher = store_refresher(&store, &base);
+        for round in 0..2 {
+            refresher
+                .refresh_once(&mut db, delta_for(round, 14), &cell)
+                .unwrap();
+        }
+    }
+
+    // restart: pristine base + store only
+    let store = Arc::new(SnapshotStore::open(tmp.path(), 8).unwrap());
+    let mut db = base.clone();
+    let resumed = resume_serving(&store, &mut db, BaseRef::of(&base))
+        .unwrap()
+        .expect("two generations persisted");
+    assert_eq!(resumed.generation, 2);
+    assert_eq!(resumed.min_confidence, MIN_CONF);
+    // the recovered snapshot already serves byte-identically to the
+    // uninterrupted run's generation 2...
+    assert_eq!(render_corpus(&resumed.cell.load(), 99), reference[1]);
+    // ...and the recovered border state is exact over the recovered db
+    let state = resumed.state.clone().expect("incremental state persisted");
+    verify_invariant(&state, &db).unwrap();
+
+    // resume refreshing where the killed process left off
+    let refresher = store_refresher(&store, &base);
+    refresher.seed_state(state);
+    for round in 2..4 {
+        let (_, stats) = refresher
+            .refresh_once(&mut db, delta_for(round, 14), &resumed.cell)
+            .unwrap();
+        // the whole point of persistence: the resumed refresher stays on
+        // the delta path — no capture-mine of the base database
+        assert!(
+            stats.incremental.is_some() && !stats.fell_back,
+            "round {round} re-mined after a warm restart"
+        );
+    }
+    assert_eq!(resumed.cell.generation(), 4);
+    assert_eq!(db.transactions, reference_db.transactions);
+    assert_eq!(render_corpus(&resumed.cell.load(), 99), reference[3]);
+    // end-to-end oracle: the served snapshot equals a from-scratch mine
+    let full = ClassicalApriori::default().mine(&db, &cfg());
+    let rebuilt = RuleIndex::build(&full, MIN_CONF);
+    assert_eq!(render_corpus(&resumed.cell.load(), 99), render_corpus(&rebuilt, 99));
+}
+
+#[test]
+fn corrupted_newest_generation_degrades_and_still_converges() {
+    let ref_dir = TempDir::new("corrupt_ref");
+    let (reference, reference_db) = reference_run(ref_dir.path(), 3);
+
+    let tmp = TempDir::new("corrupt_resume");
+    let base = base_db();
+    {
+        let store = Arc::new(SnapshotStore::open(tmp.path(), 8).unwrap());
+        let mut db = base.clone();
+        let result0 = ClassicalApriori::default().mine(&db, &cfg());
+        let cell = SnapshotCell::new(Arc::new(RuleIndex::build(&result0, MIN_CONF)));
+        let refresher = store_refresher(&store, &base);
+        for round in 0..2 {
+            refresher
+                .refresh_once(&mut db, delta_for(round, 14), &cell)
+                .unwrap();
+        }
+    }
+    // scribble over generation 2 — recovery must land on generation 1
+    let gen2 = tmp.path().join("gen-00000002.snap");
+    let mut bytes = std::fs::read(&gen2).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&gen2, &bytes).unwrap();
+
+    let store = Arc::new(SnapshotStore::open(tmp.path(), 8).unwrap());
+    let mut db = base.clone();
+    let resumed =
+        resume_serving(&store, &mut db, BaseRef::of(&base)).unwrap().expect("gen 1 intact");
+    assert_eq!(resumed.generation, 1);
+    assert_eq!(render_corpus(&resumed.cell.load(), 99), reference[0]);
+
+    // replaying the lost delta plus the next one converges with the
+    // uninterrupted run (same deltas ⇒ same generations)
+    let refresher = store_refresher(&store, &base);
+    refresher.seed_state(resumed.state.clone().expect("state persisted"));
+    for round in 1..3 {
+        refresher
+            .refresh_once(&mut db, delta_for(round, 14), &resumed.cell)
+            .unwrap();
+    }
+    assert_eq!(resumed.cell.generation(), 3);
+    assert_eq!(db.transactions, reference_db.transactions);
+    assert_eq!(render_corpus(&resumed.cell.load(), 99), reference[2]);
+}
+
+#[test]
+fn full_mode_warm_restart_resumes_serving_without_state() {
+    // Persistence is not incremental-only: a full-mode refresher's
+    // generations warm-restart too (state is simply absent, and the next
+    // refresh re-mines the union as full mode always does).
+    let tmp = TempDir::new("full_mode");
+    let base = base_db();
+    {
+        let store = Arc::new(SnapshotStore::open(tmp.path(), 4).unwrap());
+        let mut db = base.clone();
+        let result0 = ClassicalApriori::default().mine(&db, &cfg());
+        let cell = SnapshotCell::new(Arc::new(RuleIndex::build(&result0, MIN_CONF)));
+        let refresher = Refresher::new(driver(), MIN_CONF).with_store(
+            Arc::clone(&store),
+            BaseRef::of(&base),
+            base.len(),
+        );
+        refresher
+            .refresh_once(&mut db, delta_for(0, 14), &cell)
+            .unwrap();
+    }
+    let store = SnapshotStore::open(tmp.path(), 4).unwrap();
+    let mut db = base.clone();
+    let resumed = resume_serving(&store, &mut db, BaseRef::of(&base)).unwrap().expect("warm");
+    assert_eq!(resumed.generation, 1);
+    assert!(resumed.state.is_none());
+    let full = ClassicalApriori::default().mine(&db, &cfg());
+    assert_eq!(resumed.result.frequent, full.frequent);
+    assert_eq!(
+        render_corpus(&resumed.cell.load(), 3),
+        render_corpus(&RuleIndex::build(&full, MIN_CONF), 3)
+    );
+}
