@@ -13,10 +13,20 @@
 //! `MiningResult`s to hash-tree on the classical, pipelined and
 //! incremental mining paths, and that vertical beats hash-tree on this
 //! dense synthetic workload.
+//!
+//! The second half is the container occupancy sweep: three QUEST
+//! profiles spanning dense → sparse, each intersected both through the
+//! chunked [`Container`] layouts and through a local whole-row
+//! dense-bitset comparator (the dense half of the pre-container
+//! dichotomy). Per profile the JSON gets a win/loss row (time, bytes,
+//! container census); inline assertions force every forced-variant
+//! kernel pairing byte-identical to the sorted-merge oracle and require
+//! the compressed containers to beat dense rows on the sparse profile.
 
 use std::time::Instant;
 
 use mr_apriori::apriori::candidates;
+use mr_apriori::engine::{Container, ContainerCensus, TidSet};
 use mr_apriori::prelude::*;
 use mr_apriori::runtime::TensorService;
 use mr_apriori::util::json::Json;
@@ -237,6 +247,9 @@ fn main() {
          incremental paths"
     );
 
+    // -- container occupancy sweep: dense -> sparse profiles --
+    let occupancy = occupancy_sweep(quick);
+
     // -- BENCH_engines.json: the tracked perf trajectory --
     let json_rows: Vec<Json> = rows
         .iter()
@@ -272,9 +285,233 @@ fn main() {
         ),
         ("vertical_speedup_vs_hash_tree", Json::num(ht / vert.max(1e-9))),
         ("rows", Json::Arr(json_rows)),
+        ("occupancy", occupancy),
     ]);
     let dir = std::env::var("BENCH_OUT_DIR").unwrap_or_else(|_| ".".into());
     let path = std::path::Path::new(&dir).join("BENCH_engines.json");
     std::fs::write(&path, format!("{doc}\n")).expect("write BENCH_engines.json");
     println!("wrote {}", path.display());
+}
+
+/// The pre-container comparator: one whole-row dense bitset per item —
+/// the dense half of the old row-level dense/sparse dichotomy the
+/// chunked containers replaced.
+struct DenseRows {
+    rows: Vec<Vec<u64>>,
+}
+
+impl DenseRows {
+    fn build(lists: &[&[u32]], n_tx: usize) -> Self {
+        let words = n_tx.div_ceil(64);
+        let rows = lists
+            .iter()
+            .map(|tids| {
+                let mut row = vec![0u64; words];
+                for &t in *tids {
+                    row[t as usize / 64] |= 1u64 << (t % 64);
+                }
+                row
+            })
+            .collect();
+        Self { rows }
+    }
+
+    fn pair_count(&self, a: usize, b: usize) -> u64 {
+        self.rows[a]
+            .iter()
+            .zip(&self.rows[b])
+            .map(|(x, y)| (x & y).count_ones() as u64)
+            .sum()
+    }
+}
+
+/// Sorted-merge intersection — the oracle every container kernel must
+/// reproduce byte-for-byte.
+fn merge_intersect(a: &[u16], b: &[u16]) -> Vec<u16> {
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut out = Vec::new();
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Every forced-variant kernel pairing (array/bitmap/runs on each side)
+/// over the given sorted single-chunk TID lists, checked against the
+/// merge oracle for both the count and the materialized intersection.
+fn check_kernel_pairings(a: &[u16], b: &[u16], span: usize) {
+    let oracle = merge_intersect(a, b);
+    let forced = |tids: &[u16]| {
+        [
+            Container::array(tids.to_vec()),
+            Container::bitmap_from_sorted(tids, span),
+            Container::runs_from_sorted(tids),
+        ]
+    };
+    for ca in &forced(a) {
+        for cb in &forced(b) {
+            assert_eq!(
+                ca.intersect_count(cb),
+                oracle.len() as u64,
+                "kernel count diverges from the merge oracle"
+            );
+            assert_eq!(
+                ca.intersect(cb, span).decode(),
+                oracle,
+                "materialized kernel diverges from the merge oracle"
+            );
+        }
+    }
+}
+
+/// Dense → sparse QUEST profiles, each pair-counted both through the
+/// chunked containers and through [`DenseRows`]; returns the
+/// `"occupancy"` object for `BENCH_engines.json`. Asserts inline that
+/// both representations match the naive oracle, that all nine
+/// forced-variant kernel pairings match the merge oracle, and that the
+/// compressed containers win (time *and* bytes) on the sparse profile.
+fn occupancy_sweep(quick: bool) -> Json {
+    let (occ_tx, iters, reps) = if quick { (8192, 3, 8) } else { (16384, 5, 16) };
+    let profiles: [(&str, QuestParams); 3] = [
+        ("dense", QuestParams { n_items: 64, ..QuestParams::dense(occ_tx) }),
+        ("mid", QuestParams { n_items: 1_024, ..QuestParams::t10_i4(occ_tx) }),
+        ("sparse", QuestParams { n_items: 16_384, ..QuestParams::t10_i4(occ_tx) }),
+    ];
+    println!("\n== container occupancy sweep ({occ_tx} tx per profile) ==");
+    let mut out: Vec<(&str, Json)> = Vec::new();
+    for (name, params) in profiles {
+        let db = QuestGenerator::new(params).generate();
+        let block = FlatBlock::from_transactions(&db.transactions, db.n_items);
+        let lists = block.tid_lists();
+        let n_tx = block.len();
+
+        // 24 items at evenly spaced frequency ranks — representative of
+        // the profile's occupancy distribution, not just its head.
+        let mut ranked: Vec<usize> = (0..lists.len()).filter(|&i| !lists[i].is_empty()).collect();
+        ranked.sort_by_key(|&i| (std::cmp::Reverse(lists[i].len()), i));
+        assert!(ranked.len() >= 2, "{name}: degenerate profile");
+        let n_sel = 24.min(ranked.len());
+        let sel: Vec<usize> = (0..n_sel)
+            .map(|r| ranked[r * (ranked.len() - 1) / (n_sel - 1).max(1)])
+            .collect();
+        let sets: Vec<TidSet> = sel
+            .iter()
+            .map(|&i| TidSet::from_sorted_tids(&lists[i], n_tx))
+            .collect();
+        let sel_lists: Vec<&[u32]> = sel.iter().map(|&i| lists[i].as_slice()).collect();
+        let dense = DenseRows::build(&sel_lists, n_tx);
+        let pairs: Vec<(usize, usize)> = (0..n_sel)
+            .flat_map(|a| ((a + 1)..n_sel).map(move |b| (a, b)))
+            .collect();
+
+        // Correctness: both representations vs the naive engine oracle.
+        let cand: Vec<Itemset> = pairs
+            .iter()
+            .map(|&(a, b)| {
+                let (x, y) = (sel[a] as u32, sel[b] as u32);
+                vec![x.min(y), x.max(y)]
+            })
+            .collect();
+        let oracle = build_engine(EngineKind::Naive, None)
+            .count(&db.transactions, &cand, db.n_items)
+            .unwrap();
+        let container_counts: Vec<u64> = pairs
+            .iter()
+            .map(|&(a, b)| sets[a].intersect_count(&sets[b]))
+            .collect();
+        let dense_counts: Vec<u64> = pairs.iter().map(|&(a, b)| dense.pair_count(a, b)).collect();
+        assert_eq!(container_counts, oracle, "{name}: containers diverge from the oracle");
+        assert_eq!(dense_counts, oracle, "{name}: dense rows diverge from the oracle");
+
+        // All nine forced-variant kernel pairings on the two most
+        // frequent items (single chunk: every profile fits one).
+        let a16: Vec<u16> = lists[ranked[0]].iter().map(|&t| t as u16).collect();
+        let b16: Vec<u16> = lists[ranked[1]].iter().map(|&t| t as u16).collect();
+        check_kernel_pairings(&a16, &b16, n_tx);
+
+        let time_ms = |f: &mut dyn FnMut()| -> f64 {
+            let mut best = f64::INFINITY;
+            for _ in 0..iters {
+                let t0 = Instant::now();
+                for _ in 0..reps {
+                    f();
+                }
+                best = best.min(t0.elapsed().as_secs_f64() * 1e3 / reps as f64);
+            }
+            best
+        };
+        let container_ms = time_ms(&mut || {
+            for &(a, b) in &pairs {
+                std::hint::black_box(sets[a].intersect_count(&sets[b]));
+            }
+        });
+        let dense_rows_ms = time_ms(&mut || {
+            for &(a, b) in &pairs {
+                std::hint::black_box(dense.pair_count(a, b));
+            }
+        });
+
+        // Residency across the whole (non-empty) inverted index: the
+        // cost of keeping either representation resident per split.
+        let words = n_tx.div_ceil(64);
+        let mut census = ContainerCensus::default();
+        let mut container_bytes = 0usize;
+        for &i in &ranked {
+            let set = TidSet::from_sorted_tids(&lists[i], n_tx);
+            census += set.census();
+            container_bytes += set.bytes();
+        }
+        let dense_rows_bytes = ranked.len() * words * 8;
+
+        let wins = container_ms < dense_rows_ms && container_bytes < dense_rows_bytes;
+        if name == "sparse" {
+            assert!(
+                wins,
+                "compressed containers must beat dense rows on the sparse profile \
+                 ({container_ms:.4} ms vs {dense_rows_ms:.4} ms, \
+                 {container_bytes} B vs {dense_rows_bytes} B)"
+            );
+        }
+        println!(
+            "{name:>7}: density {:.4} | containers {container_ms:.4} ms, {container_bytes} B \
+             | dense rows {dense_rows_ms:.4} ms, {dense_rows_bytes} B \
+             | census {}a/{}b/{}r{}",
+            block.density(),
+            census.arrays,
+            census.bitmaps,
+            census.runs,
+            if wins { " | compressed wins" } else { "" }
+        );
+        out.push((
+            name,
+            Json::obj(vec![
+                ("n_tx", Json::num(n_tx as f64)),
+                ("n_items", Json::num(db.n_items as f64)),
+                ("density", Json::num(block.density())),
+                ("container_ms", Json::num(container_ms)),
+                ("dense_rows_ms", Json::num(dense_rows_ms)),
+                ("container_bytes", Json::num(container_bytes as f64)),
+                ("dense_rows_bytes", Json::num(dense_rows_bytes as f64)),
+                (
+                    "census",
+                    Json::obj(vec![
+                        ("arrays", Json::num(census.arrays as f64)),
+                        ("bitmaps", Json::num(census.bitmaps as f64)),
+                        ("runs", Json::num(census.runs as f64)),
+                    ]),
+                ),
+                ("counts_match_oracle", Json::Bool(true)),
+                ("compressed_wins", Json::Bool(wins)),
+            ]),
+        ));
+    }
+    Json::obj(out)
 }

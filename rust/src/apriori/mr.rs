@@ -15,8 +15,9 @@
 //! Keys are full itemsets (not indices), exactly like the paper's
 //! `<Key, Value>` design — the shuffle dedupes/aggregates by itemset.
 
+use crate::data::columnar::FlatBlock;
 use crate::data::{split::Split, Transaction};
-use crate::engine::SupportEngine;
+use crate::engine::{IndexCache, SupportEngine, VerticalIndex};
 use crate::mapreduce::app::MapReduceApp;
 
 use super::Itemset;
@@ -89,6 +90,12 @@ pub struct CandidateCountApp<'e> {
     /// the map never emits them — so callers zero-fill from the known
     /// candidate list.
     pub capture_all: bool,
+    /// Resident index cache + the generation this job counts under.
+    /// When set, map tasks fetch (or build once) the split's
+    /// [`VerticalIndex`] keyed by `(split.id, generation)` instead of
+    /// calling the engine — only valid when the engine is the vertical
+    /// one, which the coordinator guarantees before attaching.
+    cache: Option<(&'e IndexCache, u64)>,
 }
 
 impl<'e> CandidateCountApp<'e> {
@@ -106,6 +113,7 @@ impl<'e> CandidateCountApp<'e> {
             n_items,
             threshold,
             capture_all: false,
+            cache: None,
         }
     }
 
@@ -115,17 +123,34 @@ impl<'e> CandidateCountApp<'e> {
         self.capture_all = true;
         self
     }
+
+    /// Route this job's map tasks through the resident [`IndexCache`]
+    /// under `generation`. Every job of the same dataset view passes the
+    /// same generation, so the first map task per split builds the index
+    /// and every later job (or speculative twin) reuses it.
+    pub fn with_cache(mut self, cache: &'e IndexCache, generation: u64) -> Self {
+        self.cache = Some((cache, generation));
+        self
+    }
 }
 
 impl<'e> MapReduceApp for CandidateCountApp<'e> {
     type K = Itemset;
     type V = u64;
 
-    fn map(&self, _s: &Split, input: &[Transaction], emit: &mut dyn FnMut(Itemset, u64)) {
-        let counts = self
-            .groups
-            .count(self.engine, input, &self.candidates, self.n_items)
-            .expect("support engine failed in map task");
+    fn map(&self, s: &Split, input: &[Transaction], emit: &mut dyn FnMut(Itemset, u64)) {
+        let counts = match self.cache {
+            Some((cache, generation)) => {
+                let index = cache.get_or_build(s.id, generation, || {
+                    VerticalIndex::build(&FlatBlock::from_transactions(input, self.n_items))
+                });
+                self.groups.count_with_index(&index, &self.candidates)
+            }
+            None => self
+                .groups
+                .count(self.engine, input, &self.candidates, self.n_items)
+                .expect("support engine failed in map task"),
+        };
         for (cand, count) in self.candidates.iter().zip(counts) {
             if count > 0 {
                 emit(cand.clone(), count);

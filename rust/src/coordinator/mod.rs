@@ -41,7 +41,7 @@ use crate::cluster::ClusterConfig;
 use crate::data::split::{plan_splits, Split};
 use crate::data::TransactionDb;
 use crate::dfs::{BlockId, Dfs, DfsError};
-use crate::engine::{EngineKind, SupportEngine};
+use crate::engine::{EngineKind, IndexCache, SupportEngine};
 use crate::mapreduce::app::MapReduceApp;
 use crate::mapreduce::{
     JobConfig, JobError, JobRunner, JobStats, SimJobSpec, SimMapTask, SimReport, Simulator,
@@ -197,6 +197,10 @@ pub struct MrApriori {
     /// Transactions per map split (HDFS block granularity).
     pub split_tx: usize,
     engine: Box<dyn SupportEngine>,
+    /// Split-keyed resident vertical-index cache, shared by every job the
+    /// driver schedules (level loops, delta Δ-scans, exact recounts). A
+    /// generation bump per dataset view keeps stale indexes unservable.
+    cache: IndexCache,
 }
 
 /// What a pipelined reduce lane hands back.
@@ -217,6 +221,7 @@ impl MrApriori {
             // paper-faithful horizontal matchers stay one `--engine trie`
             // / `with_engine` away.
             engine: crate::engine::build_engine(EngineKind::Vertical, None),
+            cache: IndexCache::new(),
         }
     }
 
@@ -253,6 +258,36 @@ impl MrApriori {
     /// reuse it so the delta path counts exactly like the batch path).
     pub fn engine(&self) -> &dyn SupportEngine {
         self.engine.as_ref()
+    }
+
+    /// Cumulative resident-index-cache telemetry (hits, misses, bytes).
+    /// The serve log reports per-refresh-cycle deltas of these totals.
+    pub fn cache_stats(&self) -> crate::engine::CacheStats {
+        self.cache.stats()
+    }
+
+    /// The driver's resident index cache — the incremental delta job
+    /// attaches it to its wrapped counting app under a fresh generation.
+    pub(crate) fn index_cache(&self) -> &IndexCache {
+        &self.cache
+    }
+
+    /// Attach the resident cache to a counting app, but only when the
+    /// active engine is the vertical one: cached [`VerticalIndex`] builds
+    /// are exactly what `count_with_index` consumes, while the horizontal
+    /// engines never look at them and would just pay the build.
+    ///
+    /// [`VerticalIndex`]: crate::engine::VerticalIndex
+    fn attach_cache<'e>(
+        &'e self,
+        app: CandidateCountApp<'e>,
+        generation: u64,
+    ) -> CandidateCountApp<'e> {
+        if self.engine.name() == "vertical" {
+            app.with_cache(&self.cache, generation)
+        } else {
+            app
+        }
     }
 
     /// Mine `db`: real multi-threaded MapReduce execution, synchronous or
@@ -297,7 +332,8 @@ impl MrApriori {
         if itemsets.is_empty() || db.is_empty() {
             return Ok(vec![0; itemsets.len()]);
         }
-        ExactCounter::new(self, db)?.count(db, itemsets)
+        let mut counter = ExactCounter::new(self, db)?;
+        counter.count(db, itemsets)
     }
 
     /// The paper's baseline: run job k to completion, then plan job k+1.
@@ -322,6 +358,9 @@ impl MrApriori {
         let mut dfs = Dfs::new(&self.cluster);
         let blocks = dfs.write_splits(&splits)?;
         let runner = JobRunner::new(&self.cluster, &dfs, &blocks);
+        // One dataset view per mine: every level job (and its speculative
+        // twins) reuses the same per-split index builds.
+        let cache_gen = self.cache.begin_generation();
 
         let mut result = MiningResult {
             n_transactions: db.len(),
@@ -373,6 +412,7 @@ impl MrApriori {
             let mut app =
                 CandidateCountApp::new(cands.clone(), self.engine.as_ref(), db.n_items, threshold);
             app.capture_all = capture;
+            let app = self.attach_cache(app, cache_gen);
             let lt0 = Instant::now();
             let (out, stats) = runner.run(&app, db, &splits, &self.job)?;
             let fk = if capture {
@@ -404,6 +444,14 @@ impl MrApriori {
             k += 1;
         }
         result.normalize();
+
+        // Charge the cache's resident index bytes to the datanode fleet
+        // (like `dfs::BlockStore` checkpoint blocks): residency must show
+        // up in spill accounting instead of being free memory.
+        let cache_bytes = self.cache.resident_bytes();
+        if cache_bytes > 0 {
+            dfs.put_bytes(cache_bytes as u64)?;
+        }
 
         let report = RunReport {
             result,
@@ -444,6 +492,9 @@ impl MrApriori {
         let blocks = dfs.write_splits(&splits)?;
         let runner = JobRunner::new(&self.cluster, &dfs, &blocks);
         let runner = &runner;
+        // One dataset view for the whole job DAG: overlapping map waves of
+        // successive jobs hit the same per-split index builds.
+        let cache_gen = self.cache.begin_generation();
 
         let mut result = MiningResult {
             n_transactions: db.len(),
@@ -536,11 +587,14 @@ impl MrApriori {
                     }
                 }
 
-                let app = CandidateCountApp::new(
-                    groups.concat(),
-                    self.engine.as_ref(),
-                    db.n_items,
-                    threshold,
+                let app = self.attach_cache(
+                    CandidateCountApp::new(
+                        groups.concat(),
+                        self.engine.as_ref(),
+                        db.n_items,
+                        threshold,
+                    ),
+                    cache_gen,
                 );
                 // Map wave for this job — overlaps the pending reduce lane.
                 let map_outputs = runner.map_stage(&app, db, &splits, &self.job)?;
@@ -596,6 +650,13 @@ impl MrApriori {
         outcome?;
         result.normalize();
 
+        // Same residency charge as the synchronous loop: the cache's
+        // index bytes count against datanode capacity.
+        let cache_bytes = self.cache.resident_bytes();
+        if cache_bytes > 0 {
+            dfs.put_bytes(cache_bytes as u64)?;
+        }
+
         Ok(RunReport {
             result,
             jobs,
@@ -621,6 +682,12 @@ pub struct ExactCounter<'a> {
     splits: Vec<Split>,
     dfs: Dfs,
     blocks: Vec<BlockId>,
+    /// Cache generation opened for this counter's placement: every
+    /// `count` call reuses the same per-split index builds.
+    cache_gen: u64,
+    /// The DFS block currently charged for resident cache bytes, so
+    /// repeated counts re-charge instead of stacking blocks.
+    charged: Option<(BlockId, u64)>,
 }
 
 impl<'a> ExactCounter<'a> {
@@ -628,7 +695,8 @@ impl<'a> ExactCounter<'a> {
         let splits = plan_splits(db, driver.split_tx);
         let mut dfs = Dfs::new(&driver.cluster);
         let blocks = dfs.write_splits(&splits)?;
-        Ok(Self { driver, splits, dfs, blocks })
+        let cache_gen = driver.cache.begin_generation();
+        Ok(Self { driver, splits, dfs, blocks, cache_gen, charged: None })
     }
 
     /// Exact supports for `itemsets` over the database this counter was
@@ -636,7 +704,7 @@ impl<'a> ExactCounter<'a> {
     /// Duplicates in the list are fine: counting runs over the
     /// deduplicated set and results scatter back per entry.
     pub fn count(
-        &self,
+        &mut self,
         db: &TransactionDb,
         itemsets: &[Itemset],
     ) -> Result<Vec<u64>, MineError> {
@@ -648,14 +716,34 @@ impl<'a> ExactCounter<'a> {
         unique.dedup();
         let app = CandidateCountApp::new(unique, self.driver.engine.as_ref(), db.n_items, 0)
             .with_capture();
+        let app = self.driver.attach_cache(app, self.cache_gen);
         let runner = JobRunner::new(&self.driver.cluster, &self.dfs, &self.blocks);
         let (out, _stats) = runner.run(&app, db, &self.splits, &self.driver.job)?;
         let counts: std::collections::HashMap<&Itemset, u64> =
             out.iter().map(|(is, s)| (is, *s)).collect();
+        self.recharge_cache_bytes()?;
         Ok(itemsets
             .iter()
             .map(|c| counts.get(c).copied().unwrap_or(0))
             .collect())
+    }
+
+    /// Keep exactly one DFS block charged for the cache's resident index
+    /// bytes across repeated counts: drop the stale charge and place a
+    /// fresh one whenever residency changed.
+    fn recharge_cache_bytes(&mut self) -> Result<(), MineError> {
+        let resident = self.driver.cache.resident_bytes() as u64;
+        if self.charged.map(|(_, bytes)| bytes) == Some(resident) {
+            return Ok(());
+        }
+        if let Some((old, _)) = self.charged.take() {
+            self.dfs.remove_block(old)?;
+        }
+        if resident > 0 {
+            let id = self.dfs.put_bytes(resident)?;
+            self.charged = Some((id, resident));
+        }
+        Ok(())
     }
 }
 
@@ -1123,7 +1211,7 @@ mod tests {
         assert_eq!(counts, want);
         assert!(driver.count_exact(&db, &[]).unwrap().is_empty());
         // a reusable counter over the same placement answers identically
-        let counter = ExactCounter::new(&driver, &db).unwrap();
+        let mut counter = ExactCounter::new(&driver, &db).unwrap();
         assert_eq!(counter.count(&db, &itemsets).unwrap(), want);
         assert_eq!(counter.count(&db, &[vec![1]]).unwrap(), vec![db.support(&[1]) as u64]);
     }

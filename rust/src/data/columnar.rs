@@ -97,6 +97,26 @@ impl FlatBlock {
     pub fn bytes(&self) -> usize {
         (self.items.len() + self.offsets.len()) * std::mem::size_of::<u32>()
     }
+
+    /// Invert the block into one sorted TID list per item — the vertical
+    /// engine's raw material. Each list is pre-sized from a counting pass
+    /// so the build never regrows mid-insert, and TIDs arrive in
+    /// ascending order because rows are walked transaction-major.
+    pub fn tid_lists(&self) -> Vec<Vec<u32>> {
+        let mut lens = vec![0usize; self.n_items];
+        for tx in self.iter() {
+            for &item in tx {
+                lens[item as usize] += 1;
+            }
+        }
+        let mut lists: Vec<Vec<u32>> = lens.iter().map(|&n| Vec::with_capacity(n)).collect();
+        for (tid, tx) in self.iter().enumerate() {
+            for &item in tx {
+                lists[item as usize].push(tid as u32);
+            }
+        }
+        lists
+    }
 }
 
 #[cfg(test)]
@@ -138,6 +158,15 @@ mod tests {
         assert_eq!(b.n_items(), 7);
         assert_eq!(b.density(), 0.0);
         assert_eq!(b.iter().count(), 0);
+    }
+
+    #[test]
+    fn tid_lists_invert_the_block() {
+        let txs = vec![tx(&[0, 2]), tx(&[1, 2]), tx(&[2]), tx(&[])];
+        let b = FlatBlock::from_transactions(&txs, 3);
+        let lists = b.tid_lists();
+        assert_eq!(lists, vec![vec![0u32], vec![1], vec![0, 1, 2]]);
+        assert!(FlatBlock::from_transactions(&[], 2).tid_lists().iter().all(|l| l.is_empty()));
     }
 
     #[test]

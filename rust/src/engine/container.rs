@@ -1,0 +1,631 @@
+//! Roaring-style chunked TID containers for the vertical engine.
+//!
+//! A TID set over `n_tx` transactions is split into 2^16-TID chunks; each
+//! chunk independently picks the cheapest of three physical layouts by a
+//! byte-cost model (Singh et al.'s occupancy study, PAPERS.md 1511.07017:
+//! the winning representation flips with density, so the whole-row choice
+//! `vertical.rs` made before this module loses on skewed data):
+//!
+//! - **Array**: sorted `u16` low bits, 2 bytes/TID. Wins when sparse.
+//! - **Bitmap**: one bit per slot of the chunk's span, 8 bytes/word.
+//!   Wins when dense. The bitmap is sized to the chunk's *span*
+//!   (`min(2^16, n_tx - base)`), not a fixed 1024 words, so a narrow
+//!   database costs the same as the old whole-row dense layout.
+//! - **Runs**: `(start, run_len - 1)` pairs, 4 bytes/run. Wins on
+//!   clustered TIDs; a full chunk is the single run `(0, 0xFFFF)`.
+//!
+//! Every layout pairing has a dedicated intersection kernel (galloping
+//! array merge, word AND+popcount, run×any range arithmetic), and
+//! materialized intersections transcode the result back through the same
+//! cost model so a densifying or sparsifying chain of intersections stays
+//! in its cheapest layout.
+
+use std::cmp::Ordering;
+
+/// Low bits of a TID that address within one chunk.
+pub const CHUNK_BITS: u32 = 16;
+/// TIDs per chunk.
+pub const CHUNK_SPAN: usize = 1 << CHUNK_BITS;
+/// Largest cardinality an array container may hold (roaring's 4096: past
+/// this, a full-span bitmap is never larger than the array).
+pub const ARRAY_MAX: usize = 4096;
+
+/// Gallop when the longer array is at least this many times the shorter.
+const GALLOP_RATIO: usize = 16;
+
+/// One chunk's physical layout. All constructors take TIDs as chunk-local
+/// low bits, strictly ascending.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Container {
+    /// Sorted chunk-local TIDs.
+    Array(Vec<u16>),
+    /// One bit per slot over the chunk's span; `card` caches the popcount.
+    Bitmap { words: Vec<u64>, card: u32 },
+    /// Sorted disjoint `(start, run_len - 1)` intervals.
+    Runs(Vec<(u16, u16)>),
+}
+
+impl Container {
+    /// Pick the cheapest layout for `tids` (strictly ascending, all
+    /// `< span`) by byte cost: runs win only when strictly cheapest, and
+    /// arrays win cost ties against bitmaps.
+    pub fn from_sorted(tids: &[u16], span: usize) -> Self {
+        debug_assert!(span >= 1 && span <= CHUNK_SPAN);
+        debug_assert!(tids.windows(2).all(|w| w[0] < w[1]));
+        debug_assert!(tids.iter().all(|&t| (t as usize) < span));
+        let card = tids.len();
+        let run_cost = 4 * count_runs(tids);
+        let array_cost = if card <= ARRAY_MAX {
+            2 * card
+        } else {
+            usize::MAX
+        };
+        let bitmap_cost = span.div_ceil(64) * 8;
+        if card > 0 && run_cost < array_cost && run_cost < bitmap_cost {
+            Self::runs_from_sorted(tids)
+        } else if array_cost <= bitmap_cost {
+            Self::Array(tids.to_vec())
+        } else {
+            Self::bitmap_from_sorted(tids, span)
+        }
+    }
+
+    /// Force the array layout (tests and the bench's kernel cross-checks).
+    pub fn array(tids: Vec<u16>) -> Self {
+        debug_assert!(tids.windows(2).all(|w| w[0] < w[1]));
+        Self::Array(tids)
+    }
+
+    /// Force the bitmap layout over `span` slots.
+    pub fn bitmap_from_sorted(tids: &[u16], span: usize) -> Self {
+        let mut words = vec![0u64; span.div_ceil(64)];
+        for &t in tids {
+            words[t as usize / 64] |= 1u64 << (t % 64);
+        }
+        Self::Bitmap { words, card: tids.len() as u32 }
+    }
+
+    /// Force the run-length layout.
+    pub fn runs_from_sorted(tids: &[u16]) -> Self {
+        let mut runs: Vec<(u16, u16)> = Vec::new();
+        for &t in tids {
+            match runs.last_mut() {
+                Some((start, len)) if *start as usize + *len as usize + 1 == t as usize => {
+                    *len += 1;
+                }
+                _ => runs.push((t, 0)),
+            }
+        }
+        Self::Runs(runs)
+    }
+
+    pub fn cardinality(&self) -> usize {
+        match self {
+            Self::Array(a) => a.len(),
+            Self::Bitmap { card, .. } => *card as usize,
+            Self::Runs(r) => r.iter().map(|&(_, len)| len as usize + 1).sum(),
+        }
+    }
+
+    /// Payload bytes of this layout (what the cost model compares).
+    pub fn bytes(&self) -> usize {
+        match self {
+            Self::Array(a) => 2 * a.len(),
+            Self::Bitmap { words, .. } => 8 * words.len(),
+            Self::Runs(r) => 4 * r.len(),
+        }
+    }
+
+    pub fn contains(&self, t: u16) -> bool {
+        match self {
+            Self::Array(a) => a.binary_search(&t).is_ok(),
+            Self::Bitmap { words, .. } => bitmap_contains(words, t),
+            Self::Runs(r) => {
+                let i = r.partition_point(|&(start, _)| start <= t);
+                i > 0 && t as usize <= r[i - 1].0 as usize + r[i - 1].1 as usize
+            }
+        }
+    }
+
+    /// Decode to strictly-ascending chunk-local TIDs.
+    pub fn decode(&self) -> Vec<u16> {
+        match self {
+            Self::Array(a) => a.clone(),
+            Self::Bitmap { words, card } => {
+                let mut out = Vec::with_capacity(*card as usize);
+                for (wi, &word) in words.iter().enumerate() {
+                    let mut w = word;
+                    while w != 0 {
+                        out.push((wi * 64 + w.trailing_zeros() as usize) as u16);
+                        w &= w - 1;
+                    }
+                }
+                out
+            }
+            Self::Runs(r) => {
+                let mut out = Vec::with_capacity(self.cardinality());
+                for &(start, len) in r {
+                    for t in start..=start + len {
+                        out.push(t);
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// `|self ∩ other|` without materializing the result. Each of the six
+    /// layout pairings has its own kernel.
+    pub fn intersect_count(&self, other: &Self) -> u64 {
+        use Container::*;
+        match (self, other) {
+            (Array(a), Array(b)) => array_x_array_count(a, b),
+            (Bitmap { words: a, .. }, Bitmap { words: b, .. }) => {
+                a.iter().zip(b).map(|(x, y)| (x & y).count_ones() as u64).sum()
+            }
+            (Array(a), Bitmap { words, .. }) | (Bitmap { words, .. }, Array(a)) => {
+                array_x_bitmap_count(a, words)
+            }
+            (Runs(r), Array(a)) | (Array(a), Runs(r)) => runs_x_array_count(r, a),
+            (Runs(r), Bitmap { words, .. }) | (Bitmap { words, .. }, Runs(r)) => {
+                runs_x_bitmap_count(r, words)
+            }
+            (Runs(a), Runs(b)) => runs_x_runs_count(a, b),
+        }
+    }
+
+    /// Materialize `self ∩ other`, transcoding the result back through the
+    /// cost model (a densifying AND chain sparsifies into arrays or runs
+    /// as soon as that is cheaper, and vice versa).
+    pub fn intersect(&self, other: &Self, span: usize) -> Self {
+        use Container::*;
+        match (self, other) {
+            (Bitmap { words: a, .. }, Bitmap { words: b, .. }) => {
+                let words: Vec<u64> = a.iter().zip(b).map(|(x, y)| x & y).collect();
+                finalize_bitmap(words, span)
+            }
+            (Runs(r), Bitmap { words, .. }) | (Bitmap { words, .. }, Runs(r)) => {
+                let mut masked = vec![0u64; words.len()];
+                for &(start, len) in r {
+                    let (s, e) = (start as usize, start as usize + len as usize);
+                    bitmap_range_copy(words, &mut masked, s, e);
+                }
+                finalize_bitmap(masked, span)
+            }
+            (Runs(a), Runs(b)) => finalize_runs(runs_x_runs(a, b), span),
+            // Any pairing with an array stays at or under ARRAY_MAX TIDs,
+            // so filter into an array and let the cost model re-pick.
+            (Array(a), Array(b)) => {
+                let (small, large) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+                let mut out = Vec::new();
+                for &t in small {
+                    if large.binary_search(&t).is_ok() {
+                        out.push(t);
+                    }
+                }
+                Self::from_sorted(&out, span)
+            }
+            (Array(a), b) | (b, Array(a)) => {
+                let mut out = Vec::new();
+                for &t in a {
+                    if b.contains(t) {
+                        out.push(t);
+                    }
+                }
+                Self::from_sorted(&out, span)
+            }
+        }
+    }
+}
+
+/// Number of maximal consecutive runs in a strictly-ascending TID list.
+fn count_runs(tids: &[u16]) -> usize {
+    let mut n = 0usize;
+    let mut prev = usize::MAX - 1;
+    for &t in tids {
+        if prev + 1 != t as usize {
+            n += 1;
+        }
+        prev = t as usize;
+    }
+    n
+}
+
+fn bitmap_contains(words: &[u64], t: u16) -> bool {
+    words.get(t as usize / 64).is_some_and(|&w| (w >> (t % 64)) & 1 == 1)
+}
+
+fn array_x_array_count(a: &[u16], b: &[u16]) -> u64 {
+    let (small, large) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+    if small.is_empty() {
+        return 0;
+    }
+    if large.len() / small.len() >= GALLOP_RATIO {
+        return gallop_count(small, large);
+    }
+    let (mut i, mut j, mut n) = (0usize, 0usize, 0u64);
+    while i < small.len() && j < large.len() {
+        match small[i].cmp(&large[j]) {
+            Ordering::Less => i += 1,
+            Ordering::Greater => j += 1,
+            Ordering::Equal => {
+                n += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Exponential probe + bounded binary search per element of `small`.
+fn gallop_count(small: &[u16], large: &[u16]) -> u64 {
+    let mut lo = 0usize;
+    let mut n = 0u64;
+    for &x in small {
+        let mut bound = 1usize;
+        while lo + bound < large.len() && large[lo + bound] < x {
+            bound *= 2;
+        }
+        let hi = (lo + bound + 1).min(large.len());
+        let idx = lo + large[lo..hi].partition_point(|&y| y < x);
+        if idx < large.len() && large[idx] == x {
+            n += 1;
+            lo = idx + 1;
+        } else {
+            lo = idx;
+        }
+        if lo >= large.len() {
+            break;
+        }
+    }
+    n
+}
+
+fn array_x_bitmap_count(a: &[u16], words: &[u64]) -> u64 {
+    a.iter().filter(|&&t| bitmap_contains(words, t)).count() as u64
+}
+
+fn runs_x_array_count(runs: &[(u16, u16)], a: &[u16]) -> u64 {
+    let mut i = 0usize;
+    let mut n = 0u64;
+    for &(start, len) in runs {
+        let end = start as usize + len as usize;
+        while i < a.len() && (a[i] as usize) < start as usize {
+            i += 1;
+        }
+        let begin = i;
+        while i < a.len() && a[i] as usize <= end {
+            i += 1;
+        }
+        n += (i - begin) as u64;
+    }
+    n
+}
+
+fn runs_x_bitmap_count(runs: &[(u16, u16)], words: &[u64]) -> u64 {
+    let mut n = 0u64;
+    for &(start, len) in runs {
+        n += bitmap_range_count(words, start as usize, start as usize + len as usize);
+    }
+    n
+}
+
+fn runs_x_runs_count(a: &[(u16, u16)], b: &[(u16, u16)]) -> u64 {
+    let (mut i, mut j, mut n) = (0usize, 0usize, 0u64);
+    while i < a.len() && j < b.len() {
+        let (a0, a1) = (a[i].0 as u64, a[i].0 as u64 + a[i].1 as u64);
+        let (b0, b1) = (b[j].0 as u64, b[j].0 as u64 + b[j].1 as u64);
+        let (lo, hi) = (a0.max(b0), a1.min(b1));
+        if lo <= hi {
+            n += hi - lo + 1;
+        }
+        if a1 <= b1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    n
+}
+
+/// Materialized run×run intersection: the overlapping intervals.
+fn runs_x_runs(a: &[(u16, u16)], b: &[(u16, u16)]) -> Vec<(u16, u16)> {
+    let mut out = Vec::new();
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        let (a0, a1) = (a[i].0 as usize, a[i].0 as usize + a[i].1 as usize);
+        let (b0, b1) = (b[j].0 as usize, b[j].0 as usize + b[j].1 as usize);
+        let (lo, hi) = (a0.max(b0), a1.min(b1));
+        if lo <= hi {
+            out.push((lo as u16, (hi - lo) as u16));
+        }
+        if a1 <= b1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    out
+}
+
+/// Popcount of `words` over the inclusive slot range `[start, end]`.
+fn bitmap_range_count(words: &[u64], start: usize, end: usize) -> u64 {
+    let w0 = start / 64;
+    let w1 = end / 64;
+    let mut n = 0u64;
+    for w in w0..=w1 {
+        let mut word = match words.get(w) {
+            Some(&x) => x,
+            None => break,
+        };
+        if w == w0 {
+            word &= !0u64 << (start % 64);
+        }
+        if w == w1 && end % 64 < 63 {
+            word &= (1u64 << (end % 64 + 1)) - 1;
+        }
+        n += word.count_ones() as u64;
+    }
+    n
+}
+
+/// OR the inclusive slot range `[start, end]` of `src` into `dst`.
+fn bitmap_range_copy(src: &[u64], dst: &mut [u64], start: usize, end: usize) {
+    let w0 = start / 64;
+    let w1 = end / 64;
+    for w in w0..=w1 {
+        let mut word = match src.get(w) {
+            Some(&x) => x,
+            None => break,
+        };
+        if w == w0 {
+            word &= !0u64 << (start % 64);
+        }
+        if w == w1 && end % 64 < 63 {
+            word &= (1u64 << (end % 64 + 1)) - 1;
+        }
+        dst[w] |= word;
+    }
+}
+
+/// Re-pick the layout for a freshly ANDed bitmap: sparsify to an array
+/// (or runs) when at or under [`ARRAY_MAX`].
+fn finalize_bitmap(words: Vec<u64>, span: usize) -> Container {
+    let card: u64 = words.iter().map(|w| w.count_ones() as u64).sum();
+    if card as usize <= ARRAY_MAX {
+        let bm = Container::Bitmap { words, card: card as u32 };
+        Container::from_sorted(&bm.decode(), span)
+    } else {
+        Container::Bitmap { words, card: card as u32 }
+    }
+}
+
+/// Re-pick the layout for a freshly intersected run list, keeping the
+/// runs when they remain the cheapest layout.
+fn finalize_runs(runs: Vec<(u16, u16)>, span: usize) -> Container {
+    let card: usize = runs.iter().map(|&(_, len)| len as usize + 1).sum();
+    let run_cost = 4 * runs.len();
+    let array_cost = if card <= ARRAY_MAX {
+        2 * card
+    } else {
+        usize::MAX
+    };
+    let bitmap_cost = span.div_ceil(64) * 8;
+    if !runs.is_empty() && run_cost <= array_cost.min(bitmap_cost) {
+        Container::Runs(runs)
+    } else {
+        Container::from_sorted(&Container::Runs(runs).decode(), span)
+    }
+}
+
+/// Tally of chunk layouts across a set (the occupancy sweep reports it).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ContainerCensus {
+    pub arrays: usize,
+    pub bitmaps: usize,
+    pub runs: usize,
+}
+
+impl ContainerCensus {
+    pub fn total(&self) -> usize {
+        self.arrays + self.bitmaps + self.runs
+    }
+}
+
+impl std::ops::AddAssign for ContainerCensus {
+    fn add_assign(&mut self, rhs: Self) {
+        self.arrays += rhs.arrays;
+        self.bitmaps += rhs.bitmaps;
+        self.runs += rhs.runs;
+    }
+}
+
+/// A TID set over `n_tx` transactions as sorted `(chunk_key, container)`
+/// pairs; chunks with no TIDs are absent. Intersections merge-join on the
+/// chunk key, so two sets only pay for chunks they share.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TidSet {
+    chunks: Vec<(u32, Container)>,
+    n_tx: usize,
+}
+
+/// Slots chunk `key` spans: the last chunk of a database is truncated.
+fn chunk_span(key: u32, n_tx: usize) -> usize {
+    (n_tx - key as usize * CHUNK_SPAN).min(CHUNK_SPAN)
+}
+
+impl TidSet {
+    /// Build from strictly-ascending TIDs, all `< n_tx`.
+    pub fn from_sorted_tids(tids: &[u32], n_tx: usize) -> Self {
+        debug_assert!(tids.windows(2).all(|w| w[0] < w[1]));
+        debug_assert!(tids.iter().all(|&t| (t as usize) < n_tx));
+        let mut chunks = Vec::new();
+        let mut low = Vec::new();
+        let mut i = 0usize;
+        while i < tids.len() {
+            let key = tids[i] >> CHUNK_BITS;
+            low.clear();
+            while i < tids.len() && tids[i] >> CHUNK_BITS == key {
+                low.push((tids[i] & (CHUNK_SPAN as u32 - 1)) as u16);
+                i += 1;
+            }
+            chunks.push((key, Container::from_sorted(&low, chunk_span(key, n_tx))));
+        }
+        Self { chunks, n_tx }
+    }
+
+    pub fn cardinality(&self) -> usize {
+        self.chunks.iter().map(|(_, c)| c.cardinality()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty()
+    }
+
+    /// Resident bytes: each chunk pays its payload plus a 4-byte key.
+    pub fn bytes(&self) -> usize {
+        self.chunks.iter().map(|(_, c)| 4 + c.bytes()).sum()
+    }
+
+    pub fn census(&self) -> ContainerCensus {
+        let mut census = ContainerCensus::default();
+        for (_, c) in &self.chunks {
+            match c {
+                Container::Array(_) => census.arrays += 1,
+                Container::Bitmap { .. } => census.bitmaps += 1,
+                Container::Runs(_) => census.runs += 1,
+            }
+        }
+        census
+    }
+
+    /// Decode to strictly-ascending global TIDs.
+    pub fn decode(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.cardinality());
+        for (key, c) in &self.chunks {
+            let base = key << CHUNK_BITS;
+            out.extend(c.decode().into_iter().map(|t| base | t as u32));
+        }
+        out
+    }
+
+    /// `|self ∩ other|` via a merge-join over shared chunks.
+    pub fn intersect_count(&self, other: &Self) -> u64 {
+        let (mut i, mut j, mut n) = (0usize, 0usize, 0u64);
+        while i < self.chunks.len() && j < other.chunks.len() {
+            match self.chunks[i].0.cmp(&other.chunks[j].0) {
+                Ordering::Less => i += 1,
+                Ordering::Greater => j += 1,
+                Ordering::Equal => {
+                    n += self.chunks[i].1.intersect_count(&other.chunks[j].1);
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Materialize `self ∩ other`; result chunks transcode to their
+    /// cheapest layout and empty chunks are dropped.
+    pub fn intersect(&self, other: &Self) -> Self {
+        let mut chunks = Vec::new();
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.chunks.len() && j < other.chunks.len() {
+            match self.chunks[i].0.cmp(&other.chunks[j].0) {
+                Ordering::Less => i += 1,
+                Ordering::Greater => j += 1,
+                Ordering::Equal => {
+                    let key = self.chunks[i].0;
+                    let span = chunk_span(key, self.n_tx);
+                    let c = self.chunks[i].1.intersect(&other.chunks[j].1, span);
+                    if c.cardinality() > 0 {
+                        chunks.push((key, c));
+                    }
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        Self { chunks, n_tx: self.n_tx }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_model_picks_expected_layouts() {
+        // Scattered small set over a wide span: array.
+        let sparse: Vec<u16> = (0..100u16).map(|i| i * 13).collect();
+        let c = Container::from_sorted(&sparse, CHUNK_SPAN);
+        assert!(matches!(c, Container::Array(_)), "{c:?}");
+        // Consecutive prefix: a single run beats both.
+        let prefix: Vec<u16> = (0..100u16).collect();
+        let c = Container::from_sorted(&prefix, CHUNK_SPAN);
+        assert!(matches!(c, Container::Runs(_)), "{c:?}");
+        // Half the slots of a narrow span: bitmap.
+        let dense: Vec<u16> = (0..192u16).map(|i| i * 2).collect();
+        let c = Container::from_sorted(&dense, 384);
+        assert!(matches!(c, Container::Bitmap { .. }), "{c:?}");
+        // Empty stays an (empty) array.
+        let empty = Container::from_sorted(&[], CHUNK_SPAN);
+        assert_eq!(empty, Container::Array(Vec::new()));
+        assert_eq!(empty.cardinality(), 0);
+    }
+
+    #[test]
+    fn every_kernel_pairing_matches_the_merge_oracle() {
+        let span = 2048usize;
+        let mut a: Vec<u16> = (0..500u32).map(|i| (i * 7 % 2048) as u16).collect();
+        a.sort_unstable();
+        a.dedup();
+        let mut b: Vec<u16> = (0..900u32).map(|i| ((i * 5 + 3) % 2048) as u16).collect();
+        b.sort_unstable();
+        b.dedup();
+        let oracle: Vec<u16> = a.iter().copied().filter(|t| b.binary_search(t).is_ok()).collect();
+        let variants = |t: &[u16]| {
+            vec![
+                Container::array(t.to_vec()),
+                Container::bitmap_from_sorted(t, span),
+                Container::runs_from_sorted(t),
+            ]
+        };
+        for ca in variants(&a) {
+            for cb in variants(&b) {
+                assert_eq!(ca.intersect_count(&cb), oracle.len() as u64);
+                let materialized = ca.intersect(&cb, span);
+                assert_eq!(materialized.decode(), oracle);
+            }
+        }
+    }
+
+    #[test]
+    fn tidset_chunk_merge_join_counts_across_boundaries() {
+        let n_tx = 3 * CHUNK_SPAN + 17;
+        // One set clustered near the chunk edges, one striding everything.
+        let a: Vec<u32> = (0..n_tx as u32)
+            .filter(|t| t % 65536 < 40 || t % 65536 > 65500)
+            .collect();
+        let b: Vec<u32> = (0..n_tx as u32).step_by(3).collect();
+        let sa = TidSet::from_sorted_tids(&a, n_tx);
+        let sb = TidSet::from_sorted_tids(&b, n_tx);
+        let oracle: Vec<u32> = a.iter().copied().filter(|t| t % 3 == 0).collect();
+        assert_eq!(sa.intersect_count(&sb), oracle.len() as u64);
+        assert_eq!(sa.intersect(&sb).decode(), oracle);
+        assert_eq!(sa.decode(), a);
+        assert_eq!(sa.cardinality(), a.len());
+    }
+
+    #[test]
+    fn full_chunk_is_one_run() {
+        let all: Vec<u16> = (0..CHUNK_SPAN as u32).map(|t| t as u16).collect();
+        let c = Container::from_sorted(&all, CHUNK_SPAN);
+        assert_eq!(c, Container::Runs(vec![(0, 0xFFFF)]));
+        assert_eq!(c.cardinality(), CHUNK_SPAN);
+        assert_eq!(c.intersect_count(&c), CHUNK_SPAN as u64);
+        assert_eq!(c.bytes(), 4);
+    }
+}

@@ -1,0 +1,179 @@
+//! Split-keyed, generation-invalidated resident cache for vertical
+//! indexes.
+//!
+//! Within one dataset generation the blocks behind a split never change,
+//! so every job that scans the split — a synchronous level job, a
+//! `DeltaCountApp` Δ-scan, an `ExactCounter` frontier recount, or a
+//! speculative twin of any of them — can reuse one [`VerticalIndex`]
+//! build instead of re-inverting the block per job. The coordinator
+//! bumps the generation whenever the dataset view changes (a fresh mine,
+//! a delta database, an ad-hoc recount plan), which atomically drops
+//! every entry of the previous view: a stale generation is never served.
+//!
+//! Concurrency: lookups and inserts take a mutex; index *builds* happen
+//! outside it, so parallel map tasks for different splits build in
+//! parallel. Two speculative twins of the same task may both build —
+//! the copies are identical by construction, the last insert wins, and
+//! both twins proceed with their own `Arc`.
+//!
+//! The resident bytes are charged to the simulated datanode by the
+//! coordinator (like `dfs::BlockStore` checkpoint blocks), so cache
+//! pressure shows up in spill accounting rather than being free.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::Counter;
+
+use super::VerticalIndex;
+
+/// Observable cache state; hit/miss totals are cumulative since the
+/// cache was created (the serve log prints per-cycle deltas).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+    pub resident_bytes: usize,
+    pub generation: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    generation: u64,
+    entries: HashMap<usize, Arc<VerticalIndex>>,
+}
+
+/// The resident index cache. One per [`crate::coordinator::MrApriori`].
+#[derive(Default)]
+pub struct IndexCache {
+    inner: Mutex<Inner>,
+    hits: Counter,
+    misses: Counter,
+}
+
+impl IndexCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Open a new generation: every entry of the previous one is dropped
+    /// and the returned id must accompany subsequent lookups. Call this
+    /// once per dataset view (mine plan, delta database, recount plan).
+    pub fn begin_generation(&self) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        inner.generation += 1;
+        inner.entries.clear();
+        inner.generation
+    }
+
+    /// The split's index for `generation`, building it via `build` on a
+    /// miss. A `generation` older than the current one is never served
+    /// from (and never stored into) the cache — the caller gets a fresh
+    /// uncached build, which keeps a straggling task of a superseded job
+    /// correct without letting it poison the current view.
+    pub fn get_or_build<F>(&self, split_id: usize, generation: u64, build: F) -> Arc<VerticalIndex>
+    where
+        F: FnOnce() -> VerticalIndex,
+    {
+        {
+            let inner = self.inner.lock().unwrap();
+            if inner.generation == generation {
+                if let Some(index) = inner.entries.get(&split_id) {
+                    self.hits.inc();
+                    return Arc::clone(index);
+                }
+            }
+        }
+        self.misses.inc();
+        // Build outside the lock: different splits build concurrently.
+        let built = Arc::new(build());
+        let mut inner = self.inner.lock().unwrap();
+        if inner.generation == generation {
+            inner.entries.insert(split_id, Arc::clone(&built));
+        }
+        built
+    }
+
+    /// Bytes of index payload currently resident (current generation).
+    pub fn resident_bytes(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.entries.values().map(|i| i.bytes()).sum()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            entries: inner.entries.len(),
+            resident_bytes: inner.entries.values().map(|i| i.bytes()).sum(),
+            generation: inner.generation,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::columnar::FlatBlock;
+    use crate::data::Transaction;
+
+    fn index(rows: &[Vec<u32>]) -> VerticalIndex {
+        let txs: Vec<Transaction> = rows
+            .iter()
+            .map(|it| Transaction::new(it.iter().copied()))
+            .collect();
+        VerticalIndex::build(&FlatBlock::from_transactions(&txs, 4))
+    }
+
+    #[test]
+    fn hit_serves_the_cached_build() {
+        let cache = IndexCache::new();
+        let generation = cache.begin_generation();
+        let first = cache.get_or_build(7, generation, || index(&[vec![0, 1]]));
+        let again = cache.get_or_build(7, generation, || panic!("must not rebuild"));
+        assert!(Arc::ptr_eq(&first, &again));
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (1, 1, 1));
+        assert!(stats.resident_bytes > 0);
+        assert_eq!(stats.resident_bytes, cache.resident_bytes());
+    }
+
+    #[test]
+    fn begin_generation_drops_every_entry() {
+        let cache = IndexCache::new();
+        let gen1 = cache.begin_generation();
+        cache.get_or_build(0, gen1, || index(&[vec![0]]));
+        cache.get_or_build(1, gen1, || index(&[vec![1]]));
+        assert_eq!(cache.stats().entries, 2);
+        let gen2 = cache.begin_generation();
+        assert_eq!(cache.stats().entries, 0);
+        // The new generation rebuilds from scratch.
+        cache.get_or_build(0, gen2, || index(&[vec![0, 1]]));
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (0, 3, 1));
+    }
+
+    #[test]
+    fn stale_generation_is_never_served_or_stored() {
+        let cache = IndexCache::new();
+        let gen1 = cache.begin_generation();
+        cache.get_or_build(3, gen1, || index(&[vec![0]]));
+        let gen2 = cache.begin_generation();
+        // A straggler still holding gen1 must get a fresh build...
+        let mut built = false;
+        cache.get_or_build(3, gen1, || {
+            built = true;
+            index(&[vec![1]])
+        });
+        assert!(built);
+        // ...and must not have populated gen2's table.
+        let mut built2 = false;
+        cache.get_or_build(3, gen2, || {
+            built2 = true;
+            index(&[vec![2]])
+        });
+        assert!(built2);
+    }
+}

@@ -6,9 +6,11 @@
 //!
 //! * [`HashTreeEngine`] / [`TrieEngine`] — pure-rust horizontal CPU
 //!   matchers (per-transaction structure probes);
-//! * [`VerticalEngine`] — word-parallel vertical counting: one item→TID
-//!   bitset (or sparse TID-list) index per slice, candidates answered by
-//!   row intersection with shared-prefix reuse (see [`vertical`]);
+//! * [`VerticalEngine`] — vertical counting over chunked TID containers
+//!   (sorted-array / dense-bitmap / run-length per 2^16-TID chunk, see
+//!   [`container`]): candidates answered by row intersection with
+//!   shared-prefix reuse, and index builds reused across jobs through
+//!   the resident [`IndexCache`] (see [`vertical`] and [`index_cache`]);
 //! * [`TensorEngine`] — bitmap-encodes the slice and candidates and runs
 //!   the AOT-compiled Pallas kernel through the PJRT runtime (the
 //!   three-layer hot path);
@@ -18,6 +20,8 @@
 //! tasktracker thread (the tensor engine funnels into the PJRT service
 //! thread internally).
 
+pub mod container;
+pub mod index_cache;
 pub mod vertical;
 
 use crate::apriori::hash_tree::HashTree;
@@ -27,6 +31,8 @@ use crate::data::bitmap::{BitmapBlock, CandidateBlock, EncodeError};
 use crate::data::Transaction;
 use crate::runtime::{CountRequest, TensorServiceHandle};
 
+pub use container::{Container, ContainerCensus, TidSet};
+pub use index_cache::{CacheStats, IndexCache};
 pub use vertical::{VerticalEngine, VerticalIndex};
 
 /// Engine selector for configs and CLIs.
@@ -213,6 +219,26 @@ impl LevelGroups {
             }
         }
         Ok(counts)
+    }
+
+    /// Count through a prebuilt [`VerticalIndex`] — the resident-cache
+    /// path, where the split's index already exists and no transaction
+    /// scan happens at all. Scatters back exactly like [`Self::count`].
+    pub fn count_with_index(&self, index: &VerticalIndex, candidates: &[Itemset]) -> Vec<u64> {
+        debug_assert_eq!(candidates.len(), self.n_candidates);
+        let mut counts = vec![0u64; self.n_candidates];
+        if self.is_uniform() {
+            index.count_into(candidates, &mut counts);
+            return counts;
+        }
+        for (group, idxs) in self.groups.iter().zip(&self.index) {
+            let mut group_counts = vec![0u64; group.len()];
+            index.count_into(group, &mut group_counts);
+            for (&i, c) in idxs.iter().zip(group_counts) {
+                counts[i] = c;
+            }
+        }
+        counts
     }
 }
 

@@ -1,4 +1,4 @@
-//! The vertical TID-bitset counting engine.
+//! The vertical TID counting engine over chunked containers.
 //!
 //! Every other CPU engine matches candidates *horizontally*: stream each
 //! transaction through a matcher structure and increment the candidates
@@ -8,101 +8,67 @@
 //! the size of the intersection of its k item rows, with no further
 //! touches of the transaction data at all.
 //!
-//! Two interchangeable index representations, chosen per split by
-//! occupancy ([`FlatBlock::density`]):
-//!
-//! * **dense** — one `Vec<u64>` bitset row per item (`ceil(n_tx/64)`
-//!   words); a candidate is answered by word-wise AND + popcount, 64
-//!   transactions per instruction;
-//! * **sparse** — one sorted TID list per item, intersected by galloping
-//!   (exponential-probe) merge; wins when rows would be mostly empty
-//!   and the dense matrix mostly zero words.
+//! Each item row is a [`TidSet`]: roaring-style 2^16-TID chunks that
+//! independently pick a sorted-array, dense-bitmap, or run-length layout
+//! by byte cost (see [`super::container`]). This replaces the old
+//! whole-row dense/sparse dichotomy — a split scales to millions of
+//! transactions without drowning its sparse items in zero words, and
+//! clustered or ubiquitous items collapse to run containers.
 //!
 //! Candidates are processed in (length, lexicographic) order so
 //! lexicographic siblings share their (k−1)-prefix: the prefix
-//! intersection is computed once into a scratch accumulator and reused
-//! for every sibling, leaving one AND+popcount (or one galloping
-//! count-intersection) per candidate. [`VerticalEngine::count_batch`] is
-//! a genuine shared scan — the index is built **once** and answers every
-//! level of a batched multi-level job.
+//! intersection is materialized once (transcoding each result chunk to
+//! its cheapest layout) and reused for every sibling, leaving one
+//! non-materializing count-intersection per candidate.
+//! [`VerticalEngine::count_batch`] is a genuine shared scan — the index
+//! is built **once** and answers every level of a batched multi-level
+//! job — and the resident [`super::IndexCache`] extends the same reuse
+//! across jobs within one dataset generation.
 
 use crate::apriori::Itemset;
 use crate::data::columnar::FlatBlock;
-use crate::data::{intersect_sorted_count, intersect_sorted_into, ItemId, Transaction};
+use crate::data::{ItemId, Transaction};
 
+use super::container::{ContainerCensus, TidSet};
 use super::{EngineError, SupportEngine};
 
-/// Use dense bitset rows once a 64-transaction word carries at least one
-/// expected set bit; below that the dense matrix is mostly zero words
-/// and sorted TID lists are both smaller and faster to intersect.
-const DENSE_MIN_DENSITY: f64 = 1.0 / 64.0;
-
-enum Repr {
-    /// `rows[item * words .. (item + 1) * words]` is item's TID bitset.
-    Dense { words: usize, rows: Vec<u64> },
-    /// `lists[item]` is item's sorted TID list.
-    Sparse { lists: Vec<Vec<u32>> },
-}
-
-/// A built item→TID index over one transaction slice.
+/// A built item→TID index over one transaction slice: one chunked
+/// [`TidSet`] row per item.
 pub struct VerticalIndex {
-    repr: Repr,
+    rows: Vec<TidSet>,
     n_tx: usize,
     n_items: usize,
 }
 
 impl VerticalIndex {
-    /// Build the index from a flattened block, picking the dense or
-    /// sparse representation by occupancy.
+    /// Build the index from a flattened block; every item row picks its
+    /// chunk layouts by occupancy.
     pub fn build(block: &FlatBlock) -> Self {
         let n_items = block.n_items();
         let n_tx = block.len();
-        let repr = if block.density() >= DENSE_MIN_DENSITY {
-            let words = n_tx.div_ceil(64);
-            let mut rows = vec![0u64; n_items * words];
-            for (tid, tx) in block.iter().enumerate() {
-                let (word, bit) = (tid / 64, tid % 64);
-                for &item in tx {
-                    rows[item as usize * words + word] |= 1u64 << bit;
-                }
-            }
-            Repr::Dense { words, rows }
-        } else {
-            // Pre-size each list from a counting pass so the build never
-            // regrows mid-insert.
-            let mut lens = vec![0usize; n_items];
-            for tx in block.iter() {
-                for &item in tx {
-                    lens[item as usize] += 1;
-                }
-            }
-            let mut lists: Vec<Vec<u32>> =
-                lens.iter().map(|&n| Vec::with_capacity(n)).collect();
-            for (tid, tx) in block.iter().enumerate() {
-                for &item in tx {
-                    lists[item as usize].push(tid as u32);
-                }
-            }
-            Repr::Sparse { lists }
-        };
-        Self { repr, n_tx, n_items }
+        let rows = block
+            .tid_lists()
+            .iter()
+            .map(|list| TidSet::from_sorted_tids(list, n_tx))
+            .collect();
+        Self { rows, n_tx, n_items }
     }
 
-    /// Did occupancy pick the bitset representation?
-    pub fn is_dense(&self) -> bool {
-        matches!(self.repr, Repr::Dense { .. })
+    /// Chunk-layout tally across every item row (what the occupancy
+    /// sweep reports per profile).
+    pub fn container_census(&self) -> ContainerCensus {
+        let mut census = ContainerCensus::default();
+        for row in &self.rows {
+            census += row.census();
+        }
+        census
     }
 
     /// Resident index size in bytes — the number the ablation reports as
-    /// "peak index bytes" per split.
+    /// "peak index bytes" per split and the cache charges to the
+    /// simulated datanode.
     pub fn bytes(&self) -> usize {
-        match &self.repr {
-            Repr::Dense { rows, .. } => std::mem::size_of_val(rows.as_slice()),
-            Repr::Sparse { lists } => lists
-                .iter()
-                .map(|l| std::mem::size_of_val(l.as_slice()))
-                .sum(),
-        }
+        self.rows.iter().map(TidSet::bytes).sum()
     }
 
     /// Count every candidate into `counts` (aligned with `candidates`).
@@ -116,12 +82,35 @@ impl VerticalIndex {
             let (ca, cb) = (&candidates[a], &candidates[b]);
             (ca.len(), ca).cmp(&(cb.len(), cb))
         });
-        match &self.repr {
-            Repr::Dense { words, rows } => {
-                self.count_dense(*words, rows, candidates, &order, counts)
-            }
-            Repr::Sparse { lists } => self.count_sparse(lists, candidates, &order, counts),
+        // The shared (k−1)-prefix accumulator; valid for `prefix_key`.
+        let mut acc = TidSet::default();
+        let mut prefix_key: Option<&[ItemId]> = None;
+        for &ci in &order {
+            let cand = &candidates[ci];
+            counts[ci] = match cand.len() {
+                // The empty itemset is contained in every transaction.
+                0 => self.n_tx as u64,
+                _ if self.unmatchable(cand) => 0,
+                1 => self.row(cand[0]).cardinality() as u64,
+                // Pairs skip the accumulator: one direct row×row count.
+                2 => self.row(cand[0]).intersect_count(self.row(cand[1])),
+                k => {
+                    let prefix = &cand[..k - 1];
+                    if prefix_key != Some(prefix) {
+                        acc = self.row(prefix[0]).intersect(self.row(prefix[1]));
+                        for &item in &prefix[2..] {
+                            acc = acc.intersect(self.row(item));
+                        }
+                        prefix_key = Some(prefix);
+                    }
+                    acc.intersect_count(self.row(cand[k - 1]))
+                }
+            };
         }
+    }
+
+    fn row(&self, item: ItemId) -> &TidSet {
+        &self.rows[item as usize]
     }
 
     /// A candidate the index can't match: an item beyond the dictionary
@@ -132,80 +121,6 @@ impl VerticalIndex {
     fn unmatchable(&self, cand: &[ItemId]) -> bool {
         cand.iter().any(|&i| (i as usize) >= self.n_items)
             || cand.windows(2).any(|w| w[0] >= w[1])
-    }
-
-    fn count_dense(
-        &self,
-        words: usize,
-        rows: &[u64],
-        candidates: &[Itemset],
-        order: &[usize],
-        counts: &mut [u64],
-    ) {
-        let row = |item: ItemId| &rows[item as usize * words..(item as usize + 1) * words];
-        // The shared (k−1)-prefix accumulator; valid for `prefix_key`.
-        let mut acc: Vec<u64> = vec![0; words];
-        let mut prefix_key: Option<&[ItemId]> = None;
-        for &ci in order {
-            let cand = &candidates[ci];
-            counts[ci] = match cand.len() {
-                // The empty itemset is contained in every transaction.
-                0 => self.n_tx as u64,
-                _ if self.unmatchable(cand) => 0,
-                1 => row(cand[0]).iter().map(|w| w.count_ones() as u64).sum(),
-                k => {
-                    let prefix = &cand[..k - 1];
-                    if prefix_key != Some(prefix) {
-                        acc.copy_from_slice(row(prefix[0]));
-                        for &item in &prefix[1..] {
-                            for (a, w) in acc.iter_mut().zip(row(item)) {
-                                *a &= w;
-                            }
-                        }
-                        prefix_key = Some(prefix);
-                    }
-                    acc.iter()
-                        .zip(row(cand[k - 1]))
-                        .map(|(a, w)| (a & w).count_ones() as u64)
-                        .sum()
-                }
-            };
-        }
-    }
-
-    fn count_sparse(
-        &self,
-        lists: &[Vec<u32>],
-        candidates: &[Itemset],
-        order: &[usize],
-        counts: &mut [u64],
-    ) {
-        // Shared prefix accumulator + ping-pong scratch, reused across
-        // the whole candidate list (no per-candidate allocation).
-        let mut acc: Vec<u32> = Vec::new();
-        let mut tmp: Vec<u32> = Vec::new();
-        let mut prefix_key: Option<&[ItemId]> = None;
-        for &ci in order {
-            let cand = &candidates[ci];
-            counts[ci] = match cand.len() {
-                0 => self.n_tx as u64,
-                _ if self.unmatchable(cand) => 0,
-                1 => lists[cand[0] as usize].len() as u64,
-                k => {
-                    let prefix = &cand[..k - 1];
-                    if prefix_key != Some(prefix) {
-                        acc.clear();
-                        acc.extend_from_slice(&lists[prefix[0] as usize]);
-                        for &item in &prefix[1..] {
-                            intersect_sorted_into(&acc, &lists[item as usize], &mut tmp);
-                            std::mem::swap(&mut acc, &mut tmp);
-                        }
-                        prefix_key = Some(prefix);
-                    }
-                    intersect_sorted_count(&acc, &lists[cand[k - 1] as usize])
-                }
-            };
-        }
     }
 }
 
@@ -278,17 +193,21 @@ mod tests {
     }
 
     #[test]
-    fn dense_and_sparse_picked_by_occupancy() {
-        // 4 items over 4 txs, every tx full -> density 1 -> dense
+    fn container_layouts_picked_by_occupancy() {
+        // 4 items over 4 full txs: each item row is one consecutive run.
         let dense_txs: Vec<Transaction> = (0..4).map(|_| tx(&[0, 1, 2, 3])).collect();
         let idx = VerticalIndex::build(&FlatBlock::from_transactions(&dense_txs, 4));
-        assert!(idx.is_dense());
+        let census = idx.container_census();
+        assert_eq!(census.total(), 4);
+        assert_eq!(census.runs, 4);
         assert!(idx.bytes() > 0);
-        // 1 item occurrence over a 10_000-wide dictionary -> sparse
+        // 1 item occurrence over a 10_000-wide dictionary: one tiny array
+        // container; the other 9_999 rows hold no chunks at all.
         let sparse_txs = vec![tx(&[9_999])];
         let idx = VerticalIndex::build(&FlatBlock::from_transactions(&sparse_txs, 10_000));
-        assert!(!idx.is_dense());
-        assert_eq!(idx.bytes(), 4);
+        let census = idx.container_census();
+        assert_eq!((census.arrays, census.bitmaps, census.runs), (1, 0, 0));
+        assert_eq!(idx.bytes(), 6); // one 4-byte chunk key + one u16 TID
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::apriori::mr::CandidateCountApp;
 use crate::apriori::Itemset;
 use crate::coordinator::{MineError, MrApriori};
 use crate::data::{split::Split, Transaction, TransactionDb};
-use crate::engine::SupportEngine;
+use crate::engine::{IndexCache, SupportEngine};
 use crate::mapreduce::{app::MapReduceApp, run_adhoc, JobStats};
 
 /// Count a fixed (possibly mixed-length) tracked-itemset list over the
@@ -41,6 +41,14 @@ impl<'e> DeltaCountApp<'e> {
     /// The tracked itemsets this job counts, in job order.
     pub fn tracked(&self) -> &[Itemset] {
         &self.inner.candidates
+    }
+
+    /// Route the wrapped counting app through the resident index cache
+    /// (see [`CandidateCountApp::with_cache`]); only meaningful when the
+    /// engine is the vertical one.
+    pub fn with_cache(mut self, cache: &'e IndexCache, generation: u64) -> Self {
+        self.inner = self.inner.with_cache(cache, generation);
+        self
     }
 }
 
@@ -90,7 +98,14 @@ pub fn run_delta_count(
         transactions: delta.to_vec(),
         n_items,
     };
-    let app = DeltaCountApp::new(tracked.to_vec(), driver.engine(), n_items);
+    let mut app = DeltaCountApp::new(tracked.to_vec(), driver.engine(), n_items);
+    if driver.engine().name() == "vertical" {
+        // The delta database is a distinct dataset view whose split ids
+        // overlap the main database's, so it gets its own generation —
+        // which also drops the superseded view's resident indexes.
+        let generation = driver.index_cache().begin_generation();
+        app = app.with_cache(driver.index_cache(), generation);
+    }
     let (out, stats) = run_adhoc(&driver.cluster, &delta_db, driver.split_tx, &app, &driver.job)?;
     Ok((out.into_iter().collect(), stats))
 }

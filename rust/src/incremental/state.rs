@@ -237,7 +237,7 @@ impl MinedState {
                     counter = Some(ExactCounter::new(driver, union_db)?);
                 }
                 let counts = counter
-                    .as_ref()
+                    .as_mut()
                     .expect("just seeded")
                     .count(union_db, &unknown)?;
                 for (is, c) in unknown.into_iter().zip(counts) {

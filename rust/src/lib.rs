@@ -70,7 +70,8 @@ pub mod prelude {
     };
     pub use crate::dfs::{BlockStore, Dfs};
     pub use crate::engine::{
-        build_engine, EngineKind, SupportEngine, VerticalEngine, VerticalIndex,
+        build_engine, CacheStats, EngineKind, IndexCache, SupportEngine, VerticalEngine,
+        VerticalIndex,
     };
     pub use crate::incremental::{
         DeltaApply, DeltaStats, IncrementalConfig, LevelState, MinedState,

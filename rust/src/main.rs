@@ -653,7 +653,7 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
             };
             println!(
                 "refresh gen {}: +{} tx -> {} tx, {} itemsets, {} rules \
-                 (mine {:.3}s, build {:.3}s; {strategy})",
+                 (mine {:.3}s, build {:.3}s; cache {}h/{}m; {strategy})",
                 st.generation,
                 st.delta_tx,
                 st.total_tx,
@@ -661,6 +661,8 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
                 st.n_rules,
                 st.mine_secs,
                 st.build_secs,
+                st.cache_hits,
+                st.cache_misses,
             );
         }
         final_db = Some(moved_db);

@@ -75,7 +75,11 @@ impl From<JobError> for AdhocJobError {
 /// This is the one-shot wiring the incremental subsystem's delta jobs
 /// (`incremental::delta_job`) use — plan, place, run, discard. Repeated
 /// scans over the same database belong on `coordinator::ExactCounter`
-/// instead, which keeps the placement across jobs.
+/// instead, which keeps the placement across jobs. The app itself may
+/// still carry longer-lived state through the runner — the delta job
+/// attaches the driver's resident index cache (`engine::IndexCache`)
+/// so its map tasks reuse per-split index builds under a fresh
+/// generation even though the DFS placement is throwaway.
 pub fn run_adhoc<A: MapReduceApp>(
     cluster: &ClusterConfig,
     db: &TransactionDb,

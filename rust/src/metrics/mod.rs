@@ -5,7 +5,32 @@
 pub mod bench;
 pub mod histogram;
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+/// A shareable monotonic event counter (relaxed atomics: the consumers —
+/// cache hit/miss telemetry in the serve log — only need eventual
+/// per-counter totals, not cross-counter ordering).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
 
 /// A simple scoped timer.
 pub struct Timer {
@@ -111,6 +136,22 @@ mod tests {
         assert_eq!(runs, 7);
         assert_eq!(s.n, 5);
         assert!(s.min >= 0.0);
+    }
+
+    #[test]
+    fn counter_accumulates_across_threads() {
+        let c = Counter::new();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        c.add(5);
+        assert_eq!(c.get(), 4005);
     }
 
     #[test]

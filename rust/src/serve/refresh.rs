@@ -130,6 +130,10 @@ pub struct RefreshStats {
     pub incremental: Option<DeltaStats>,
     /// An incremental cycle gave up (frontier blowup) and re-mined.
     pub fell_back: bool,
+    /// Resident-index-cache activity during this cycle's mining work
+    /// (per-cycle deltas of the driver's cumulative totals).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
 }
 
 /// Owns the mining driver and the confidence floor. In incremental mode
@@ -237,10 +241,12 @@ impl Refresher {
             db.n_items = old_n_items;
         };
         let mine_timer = Timer::start();
+        let cache_before = self.driver.cache_stats();
         let mined = match self.mode() {
             RefreshMode::Full => self.driver.mine(db).map(|r| (r, None, false)),
             RefreshMode::Incremental => self.refresh_incremental(db, old_len),
         };
+        let cache_after = self.driver.cache_stats();
         let (report, incremental, fell_back) = match mined {
             Ok(out) => out,
             Err(e) => {
@@ -287,6 +293,8 @@ impl Refresher {
             build_secs,
             incremental,
             fell_back,
+            cache_hits: cache_after.hits - cache_before.hits,
+            cache_misses: cache_after.misses - cache_before.misses,
         };
         Ok((report, stats))
     }

@@ -1,0 +1,281 @@
+//! Differential coverage for the chunked TID containers and the resident
+//! index cache: container transcoding at the array/bitmap/run thresholds
+//! (including the 65535/65536/65537 chunk boundaries), every forced
+//! kernel pairing against the sorted-merge oracle property-style, and
+//! the cache's generation discipline end-to-end through `ExactCounter`,
+//! the level loop, and the delta job.
+
+use mr_apriori::coordinator::ExactCounter;
+use mr_apriori::data::{intersect_sorted_count, Transaction};
+use mr_apriori::engine::container::{ARRAY_MAX, CHUNK_SPAN};
+use mr_apriori::engine::{Container, TidSet};
+use mr_apriori::incremental::run_delta_count;
+use mr_apriori::prelude::*;
+use mr_apriori::util::proptest::check;
+
+fn tx(items: &[u32]) -> Transaction {
+    Transaction::new(items.iter().copied())
+}
+
+fn as_u32(tids: &[u16]) -> Vec<u32> {
+    tids.iter().map(|&t| t as u32).collect()
+}
+
+fn merge_oracle(a: &[u16], b: &[u16]) -> Vec<u16> {
+    a.iter().copied().filter(|t| b.binary_search(t).is_ok()).collect()
+}
+
+fn forced_variants(tids: &[u16], span: usize) -> [Container; 3] {
+    [
+        Container::array(tids.to_vec()),
+        Container::bitmap_from_sorted(tids, span),
+        Container::runs_from_sorted(tids),
+    ]
+}
+
+#[test]
+fn every_forced_pairing_matches_the_merge_oracle_property_style() {
+    check(
+        "container-kernels-vs-merge-oracle",
+        0xC0_17A1,
+        16,
+        |rng| {
+            let card_a = rng.range_usize(0, 6_000);
+            let card_b = rng.range_usize(0, 6_000);
+            let gen_set = |rng: &mut mr_apriori::util::rng::Xoshiro256, card: usize| {
+                let mut v: Vec<u16> = rng
+                    .sample_distinct(CHUNK_SPAN, card)
+                    .into_iter()
+                    .map(|t| t as u16)
+                    .collect();
+                v.sort_unstable();
+                v
+            };
+            (gen_set(rng, card_a), gen_set(rng, card_b))
+        },
+        |(a, b)| {
+            for s in [a, b] {
+                let c = Container::from_sorted(s, CHUNK_SPAN);
+                if c.decode() != *s {
+                    return Err("from_sorted/decode roundtrip broke".into());
+                }
+                if c.cardinality() != s.len() {
+                    return Err("cardinality diverged from input length".into());
+                }
+            }
+            let want = merge_oracle(a, b);
+            let want_count = intersect_sorted_count(&as_u32(a), &as_u32(b));
+            if want.len() as u64 != want_count {
+                return Err("test oracles disagree".into());
+            }
+            for ca in &forced_variants(a, CHUNK_SPAN) {
+                for cb in &forced_variants(b, CHUNK_SPAN) {
+                    if ca.intersect_count(cb) != want_count {
+                        return Err(format!("count kernel broke on {ca:?} x {cb:?}"));
+                    }
+                    if ca.intersect(cb, CHUNK_SPAN).decode() != want {
+                        return Err(format!("materializing kernel broke on {ca:?} x {cb:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn transcoding_thresholds_straddle_the_array_bitmap_cutover() {
+    // Stride-2 kills run compression, so the array/bitmap cost cross is
+    // exactly at ARRAY_MAX elements.
+    let stride2 = |card: usize| -> Vec<u16> { (0..card).map(|i| (2 * i) as u16).collect() };
+    for card in [ARRAY_MAX - 1, ARRAY_MAX] {
+        let c = Container::from_sorted(&stride2(card), CHUNK_SPAN);
+        assert!(matches!(c, Container::Array(_)), "card {card} must stay an array");
+        assert_eq!(c.cardinality(), card);
+    }
+    let c = Container::from_sorted(&stride2(ARRAY_MAX + 1), CHUNK_SPAN);
+    assert!(matches!(c, Container::Bitmap { .. }), "card {} must densify", ARRAY_MAX + 1);
+    assert_eq!(c.cardinality(), ARRAY_MAX + 1);
+
+    // Consecutive TIDs compress to runs; empty and full chunks are the
+    // two extremes of the same cost model.
+    let run: Vec<u16> = (100..200).collect();
+    assert!(matches!(Container::from_sorted(&run, CHUNK_SPAN), Container::Runs(_)));
+    let empty = Container::from_sorted(&[], CHUNK_SPAN);
+    assert_eq!((empty.cardinality(), empty.bytes()), (0, 0));
+    let full: Vec<u16> = (0..CHUNK_SPAN).map(|t| t as u16).collect();
+    let c = Container::from_sorted(&full, CHUNK_SPAN);
+    assert!(matches!(c, Container::Runs(_)), "a full chunk must be one run");
+    assert_eq!((c.cardinality(), c.bytes()), (CHUNK_SPAN, 4));
+}
+
+#[test]
+fn intersections_transcode_across_the_thresholds() {
+    // bitmap x bitmap with a sparse result sparsifies back to an array.
+    let mul = |k: usize| -> Vec<u16> { (0..CHUNK_SPAN).step_by(k).map(|t| t as u16).collect() };
+    let (a, b) = (
+        Container::from_sorted(&mul(7), CHUNK_SPAN),
+        Container::from_sorted(&mul(9), CHUNK_SPAN),
+    );
+    assert!(matches!(a, Container::Bitmap { .. }) && matches!(b, Container::Bitmap { .. }));
+    let meet = a.intersect(&b, CHUNK_SPAN);
+    assert!(matches!(meet, Container::Array(_)), "sparse meet must sparsify, got {meet:?}");
+    assert_eq!(meet.decode(), mul(63));
+
+    // run x run overlap stays a run; a fragmented run meet falls back to
+    // the cost model and lands on an array.
+    let range = |lo: u16, hi: u16| -> Vec<u16> { (lo..hi).collect() };
+    let (a, b) = (
+        Container::runs_from_sorted(&range(0, 30_000)),
+        Container::runs_from_sorted(&range(20_000, 50_000)),
+    );
+    let meet = a.intersect(&b, CHUNK_SPAN);
+    assert!(matches!(meet, Container::Runs(_)), "interval overlap must stay runs");
+    assert_eq!(meet.decode(), range(20_000, 30_000));
+    let evens: Vec<u16> = (0..200).step_by(2).map(|t| t as u16).collect();
+    let threes: Vec<u16> = (0..200).step_by(3).map(|t| t as u16).collect();
+    let meet = Container::runs_from_sorted(&evens).intersect(
+        &Container::runs_from_sorted(&threes),
+        CHUNK_SPAN,
+    );
+    assert!(matches!(meet, Container::Array(_)), "fragmented run meet must sparsify");
+    let sixes: Vec<u16> = (0..200).step_by(6).map(|t| t as u16).collect();
+    assert_eq!(meet.decode(), sixes);
+}
+
+#[test]
+fn tidset_boundaries_around_the_chunk_span() {
+    for n_tx in [CHUNK_SPAN - 1, CHUNK_SPAN, CHUNK_SPAN + 1] {
+        // The full set intersected with itself: every chunk is one run,
+        // and the count is exactly n_tx across the chunk boundary.
+        let all: Vec<u32> = (0..n_tx as u32).collect();
+        let full = TidSet::from_sorted_tids(&all, n_tx);
+        assert_eq!(full.cardinality(), n_tx);
+        assert_eq!(full.intersect_count(&full), n_tx as u64);
+        assert_eq!(full.intersect(&full).decode(), all);
+        // A full 2^16 chunk compresses to one run; a trailing span-1
+        // chunk (n_tx = 65537) is cheaper as a 2-byte array than a
+        // 4-byte run, so only "never a bitmap" holds across all three.
+        let census = full.census();
+        assert!(census.runs >= 1, "the full-span chunk must compress to one run");
+        assert_eq!(census.bitmaps, 0, "full chunks never densify to bitmaps");
+
+        // A straddling cluster against a stride pattern, vs the sorted
+        // oracle the old representation used.
+        let lo = CHUNK_SPAN.saturating_sub(6) as u32;
+        let cluster: Vec<u32> = (lo..n_tx as u32).collect();
+        let stride: Vec<u32> = (0..n_tx as u32).step_by(3).collect();
+        let (xs, ys) = (
+            TidSet::from_sorted_tids(&cluster, n_tx),
+            TidSet::from_sorted_tids(&stride, n_tx),
+        );
+        let want = intersect_sorted_count(&cluster, &stride);
+        assert_eq!(xs.intersect_count(&ys), want, "n_tx={n_tx}");
+        assert_eq!(
+            xs.intersect(&ys).decode(),
+            cluster.iter().copied().filter(|t| t % 3 == 0).collect::<Vec<_>>(),
+            "n_tx={n_tx}"
+        );
+
+        // A set living only past the boundary merge-joins correctly with
+        // one that never reaches it.
+        if n_tx > CHUNK_SPAN {
+            let high = TidSet::from_sorted_tids(&[CHUNK_SPAN as u32], n_tx);
+            let low = TidSet::from_sorted_tids(&[5, 1_000], n_tx);
+            assert_eq!(high.intersect_count(&low), 0);
+            assert!(high.intersect(&low).is_empty());
+            assert_eq!(high.intersect_count(&full), 1);
+        }
+    }
+}
+
+#[test]
+fn stale_generations_never_serve_a_grown_database() {
+    let mut db = TransactionDb::new(vec![
+        tx(&[0, 1, 2]),
+        tx(&[0, 1]),
+        tx(&[0, 2]),
+        tx(&[1, 2]),
+        tx(&[0, 1, 3]),
+    ]);
+    let cfg = AprioriConfig { min_support: 0.2, max_k: 0 };
+    let driver = MrApriori::new(ClusterConfig::standalone(), cfg).with_split_tx(2);
+    let target: Vec<Itemset> = vec![vec![0, 1]];
+    assert_eq!(driver.count_exact(&db, &target).unwrap(), vec![3]);
+    let gen_before = driver.cache_stats().generation;
+    db.append(vec![tx(&[0, 1]), tx(&[0, 1, 4])]);
+    // The second plan opens a new generation: if a stale split index
+    // were ever served, the grown transactions would be invisible here.
+    assert_eq!(driver.count_exact(&db, &target).unwrap(), vec![5]);
+    assert!(driver.cache_stats().generation > gen_before);
+}
+
+#[test]
+fn exact_counter_reuses_one_index_build_per_split() {
+    let db = TransactionDb::new(vec![
+        tx(&[0, 1]),
+        tx(&[0, 1, 2]),
+        tx(&[1, 2]),
+        tx(&[0, 2]),
+        tx(&[0, 1, 2]),
+        tx(&[2]),
+        tx(&[0, 1]),
+        tx(&[1]),
+    ]);
+    let cfg = AprioriConfig { min_support: 0.1, max_k: 0 };
+    // Speculation off: twin map attempts would add nondeterministic
+    // cache traffic and break the exact hit/miss accounting below.
+    let driver = MrApriori::new(ClusterConfig::standalone(), cfg)
+        .with_split_tx(2)
+        .with_job(JobConfig { speculative: false, ..JobConfig::default() });
+    let mut counter = ExactCounter::new(&driver, &db).unwrap();
+    let before = driver.cache_stats();
+    assert_eq!(counter.count(&db, &[vec![0, 1]]).unwrap(), vec![4]);
+    let mid = driver.cache_stats();
+    assert_eq!(mid.misses - before.misses, 4, "first scan builds one index per split");
+    assert_eq!(mid.hits, before.hits);
+    assert_eq!(counter.count(&db, &[vec![1, 2]]).unwrap(), vec![3]);
+    let after = driver.cache_stats();
+    assert_eq!(after.misses, mid.misses, "the second scan must rebuild nothing");
+    assert_eq!(after.hits - mid.hits, 4);
+    assert_eq!(after.entries, 4);
+    assert!(after.resident_bytes > 0);
+}
+
+#[test]
+fn level_loop_builds_once_and_hits_on_deeper_levels() {
+    let db = QuestGenerator::new(QuestParams::dense(120)).generate();
+    let cfg = AprioriConfig { min_support: 0.05, max_k: 3 };
+    let driver = MrApriori::new(ClusterConfig::standalone(), cfg)
+        .with_split_tx(40)
+        .with_job(JobConfig { speculative: false, ..JobConfig::default() });
+    let report = driver.mine(&db).unwrap();
+    let stats = driver.cache_stats();
+    // Level 1 never touches the cache; every level >= 2 job scans the
+    // same 3 splits, so exactly the first counting job builds.
+    let counting_jobs = report.result.levels.len().saturating_sub(1) as u64;
+    assert!(counting_jobs >= 1, "the dense profile must reach level 2");
+    assert_eq!(stats.misses, 3);
+    assert_eq!(stats.hits, counting_jobs * 3 - 3);
+    assert_eq!(stats.entries, 3);
+}
+
+#[test]
+fn delta_scans_never_reuse_the_main_databases_indexes() {
+    let base = TransactionDb::new(vec![
+        tx(&[0, 1]),
+        tx(&[0, 1]),
+        tx(&[0, 1]),
+        tx(&[0, 1, 2]),
+        tx(&[2]),
+    ]);
+    let cfg = AprioriConfig { min_support: 0.2, max_k: 0 };
+    let driver = MrApriori::new(ClusterConfig::standalone(), cfg).with_split_tx(2);
+    driver.mine(&base).unwrap(); // warm the cache with the base view
+    let delta = vec![tx(&[0, 1]), tx(&[0, 1]), tx(&[2])];
+    let tracked: Vec<Itemset> = vec![vec![0, 1], vec![2]];
+    let (counts, _) = run_delta_count(&driver, &delta, base.n_items, &tracked).unwrap();
+    // Delta-only supports: a stale base-view index would report 4 and 2.
+    assert_eq!(counts.get(&vec![0, 1]).copied().unwrap_or(0), 2);
+    assert_eq!(counts.get(&vec![2]).copied().unwrap_or(0), 1);
+}

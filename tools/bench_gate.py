@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate: compare a push's bench JSON artifacts against the
+checked-in baseline (BENCH_baseline.json).
+
+Two kinds of tracked fields, both addressed by dot-paths into the bench
+JSON (a trailing `#` segment resolves to the length of an array):
+
+* ``wall_clock`` — *higher-is-better ratios* (speedups), deliberately not
+  raw milliseconds so the gate is robust to absolute runner speed. A
+  value may regress by at most the baseline ``tolerance`` factor: the
+  gate fails when ``current < baseline / tolerance``. With the default
+  tolerance of 1.25 this means ">25% wall-clock regression fails".
+* ``correctness`` — exact-match fields (modes, cycle counts, oracle
+  flags). Any drift fails, no tolerance.
+
+``--update`` rewrites the baseline's ``wall_clock`` values from the
+current artifacts (the refresh procedure documented in EXPERIMENTS.md);
+correctness fields are never rewritten automatically — edit them by hand
+when a drift is intentional, so the diff shows up in review.
+
+Zero third-party dependencies: stdlib only, by design (the repo's rust
+side is zero-dependency too).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def resolve(doc, path):
+    """Walk a dot-path through nested dicts/lists; `#` = array length."""
+    cur = doc
+    for part in path.split("."):
+        if part == "#":
+            if not isinstance(cur, list):
+                raise KeyError(f"{path}: `#` on a non-array")
+            return len(cur)
+        if isinstance(cur, list):
+            cur = cur[int(part)]
+        elif isinstance(cur, dict):
+            cur = cur[part]
+        else:
+            raise KeyError(f"{path}: hit a leaf before the path ended")
+    return cur
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_baseline.json",
+                    help="checked-in baseline file (default: %(default)s)")
+    ap.add_argument("--dir", default=".",
+                    help="directory holding the bench JSON artifacts")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline's wall_clock values from "
+                         "the current artifacts instead of gating on them")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    tolerance = float(base.get("tolerance", 1.25))
+    failures = []
+    checked = 0
+
+    for fname, spec in sorted(base.get("benches", {}).items()):
+        path = os.path.join(args.dir, fname)
+        if not os.path.exists(path):
+            failures.append(f"{fname}: artifact missing from {args.dir}")
+            continue
+        with open(path) as f:
+            current = json.load(f)
+
+        for key, want in sorted(spec.get("wall_clock", {}).items()):
+            try:
+                got = float(resolve(current, key))
+            except (KeyError, IndexError, TypeError, ValueError) as e:
+                failures.append(f"{fname}: wall_clock {key}: unresolvable ({e})")
+                continue
+            if args.update:
+                spec["wall_clock"][key] = got
+                print(f"update {fname}: {key} = {got:.4f} (was {want})")
+                continue
+            checked += 1
+            floor = float(want) / tolerance
+            if got < floor:
+                failures.append(
+                    f"{fname}: {key} = {got:.4f} < floor {floor:.4f} "
+                    f"(baseline {want}, tolerance {tolerance}x)")
+            else:
+                print(f"ok {fname}: {key} = {got:.4f} "
+                      f">= floor {floor:.4f} (baseline {want})")
+
+        for key, want in sorted(spec.get("correctness", {}).items()):
+            try:
+                got = resolve(current, key)
+            except (KeyError, IndexError, TypeError, ValueError) as e:
+                failures.append(f"{fname}: correctness {key}: unresolvable ({e})")
+                continue
+            checked += 1
+            if got != want:
+                failures.append(
+                    f"{fname}: correctness {key} = {got!r} drifted "
+                    f"from baseline {want!r}")
+            else:
+                print(f"ok {fname}: {key} = {got!r}")
+
+    if args.update:
+        with open(args.baseline, "w") as f:
+            json.dump(base, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"baseline rewritten: {args.baseline}")
+
+    if failures:
+        for line in failures:
+            print(f"FAIL {line}", file=sys.stderr)
+        sys.exit(1)
+    print(f"bench gate passed ({checked} fields within tolerance {tolerance}x)")
+
+
+if __name__ == "__main__":
+    main()

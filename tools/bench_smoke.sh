@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Run one bench binary and validate the JSON artifact it emits — the
+# shared step behind the CI bench smokes, so the emit/validate/upload
+# boilerplate lives in one place instead of being copy-pasted per bench.
+#
+# Usage: tools/bench_smoke.sh <bench-name> <artifact.json> [bench args...]
+# The artifact lands in the current directory (BENCH_OUT_DIR=$PWD).
+set -euo pipefail
+
+bench="$1"
+artifact="$2"
+shift 2
+
+BENCH_OUT_DIR="$PWD" cargo bench --bench "$bench" -- "$@"
+test -s "$artifact"
+python3 -m json.tool "$artifact" > /dev/null
+echo "ok: $bench emitted valid $artifact"
