@@ -1,0 +1,229 @@
+//! Ablation: the sharded serving fabric vs the single-index backend.
+//!
+//! The fabric's claim is scale-out *without* answer drift: splitting the
+//! rule index over S shards x R replicas keeps every basket answer
+//! byte-identical to the one `RuleIndex` while adding failover and
+//! hedged tails. This bench measures, on one mined generation:
+//!
+//! * **baseline**: single-index closed-loop QPS and wall-clock p99;
+//! * **shards x replicas sweep**: routed QPS plus the *simulated* wire
+//!   p50/p99 (the router's network model), every answer asserted
+//!   byte-identical to the baseline;
+//! * **hedging on/off**: the p95-derived hedge can only improve the
+//!   simulated tail (asserted), reported as a >= 1 improvement ratio;
+//! * **kill-one-replica phase**: a node dies mid-run — availability must
+//!   stay 100% (every query answered, byte-identical), and the refresher
+//!   still publishes the next generation around the dead replicas.
+//!
+//! Results land in `BENCH_fabric.json` (directory override:
+//! `BENCH_OUT_DIR`), gated by `tools/bench_gate.py`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mr_apriori::prelude::*;
+use mr_apriori::util::json::Json;
+use mr_apriori::util::tempdir::TempDir;
+
+const MIN_CONF: f64 = 0.5;
+const QUERIES: usize = 1_000;
+const TOP_K: usize = 5;
+const HEDGE_MS: u64 = 5;
+
+fn driver(apriori: &AprioriConfig) -> MrApriori {
+    MrApriori::new(ClusterConfig::fhssc(4), apriori.clone())
+        .with_job(JobConfig { n_reducers: 3, ..Default::default() })
+        .with_split_tx(500)
+}
+
+fn router_for(
+    result: &MiningResult,
+    cluster: &ClusterConfig,
+    shards: usize,
+    replicas: usize,
+) -> QueryRouter {
+    let cut = ShardedRuleIndex::build(result, MIN_CONF, shards);
+    let bytes: Vec<u64> = cut.shard_rule_counts().iter().map(|&n| 16 + 56 * n).collect();
+    let placement = FabricPlacement::place(cluster, replicas, &bytes).expect("placement");
+    QueryRouter::new(
+        Arc::new(SnapshotCell::new(Arc::new(cut))),
+        placement,
+        cluster,
+        HEDGE_MS,
+    )
+}
+
+/// Route every basket, assert byte-identity against `want`, and return
+/// (closed-loop QPS, simulated p50 us, simulated p99 us).
+fn run_arm(router: &QueryRouter, baskets: &[Vec<u32>], want: &[String]) -> (f64, f64, f64) {
+    let sim = LatencyHistogram::new();
+    let t0 = Instant::now();
+    for (basket, want) in baskets.iter().zip(want) {
+        let routed = router.route(basket, TOP_K).expect("all replicas up");
+        assert_eq!(
+            &render_lines(&routed.recommendations),
+            want,
+            "fabric answer diverged from the single index for {basket:?}"
+        );
+        sim.record(Duration::from_secs_f64(routed.sim_latency_secs));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (p50, _, p99) = sim.snapshot().p50_p95_p99();
+    (
+        baskets.len() as f64 / wall.max(1e-9),
+        p50.as_secs_f64() * 1e6,
+        p99.as_secs_f64() * 1e6,
+    )
+}
+
+fn main() {
+    println!("== Ablation: sharded serving fabric vs single index ==\n");
+    let db = QuestGenerator::new(QuestParams::t10_i4(4_000)).generate();
+    let apriori = AprioriConfig { min_support: 0.02, max_k: 3 };
+    let cluster = ClusterConfig::fhssc(4);
+    let result = driver(&apriori).mine(&db).expect("mine").result;
+    let index = RuleIndex::build(&result, MIN_CONF);
+    let singles: Vec<u32> = result.level(1).map(|(is, _)| is[0]).collect();
+    assert!(!singles.is_empty(), "nothing frequent at this support");
+    let baskets = synth_baskets(&singles, QUERIES, 0xFAB_BE7C);
+
+    // -- baseline: the single-index backend --
+    let wall_hist = LatencyHistogram::new();
+    let t0 = Instant::now();
+    let want: Vec<String> = baskets
+        .iter()
+        .map(|b| {
+            let t = Instant::now();
+            let lines = render_lines(&index.recommend(b, TOP_K));
+            wall_hist.record(t.elapsed());
+            lines
+        })
+        .collect();
+    let base_wall = t0.elapsed().as_secs_f64();
+    let base_qps = QUERIES as f64 / base_wall.max(1e-9);
+    let (_, _, base_p99) = wall_hist.snapshot().p50_p95_p99();
+    println!(
+        "single index: {} rules, {base_qps:.0} QPS closed-loop, wall p99 {base_p99:?}",
+        index.n_rules()
+    );
+
+    // -- shards x replicas sweep --
+    println!("\nshards | replicas | QPS     | sim p50 | sim p99 | hedges(won)");
+    let mut sweep_rows = Vec::new();
+    for &shards in &[1usize, 2, 4, 8] {
+        for &replicas in &[2usize, 3] {
+            let router = router_for(&result, &cluster, shards, replicas);
+            let (qps, p50_us, p99_us) = run_arm(&router, &baskets, &want);
+            let rs = router.stats();
+            println!(
+                "{shards:>6} | {replicas:>8} | {qps:>7.0} | {p50_us:>6.1}u | {p99_us:>6.1}u | {}({})",
+                rs.hedges_fired, rs.hedge_wins
+            );
+            sweep_rows.push(Json::obj(vec![
+                ("shards", Json::num(shards as f64)),
+                ("replicas", Json::num(replicas as f64)),
+                ("qps", Json::num(qps)),
+                ("sim_p50_us", Json::num(p50_us)),
+                ("sim_p99_us", Json::num(p99_us)),
+                ("hedges_fired", Json::num(rs.hedges_fired as f64)),
+                ("hedge_wins", Json::num(rs.hedge_wins as f64)),
+                ("byte_identical", Json::Bool(true)), // run_arm asserted it
+            ]));
+        }
+    }
+
+    // -- hedging on/off (4x2): the hedge can only improve the tail --
+    let hedged = router_for(&result, &cluster, 4, 2);
+    let (_, _, p99_on) = run_arm(&hedged, &baskets, &want);
+    let unhedged = router_for(&result, &cluster, 4, 2).with_hedging(false);
+    let (_, _, p99_off) = run_arm(&unhedged, &baskets, &want);
+    assert!(
+        p99_on <= p99_off + 1e-9,
+        "hedging worsened the simulated p99: {p99_on:.1}us vs {p99_off:.1}us"
+    );
+    let hedge_improvement = p99_off / p99_on.max(1e-9);
+    println!(
+        "\nhedging (4x2): sim p99 {p99_on:.1}us on vs {p99_off:.1}us off \
+         ({hedge_improvement:.3}x)"
+    );
+
+    // -- kill-one-replica phase (4x2) --
+    let tmp = TempDir::new("fabric_bench");
+    let router = router_for(&result, &cluster, 4, 2);
+    let store = FabricStore::open(tmp.path(), 4, 2).expect("open fabric store");
+    store.publish(&router.cut().load(), 0).expect("publish gen 0");
+    let victim = router.placement().replicas_of(0)[0];
+    let mut answered = 0usize;
+    for (i, (basket, want)) in baskets.iter().zip(&want).enumerate() {
+        if i == QUERIES / 2 {
+            router.set_node_down(victim);
+        }
+        let routed = router.route(basket, TOP_K).expect("failover keeps the fabric up");
+        assert_eq!(&render_lines(&routed.recommendations), want);
+        answered += 1;
+    }
+    let availability = answered as f64 / QUERIES as f64;
+    assert_eq!(answered, QUERIES, "availability must stay 100% with one node down");
+    let kill_stats = router.stats();
+    assert!(kill_stats.failovers > 0, "the dead primary was never failed over");
+
+    // the refresher still publishes the next generation around the dead
+    // node: mine the grown database, two-phase publish to the survivors
+    let mut union = db.clone();
+    union.append(synth_delta(200, db.n_items, 0xFAB_DE17A));
+    let next_result = driver(&apriori).mine(&union).expect("re-mine").result;
+    let next = Arc::new(ShardedRuleIndex::build(&next_result, MIN_CONF, 4));
+    let up = |s: usize, r: usize| !router.is_node_down(router.placement().replicas_of(s)[r]);
+    let manifest = store.publish_partial(&next, 1, &up).expect("publish gen 1");
+    assert_eq!(manifest.generation, 1);
+    assert_eq!(router.cut().store(Arc::clone(&next)), 1);
+    let (reloaded, _) = FabricStore::open(tmp.path(), 4, 2)
+        .expect("reopen")
+        .load_cut()
+        .expect("gen 1 committed");
+    assert_eq!(reloaded.generation, 1);
+    let next_index = RuleIndex::build(&next_result, MIN_CONF);
+    let routed = router.route(&baskets[0], TOP_K).expect("serving gen 1");
+    assert_eq!(routed.generation, 1);
+    assert_eq!(
+        render_lines(&routed.recommendations),
+        render_lines(&next_index.recommend(&baskets[0], TOP_K)),
+    );
+    println!(
+        "kill phase (4x2): {answered}/{QUERIES} answered with node {victim} down \
+         ({} failovers); generation 1 published to the survivors and served",
+        kill_stats.failovers
+    );
+
+    let doc = Json::obj(vec![
+        (
+            "baseline_single_index",
+            Json::obj(vec![
+                ("qps", Json::num(base_qps)),
+                ("wall_p99_us", Json::num(base_p99.as_secs_f64() * 1e6)),
+            ]),
+        ),
+        ("sweep", Json::Arr(sweep_rows)),
+        (
+            "hedging",
+            Json::obj(vec![
+                ("sim_p99_on_us", Json::num(p99_on)),
+                ("sim_p99_off_us", Json::num(p99_off)),
+                ("improvement", Json::num(hedge_improvement)),
+            ]),
+        ),
+        (
+            "kill_phase",
+            Json::obj(vec![
+                ("availability", Json::num(availability)),
+                ("failovers", Json::num(kill_stats.failovers as f64)),
+                ("published_next_generation", Json::num(1.0)),
+                ("byte_identical", Json::Bool(true)),
+            ]),
+        ),
+    ]);
+    let out_dir = std::env::var("BENCH_OUT_DIR").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&out_dir).join("BENCH_fabric.json");
+    std::fs::write(&path, format!("{doc}\n")).expect("write BENCH_fabric.json");
+    println!("\nwrote {}", path.display());
+}

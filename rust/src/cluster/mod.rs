@@ -19,6 +19,34 @@ use crate::simnet::SwitchConfig;
 /// `master` host; workers are `slave1..`).
 pub type NodeId = usize;
 
+/// A cluster shape that cannot exist. Returned instead of silently
+/// "fixing" the request (the old `with_replication` capped `r` at the
+/// node count, which meant a config asking for 3-way durability could
+/// run 2-way without anyone noticing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterConfigError {
+    /// Replication factor exceeds the number of nodes — there is no way
+    /// to place `replication` replicas on distinct machines.
+    ReplicationExceedsNodes { replication: usize, nodes: usize },
+    /// A replication factor of zero stores nothing.
+    ZeroReplication,
+}
+
+impl std::fmt::Display for ClusterConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::ReplicationExceedsNodes { replication, nodes } => write!(
+                f,
+                "replication {replication} exceeds cluster size {nodes}: \
+                 replicas must land on distinct nodes"
+            ),
+            Self::ZeroReplication => write!(f, "replication must be >= 1"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterConfigError {}
+
 /// Hardware profile of one node — the inputs to the discrete-event cost
 /// model (`mapreduce::sim`).
 #[derive(Debug, Clone, PartialEq)]
@@ -201,10 +229,21 @@ impl ClusterConfig {
         self
     }
 
-    pub fn with_replication(mut self, r: usize) -> Self {
-        assert!(r >= 1);
-        self.replication = r.min(self.nodes.len());
-        self
+    /// Set the HDFS replication factor. Errors (rather than silently
+    /// capping) when `r` exceeds the node count — fewer replicas than
+    /// asked for is a durability downgrade the caller must decide on.
+    pub fn with_replication(mut self, r: usize) -> Result<Self, ClusterConfigError> {
+        if r == 0 {
+            return Err(ClusterConfigError::ZeroReplication);
+        }
+        if r > self.nodes.len() {
+            return Err(ClusterConfigError::ReplicationExceedsNodes {
+                replication: r,
+                nodes: self.nodes.len(),
+            });
+        }
+        self.replication = r;
+        Ok(self)
     }
 
     pub fn n_nodes(&self) -> usize {
@@ -264,11 +303,30 @@ mod tests {
     }
 
     #[test]
-    fn replication_capped_at_cluster_size() {
+    fn replication_validated_against_cluster_size() {
+        // Presets still derive a sane default from the node count...
         assert_eq!(ClusterConfig::fhssc(2).replication, 2);
         assert_eq!(ClusterConfig::fhssc(8).replication, 3);
-        assert_eq!(ClusterConfig::fhssc(8).with_replication(5).replication, 5);
-        assert_eq!(ClusterConfig::fhssc(2).with_replication(5).replication, 2);
+        // ...and explicit requests within bounds are honoured exactly.
+        assert_eq!(
+            ClusterConfig::fhssc(8).with_replication(5).unwrap().replication,
+            5
+        );
+        assert_eq!(
+            ClusterConfig::fhssc(2).with_replication(2).unwrap().replication,
+            2
+        );
+        // Impossible requests are typed errors, never silent downgrades.
+        assert_eq!(
+            ClusterConfig::fhssc(2).with_replication(5).unwrap_err(),
+            ClusterConfigError::ReplicationExceedsNodes { replication: 5, nodes: 2 }
+        );
+        assert_eq!(
+            ClusterConfig::fhssc(3).with_replication(0).unwrap_err(),
+            ClusterConfigError::ZeroReplication
+        );
+        let msg = ClusterConfig::fhssc(2).with_replication(5).unwrap_err().to_string();
+        assert!(msg.contains("replication 5 exceeds cluster size 2"), "{msg}");
     }
 
     #[test]

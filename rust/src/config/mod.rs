@@ -11,6 +11,7 @@ use crate::apriori::AprioriConfig;
 use crate::cluster::ClusterConfig;
 use crate::coordinator::PipelineConfig;
 use crate::engine::EngineKind;
+use crate::fabric::FabricConfig;
 use crate::incremental::IncrementalConfig;
 use crate::mapreduce::JobConfig;
 use crate::serve::ServeConfig;
@@ -57,6 +58,9 @@ pub struct ExperimentConfig {
     pub pipeline: PipelineConfig,
     /// Online rule-serving layer (`[serve]` section; `repro serve`).
     pub serve: ServeConfig,
+    /// Sharded serving fabric (`[fabric]` section; `shards = 0` keeps
+    /// the classic single-index backend).
+    pub fabric: FabricConfig,
     /// Delta-aware refresh strategy (`[incremental]` section;
     /// `--refresh-mode incremental`).
     pub incremental: IncrementalConfig,
@@ -81,6 +85,7 @@ impl Default for ExperimentConfig {
             job: JobConfig { n_reducers: 3, ..Default::default() },
             pipeline: PipelineConfig::default(),
             serve: ServeConfig::default(),
+            fabric: FabricConfig::default(),
             incremental: IncrementalConfig::default(),
             store: StoreConfig::default(),
             transactions: 10_000,
@@ -254,6 +259,19 @@ impl ExperimentConfig {
                 }
                 "serve.deadline_ms" => {
                     cfg.serve.deadline_ms = value.parse().map_err(|_| bad("want integer"))?;
+                }
+                "fabric.shards" => {
+                    // 0 is legal: it means "fabric off".
+                    cfg.fabric.shards = value.parse().map_err(|_| bad("want integer"))?;
+                }
+                "fabric.replicas" => {
+                    cfg.fabric.replicas = value.parse().map_err(|_| bad("want integer"))?;
+                    if cfg.fabric.replicas == 0 {
+                        return Err(bad("must be >= 1"));
+                    }
+                }
+                "fabric.hedge_ms" => {
+                    cfg.fabric.hedge_ms = value.parse().map_err(|_| bad("want integer"))?;
                 }
                 "incremental.enabled" => {
                     cfg.incremental.enabled =
@@ -587,6 +605,33 @@ mod tests {
         let frozen =
             ExperimentConfig::parse("[store]\ndir = \"/tmp/x\"\nno_persist = true").unwrap();
         assert!(!frozen.store.writes_enabled());
+    }
+
+    #[test]
+    fn fabric_section_parses_and_validates() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+            [fabric]
+            shards = 4
+            replicas = 2
+            hedge_ms = 3
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.fabric.shards, 4);
+        assert_eq!(cfg.fabric.replicas, 2);
+        assert_eq!(cfg.fabric.hedge_ms, 3);
+        assert!(cfg.fabric.enabled());
+        // defaults: fabric off, sane replica count and hedge floor
+        let d = ExperimentConfig::default().fabric;
+        assert!(!d.enabled());
+        assert_eq!((d.shards, d.replicas, d.hedge_ms), (0, 2, 5));
+        // shards = 0 is explicit "off", not an error
+        assert!(!ExperimentConfig::parse("[fabric]\nshards = 0").unwrap().fabric.enabled());
+        // validations
+        assert!(ExperimentConfig::parse("[fabric]\nreplicas = 0").is_err());
+        assert!(ExperimentConfig::parse("[fabric]\nshards = many").is_err());
+        assert!(ExperimentConfig::parse("[fabric]\nhedge_ms = -1").is_err());
     }
 
     #[test]

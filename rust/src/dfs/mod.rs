@@ -72,7 +72,7 @@ impl DatanodeState {
     }
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DfsError {
     UnknownBlock(BlockId),
     NotEnoughNodes { want: usize, have: usize },

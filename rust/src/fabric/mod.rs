@@ -1,0 +1,61 @@
+//! The serving fabric: sharded, replicated rule serving with
+//! scatter-gather queries and failover.
+//!
+//! The paper's premise is that one machine cannot hold the workload — it
+//! distributes *mining* across FHSSC/FHDSC nodes. This subsystem applies
+//! the same partitioning principle to the *query* path (the ROADMAP's
+//! "millions of users" item): instead of one `RuleIndex` per process,
+//! the rule set is split by antecedent hash into S shards, each placed
+//! with R replicas on [`ClusterConfig`] nodes through the rack-aware
+//! `dfs` policy, and a basket query scatters to every shard and gathers
+//! a provably byte-identical global top-k.
+//!
+//! * [`shard`] — [`ShardedRuleIndex`]: deterministic partitioning + the
+//!   exact merge (per-shard candidates carry global rule ids).
+//! * [`placement`] — [`FabricPlacement`]: replica placement with typed
+//!   errors instead of silently under-replicating.
+//! * [`router`] — [`QueryRouter`]: scatter-gather, per-replica fault
+//!   injection with failover, hedged requests after a p95-derived
+//!   delay, per-shard + merged latency histograms.
+//! * [`publish`] — [`FabricStore`]: a two-phase (prepare shards, flip
+//!   one manifest) crash-consistent publish, so readers never observe a
+//!   mixed-generation cut.
+//!
+//! [`ClusterConfig`]: crate::cluster::ClusterConfig
+
+pub mod placement;
+pub mod publish;
+pub mod router;
+pub mod shard;
+
+pub use placement::{FabricPlacement, PlacementError};
+pub use publish::{FabricStore, FabricStoreError, PublishStep};
+pub use router::{QueryRouter, RoutedResponse, RouterError, RouterStats};
+pub use shard::{global_rule_cmp, shard_of, RuleShard, ShardedRuleIndex};
+
+/// `[fabric]` section of an experiment config: the serving fabric's
+/// shape. `shards == 0` (the default) turns the fabric off — the server
+/// runs its classic single-index backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FabricConfig {
+    /// Shard count (the antecedent-hash modulus); 0 disables the fabric.
+    pub shards: usize,
+    /// Replicas per shard.
+    pub replicas: usize,
+    /// Hedge-delay floor in milliseconds, used until a shard has enough
+    /// samples to derive its own p95.
+    pub hedge_ms: u64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        Self { shards: 0, replicas: 2, hedge_ms: 5 }
+    }
+}
+
+impl FabricConfig {
+    /// Is the fabric backend requested?
+    pub fn enabled(&self) -> bool {
+        self.shards > 0
+    }
+}

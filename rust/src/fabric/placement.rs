@@ -1,0 +1,142 @@
+//! Replica placement for the serving fabric: each shard's R replicas are
+//! placed on [`ClusterConfig`] nodes through the existing rack-aware
+//! `dfs` policy (first replica on the least-used node, second off-rack,
+//! third back on the second's rack) — the same machinery the mining side
+//! uses for HDFS blocks, now carrying rule shards. Placement also rides
+//! the datanodes' byte accounting, so fabric storage shows up in
+//! [`Dfs::utilization`]-style reporting.
+//!
+//! [`Dfs::utilization`]: crate::dfs::Dfs::utilization
+
+use crate::cluster::{ClusterConfig, ClusterConfigError, NodeId};
+use crate::dfs::{Dfs, DfsError};
+
+/// Why a fabric layout could not be placed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementError {
+    /// The cluster cannot host the requested replication factor.
+    Cluster(ClusterConfigError),
+    /// The datanode layer refused a block (capacity/decommission).
+    Dfs(DfsError),
+}
+
+impl std::fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Cluster(e) => write!(f, "fabric placement: {e}"),
+            Self::Dfs(e) => write!(f, "fabric placement: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for PlacementError {}
+
+impl From<ClusterConfigError> for PlacementError {
+    fn from(e: ClusterConfigError) -> Self {
+        Self::Cluster(e)
+    }
+}
+
+impl From<DfsError> for PlacementError {
+    fn from(e: DfsError) -> Self {
+        Self::Dfs(e)
+    }
+}
+
+/// Where each shard's replicas live. Immutable once placed; the router
+/// consults it on every scatter.
+#[derive(Debug)]
+pub struct FabricPlacement {
+    /// Per shard: replica holders, primary first (dfs order).
+    replicas: Vec<Vec<NodeId>>,
+    /// Per shard: encoded bytes the placement accounted for.
+    shard_bytes: Vec<u64>,
+    /// The datanode state backing the placement (byte accounting).
+    dfs: Dfs,
+}
+
+impl FabricPlacement {
+    /// Place `shard_bytes.len()` shards with `replicas` copies each on
+    /// the cluster's nodes, rack-aware. Validates the replication factor
+    /// against the cluster (typed error, never a silent cap).
+    pub fn place(
+        cluster: &ClusterConfig,
+        replicas: usize,
+        shard_bytes: &[u64],
+    ) -> Result<Self, PlacementError> {
+        let cluster = cluster.clone().with_replication(replicas)?;
+        let mut dfs = Dfs::new(&cluster);
+        let mut placed = Vec::with_capacity(shard_bytes.len());
+        for &bytes in shard_bytes {
+            // even an empty shard occupies a placement slot
+            let id = dfs.put_bytes(bytes.max(1))?;
+            placed.push(dfs.locations(id)?.to_vec());
+        }
+        Ok(Self { replicas: placed, shard_bytes: shard_bytes.to_vec(), dfs })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Replica holders of one shard, primary first.
+    pub fn replicas_of(&self, shard: usize) -> &[NodeId] {
+        &self.replicas[shard]
+    }
+
+    /// Bytes the placement accounted for one shard.
+    pub fn shard_bytes(&self, shard: usize) -> u64 {
+        self.shard_bytes[shard]
+    }
+
+    /// Cluster-wide storage utilization including the fabric's shards.
+    pub fn utilization(&self) -> f64 {
+        self.dfs.utilization()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replicas_land_on_distinct_nodes() {
+        let cluster = ClusterConfig::fhssc(4);
+        let p = FabricPlacement::place(&cluster, 2, &[1000, 2000, 3000, 4000]).unwrap();
+        assert_eq!(p.n_shards(), 4);
+        for s in 0..4 {
+            let r = p.replicas_of(s);
+            assert_eq!(r.len(), 2);
+            assert_ne!(r[0], r[1], "shard {s} replicas must be on distinct nodes");
+        }
+        assert!(p.utilization() > 0.0);
+        assert_eq!(p.shard_bytes(2), 3000);
+    }
+
+    #[test]
+    fn rack_aware_spread_puts_second_replica_off_rack() {
+        let cluster = ClusterConfig::fhssc(4).with_racks(2);
+        let p = FabricPlacement::place(&cluster, 2, &[1 << 20, 1 << 20]).unwrap();
+        for s in 0..2 {
+            let r = p.replicas_of(s);
+            assert_ne!(
+                cluster.rack_of[r[0]], cluster.rack_of[r[1]],
+                "shard {s}: second replica must cross racks"
+            );
+        }
+    }
+
+    #[test]
+    fn impossible_replication_is_a_typed_error() {
+        let cluster = ClusterConfig::fhssc(2);
+        let err = FabricPlacement::place(&cluster, 3, &[100]).unwrap_err();
+        assert_eq!(
+            err,
+            PlacementError::Cluster(ClusterConfigError::ReplicationExceedsNodes {
+                replication: 3,
+                nodes: 2,
+            })
+        );
+        assert!(FabricPlacement::place(&cluster, 0, &[100]).is_err());
+    }
+}

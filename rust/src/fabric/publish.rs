@@ -1,0 +1,513 @@
+//! Two-phase, crash-consistent publication of a sharded cut.
+//!
+//! Phase one (**prepare**) writes every shard's rules once per live
+//! replica as `shard-<s>-r<r>-gen-<g>.shard` (a `TAG_RULE_INDEX` frame),
+//! each through the store's write-temp → fsync → atomic-rename protocol.
+//! Phase two (**commit**) flips a single `FABRIC` manifest
+//! ([`FabricManifest`], its own frame type) the same way. Readers load
+//! manifest-first; a torn or missing manifest degrades to the *newest
+//! generation where every shard still has at least one intact replica
+//! file* — by construction a complete cross-shard cut, never a mix of
+//! generations. A replica that is down at refresh time is simply skipped
+//! (the refresh fails over, it does not drop the generation); a shard
+//! with *no* live replica fails the publish with a typed error.
+//!
+//! [`FabricManifest`]: crate::store::FabricManifest
+
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::serve::index::RuleIndex;
+use crate::store::codec::{
+    decode_fabric_manifest, decode_rule_index, encode_fabric_manifest, encode_rule_index,
+};
+use crate::store::FabricManifest;
+
+use super::shard::{global_rule_cmp, ShardedRuleIndex};
+
+/// The cross-shard cut pointer, committed last.
+const MANIFEST_NAME: &str = "FABRIC";
+
+/// Commit boundaries a test hook can crash at (return `false` to stop
+/// the publish right before the step executes — simulating a crash).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PublishStep {
+    /// About to write one shard replica's temp file.
+    ShardTempWritten { shard: usize, replica: usize },
+    /// About to fsync that temp file.
+    ShardSynced { shard: usize, replica: usize },
+    /// About to rename it into place.
+    ShardRenamed { shard: usize, replica: usize },
+    /// About to write the manifest temp file.
+    ManifestTempWritten,
+    /// About to fsync it.
+    ManifestSynced,
+    /// About to rename it into place — the commit point.
+    ManifestRenamed,
+}
+
+/// Why a fabric publish or load failed.
+#[derive(Debug)]
+pub enum FabricStoreError {
+    /// Filesystem failure (path + os error text).
+    Io { path: PathBuf, err: String },
+    /// A shard had no live replica to prepare on — committing would
+    /// publish a cut that cannot be read back.
+    NoLiveReplica { shard: usize },
+}
+
+impl std::fmt::Display for FabricStoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io { path, err } => write!(f, "fabric store: {}: {err}", path.display()),
+            Self::NoLiveReplica { shard } => {
+                write!(f, "fabric store: shard {shard} has no live replica to prepare on")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FabricStoreError {}
+
+/// The on-disk side of the serving fabric: one directory holding shard
+/// replica files plus the `FABRIC` manifest.
+#[derive(Debug)]
+pub struct FabricStore {
+    dir: PathBuf,
+    n_shards: usize,
+    replicas: usize,
+    /// Generations whose shard files survive pruning (the degradation
+    /// window for a torn manifest).
+    retain: usize,
+}
+
+impl FabricStore {
+    /// Open (creating if needed) a fabric store for a fixed shard layout.
+    /// The layout is part of the store's identity: recovery needs to know
+    /// how many shards a *complete* cut has even when the manifest is
+    /// gone.
+    pub fn open(
+        dir: impl Into<PathBuf>,
+        n_shards: usize,
+        replicas: usize,
+    ) -> Result<Self, FabricStoreError> {
+        assert!(n_shards >= 1 && replicas >= 1);
+        let dir = dir.into();
+        fs::create_dir_all(&dir).map_err(|e| io_err(&dir, e))?;
+        Ok(Self { dir, n_shards, replicas, retain: 2 })
+    }
+
+    /// Keep shard files of the newest `retain` generations (>= 1).
+    pub fn with_retain(mut self, retain: usize) -> Self {
+        self.retain = retain.max(1);
+        self
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn shard_path(&self, shard: usize, replica: usize, generation: u64) -> PathBuf {
+        self.dir.join(format!("shard-{shard}-r{replica}-gen-{generation}.shard"))
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.dir.join(MANIFEST_NAME)
+    }
+
+    /// Publish a cut at `generation` with every replica up.
+    pub fn publish(
+        &self,
+        cut: &ShardedRuleIndex,
+        generation: u64,
+    ) -> Result<FabricManifest, FabricStoreError> {
+        self.publish_partial(cut, generation, &|_, _| true)
+    }
+
+    /// Publish with per-replica availability: `up(shard, replica)` false
+    /// skips that replica's prepare (refresh failover). Every shard still
+    /// needs at least one live replica.
+    pub fn publish_partial(
+        &self,
+        cut: &ShardedRuleIndex,
+        generation: u64,
+        up: &dyn Fn(usize, usize) -> bool,
+    ) -> Result<FabricManifest, FabricStoreError> {
+        let done = self.publish_with_hook(cut, generation, up, &mut |_| true)?;
+        Ok(done.expect("an all-true hook never aborts"))
+    }
+
+    /// Full-control publish: the hook sees every commit boundary *before*
+    /// it executes and returns `false` to simulate a crash there
+    /// (`Ok(None)`). Mirrors `SnapshotStore::publish_with_hook`.
+    pub fn publish_with_hook(
+        &self,
+        cut: &ShardedRuleIndex,
+        generation: u64,
+        up: &dyn Fn(usize, usize) -> bool,
+        hook: &mut dyn FnMut(PublishStep) -> bool,
+    ) -> Result<Option<FabricManifest>, FabricStoreError> {
+        assert_eq!(cut.n_shards(), self.n_shards, "cut must match the store layout");
+        // phase one: prepare every live replica of every shard
+        for s in 0..self.n_shards {
+            let live: Vec<usize> = (0..self.replicas).filter(|&r| up(s, r)).collect();
+            if live.is_empty() {
+                return Err(FabricStoreError::NoLiveReplica { shard: s });
+            }
+            let rules: Vec<_> = cut.shard(s).rules().cloned().collect();
+            let index = RuleIndex::from_parts(
+                rules,
+                Vec::new(),
+                cut.n_transactions,
+                cut.min_confidence,
+            );
+            let bytes = encode_rule_index(&index);
+            for r in live {
+                let steps = [
+                    PublishStep::ShardTempWritten { shard: s, replica: r },
+                    PublishStep::ShardSynced { shard: s, replica: r },
+                    PublishStep::ShardRenamed { shard: s, replica: r },
+                ];
+                if !self.commit_file(&self.shard_path(s, r, generation), &bytes, steps, hook)? {
+                    return Ok(None);
+                }
+            }
+        }
+        // phase two: flip the manifest — the single commit point
+        let manifest = FabricManifest {
+            generation,
+            n_shards: self.n_shards,
+            replicas: self.replicas,
+            shard_rules: cut.shard_rule_counts(),
+        };
+        let steps = [
+            PublishStep::ManifestTempWritten,
+            PublishStep::ManifestSynced,
+            PublishStep::ManifestRenamed,
+        ];
+        let bytes = encode_fabric_manifest(&manifest);
+        if !self.commit_file(&self.manifest_path(), &bytes, steps, hook)? {
+            return Ok(None);
+        }
+        self.prune(generation);
+        Ok(Some(manifest))
+    }
+
+    /// write-temp → fsync → atomic rename, with a hook boundary before
+    /// each step. Returns `Ok(false)` when the hook aborted (crash).
+    fn commit_file(
+        &self,
+        path: &Path,
+        bytes: &[u8],
+        steps: [PublishStep; 3],
+        hook: &mut dyn FnMut(PublishStep) -> bool,
+    ) -> Result<bool, FabricStoreError> {
+        let tmp = path.with_extension("tmp");
+        if !hook(steps[0]) {
+            return Ok(false);
+        }
+        let mut f = File::create(&tmp).map_err(|e| io_err(&tmp, e))?;
+        f.write_all(bytes).map_err(|e| io_err(&tmp, e))?;
+        if !hook(steps[1]) {
+            return Ok(false);
+        }
+        f.sync_all().map_err(|e| io_err(&tmp, e))?;
+        drop(f);
+        if !hook(steps[2]) {
+            return Ok(false);
+        }
+        fs::rename(&tmp, path).map_err(|e| io_err(path, e))?;
+        // best-effort directory sync, like the snapshot store
+        if let Ok(d) = File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        Ok(true)
+    }
+
+    /// Drop shard files older than the newest `retain` generations. The
+    /// manifest's generation is always among the kept ones. Best-effort.
+    fn prune(&self, live_generation: u64) {
+        let mut gens = self.scan_generations();
+        gens.retain(|&g| g <= live_generation);
+        if gens.len() <= self.retain {
+            return;
+        }
+        let cutoff = gens[gens.len() - self.retain];
+        let Ok(entries) = fs::read_dir(&self.dir) else { return };
+        for entry in entries.flatten() {
+            if let Some((_, _, g)) = parse_shard_name(&entry.file_name().to_string_lossy()) {
+                if g < cutoff {
+                    let _ = fs::remove_file(entry.path());
+                }
+            }
+        }
+    }
+
+    /// Every generation any shard file on disk mentions, ascending.
+    pub fn scan_generations(&self) -> Vec<u64> {
+        let mut gens = Vec::new();
+        if let Ok(entries) = fs::read_dir(&self.dir) {
+            for entry in entries.flatten() {
+                if let Some((_, _, g)) = parse_shard_name(&entry.file_name().to_string_lossy()) {
+                    gens.push(g);
+                }
+            }
+        }
+        gens.sort_unstable();
+        gens.dedup();
+        gens
+    }
+
+    /// The currently committed manifest, if it reads back intact.
+    pub fn load_manifest(&self) -> Option<FabricManifest> {
+        let bytes = fs::read(self.manifest_path()).ok()?;
+        decode_fabric_manifest(&bytes).ok()
+    }
+
+    /// Load the newest complete cross-shard cut. Manifest-first: a torn
+    /// manifest (or one whose cut lost a shard) degrades to the newest
+    /// generation where *every* shard has >= 1 intact replica file — the
+    /// loaded cut is always generation-consistent, never mixed.
+    pub fn load_cut(&self) -> Option<(FabricManifest, ShardedRuleIndex)> {
+        if let Some(m) = self.load_manifest() {
+            if m.n_shards == self.n_shards && m.shard_rules.len() == self.n_shards {
+                if let Some(cut) = self.try_load_generation(m.generation, Some(&m.shard_rules)) {
+                    return Some((m, cut));
+                }
+            }
+        }
+        for &g in self.scan_generations().iter().rev() {
+            if let Some(cut) = self.try_load_generation(g, None) {
+                let manifest = FabricManifest {
+                    generation: g,
+                    n_shards: self.n_shards,
+                    replicas: self.replicas,
+                    shard_rules: cut.shard_rule_counts(),
+                };
+                return Some((manifest, cut));
+            }
+        }
+        None
+    }
+
+    /// One generation, all shards, first intact replica each; `None`
+    /// unless every shard decodes (a partial cut is not a cut).
+    fn try_load_generation(
+        &self,
+        generation: u64,
+        expect_rules: Option<&[u64]>,
+    ) -> Option<ShardedRuleIndex> {
+        let mut all_rules = Vec::new();
+        let mut n_transactions = 0;
+        let mut min_confidence = 0.0;
+        for s in 0..self.n_shards {
+            let mut found = None;
+            for r in 0..self.replicas {
+                let Ok(bytes) = fs::read(self.shard_path(s, r, generation)) else {
+                    continue;
+                };
+                let Ok(index) = decode_rule_index(&bytes) else { continue };
+                if let Some(expect) = expect_rules {
+                    if index.n_rules() as u64 != expect[s] {
+                        continue;
+                    }
+                }
+                found = Some(index);
+                break;
+            }
+            let index = found?;
+            n_transactions = index.n_transactions;
+            min_confidence = index.min_confidence;
+            all_rules.extend(index.rules().iter().cloned());
+        }
+        all_rules.sort_unstable_by(global_rule_cmp);
+        Some(ShardedRuleIndex::from_rules(
+            all_rules,
+            n_transactions,
+            min_confidence,
+            self.n_shards,
+        ))
+    }
+}
+
+fn io_err(path: &Path, e: std::io::Error) -> FabricStoreError {
+    FabricStoreError::Io { path: path.to_path_buf(), err: e.to_string() }
+}
+
+/// Parse `shard-<s>-r<r>-gen-<g>.shard` (temp files don't match).
+fn parse_shard_name(name: &str) -> Option<(usize, usize, u64)> {
+    let rest = name.strip_prefix("shard-")?.strip_suffix(".shard")?;
+    let mut parts = rest.split('-');
+    let shard = parts.next()?.parse().ok()?;
+    let replica = parts.next()?.strip_prefix('r')?.parse().ok()?;
+    let generation = parts.next()?.strip_prefix("gen")?;
+    // "gen" is its own dash-separated token; the number follows
+    let generation = if generation.is_empty() { parts.next()? } else { generation };
+    if parts.next().is_some() {
+        return None;
+    }
+    Some((shard, replica, generation.parse().ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::classical::{tests::textbook_db, ClassicalApriori};
+    use crate::apriori::{AprioriConfig, MiningResult};
+    use crate::serve::index::render_lines;
+    use crate::util::tempdir::TempDir;
+
+    fn mined() -> MiningResult {
+        ClassicalApriori::default().mine(
+            &textbook_db(),
+            &AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 },
+        )
+    }
+
+    fn cut(conf: f64, shards: usize) -> ShardedRuleIndex {
+        ShardedRuleIndex::build(&mined(), conf, shards)
+    }
+
+    #[test]
+    fn parse_shard_names() {
+        assert_eq!(parse_shard_name("shard-0-r1-gen-42.shard"), Some((0, 1, 42)));
+        assert_eq!(parse_shard_name("shard-12-r0-gen-7.shard"), Some((12, 0, 7)));
+        assert_eq!(parse_shard_name("shard-0-r1-gen-42.tmp"), None);
+        assert_eq!(parse_shard_name("FABRIC"), None);
+        assert_eq!(parse_shard_name("shard-x-r1-gen-42.shard"), None);
+    }
+
+    #[test]
+    fn publish_then_load_roundtrips_the_cut() {
+        let tmp = TempDir::new("fabric-roundtrip");
+        let store = FabricStore::open(tmp.path(), 3, 2).unwrap();
+        let c = cut(0.3, 3);
+        let m = store.publish(&c, 5).unwrap();
+        assert_eq!(m.generation, 5);
+        assert_eq!(m.shard_rules, c.shard_rule_counts());
+        let (back_m, back) = store.load_cut().unwrap();
+        assert_eq!(back_m, m);
+        assert_eq!(back.shard_rule_counts(), c.shard_rule_counts());
+        for basket in [vec![0u32, 1], vec![0, 1, 2, 3, 4]] {
+            assert_eq!(
+                render_lines(&back.recommend(&basket, 10)),
+                render_lines(&c.recommend(&basket, 10)),
+            );
+        }
+    }
+
+    #[test]
+    fn down_replica_skipped_but_cut_still_commits() {
+        let tmp = TempDir::new("fabric-failover");
+        let store = FabricStore::open(tmp.path(), 2, 2).unwrap();
+        let c = cut(0.3, 2);
+        // replica 1 of every shard is down: refresh fails over, the
+        // generation still publishes
+        store.publish_partial(&c, 1, &|_, r| r == 0).unwrap();
+        let (m, back) = store.load_cut().unwrap();
+        assert_eq!(m.generation, 1);
+        assert_eq!(back.n_rules(), c.n_rules());
+        // but a shard with no live replica at all refuses to publish
+        let err = store.publish_partial(&c, 2, &|s, _| s != 0).unwrap_err();
+        assert!(matches!(err, FabricStoreError::NoLiveReplica { shard: 0 }));
+        // the failed publish did not move the committed cut
+        assert_eq!(store.load_cut().unwrap().0.generation, 1);
+    }
+
+    #[test]
+    fn crash_at_every_boundary_leaves_previous_cut_readable() {
+        let tmp = TempDir::new("fabric-crash");
+        let store = FabricStore::open(tmp.path(), 2, 2).unwrap();
+        let c1 = cut(0.3, 2);
+        let c2 = cut(0.6, 2);
+        store.publish(&c1, 1).unwrap();
+        // crash before the i-th boundary of the gen-2 publish; before the
+        // manifest rename the reader must still see gen 1, after it gen 2
+        for crash_at in 0..100 {
+            let mut step = 0;
+            let mut renamed_manifest = false;
+            let done = store
+                .publish_with_hook(&c2, 2, &|_, _| true, &mut |s| {
+                    if step == crash_at {
+                        return false;
+                    }
+                    if s == PublishStep::ManifestRenamed {
+                        renamed_manifest = true;
+                    }
+                    step += 1;
+                    true
+                })
+                .unwrap();
+            let (m, back) = store.load_cut().expect("a cut must always be readable");
+            if done.is_some() || renamed_manifest {
+                assert_eq!(m.generation, 2, "crash_at={crash_at}");
+                assert_eq!(back.n_rules(), c2.n_rules());
+                break; // committed; later crash points need a fresh dir
+            }
+            assert_eq!(m.generation, 1, "crash_at={crash_at}");
+            assert_eq!(back.n_rules(), c1.n_rules());
+            // clean up partial gen-2 files so the next iteration starts
+            // from the same pre-publish state
+            for e in fs::read_dir(tmp.path()).unwrap().flatten() {
+                if let Some((_, _, 2)) = parse_shard_name(&e.file_name().to_string_lossy()) {
+                    fs::remove_file(e.path()).unwrap();
+                }
+                if e.file_name().to_string_lossy().ends_with(".tmp") {
+                    fs::remove_file(e.path()).unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn torn_manifest_degrades_to_newest_complete_cut() {
+        let tmp = TempDir::new("fabric-torn");
+        let store = FabricStore::open(tmp.path(), 2, 2).unwrap();
+        let c1 = cut(0.3, 2);
+        store.publish(&c1, 1).unwrap();
+        store.publish(&c1, 2).unwrap();
+        // tear the manifest mid-byte
+        let mpath = store.manifest_path();
+        let mut bytes = fs::read(&mpath).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x5A;
+        fs::write(&mpath, &bytes).unwrap();
+        assert!(store.load_manifest().is_none(), "tear must be detected");
+        let (m, back) = store.load_cut().unwrap();
+        assert_eq!(m.generation, 2, "degrades to the newest complete cut");
+        assert_eq!(back.n_rules(), c1.n_rules());
+    }
+
+    #[test]
+    fn partial_prepare_is_never_served_as_a_cut() {
+        let tmp = TempDir::new("fabric-partial");
+        let store = FabricStore::open(tmp.path(), 2, 2).unwrap();
+        let c1 = cut(0.3, 2);
+        store.publish(&c1, 1).unwrap();
+        // a crashed prepare left gen 2 with only shard 0 on disk and no
+        // manifest flip; then the manifest was lost entirely
+        let c2 = cut(0.6, 2);
+        store
+            .publish_with_hook(&c2, 2, &|_, _| true, &mut |s| {
+                !matches!(s, PublishStep::ShardTempWritten { shard: 1, .. })
+            })
+            .unwrap();
+        fs::remove_file(store.manifest_path()).unwrap();
+        let (m, back) = store.load_cut().unwrap();
+        assert_eq!(m.generation, 1, "gen 2 is incomplete and must be skipped");
+        assert_eq!(back.n_rules(), c1.n_rules());
+    }
+
+    #[test]
+    fn pruning_keeps_the_retain_window() {
+        let tmp = TempDir::new("fabric-prune");
+        let store = FabricStore::open(tmp.path(), 2, 1).unwrap().with_retain(2);
+        let c = cut(0.3, 2);
+        for g in 1..=5 {
+            store.publish(&c, g).unwrap();
+        }
+        assert_eq!(store.scan_generations(), vec![4, 5]);
+        assert_eq!(store.load_cut().unwrap().0.generation, 5);
+    }
+}

@@ -1,0 +1,395 @@
+//! Scatter-gather query routing with replica failover and hedging.
+//!
+//! A [`QueryRouter`] answers one basket query by fanning it out to every
+//! shard of the current cut (one replica each), merging the per-shard
+//! candidate lists into the global top-k, and costing each leg through
+//! the [`simnet`] flow model (`Network::transfer_secs`, the same model
+//! the mining simulator uses for shuffle traffic). Per-replica fault
+//! injection ([`QueryRouter::set_node_down`]) fails a shard's scatter
+//! over to its surviving replica; a shard with no live replica is a
+//! typed error, never a silently partial answer.
+//!
+//! Hedging: each shard's request nominally goes to the primary replica;
+//! when a second live replica exists, a hedge fires after a p95-derived
+//! delay (the shard's own observed p95 once it has enough samples, else
+//! the configured `hedge_ms` floor) and the effective latency is
+//! `min(primary, delay + secondary)` — the standard tail-at-scale
+//! recipe. The cut itself is one `SnapshotCell` load per query, so every
+//! shard answers from the same generation by construction.
+//!
+//! [`simnet`]: crate::simnet
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::apriori::rules::Rule;
+use crate::cluster::{ClusterConfig, NodeId};
+use crate::data::ItemId;
+use crate::metrics::histogram::{HistogramSnapshot, LatencyHistogram};
+use crate::serve::snapshot::SnapshotCell;
+use crate::simnet::{Flow, Network};
+
+use super::placement::FabricPlacement;
+use super::shard::ShardedRuleIndex;
+
+/// Hedge delays fall back to the configured floor until a shard has this
+/// many latency samples to derive a p95 from.
+const HEDGE_MIN_SAMPLES: u64 = 32;
+
+/// Why a routed query failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterError {
+    /// Every replica of this shard is down — the cut cannot be answered
+    /// completely, and a partial answer would break byte-identity.
+    ShardUnavailable { shard: usize },
+}
+
+impl std::fmt::Display for RouterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::ShardUnavailable { shard } => {
+                write!(f, "shard {shard}: no live replica")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouterError {}
+
+/// One answered scatter-gather query.
+#[derive(Debug)]
+pub struct RoutedResponse {
+    /// Generation of the cut every shard answered from.
+    pub generation: u64,
+    /// The merged global top-k, byte-identical to the single-index path.
+    pub recommendations: Vec<Rule>,
+    /// Simulated end-to-end latency: max over the per-shard legs.
+    pub sim_latency_secs: f64,
+}
+
+/// Router counters + tail quantiles, for reports and the bench.
+#[derive(Debug, Clone)]
+pub struct RouterStats {
+    pub queries: u64,
+    /// Queries where at least one shard was served by a non-primary.
+    pub failovers: u64,
+    /// Shard legs whose primary exceeded the hedge delay (hedge sent).
+    pub hedges_fired: u64,
+    /// Fired hedges where the secondary beat the primary.
+    pub hedge_wins: u64,
+    /// Merged (end-to-end) latency quantiles.
+    pub merged_p50_p95_p99: (Duration, Duration, Duration),
+    /// All per-shard legs merged into one distribution
+    /// (`HistogramSnapshot::merge` — no double counting).
+    pub shard_p50_p95_p99: (Duration, Duration, Duration),
+}
+
+/// Scatter-gather front-end over one [`ShardedRuleIndex`] cut.
+#[derive(Debug)]
+pub struct QueryRouter {
+    cut: Arc<SnapshotCell<ShardedRuleIndex>>,
+    placement: FabricPlacement,
+    net: Network,
+    /// The node the router itself runs on (scatter source / gather sink).
+    router_node: NodeId,
+    /// Fault-injection flags, one per cluster node.
+    node_down: Vec<AtomicBool>,
+    /// Hedge-delay floor until a shard has a p95 of its own.
+    hedge: Duration,
+    /// Hedging off = pure primary-replica latency (the ablation's
+    /// baseline arm). Failover is unaffected.
+    hedging: bool,
+    shard_latency: Vec<LatencyHistogram>,
+    merged_latency: LatencyHistogram,
+    queries: AtomicU64,
+    failovers: AtomicU64,
+    hedges_fired: AtomicU64,
+    hedge_wins: AtomicU64,
+}
+
+impl QueryRouter {
+    /// Build a router over a placed cut. `cluster` must be the same
+    /// config the placement was made against (node count is asserted).
+    pub fn new(
+        cut: Arc<SnapshotCell<ShardedRuleIndex>>,
+        placement: FabricPlacement,
+        cluster: &ClusterConfig,
+        hedge_ms: u64,
+    ) -> Self {
+        let net = Network::new(
+            cluster.switch.clone(),
+            cluster.nodes.iter().map(|n| n.nic_mbps).collect(),
+        )
+        .with_racks(cluster.rack_of.clone(), cluster.switch.backplane_mbps / 4.0);
+        let n_nodes = cluster.n_nodes();
+        let n_shards = placement.n_shards();
+        Self {
+            cut,
+            placement,
+            net,
+            router_node: 0,
+            node_down: (0..n_nodes).map(|_| AtomicBool::new(false)).collect(),
+            hedge: Duration::from_millis(hedge_ms),
+            hedging: true,
+            shard_latency: (0..n_shards).map(|_| LatencyHistogram::new()).collect(),
+            merged_latency: LatencyHistogram::new(),
+            queries: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            hedges_fired: AtomicU64::new(0),
+            hedge_wins: AtomicU64::new(0),
+        }
+    }
+
+    /// Disable hedging (ablation arm); failover still works.
+    pub fn with_hedging(mut self, on: bool) -> Self {
+        self.hedging = on;
+        self
+    }
+
+    /// Simulate a node failure: every replica on `node` stops answering.
+    pub fn set_node_down(&self, node: NodeId) {
+        self.node_down[node].store(true, Ordering::Release);
+    }
+
+    /// Bring a node back.
+    pub fn set_node_up(&self, node: NodeId) {
+        self.node_down[node].store(false, Ordering::Release);
+    }
+
+    pub fn is_node_down(&self, node: NodeId) -> bool {
+        self.node_down[node].load(Ordering::Acquire)
+    }
+
+    /// Which replicas of a shard are currently live, primary first.
+    pub fn live_replicas(&self, shard: usize) -> Vec<NodeId> {
+        self.placement
+            .replicas_of(shard)
+            .iter()
+            .copied()
+            .filter(|&n| !self.is_node_down(n))
+            .collect()
+    }
+
+    /// The serving cut cell (the refresher publishes new generations
+    /// through it; one load per query = a consistent cross-shard cut).
+    pub fn cut(&self) -> &Arc<SnapshotCell<ShardedRuleIndex>> {
+        &self.cut
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.cut.generation()
+    }
+
+    /// The shard→replica placement this router scatters over (the
+    /// refresher consults it to skip down replicas when re-publishing).
+    pub fn placement(&self) -> &FabricPlacement {
+        &self.placement
+    }
+
+    /// One scatter leg: request out, candidates back, as simulated wire
+    /// time. Requests and top-k replies are single-MTU-class payloads,
+    /// so the small-payload fast path keeps the cost latency-dominated.
+    fn leg_secs(&self, replica: NodeId, request_bytes: u64, reply_bytes: u64, fan: usize) -> f64 {
+        let out = Flow { src: self.router_node, dst: replica, bytes: request_bytes };
+        let back = Flow { src: replica, dst: self.router_node, bytes: reply_bytes };
+        self.net.transfer_secs(&out, fan, 1, fan) + self.net.transfer_secs(&back, 1, fan, fan)
+    }
+
+    /// The delay after which a shard's hedge fires: its own observed p95
+    /// once it has [`HEDGE_MIN_SAMPLES`], else the configured floor.
+    fn hedge_delay(&self, shard: usize) -> Duration {
+        let snap = self.shard_latency[shard].snapshot();
+        if snap.count() >= HEDGE_MIN_SAMPLES {
+            snap.quantile(0.95)
+        } else {
+            self.hedge
+        }
+    }
+
+    /// Answer one basket query by scatter-gather over every shard of the
+    /// current cut.
+    pub fn route(&self, basket: &[ItemId], top_k: usize) -> Result<RoutedResponse, RouterError> {
+        let (cut, generation) = self.cut.load_with_generation();
+        let n_shards = cut.n_shards();
+        assert_eq!(
+            n_shards,
+            self.placement.n_shards(),
+            "cut and placement must agree on the shard count"
+        );
+        let request_bytes = 16 + 4 * basket.len() as u64;
+        let mut candidates = Vec::new();
+        let mut merged_secs = 0.0f64;
+        for s in 0..n_shards {
+            let live = self.live_replicas(s);
+            let Some(&primary) = live.first() else {
+                return Err(RouterError::ShardUnavailable { shard: s });
+            };
+            if primary != self.placement.replicas_of(s)[0] {
+                self.failovers.fetch_add(1, Ordering::Relaxed);
+            }
+            let shard_answer = cut.shard(s).candidates(basket, top_k);
+            // a rule is ~an id + two small itemsets + three measures
+            let reply_bytes = 16 + 56 * shard_answer.len() as u64;
+            let primary_secs = self.leg_secs(primary, request_bytes, reply_bytes, n_shards);
+            let leg_secs = match (self.hedging, live.get(1)) {
+                (true, Some(&secondary)) => {
+                    let delay = self.hedge_delay(s).as_secs_f64();
+                    if primary_secs > delay {
+                        self.hedges_fired.fetch_add(1, Ordering::Relaxed);
+                        let hedged =
+                            delay + self.leg_secs(secondary, request_bytes, reply_bytes, n_shards);
+                        if hedged < primary_secs {
+                            self.hedge_wins.fetch_add(1, Ordering::Relaxed);
+                        }
+                        primary_secs.min(hedged)
+                    } else {
+                        primary_secs
+                    }
+                }
+                _ => primary_secs,
+            };
+            self.shard_latency[s].record(Duration::from_secs_f64(leg_secs));
+            merged_secs = merged_secs.max(leg_secs);
+            candidates.extend(shard_answer);
+        }
+        self.merged_latency.record(Duration::from_secs_f64(merged_secs));
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        Ok(RoutedResponse {
+            generation,
+            recommendations: ShardedRuleIndex::merge(candidates, top_k),
+            sim_latency_secs: merged_secs,
+        })
+    }
+
+    /// Counters + tails. Per-shard histograms aggregate through
+    /// [`HistogramSnapshot::merge`], so every leg is counted exactly once
+    /// in the fabric-level distribution.
+    pub fn stats(&self) -> RouterStats {
+        let mut legs: Option<HistogramSnapshot> = None;
+        for h in &self.shard_latency {
+            let s = h.snapshot();
+            legs = Some(match legs {
+                Some(acc) => acc.merge(&s),
+                None => s,
+            });
+        }
+        let shard_tails = legs
+            .map(|s| s.p50_p95_p99())
+            .unwrap_or((Duration::ZERO, Duration::ZERO, Duration::ZERO));
+        RouterStats {
+            queries: self.queries.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            hedges_fired: self.hedges_fired.load(Ordering::Relaxed),
+            hedge_wins: self.hedge_wins.load(Ordering::Relaxed),
+            merged_p50_p95_p99: self.merged_latency.snapshot().p50_p95_p99(),
+            shard_p50_p95_p99: shard_tails,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::classical::{tests::textbook_db, ClassicalApriori};
+    use crate::apriori::rules::generate_rules;
+    use crate::apriori::{AprioriConfig, MiningResult};
+    use crate::serve::index::{reference_recommend, render_lines};
+
+    fn mined() -> MiningResult {
+        ClassicalApriori::default().mine(
+            &textbook_db(),
+            &AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 },
+        )
+    }
+
+    fn router(n_shards: usize, replicas: usize) -> QueryRouter {
+        let result = mined();
+        let cut = ShardedRuleIndex::build(&result, 0.0, n_shards);
+        let cluster = ClusterConfig::fhssc(4);
+        let bytes: Vec<u64> = cut.shard_rule_counts().iter().map(|&n| 56 * n + 16).collect();
+        let placement = FabricPlacement::place(&cluster, replicas, &bytes).unwrap();
+        QueryRouter::new(Arc::new(SnapshotCell::new(Arc::new(cut))), placement, &cluster, 5)
+    }
+
+    #[test]
+    fn routed_answer_matches_reference_and_costs_wire_time() {
+        let r = router(3, 2);
+        let rules = generate_rules(&mined(), 0.0);
+        for basket in [vec![0u32], vec![0, 1], vec![1, 2, 3], vec![0, 1, 2, 3, 4]] {
+            let resp = r.route(&basket, 5).unwrap();
+            assert_eq!(resp.generation, 0);
+            assert_eq!(
+                render_lines(&resp.recommendations),
+                render_lines(&reference_recommend(&rules, &basket, 5)),
+                "basket {basket:?}"
+            );
+            assert!(resp.sim_latency_secs > 0.0, "a scatter always pays wire time");
+        }
+        let stats = r.stats();
+        assert_eq!(stats.queries, 4);
+        assert_eq!(stats.failovers, 0);
+        assert!(stats.merged_p50_p95_p99.1 >= stats.merged_p50_p95_p99.0);
+    }
+
+    #[test]
+    fn killed_primary_fails_over_with_identical_answer() {
+        let r = router(2, 2);
+        let basket = vec![0u32, 1];
+        let before = r.route(&basket, 5).unwrap();
+        // kill every shard's primary that lives on some node
+        let victim = r.placement.replicas_of(0)[0];
+        r.set_node_down(victim);
+        let after = r.route(&basket, 5).unwrap();
+        assert_eq!(
+            render_lines(&before.recommendations),
+            render_lines(&after.recommendations),
+            "failover must not change the answer"
+        );
+        assert!(r.stats().failovers >= 1, "the surviving replica served");
+        r.set_node_up(victim);
+        assert!(!r.is_node_down(victim));
+    }
+
+    #[test]
+    fn all_replicas_down_is_a_typed_error() {
+        let r = router(2, 2);
+        for &n in r.placement.replicas_of(1) {
+            r.set_node_down(n);
+        }
+        assert!(matches!(
+            r.route(&[0, 1], 5),
+            Err(RouterError::ShardUnavailable { .. })
+        ));
+    }
+
+    #[test]
+    fn generation_flip_swaps_the_whole_cut_atomically() {
+        let r = router(2, 2);
+        let result = mined();
+        // stricter confidence = fewer rules: a distinguishable new cut
+        let next = ShardedRuleIndex::build(&result, 0.99, 2);
+        let g = r.cut().store(Arc::new(next));
+        assert_eq!(g, 1);
+        let resp = r.route(&[0, 1], 50).unwrap();
+        assert_eq!(resp.generation, 1);
+        let oracle = reference_recommend(&generate_rules(&result, 0.99), &[0, 1], 50);
+        assert_eq!(render_lines(&resp.recommendations), render_lines(&oracle));
+    }
+
+    #[test]
+    fn hedging_cannot_worsen_latency() {
+        let hedged = router(3, 2);
+        let plain = router(3, 2).with_hedging(false);
+        for _ in 0..50 {
+            let a = hedged.route(&[0, 1, 2], 5).unwrap();
+            let b = plain.route(&[0, 1, 2], 5).unwrap();
+            assert!(a.sim_latency_secs <= b.sim_latency_secs + 1e-12);
+            assert_eq!(
+                render_lines(&a.recommendations),
+                render_lines(&b.recommendations)
+            );
+        }
+        assert_eq!(plain.stats().hedges_fired, 0);
+    }
+}

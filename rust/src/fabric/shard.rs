@@ -1,0 +1,384 @@
+//! Antecedent-hash partitioning of one rule generation into S shards.
+//!
+//! [`ShardedRuleIndex::build`] splits one [`MiningResult`]'s rule set
+//! deterministically: every rule lands on exactly one shard, keyed by an
+//! FNV-1a hash of its antecedent. Because [`RuleIndex::recommend`]'s
+//! answer is the first `k` *applying* rules in the deterministic global
+//! order (confidence desc, antecedent, consequent), and "applies" is a
+//! per-rule predicate, the global top-k is a subset of the union of
+//! per-shard top-k candidate lists — so a scatter-gather merge
+//! ([`ShardedRuleIndex::merge`]) that sorts the union by global rule id
+//! and truncates to `k` is *provably* byte-identical to the single-index
+//! path. `tests/fabric.rs` pins that differentially against
+//! [`reference_recommend`].
+//!
+//! [`RuleIndex::recommend`]: crate::serve::index::RuleIndex::recommend
+//! [`reference_recommend`]: crate::serve::index::reference_recommend
+
+use std::collections::HashMap;
+
+use crate::apriori::rules::{generate_rules, Rule};
+use crate::apriori::{Itemset, MiningResult};
+use crate::data::{is_subset, ItemId};
+
+/// Same bound as the single `RuleIndex`: baskets up to this size use
+/// indexed subset enumeration; larger ones fall back to a full shard
+/// scan with identical output.
+const MAX_INDEXED_BASKET: usize = 16;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// The shard a rule with this antecedent lives on: FNV-1a over the
+/// antecedent's little-endian item bytes, mod the shard count. Depends
+/// only on the antecedent and `n_shards`, so the same rule always maps
+/// to the same shard across rebuilds and generations.
+pub fn shard_of(antecedent: &[ItemId], n_shards: usize) -> usize {
+    assert!(n_shards >= 1, "shard_of: n_shards must be >= 1");
+    let mut h = FNV_OFFSET;
+    for &item in antecedent {
+        for b in item.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+    (h % n_shards as u64) as usize
+}
+
+/// Are sorted `a` and sorted `b` disjoint? (Local copy of the private
+/// `serve::index` helper — the semantics must match exactly.)
+fn is_disjoint(a: &[ItemId], b: &[ItemId]) -> bool {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Equal => return false,
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+        }
+    }
+    true
+}
+
+/// Serving applicability: basket covers the antecedent and lacks every
+/// consequent item.
+fn applies(r: &Rule, basket: &[ItemId]) -> bool {
+    is_subset(&r.antecedent, basket) && is_disjoint(&r.consequent, basket)
+}
+
+/// Sort + dedup a basket into canonical itemset form.
+fn normalize_basket(basket: &[ItemId]) -> Itemset {
+    let mut b = basket.to_vec();
+    b.sort_unstable();
+    b.dedup();
+    b
+}
+
+/// The global rule order `generate_rules` emits. A strict total order:
+/// (antecedent, consequent) pairs are unique across rules, so re-sorting
+/// any concatenation of shard slices reproduces the exact global
+/// sequence (confidence compares by `total_cmp`, bit-preserved by the
+/// store codec).
+pub fn global_rule_cmp(a: &Rule, b: &Rule) -> std::cmp::Ordering {
+    b.confidence
+        .total_cmp(&a.confidence)
+        .then_with(|| a.antecedent.cmp(&b.antecedent))
+        .then_with(|| a.consequent.cmp(&b.consequent))
+}
+
+/// One shard's slice of the rule set, each rule tagged with its *global*
+/// id (its index in the full `generate_rules` order). Candidate lists
+/// come back ascending by global id, which is what makes the
+/// scatter-gather merge exact.
+#[derive(Debug)]
+pub struct RuleShard {
+    /// (global id, rule), ascending by global id.
+    entries: Vec<(u32, Rule)>,
+    /// Antecedent -> indices into `entries` (ascending).
+    by_antecedent: HashMap<Itemset, Vec<u32>>,
+    /// Longest antecedent on this shard — the enumeration prune bound.
+    max_antecedent_len: usize,
+}
+
+impl RuleShard {
+    fn from_entries(entries: Vec<(u32, Rule)>) -> Self {
+        debug_assert!(entries.windows(2).all(|w| w[0].0 < w[1].0));
+        let mut by_antecedent: HashMap<Itemset, Vec<u32>> = HashMap::new();
+        let mut max_antecedent_len = 0;
+        for (i, (_, r)) in entries.iter().enumerate() {
+            max_antecedent_len = max_antecedent_len.max(r.antecedent.len());
+            by_antecedent.entry(r.antecedent.clone()).or_default().push(i as u32);
+        }
+        Self { entries, by_antecedent, max_antecedent_len }
+    }
+
+    pub fn n_rules(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// This shard's rules in global order (persistence path).
+    pub fn rules(&self) -> impl Iterator<Item = &Rule> {
+        self.entries.iter().map(|(_, r)| r)
+    }
+
+    /// The shard's answer to a scatter: the first `top_k` rules *on this
+    /// shard* that apply to the basket, as (global id, rule) ascending by
+    /// global id. Mirrors `RuleIndex::recommend` exactly (indexed subset
+    /// enumeration with the same oversized-basket scan fallback), so the
+    /// union over shards always contains the global top-k.
+    pub fn candidates(&self, basket: &[ItemId], top_k: usize) -> Vec<(u32, Rule)> {
+        let basket = normalize_basket(basket);
+        if basket.is_empty() || top_k == 0 {
+            return Vec::new();
+        }
+        if basket.len() > MAX_INDEXED_BASKET {
+            return self
+                .entries
+                .iter()
+                .filter(|(_, r)| applies(r, &basket))
+                .take(top_k)
+                .cloned()
+                .collect();
+        }
+        let m = basket.len();
+        let limit = 1u32 << m;
+        let mut hits: Vec<u32> = Vec::new();
+        for s in 1..=self.max_antecedent_len.min(m) {
+            let mut mask = (1u32 << s) - 1;
+            while mask < limit {
+                let subset: Itemset = (0..m)
+                    .filter(|&i| mask & (1 << i) != 0)
+                    .map(|i| basket[i])
+                    .collect();
+                if let Some(ids) = self.by_antecedent.get(&subset) {
+                    hits.extend_from_slice(ids);
+                }
+                // Gosper: next mask with the same popcount, ascending
+                let c = mask & mask.wrapping_neg();
+                let r = mask + c;
+                mask = (((r ^ mask) >> 2) / c) | r;
+            }
+        }
+        // entries are ascending by global id, so ascending entry indices
+        // are ascending global ids
+        hits.sort_unstable();
+        hits.iter()
+            .map(|&i| self.entries[i as usize].clone())
+            .filter(|(_, r)| is_disjoint(&r.consequent, &basket))
+            .take(top_k)
+            .collect()
+    }
+}
+
+/// One generation's rule set, partitioned into S shards by antecedent
+/// hash. Immutable once built — generation flips swap the whole value
+/// through a `SnapshotCell`, so a reader never sees a mixed cut.
+#[derive(Debug)]
+pub struct ShardedRuleIndex {
+    shards: Vec<RuleShard>,
+    /// |D| of the generation this cut was mined from.
+    pub n_transactions: usize,
+    /// The confidence floor the cut was built with.
+    pub min_confidence: f64,
+}
+
+impl ShardedRuleIndex {
+    /// Partition one mining generation into `n_shards` shards.
+    pub fn build(result: &MiningResult, min_confidence: f64, n_shards: usize) -> Self {
+        Self::from_rules(
+            generate_rules(result, min_confidence),
+            result.n_transactions,
+            min_confidence,
+            n_shards,
+        )
+    }
+
+    /// Assemble a cut from rules already in the deterministic global
+    /// order (the fabric store's load path re-sorts with
+    /// [`global_rule_cmp`] before calling this).
+    pub fn from_rules(
+        rules: Vec<Rule>,
+        n_transactions: usize,
+        min_confidence: f64,
+        n_shards: usize,
+    ) -> Self {
+        assert!(n_shards >= 1, "a cut needs at least one shard");
+        debug_assert!(
+            rules.windows(2).all(|w| global_rule_cmp(&w[0], &w[1]).is_lt()),
+            "from_rules requires the deterministic global order"
+        );
+        let mut per_shard: Vec<Vec<(u32, Rule)>> = (0..n_shards).map(|_| Vec::new()).collect();
+        for (id, rule) in rules.into_iter().enumerate() {
+            let s = shard_of(&rule.antecedent, n_shards);
+            per_shard[s].push((id as u32, rule));
+        }
+        Self {
+            shards: per_shard.into_iter().map(RuleShard::from_entries).collect(),
+            n_transactions,
+            min_confidence,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, s: usize) -> &RuleShard {
+        &self.shards[s]
+    }
+
+    /// Total rules across shards.
+    pub fn n_rules(&self) -> usize {
+        self.shards.iter().map(|s| s.n_rules()).sum()
+    }
+
+    /// Per-shard rule counts, as recorded in the fabric manifest.
+    pub fn shard_rule_counts(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.n_rules() as u64).collect()
+    }
+
+    /// Gather: merge per-shard candidate lists into the global top-k.
+    /// Sorting by global id restores the deterministic global order, and
+    /// the first `k` of the union are exactly the single-index answer
+    /// (each globally chosen rule is within its own shard's first `k`
+    /// applying rules).
+    pub fn merge(mut candidates: Vec<(u32, Rule)>, top_k: usize) -> Vec<Rule> {
+        candidates.sort_unstable_by_key(|(id, _)| *id);
+        candidates.truncate(top_k);
+        candidates.into_iter().map(|(_, r)| r).collect()
+    }
+
+    /// Scatter-gather over all shards in-process (the router adds
+    /// replica selection, hedging, and network costing on top of this).
+    pub fn recommend(&self, basket: &[ItemId], top_k: usize) -> Vec<Rule> {
+        let mut all = Vec::new();
+        for shard in &self.shards {
+            all.extend(shard.candidates(basket, top_k));
+        }
+        Self::merge(all, top_k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::classical::{tests::textbook_db, ClassicalApriori};
+    use crate::apriori::AprioriConfig;
+    use crate::serve::index::{reference_recommend, render_lines, RuleIndex};
+    use crate::util::proptest::check;
+
+    fn mined() -> MiningResult {
+        ClassicalApriori::default().mine(
+            &textbook_db(),
+            &AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 },
+        )
+    }
+
+    #[test]
+    fn every_rule_lands_on_exactly_one_deterministic_shard() {
+        let result = mined();
+        let rules = generate_rules(&result, 0.0);
+        for n_shards in [1, 2, 3, 5, 8] {
+            let cut = ShardedRuleIndex::build(&result, 0.0, n_shards);
+            assert_eq!(cut.n_shards(), n_shards);
+            assert_eq!(cut.n_rules(), rules.len(), "no rule lost or duplicated");
+            for r in &rules {
+                let s = shard_of(&r.antecedent, n_shards);
+                assert_eq!(s, shard_of(&r.antecedent, n_shards), "deterministic");
+                assert!(s < n_shards);
+                assert!(
+                    cut.shard(s).rules().any(|q| q == r),
+                    "rule must live on its hash shard"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_cut_equals_the_unsharded_index() {
+        let result = mined();
+        let idx = RuleIndex::build(&result, 0.0);
+        let cut = ShardedRuleIndex::build(&result, 0.0, 1);
+        for basket in [vec![0u32], vec![0, 1], vec![1, 2, 3], vec![0, 1, 2, 3, 4]] {
+            assert_eq!(
+                render_lines(&cut.recommend(&basket, 10)),
+                render_lines(&idx.recommend(&basket, 10)),
+            );
+        }
+    }
+
+    #[test]
+    fn scatter_gather_matches_reference_across_shard_counts() {
+        let result = mined();
+        let rules = generate_rules(&result, 0.0);
+        for n_shards in [2, 3, 4, 7] {
+            let cut = ShardedRuleIndex::build(&result, 0.0, n_shards);
+            for basket in [
+                vec![0u32],
+                vec![0, 1],
+                vec![0, 4],
+                vec![1, 2, 3],
+                vec![0, 1, 2, 3, 4],
+                vec![7, 8],
+                (0..20).collect::<Vec<_>>(), // oversized: scan fallback
+            ] {
+                for k in [1, 3, 100] {
+                    assert_eq!(
+                        render_lines(&cut.recommend(&basket, k)),
+                        render_lines(&reference_recommend(&rules, &basket, k)),
+                        "basket {basket:?} k={k} shards={n_shards}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_sharded_equals_reference_on_random_baskets() {
+        let result = mined();
+        let rules = generate_rules(&result, 0.0);
+        let cuts: Vec<_> =
+            (1..=5).map(|s| ShardedRuleIndex::build(&result, 0.0, s)).collect();
+        check(
+            "sharded scatter-gather equals the direct filter",
+            0xFAB_51,
+            300,
+            |rng| {
+                let len = rng.range_usize(0, 6);
+                (0..len).map(|_| rng.gen_range(6) as ItemId).collect::<Vec<_>>()
+            },
+            |basket| {
+                let direct = render_lines(&reference_recommend(&rules, basket, 5));
+                for cut in &cuts {
+                    let served = render_lines(&cut.recommend(basket, 5));
+                    if served != direct {
+                        return Err(format!(
+                            "shards={}: served\n{served}\ndirect\n{direct}",
+                            cut.n_shards()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn from_rules_roundtrips_through_global_resort() {
+        // The load path concatenates per-shard slices and re-sorts with
+        // global_rule_cmp; the result must be the identical cut.
+        let result = mined();
+        let cut = ShardedRuleIndex::build(&result, 0.3, 3);
+        let mut rules: Vec<Rule> = (0..cut.n_shards())
+            .flat_map(|s| cut.shard(s).rules().cloned().collect::<Vec<_>>())
+            .collect();
+        rules.sort_unstable_by(global_rule_cmp);
+        let reloaded =
+            ShardedRuleIndex::from_rules(rules, cut.n_transactions, cut.min_confidence, 3);
+        assert_eq!(reloaded.shard_rule_counts(), cut.shard_rule_counts());
+        for basket in [vec![0u32, 1], vec![0, 1, 2, 3, 4]] {
+            assert_eq!(
+                render_lines(&reloaded.recommend(&basket, 10)),
+                render_lines(&cut.recommend(&basket, 10)),
+            );
+        }
+    }
+}

@@ -36,6 +36,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dfs;
 pub mod engine;
+pub mod fabric;
 pub mod incremental;
 pub mod mapreduce;
 pub mod metrics;
@@ -59,7 +60,7 @@ pub mod prelude {
         son::{SonApriori, SonReport},
         AprioriConfig, Itemset, MiningResult,
     };
-    pub use crate::cluster::{ClusterConfig, DeployMode, NodeProfile};
+    pub use crate::cluster::{ClusterConfig, ClusterConfigError, DeployMode, NodeProfile};
     pub use crate::config::{ExperimentConfig, Preset};
     pub use crate::coordinator::{
         simulate, simulate_pipelined, MrApriori, PipelineConfig, RunReport, WorkloadProfile,
@@ -72,6 +73,10 @@ pub mod prelude {
     pub use crate::engine::{
         build_engine, CacheStats, EngineKind, IndexCache, SupportEngine, VerticalEngine,
         VerticalIndex,
+    };
+    pub use crate::fabric::{
+        shard_of, FabricConfig, FabricPlacement, FabricStore, QueryRouter, RoutedResponse,
+        RouterError, RouterStats, ShardedRuleIndex,
     };
     pub use crate::incremental::{
         DeltaApply, DeltaStats, IncrementalConfig, LevelState, MinedState,
@@ -87,13 +92,14 @@ pub mod prelude {
             synth_baskets, synth_delta, RefreshError, RefreshMode, Refresher, RefreshStats,
         },
         server::{
-            QueryClass, QueryResponse, RuleServer, ServeError, ServeOptions, ServerStats,
+            Backend, QueryClass, QueryResponse, RuleServer, ServeError, ServeOptions,
+            ServerStats,
         },
         snapshot::SnapshotCell,
         ServeConfig,
     };
     pub use crate::store::{
-        resume_serving, warm_start, BaseRef, CodecError, CommitStep, Manifest, Resumed,
-        Snapshot, SnapshotRef, SnapshotStore, StoreConfig, StoreError, WarmStart,
+        resume_serving, warm_start, BaseRef, CodecError, CommitStep, FabricManifest, Manifest,
+        Resumed, Snapshot, SnapshotRef, SnapshotStore, StoreConfig, StoreError, WarmStart,
     };
 }

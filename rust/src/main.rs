@@ -73,7 +73,8 @@ USAGE:
                [--queries N] [--check true|false] [--refresh-batches B]
                [--refresh-tx N] [--refresh-mode full|incremental]
                [--check-final true|false] [--store-dir DIR] [--retain N]
-               [--no-persist true|false]
+               [--no-persist true|false] [--shards S] [--replicas R]
+               [--hedge-ms MS] [--kill-node N]
   repro simulate [--config FILE] [--preset P] [--nodes N] [--transactions N]
                  [--pipeline true|false]
   repro bench --figure fig4|fig5|eta
@@ -201,6 +202,19 @@ fn experiment_config(flags: &Flags) -> Result<ExperimentConfig, String> {
         }
         cfg.serve.internal_queue_depth = d;
     }
+    if let Some(n) = flags.parse_opt::<usize>("shards")? {
+        // 0 is legal: it means "fabric off"
+        cfg.fabric.shards = n;
+    }
+    if let Some(r) = flags.parse_opt::<usize>("replicas")? {
+        if r == 0 {
+            return Err("--replicas: must be >= 1".into());
+        }
+        cfg.fabric.replicas = r;
+    }
+    if let Some(ms) = flags.parse_opt::<u64>("hedge-ms")? {
+        cfg.fabric.hedge_ms = ms;
+    }
     if let Some(dir) = flags.get("store-dir") {
         cfg.store.dir = Some(PathBuf::from(dir));
     }
@@ -251,6 +265,17 @@ fn publish_generation_zero(
             index,
         })
         .map_err(|e| e.to_string())
+}
+
+/// Shard an index into a fabric cut. The index keeps its rules in the
+/// deterministic global order, so the cut serves byte-identically.
+fn shard_index(index: &RuleIndex, n_shards: usize) -> ShardedRuleIndex {
+    ShardedRuleIndex::from_rules(
+        index.rules().to_vec(),
+        index.n_transactions,
+        index.min_confidence,
+        n_shards,
+    )
 }
 
 fn load_or_generate(flags: &Flags, cfg: &ExperimentConfig) -> Result<TransactionDb, String> {
@@ -524,8 +549,72 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
     }
     let baskets = synth_baskets(&singles, queries, cfg.seed ^ 0x5E21_E5E2);
 
-    let server = Arc::new(RuleServer::start(
-        Arc::clone(&cell),
+    // Fabric backend: shard the snapshot, place replicas on the cluster,
+    // scatter-gather through the router. `shards = 0` (the default)
+    // keeps the classic single-index backend untouched.
+    let kill_node: Option<usize> = flags.parse_opt("kill-node")?;
+    if kill_node.is_some() && !cfg.fabric.enabled() {
+        return Err("--kill-node needs the fabric (--shards >= 1)".into());
+    }
+    let (router, fabric_store) = if cfg.fabric.enabled() {
+        let cluster = cfg.cluster();
+        if let Some(n) = kill_node {
+            if n >= cluster.n_nodes() {
+                return Err(format!(
+                    "--kill-node: node {n} out of range (cluster has {} nodes)",
+                    cluster.n_nodes()
+                ));
+            }
+        }
+        let sharded = shard_index(&cell.load(), cfg.fabric.shards);
+        // a rule is ~an id + two small itemsets + three measures
+        let shard_bytes: Vec<u64> =
+            sharded.shard_rule_counts().iter().map(|&n| 16 + 56 * n).collect();
+        let placement = FabricPlacement::place(&cluster, cfg.fabric.replicas, &shard_bytes)
+            .map_err(|e| e.to_string())?;
+        println!(
+            "fabric: {} shards x {} replicas on {} nodes \
+             (hedge floor {}ms, simulated DFS utilization {:.2}%)",
+            cfg.fabric.shards,
+            cfg.fabric.replicas,
+            cluster.n_nodes(),
+            cfg.fabric.hedge_ms,
+            placement.utilization() * 100.0,
+        );
+        let cut = Arc::new(SnapshotCell::with_generation(
+            Arc::new(sharded),
+            start_generation,
+        ));
+        let router = Arc::new(QueryRouter::new(cut, placement, &cluster, cfg.fabric.hedge_ms));
+        let fstore = if persist {
+            let dir = cfg
+                .store
+                .dir
+                .as_ref()
+                .expect("writes_enabled implies a dir")
+                .join("fabric");
+            let fs = Arc::new(
+                FabricStore::open(&dir, cfg.fabric.shards, cfg.fabric.replicas)
+                    .map_err(|e| e.to_string())?
+                    .with_retain(cfg.store.retain),
+            );
+            fs.publish(&router.cut().load(), start_generation)
+                .map_err(|e| e.to_string())?;
+            Some(fs)
+        } else {
+            None
+        };
+        (Some(router), fstore)
+    } else {
+        (None, None)
+    };
+
+    let backend = match &router {
+        Some(r) => Backend::Fabric(Arc::clone(r)),
+        None => Backend::Local(Arc::clone(&cell)),
+    };
+    let server = Arc::new(RuleServer::start_with_backend(
+        backend,
         ServeOptions {
             workers: s.workers,
             queue_depth: s.queue_depth,
@@ -570,6 +659,9 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
         let probes: Vec<Vec<u32>> = baskets.iter().take(4).cloned().collect();
         let top_k = s.top_k;
         let min_confidence = s.min_confidence;
+        let refresh_router = router.clone();
+        let refresh_fstore = fabric_store.clone();
+        let n_shards = cfg.fabric.shards;
         let mut moved_db = std::mem::take(&mut db);
         Some(std::thread::spawn(move || {
             let mut all = Vec::new();
@@ -578,6 +670,23 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
                     Ok(out) => out,
                     Err(e) => return (Err(e.to_string()), moved_db),
                 };
+                // Fabric: prepare the next generation's shard replicas on
+                // disk first (two-phase, skipping down replicas — refresh
+                // fails over without dropping a generation), then flip
+                // the in-memory cut; queries never see a mixed cut.
+                if let Some(router) = &refresh_router {
+                    let next = Arc::new(shard_index(&cell.load(), n_shards));
+                    if let Some(fs) = &refresh_fstore {
+                        let up = |shard: usize, replica: usize| {
+                            !router.is_node_down(router.placement().replicas_of(shard)[replica])
+                        };
+                        if let Err(e) = fs.publish_partial(&next, st.generation, &up) {
+                            return (Err(e.to_string()), moved_db);
+                        }
+                    }
+                    let flipped = router.cut().store(next);
+                    debug_assert_eq!(flipped, st.generation);
+                }
                 // Checked for real: the refresher is the only publisher,
                 // so every probe answer attributes to the generation just
                 // swapped in and must be byte-identical to the direct
@@ -616,7 +725,15 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
 
     let t0 = Instant::now();
     let mut checked = 0u64;
-    for basket in &baskets {
+    for (i, basket) in baskets.iter().enumerate() {
+        // Mid-run fault injection: kill one node and keep querying —
+        // every shard on it fails over to a surviving replica.
+        if i == queries / 2 {
+            if let (Some(router), Some(n)) = (&router, kill_node) {
+                router.set_node_down(n);
+                println!("fabric: killed node {n} after {i} queries");
+            }
+        }
         match server.query(basket, s.top_k) {
             Ok(resp) => {
                 if let Some(direct) = &direct {
@@ -680,6 +797,28 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
         stats.deadline_shed,
     );
     println!("latency p50 {p50:?} | p95 {p95:?} | p99 {p99:?}");
+    if stats.unavailable > 0 {
+        return Err(format!(
+            "{} queries found a shard with no live replica (availability broken)",
+            stats.unavailable
+        ));
+    }
+    if let Some(router) = &router {
+        let rs = router.stats();
+        let (mp50, mp95, mp99) = rs.merged_p50_p95_p99;
+        println!(
+            "fabric: {} scatter-gather queries, {} failovers, {} hedges fired ({} won); \
+             simulated merge p50 {mp50:?} | p95 {mp95:?} | p99 {mp99:?}",
+            rs.queries, rs.failovers, rs.hedges_fired, rs.hedge_wins,
+        );
+        if let Some(fs) = &fabric_store {
+            println!(
+                "fabric store {}: generation(s) {:?} retained",
+                fs.dir().display(),
+                fs.scan_generations(),
+            );
+        }
+    }
     if stats.internal_served + stats.internal_rejected + stats.internal_deadline_shed > 0 {
         println!(
             "internal lane: {} probe answers, shed {} (overflow) + {} (deadline) — \
@@ -731,6 +870,22 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
             if a != b {
                 return Err(format!("final-state mismatch for basket {basket:?}"));
             }
+        }
+        // With the fabric up the scatter-gather path itself must match
+        // too — even with the killed node still down (failover answers).
+        if let Some(router) = &router {
+            for basket in &baskets {
+                let routed = router.route(basket, s.top_k).map_err(|e| e.to_string())?;
+                let want = render_lines(&rebuilt.recommend(basket, s.top_k));
+                if render_lines(&routed.recommendations) != want {
+                    return Err(format!("fabric final-state mismatch for basket {basket:?}"));
+                }
+            }
+            println!(
+                "final-state check: fabric scatter-gather answers byte-identical \
+                 across {} baskets",
+                baskets.len(),
+            );
         }
         println!(
             "final-state check: served snapshot ({} itemsets, {} rules) byte-identical \
@@ -929,6 +1084,25 @@ mod tests {
     }
 
     #[test]
+    fn fabric_flags_apply_and_validate() {
+        let f = flags(&["--shards", "4", "--replicas", "3", "--hedge-ms", "2"]).unwrap();
+        let cfg = experiment_config(&f).unwrap();
+        assert_eq!(cfg.fabric.shards, 4);
+        assert_eq!(cfg.fabric.replicas, 3);
+        assert_eq!(cfg.fabric.hedge_ms, 2);
+        assert!(cfg.fabric.enabled());
+        // --shards 0 is explicit "fabric off", not an error
+        let f = flags(&["--shards", "0"]).unwrap();
+        assert!(!experiment_config(&f).unwrap().fabric.enabled());
+        // defaults: off
+        assert!(!experiment_config(&flags(&[]).unwrap()).unwrap().fabric.enabled());
+        for bad in [["--replicas", "0"], ["--shards", "many"], ["--hedge-ms", "-1"]] {
+            let f = flags(&bad).unwrap();
+            assert!(experiment_config(&f).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
     fn experiment_config_rejects_bad_values() {
         let f = flags(&["--engine", "gpu"]).unwrap();
         assert!(experiment_config(&f).is_err());
@@ -945,6 +1119,7 @@ mod tests {
             "standalone_baseline.toml",
             "serve_smoke.toml",
             "store_smoke.toml",
+            "fabric_smoke.toml",
         ] {
             let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
                 .join("configs")

@@ -123,6 +123,19 @@ impl HistogramSnapshot {
     pub fn p50_p95_p99(&self) -> (Duration, Duration, Duration) {
         (self.quantile(0.50), self.quantile(0.95), self.quantile(0.99))
     }
+
+    /// Combine two snapshots by per-bucket addition — the scatter-gather
+    /// aggregation: per-shard histograms merge into one fabric-level
+    /// distribution without double-counting, because each observation
+    /// lives in exactly one source snapshot's bucket. Saturating so two
+    /// adversarial snapshots can't wrap a count.
+    pub fn merge(&self, other: &HistogramSnapshot) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].saturating_add(other.buckets[i])
+            }),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -188,6 +201,43 @@ mod tests {
         assert_eq!(phase2.count(), 100);
         // phase 2 saw only the slow requests
         assert!(phase2.quantile(0.5) >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn merge_combines_two_known_distributions() {
+        // Shard A saw 200 fast requests, shard B 100 slow ones; the merge
+        // must hold all 300 with quantiles of the combined stream.
+        let a = LatencyHistogram::new();
+        for _ in 0..200 {
+            a.record(Duration::from_micros(10));
+        }
+        let b = LatencyHistogram::new();
+        for _ in 0..100 {
+            b.record(Duration::from_millis(10));
+        }
+        let (sa, sb) = (a.snapshot(), b.snapshot());
+        let merged = sa.merge(&sb);
+        assert_eq!(merged.count(), 300);
+        // p50 falls in the fast mode (2/3 of mass), p95 in the slow mode.
+        assert!(merged.quantile(0.5) < Duration::from_millis(1));
+        assert!(merged.quantile(0.95) >= Duration::from_millis(10));
+        // Merging is commutative and the oracle agrees: one histogram
+        // fed both streams bucket-equals the merge of the two.
+        let both = LatencyHistogram::new();
+        for _ in 0..200 {
+            both.record(Duration::from_micros(10));
+        }
+        for _ in 0..100 {
+            both.record(Duration::from_millis(10));
+        }
+        let oracle = both.snapshot();
+        for q in [0.1, 0.5, 0.9, 0.95, 0.99] {
+            assert_eq!(merged.quantile(q), oracle.quantile(q), "q={q}");
+            assert_eq!(merged.quantile(q), sb.merge(&sa).quantile(q), "q={q}");
+        }
+        // No double-counting: merging with an empty snapshot is identity.
+        let empty = LatencyHistogram::new().snapshot();
+        assert_eq!(merged.merge(&empty).count(), 300);
     }
 
     #[test]

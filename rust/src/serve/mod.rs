@@ -13,7 +13,9 @@
 //!   without readers ever blocking;
 //! * [`server`] — [`server::RuleServer`], a worker pool over a bounded
 //!   admission-controlled queue, recording per-request latency into the
-//!   `metrics` p50/p95/p99 histogram;
+//!   `metrics` p50/p95/p99 histogram; its [`server::Backend`] picks the
+//!   answer path: the local index, or the sharded [`crate::fabric`]
+//!   (scatter-gather with replica failover);
 //! * [`refresh`] — [`refresh::Refresher`], the micro-batch loop:
 //!   append delta transactions, re-mine in the background through the
 //!   Map/Reduce driver, rebuild the index, hot-swap it in.

@@ -24,6 +24,7 @@ use std::time::Instant;
 
 use crate::apriori::rules::Rule;
 use crate::data::ItemId;
+use crate::fabric::QueryRouter;
 use crate::metrics::histogram::{HistogramSnapshot, LatencyHistogram};
 
 use super::index::{render_lines, RuleIndex};
@@ -41,6 +42,10 @@ pub enum ServeError {
     Closed,
     /// The worker disappeared before replying (it panicked).
     Lost,
+    /// Fabric backend only: a shard had no live replica, so a complete
+    /// (byte-identical) answer was impossible. A partial answer is never
+    /// returned.
+    Unavailable,
 }
 
 impl std::fmt::Display for ServeError {
@@ -50,6 +55,7 @@ impl std::fmt::Display for ServeError {
             Self::DeadlineExceeded => write!(f, "request shed: deadline exceeded in queue"),
             Self::Closed => write!(f, "server is shut down"),
             Self::Lost => write!(f, "worker dropped the request"),
+            Self::Unavailable => write!(f, "a shard has no live replica"),
         }
     }
 }
@@ -258,6 +264,9 @@ pub struct ServerStats {
     pub internal_rejected: u64,
     /// Internal deadline sheds.
     pub internal_deadline_shed: u64,
+    /// Fabric backend only: queries refused because a shard lost every
+    /// replica. Always 0 on the local backend.
+    pub unavailable: u64,
     pub latency: HistogramSnapshot,
 }
 
@@ -269,8 +278,41 @@ struct Job {
     reply: mpsc::Sender<Result<QueryResponse, ServeError>>,
 }
 
+/// What answers a query: the classic single-process index, or the
+/// sharded serving fabric (scatter-gather with replica failover). Both
+/// produce byte-identical answers per generation; only cost, capacity,
+/// and failure modes differ.
+#[derive(Debug, Clone)]
+pub enum Backend {
+    /// One in-process `RuleIndex` behind a hot-swap cell.
+    Local(Arc<SnapshotCell<RuleIndex>>),
+    /// The sharded fabric: `QueryRouter` scatter-gather.
+    Fabric(Arc<QueryRouter>),
+}
+
+impl Backend {
+    fn answer(&self, basket: &[ItemId], top_k: usize) -> Result<QueryResponse, ServeError> {
+        match self {
+            Self::Local(cell) => {
+                let (index, generation) = cell.load_with_generation();
+                Ok(QueryResponse {
+                    generation,
+                    recommendations: index.recommend(basket, top_k),
+                })
+            }
+            Self::Fabric(router) => match router.route(basket, top_k) {
+                Ok(routed) => Ok(QueryResponse {
+                    generation: routed.generation,
+                    recommendations: routed.recommendations,
+                }),
+                Err(_) => Err(ServeError::Unavailable),
+            },
+        }
+    }
+}
+
 struct ServerInner {
-    snapshot: Arc<SnapshotCell<RuleIndex>>,
+    backend: Backend,
     queue: BoundedQueue<Job>,
     deadline: Option<std::time::Duration>,
     served: AtomicU64,
@@ -279,6 +321,9 @@ struct ServerInner {
     internal_served: AtomicU64,
     internal_rejected: AtomicU64,
     internal_deadline_shed: AtomicU64,
+    /// Fabric backend only: queries refused because a shard had no live
+    /// replica (never answered partially).
+    unavailable: AtomicU64,
     latency: LatencyHistogram,
 }
 
@@ -290,11 +335,17 @@ pub struct RuleServer {
 }
 
 impl RuleServer {
-    /// Spawn the worker pool.
+    /// Spawn the worker pool over the classic single-index backend.
     pub fn start(snapshot: Arc<SnapshotCell<RuleIndex>>, opts: ServeOptions) -> Self {
+        Self::start_with_backend(Backend::Local(snapshot), opts)
+    }
+
+    /// Spawn the worker pool over an explicit backend (local index or
+    /// the sharded fabric).
+    pub fn start_with_backend(backend: Backend, opts: ServeOptions) -> Self {
         assert!(opts.workers > 0, "need at least one worker");
         let inner = Arc::new(ServerInner {
-            snapshot,
+            backend,
             queue: BoundedQueue::with_lanes(opts.queue_depth, opts.internal_queue_depth),
             deadline: opts.deadline,
             served: AtomicU64::new(0),
@@ -303,6 +354,7 @@ impl RuleServer {
             internal_served: AtomicU64::new(0),
             internal_rejected: AtomicU64::new(0),
             internal_deadline_shed: AtomicU64::new(0),
+            unavailable: AtomicU64::new(0),
             latency: LatencyHistogram::new(),
         });
         let workers = (0..opts.workers)
@@ -372,6 +424,7 @@ impl RuleServer {
             internal_served: self.inner.internal_served.load(Ordering::Relaxed),
             internal_rejected: self.inner.internal_rejected.load(Ordering::Relaxed),
             internal_deadline_shed: self.inner.internal_deadline_shed.load(Ordering::Relaxed),
+            unavailable: self.inner.unavailable.load(Ordering::Relaxed),
             latency: self.inner.latency.snapshot(),
         }
     }
@@ -416,23 +469,30 @@ fn worker_loop(inner: &ServerInner) {
                 continue;
             }
         }
-        // One Arc clone per request; a concurrent refresh never blocks
-        // this (SnapshotCell's critical section is the clone itself).
-        let (index, generation) = inner.snapshot.load_with_generation();
-        let recommendations = index.recommend(&job.basket, job.top_k);
-        match job.class {
-            QueryClass::User => {
-                // Only user answers feed the histogram: the tails are
-                // the user-facing SLO, not background probe latency.
-                inner.latency.record(job.enqueued.elapsed());
-                inner.served.fetch_add(1, Ordering::Relaxed);
+        // One snapshot/cut load per request; a concurrent refresh never
+        // blocks this (SnapshotCell's critical section is an Arc clone,
+        // and the fabric router loads its cut the same way).
+        match inner.backend.answer(&job.basket, job.top_k) {
+            Ok(response) => {
+                match job.class {
+                    QueryClass::User => {
+                        // Only user answers feed the histogram: the tails
+                        // are the user-facing SLO, not probe latency.
+                        inner.latency.record(job.enqueued.elapsed());
+                        inner.served.fetch_add(1, Ordering::Relaxed);
+                    }
+                    QueryClass::Internal => {
+                        inner.internal_served.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                // A dropped ticket means the client stopped waiting.
+                let _ = job.reply.send(Ok(response));
             }
-            QueryClass::Internal => {
-                inner.internal_served.fetch_add(1, Ordering::Relaxed);
+            Err(e) => {
+                inner.unavailable.fetch_add(1, Ordering::Relaxed);
+                let _ = job.reply.send(Err(e));
             }
         }
-        // A dropped ticket just means the client stopped waiting.
-        let _ = job.reply.send(Ok(QueryResponse { generation, recommendations }));
     }
 }
 
@@ -695,6 +755,50 @@ mod tests {
         assert_eq!(stats.deadline_shed, 0);
         assert_eq!(stats.served, 0);
         assert_eq!(stats.latency.count(), 0);
+    }
+
+    #[test]
+    fn fabric_backend_serves_identically_and_survives_a_replica_kill() {
+        use crate::cluster::ClusterConfig;
+        use crate::fabric::{FabricPlacement, QueryRouter, ShardedRuleIndex};
+
+        let result = ClassicalApriori::default().mine(
+            &textbook_db(),
+            &AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 },
+        );
+        let rules = generate_rules(&result, 0.3);
+        let cut = ShardedRuleIndex::build(&result, 0.3, 3);
+        let cluster = ClusterConfig::fhssc(4);
+        let bytes: Vec<u64> = cut.shard_rule_counts().iter().map(|&n| 56 * n + 16).collect();
+        let placement = FabricPlacement::place(&cluster, 2, &bytes).unwrap();
+        let router = Arc::new(QueryRouter::new(
+            Arc::new(SnapshotCell::new(Arc::new(cut))),
+            placement,
+            &cluster,
+            5,
+        ));
+        let server = RuleServer::start_with_backend(
+            Backend::Fabric(Arc::clone(&router)),
+            ServeOptions::default(),
+        );
+        let basket = vec![0u32, 1];
+        let before = server.query(&basket, 5).unwrap();
+        assert_eq!(
+            before.render(),
+            render_lines(&reference_recommend(&rules, &basket, 5))
+        );
+        // kill one node: every query still gets the identical answer
+        router.set_node_down(0);
+        let after = server.query(&basket, 5).unwrap();
+        assert_eq!(after.render(), before.render());
+        // kill everything: Unavailable, never a partial answer
+        for n in 0..4 {
+            router.set_node_down(n);
+        }
+        assert_eq!(server.query(&basket, 5), Err(ServeError::Unavailable));
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 2);
+        assert_eq!(stats.unavailable, 1);
     }
 
     #[test]

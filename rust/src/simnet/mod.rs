@@ -53,6 +53,15 @@ impl SwitchConfig {
     }
 }
 
+/// Payloads of at most one Ethernet MTU ride the small-payload fast
+/// path in [`Network::transfer_secs`]: a single frame is never
+/// fair-shared mid-flight, so it is charged the uncontended line rate
+/// instead of a contention-divided share. This keeps per-query costing
+/// (a basket out, a top-k answer back) latency-dominated and strictly
+/// positive rather than underflowing toward zero under heavy `active`
+/// counts.
+pub const SMALL_PAYLOAD_BYTES: u64 = 1500;
+
 /// A point-to-point transfer request.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Flow {
@@ -126,13 +135,23 @@ impl Network {
         mbps
     }
 
-    /// Transfer time in seconds under the given concurrency.
+    /// Transfer time in seconds under the given concurrency. Payloads of
+    /// at most [`SMALL_PAYLOAD_BYTES`] (one MTU — a single frame) skip
+    /// the fair-sharing model and serialize at the uncontended line
+    /// rate: a lone frame occupies the wire for its full serialization
+    /// time no matter how many other flows are active, so dividing its
+    /// bandwidth by `active` would both understate nothing and let the
+    /// cost of a per-query RPC collapse toward zero.
     pub fn transfer_secs(&self, f: &Flow, fanout: usize, fanin: usize, active: usize) -> f64 {
-        let mbps = self.flow_mbps(f, fanout, fanin, active);
         let latency = self.switch.latency_ms / 1000.0;
         if f.bytes == 0 {
             return latency;
         }
+        let mbps = if f.bytes <= SMALL_PAYLOAD_BYTES {
+            self.flow_mbps(f, 1, 1, 1)
+        } else {
+            self.flow_mbps(f, fanout, fanin, active)
+        };
         latency + (f.bytes as f64 * 8.0) / (mbps * 1_000_000.0)
     }
 
@@ -234,6 +253,72 @@ mod tests {
     #[should_panic(expected = "square")]
     fn shuffle_matrix_must_be_square() {
         gige(2).shuffle_makespan(&[vec![0, 1], vec![2]]);
+    }
+
+    #[test]
+    fn flow_mbps_pins_same_rack_and_inter_rack_rates() {
+        // 4 GigE nodes, 2 racks, 200 Mbit uplink. Same-rack flow gets the
+        // full port rate; the cross-rack flow is pinned to the uplink.
+        let net = gige(4).with_racks(vec![0, 0, 1, 1], 200.0);
+        let intra = Flow { src: 0, dst: 1, bytes: 1 };
+        let inter = Flow { src: 0, dst: 2, bytes: 1 };
+        assert_eq!(net.flow_mbps(&intra, 1, 1, 1), 1000.0);
+        assert_eq!(net.flow_mbps(&inter, 1, 1, 1), 200.0);
+        // With 4 active flows the uplink is split four ways; the
+        // same-rack flow only pays its backplane share (not binding).
+        assert_eq!(net.flow_mbps(&inter, 1, 1, 4), 50.0);
+        assert_eq!(net.flow_mbps(&intra, 1, 1, 4), 1000.0);
+    }
+
+    #[test]
+    fn flow_mbps_pins_oversubscription_division() {
+        // managed_gige: 1000 Mbit ports, 16 Gbit backplane. 32 active
+        // flows oversubscribe the backplane: each gets 16000/32 = 500.
+        let net = gige(4);
+        let f = Flow { src: 0, dst: 1, bytes: 1 };
+        assert_eq!(net.flow_mbps(&f, 1, 1, 32), 500.0);
+        // fanout/fanin split the NICs: 4-way fanout = 250 Mbit.
+        assert_eq!(net.flow_mbps(&f, 4, 1, 1), 250.0);
+        assert_eq!(net.flow_mbps(&f, 1, 8, 1), 125.0);
+        // The binding constraint is the minimum of all shares.
+        assert_eq!(net.flow_mbps(&f, 4, 8, 32), 125.0);
+    }
+
+    #[test]
+    fn shuffle_makespan_oversubscribed_uplink_case() {
+        // All-to-all over 2 racks: 12 flows active, 8 of them cross-rack
+        // on a 400 Mbit uplink shared 12 ways (33.3 Mbit each) — far
+        // slower than the flat topology's fanin-limited share.
+        let flat = gige(4);
+        let racked = gige(4).with_racks(vec![0, 0, 1, 1], 400.0);
+        let bytes = 10_000_000u64;
+        let mut m = vec![vec![bytes; 4]; 4];
+        for (i, row) in m.iter_mut().enumerate() {
+            row[i] = 0;
+        }
+        let t_flat = flat.shuffle_makespan(&m);
+        let t_racked = racked.shuffle_makespan(&m);
+        // Flat: slowest flow sees min(1000, 1000/3 fanout, 1000/3 fanin,
+        // 16000/12 backplane) = 333.3 Mbit -> 0.24s + latency.
+        assert!((t_flat - (0.0003 + bytes as f64 * 8.0 / (1000.0 / 3.0 * 1e6))).abs() < 1e-3);
+        // Racked: cross-rack flows pinned to 400/12 = 33.3 Mbit -> 2.4s.
+        assert!((t_racked - (0.0003 + bytes as f64 * 8.0 / (400.0 / 12.0 * 1e6))).abs() < 1e-2);
+        assert!(t_racked > t_flat * 6.0);
+    }
+
+    #[test]
+    fn small_payloads_charge_uncontended_line_rate() {
+        let net = gige(4);
+        let small = Flow { src: 0, dst: 1, bytes: SMALL_PAYLOAD_BYTES };
+        // Heavy contention must not change a single-frame transfer...
+        let alone = net.transfer_secs(&small, 1, 1, 1);
+        let contended = net.transfer_secs(&small, 8, 8, 64);
+        assert_eq!(alone, contended);
+        // ...and the cost stays strictly above the bare latency.
+        assert!(alone > net.switch.latency_ms / 1000.0);
+        // One byte past the MTU pays the fair-shared rate again.
+        let big = Flow { src: 0, dst: 1, bytes: SMALL_PAYLOAD_BYTES + 1 };
+        assert!(net.transfer_secs(&big, 8, 8, 64) > net.transfer_secs(&big, 1, 1, 1));
     }
 
     #[test]

@@ -29,7 +29,7 @@ use crate::data::{ItemId, Transaction, TransactionDb};
 use crate::incremental::{LevelState, MinedState};
 use crate::serve::index::RuleIndex;
 
-use super::{BaseRef, Manifest, Snapshot, SnapshotRef};
+use super::{BaseRef, FabricManifest, Manifest, Snapshot, SnapshotRef};
 
 /// File magic: "MR Apriori Snapshot".
 pub const MAGIC: [u8; 4] = *b"MRAS";
@@ -46,6 +46,7 @@ pub const TAG_RULE_INDEX: u8 = 3;
 pub const TAG_DELTA: u8 = 4;
 pub const TAG_SNAPSHOT: u8 = 5;
 pub const TAG_MANIFEST: u8 = 6;
+pub const TAG_FABRIC_MANIFEST: u8 = 7;
 
 /// Why a buffer failed to decode. Every variant is a detected corruption
 /// (or a wrong-file mistake); none of them can escape as a panic.
@@ -591,6 +592,34 @@ pub fn decode_manifest(bytes: &[u8]) -> Result<Manifest, CodecError> {
     Ok(Manifest { live, retained })
 }
 
+/// Encode the serving fabric's cross-shard cut manifest — the frame whose
+/// atomic flip publishes a generation across every shard at once.
+pub fn encode_fabric_manifest(m: &FabricManifest) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u64(&mut buf, m.generation);
+    put_u64(&mut buf, m.n_shards as u64);
+    put_u64(&mut buf, m.replicas as u64);
+    put_u64(&mut buf, m.shard_rules.len() as u64);
+    for &n in &m.shard_rules {
+        put_u64(&mut buf, n);
+    }
+    frame(TAG_FABRIC_MANIFEST, buf)
+}
+
+pub fn decode_fabric_manifest(bytes: &[u8]) -> Result<FabricManifest, CodecError> {
+    let mut r = Reader::new(unframe(TAG_FABRIC_MANIFEST, bytes)?);
+    let generation = r.u64()?;
+    let n_shards = r.usize()?;
+    let replicas = r.usize()?;
+    let n = r.seq_len(8)?;
+    let mut shard_rules = Vec::with_capacity(n);
+    for _ in 0..n {
+        shard_rules.push(r.u64()?);
+    }
+    r.done()?;
+    Ok(FabricManifest { generation, n_shards, replicas, shard_rules })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -667,6 +696,34 @@ mod tests {
         assert_eq!(decode_delta(&encode_delta(&delta)).unwrap(), delta);
         let m = Manifest { live: 7, retained: vec![5, 6, 7] };
         assert_eq!(decode_manifest(&encode_manifest(&m)).unwrap(), m);
+    }
+
+    #[test]
+    fn fabric_manifest_roundtrip_and_corruption_rejected() {
+        let m = FabricManifest {
+            generation: 42,
+            n_shards: 4,
+            replicas: 2,
+            shard_rules: vec![10, 0, 7, 3],
+        };
+        let bytes = encode_fabric_manifest(&m);
+        assert_eq!(decode_fabric_manifest(&bytes).unwrap(), m);
+        // the fabric manifest is its own frame type, not the store manifest
+        assert!(matches!(
+            decode_manifest(&bytes),
+            Err(CodecError::WrongTag { want: TAG_MANIFEST, got: TAG_FABRIC_MANIFEST })
+        ));
+        assert!(matches!(
+            decode_fabric_manifest(&encode_manifest(&Manifest { live: 1, retained: vec![1] })),
+            Err(CodecError::WrongTag { want: TAG_FABRIC_MANIFEST, got: TAG_MANIFEST })
+        ));
+        // any payload bit flip fails the checksum; a torn tail truncates
+        for i in HEADER_LEN..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x04;
+            assert!(decode_fabric_manifest(&bad).is_err(), "flip at {i} accepted");
+        }
+        assert!(decode_fabric_manifest(&bytes[..bytes.len() - 3]).is_err());
     }
 
     #[test]

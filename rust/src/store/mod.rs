@@ -121,6 +121,25 @@ pub struct Manifest {
     pub retained: Vec<u64>,
 }
 
+/// The serving fabric's cross-shard cut: the single frame whose atomic
+/// flip is phase two of the fabric publish. Phase one prepares every
+/// shard's replica files at `generation`; only once they are all durable
+/// does this manifest commit (write-temp → fsync → atomic rename), so a
+/// crash at any point leaves readers on the previous complete cut —
+/// never a mix of generations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FabricManifest {
+    /// Generation every shard of this cut was prepared at.
+    pub generation: u64,
+    /// Shard count the cut was built with (the antecedent-hash modulus).
+    pub n_shards: usize,
+    /// Replicas per shard the prepare phase targeted.
+    pub replicas: usize,
+    /// Rule count per shard — a cheap cross-check that a shard file
+    /// decoded for this cut actually belongs to it.
+    pub shard_rules: Vec<u64>,
+}
+
 /// Borrowed view of one generation, as handed to
 /// [`SnapshotStore::publish`] — the writer never needs to clone the index
 /// or the mined state it is about to serve.

@@ -504,6 +504,75 @@ fn corrupted_newest_generation_degrades_and_still_converges() {
     assert_eq!(render_corpus(&resumed.cell.load(), 99), reference[2]);
 }
 
+// ----------------------------------------------- fabric store regression
+
+/// Fingerprint a sharded cut against a fixed basket corpus.
+fn render_cut(cut: &ShardedRuleIndex, seed: u64) -> Vec<String> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..30)
+        .map(|_| {
+            let len = rng.range_usize(1, 5);
+            let basket: Vec<u32> = (0..len).map(|_| rng.gen_range(14) as u32).collect();
+            render_lines(&cut.recommend(&basket, 5))
+        })
+        .collect()
+}
+
+fn corrupt_mid_byte(path: &std::path::Path) {
+    let mut bytes = std::fs::read(path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(path, &bytes).unwrap();
+}
+
+#[test]
+fn torn_fabric_manifest_degrades_to_the_last_complete_cut_never_mixed() {
+    // planted {0,1,2} block guarantees rules exist; the extra {0,1,3}
+    // delta in generation 2 shifts supports and |D| (so lifts), making
+    // the two cuts distinguishable by render
+    let mut db1 = base_db();
+    db1.append((0..12).map(|_| Transaction::new([0u32, 1, 2])).collect::<Vec<_>>());
+    let mut db2 = db1.clone();
+    db2.append((0..12).map(|_| Transaction::new([0u32, 1, 3])).collect::<Vec<_>>());
+    let result1 = ClassicalApriori::default().mine(&db1, &cfg());
+    let result2 = ClassicalApriori::default().mine(&db2, &cfg());
+    let cut1 = ShardedRuleIndex::build(&result1, MIN_CONF, 3);
+    let cut2 = ShardedRuleIndex::build(&result2, MIN_CONF, 3);
+
+    // the cuts must be distinguishable for "never mixed" to mean anything
+    assert_ne!(render_cut(&cut1, 0xFA_B), render_cut(&cut2, 0xFA_B));
+
+    let tmp = TempDir::new("fabric_torn");
+    let store = FabricStore::open(tmp.path(), 3, 2).unwrap().with_retain(8);
+    store.publish(&cut1, 1).unwrap();
+    store.publish(&cut2, 2).unwrap();
+
+    // tear the manifest mid-byte: it must read as absent (typed codec
+    // rejection), and recovery falls back to scanning shard files —
+    // generation 2 is still complete, so it loads whole
+    corrupt_mid_byte(&tmp.path().join("FABRIC"));
+    assert!(store.load_manifest().is_none(), "a torn manifest must not decode");
+    let (m, cut) = store.load_cut().expect("generation 2 is complete on disk");
+    assert_eq!(m.generation, 2);
+    assert_eq!(render_cut(&cut, 0xFA_B), render_cut(&cut2, 0xFA_B));
+
+    // one corrupt replica of a gen-2 shard changes nothing: the loader
+    // skips to the intact replica
+    corrupt_mid_byte(&tmp.path().join("shard-1-r0-gen-2.shard"));
+    let (m, cut) = store.load_cut().expect("replica 1 of shard 1 is intact");
+    assert_eq!(m.generation, 2);
+    assert_eq!(render_cut(&cut, 0xFA_B), render_cut(&cut2, 0xFA_B));
+
+    // ...but once *every* replica of that shard is gone, generation 2 is
+    // incomplete and the whole cut degrades to generation 1 — shards 0
+    // and 2 of generation 2 are perfectly intact and must NOT be mixed
+    // into the older cut
+    corrupt_mid_byte(&tmp.path().join("shard-1-r1-gen-2.shard"));
+    let (m, cut) = store.load_cut().expect("generation 1 is complete on disk");
+    assert_eq!(m.generation, 1);
+    assert_eq!(render_cut(&cut, 0xFA_B), render_cut(&cut1, 0xFA_B));
+}
+
 #[test]
 fn full_mode_warm_restart_resumes_serving_without_state() {
     // Persistence is not incremental-only: a full-mode refresher's
