@@ -1,0 +1,131 @@
+//! Ablation: what does observability cost?
+//!
+//! The tracing/metrics design claim (DESIGN.md §Observability) is that a
+//! fully instrumented mine — span tree, Hadoop-style task counters, the
+//! metrics registry — stays within a 5% wall-clock budget of the
+//! uninstrumented path, because the off path is one `Option` branch and
+//! the on path only appends to thread-local span buffers plus relaxed
+//! atomics. This bench measures both configurations over repeated runs,
+//! asserts the budget *and* that instrumentation is output-invariant
+//! (byte-identical frequent itemsets), and emits `BENCH_obs.json`
+//! (directory override: `BENCH_OUT_DIR`) for the perf-trajectory gate.
+//!
+//! The table reports median and p95 per configuration — the tail column
+//! exists so a tracing overhead that only bites the slowest runs (lock
+//! contention on the sink, say) still shows up.
+
+use std::sync::Arc;
+
+use mr_apriori::metrics::{measure, Summary};
+use mr_apriori::prelude::*;
+use mr_apriori::util::json::Json;
+
+const WARMUP: usize = 1;
+const RUNS: usize = 7;
+const OVERHEAD_BUDGET: f64 = 1.05;
+
+fn driver(apriori: &AprioriConfig) -> MrApriori {
+    MrApriori::new(ClusterConfig::fhssc(3), apriori.clone())
+        .with_job(JobConfig { n_reducers: 3, ..Default::default() })
+        .with_split_tx(500)
+}
+
+fn main() {
+    println!("== Ablation: tracing + metrics overhead on the mining path ==\n");
+    let db = QuestGenerator::new(QuestParams::t10_i4(4_000)).generate();
+    let apriori = AprioriConfig { min_support: 0.02, max_k: 3 };
+
+    // output-invariance first: instrumentation must not change the answer
+    let want = driver(&apriori).mine(&db).expect("plain mine");
+    let sink = TraceSink::new();
+    let registry = Arc::new(MetricsRegistry::new());
+    let got = driver(&apriori)
+        .with_trace(Some(TraceCtx::root(Arc::clone(&sink))))
+        .with_registry(Arc::clone(&registry))
+        .mine(&db)
+        .expect("instrumented mine");
+    let byte_identical = got.result.frequent == want.result.frequent;
+    assert!(byte_identical, "instrumentation changed the mining output");
+    let n_trace_events = sink.len();
+    assert!(n_trace_events > 0, "instrumented mine recorded no spans");
+
+    let plain = measure(WARMUP, RUNS, || {
+        driver(&apriori).mine(&db).expect("plain mine");
+    });
+    // a fresh sink per iteration: steady-state recording cost, not the
+    // cost of growing one giant buffer across runs
+    let traced = measure(WARMUP, RUNS, || {
+        let sink = TraceSink::new();
+        driver(&apriori)
+            .with_trace(Some(TraceCtx::root(sink)))
+            .with_registry(Arc::new(MetricsRegistry::new()))
+            .mine(&db)
+            .expect("instrumented mine");
+    });
+
+    let overhead = traced.median / plain.median.max(1e-9);
+    let under_budget = overhead < OVERHEAD_BUDGET;
+
+    println!("config | median(ms) | p95(ms) | mean(ms)");
+    for (name, s) in [("plain", &plain), ("traced", &traced)] {
+        println!(
+            "{:>6} | {:>10.1} | {:>7.1} | {:>8.1}",
+            name,
+            s.median * 1e3,
+            s.p95 * 1e3,
+            s.mean * 1e3
+        );
+    }
+    println!(
+        "\ntracing overhead: {:.2}% on the median ({} spans per run); budget {:.0}%",
+        (overhead - 1.0) * 100.0,
+        n_trace_events,
+        (OVERHEAD_BUDGET - 1.0) * 100.0,
+    );
+    assert!(
+        under_budget,
+        "tracing overhead {overhead:.3}x exceeds the {OVERHEAD_BUDGET}x budget"
+    );
+
+    let mut table = BenchTable::new(
+        "Ablation: observability overhead (T10.I4 4k, fhssc/3)",
+        "config",
+        vec![0.0, 1.0],
+    );
+    table.push_series(Series::new(
+        "median_ms",
+        vec![plain.median * 1e3, traced.median * 1e3],
+    ));
+    table.push_series(Series::new(
+        "p95_ms",
+        vec![plain.p95 * 1e3, traced.p95 * 1e3],
+    ));
+    table.emit();
+
+    let summary_json = |s: &Summary| {
+        Json::obj(vec![
+            ("n", Json::num(s.n as f64)),
+            ("median_ms", Json::num(s.median * 1e3)),
+            ("p95_ms", Json::num(s.p95 * 1e3)),
+            ("mean_ms", Json::num(s.mean * 1e3)),
+            ("min_ms", Json::num(s.min * 1e3)),
+            ("max_ms", Json::num(s.max * 1e3)),
+        ])
+    };
+    let doc = Json::obj(vec![
+        ("plain", summary_json(&plain)),
+        ("traced", summary_json(&traced)),
+        ("overhead_ratio", Json::num(overhead)),
+        (
+            "speedup_plain_vs_traced",
+            Json::num(plain.median / traced.median.max(1e-9)),
+        ),
+        ("overhead_under_budget", Json::Bool(under_budget)),
+        ("byte_identical", Json::Bool(byte_identical)),
+        ("n_trace_events", Json::num(n_trace_events as f64)),
+    ]);
+    let out_dir = std::env::var("BENCH_OUT_DIR").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&out_dir).join("BENCH_obs.json");
+    std::fs::write(&path, format!("{doc}\n")).expect("write BENCH_obs.json");
+    println!("\nwrote {}", path.display());
+}

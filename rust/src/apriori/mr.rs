@@ -181,6 +181,10 @@ impl<'e> MapReduceApp for CandidateCountApp<'e> {
         // k item ids (4B each) + 8B count; k≈3 typical
         20
     }
+
+    fn n_candidates(&self) -> usize {
+        self.candidates.len()
+    }
 }
 
 #[cfg(test)]

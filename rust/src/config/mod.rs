@@ -14,6 +14,7 @@ use crate::engine::EngineKind;
 use crate::fabric::FabricConfig;
 use crate::incremental::IncrementalConfig;
 use crate::mapreduce::JobConfig;
+use crate::obs::ObsConfig;
 use crate::serve::ServeConfig;
 use crate::store::StoreConfig;
 
@@ -66,6 +67,8 @@ pub struct ExperimentConfig {
     pub incremental: IncrementalConfig,
     /// Durable snapshot store (`[store]` section; `--store-dir`).
     pub store: StoreConfig,
+    /// Observability (`[obs]` section; `--log-level` / `--trace-out`).
+    pub obs: ObsConfig,
     /// Workload: transactions to generate (Quest T10.I4) when no input
     /// file is given.
     pub transactions: usize,
@@ -88,6 +91,7 @@ impl Default for ExperimentConfig {
             fabric: FabricConfig::default(),
             incremental: IncrementalConfig::default(),
             store: StoreConfig::default(),
+            obs: ObsConfig::default(),
             transactions: 10_000,
             seed: 0xACE5_2012,
         }
@@ -299,6 +303,9 @@ impl ExperimentConfig {
                     cfg.store.no_persist =
                         value.parse().map_err(|_| bad("want true|false"))?;
                 }
+                "obs.log_level" => {
+                    cfg.obs.log_level = value.parse().map_err(|e: String| bad(&e))?;
+                }
                 other => {
                     return Err(ConfigError::BadValue {
                         key: other.to_string(),
@@ -460,6 +467,22 @@ mod tests {
         assert!(ExperimentConfig::parse("[serve]\nmin_confidence = 1.5").is_err());
         assert!(ExperimentConfig::parse("[serve]\nrefresh_tx = 0").is_err());
         assert!(ExperimentConfig::parse("[serve]\nrefresh_batches = 0").is_ok());
+    }
+
+    #[test]
+    fn obs_section_parses_and_validates() {
+        use crate::obs::LogLevel;
+        let cfg = ExperimentConfig::parse("[obs]\nlog_level = debug").unwrap();
+        assert_eq!(cfg.obs.log_level, LogLevel::Debug);
+        let cfg = ExperimentConfig::parse("[obs]\nlog_level = \"warn\"").unwrap();
+        assert_eq!(cfg.obs.log_level, LogLevel::Warn);
+        // default holds when the section is absent
+        assert_eq!(ExperimentConfig::default().obs.log_level, LogLevel::Info);
+        let err = ExperimentConfig::parse("[obs]\nlog_level = loud").unwrap_err();
+        assert!(
+            matches!(err, ConfigError::BadValue { ref key, .. } if key == "obs.log_level"),
+            "got {err}"
+        );
     }
 
     #[test]

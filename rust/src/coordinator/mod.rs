@@ -33,6 +33,7 @@
 //!   passes and job setups. Both modes emit byte-identical frequent
 //!   itemsets (`tests/mr_invariants.rs` proves it property-style).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::apriori::mr::{CandidateCountApp, ItemCountApp};
@@ -46,6 +47,7 @@ use crate::mapreduce::app::MapReduceApp;
 use crate::mapreduce::{
     JobConfig, JobError, JobRunner, JobStats, SimJobSpec, SimMapTask, SimReport, Simulator,
 };
+use crate::obs::{MetricsRegistry, Span, TraceCtx};
 
 #[derive(Debug)]
 pub enum MineError {
@@ -201,6 +203,13 @@ pub struct MrApriori {
     /// driver schedules (level loops, delta Δ-scans, exact recounts). A
     /// generation bump per dataset view keeps stale indexes unservable.
     cache: IndexCache,
+    /// When set, every mine opens a root `mine` span under this context;
+    /// level jobs and their map/reduce tasks nest beneath it.
+    trace: Option<TraceCtx>,
+    /// When set, per-job metrics (`mr.job.{k}.map_ms`, `mr.jobs`,
+    /// `mr.shuffle.records`, ...) and the resident index-cache counters
+    /// are published here.
+    registry: Option<Arc<MetricsRegistry>>,
 }
 
 /// What a pipelined reduce lane hands back.
@@ -222,6 +231,8 @@ impl MrApriori {
             // / `with_engine` away.
             engine: crate::engine::build_engine(EngineKind::Vertical, None),
             cache: IndexCache::new(),
+            trace: None,
+            registry: None,
         }
     }
 
@@ -252,6 +263,37 @@ impl MrApriori {
         assert!(split_tx > 0);
         self.split_tx = split_tx;
         self
+    }
+
+    /// Attach (or detach) a tracing context. `None` — the default — is
+    /// the zero-cost off path: no spans are created anywhere.
+    pub fn with_trace(mut self, trace: Option<TraceCtx>) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// Publish this driver's metrics (per-job timings/counters plus the
+    /// resident index-cache hit/miss counters) to `registry`.
+    pub fn with_registry(mut self, registry: Arc<MetricsRegistry>) -> Self {
+        self.cache
+            .register_metrics(&registry, "engine.cache")
+            .expect("engine.cache metrics already registered");
+        self.registry = Some(registry);
+        self
+    }
+
+    /// Publish one finished counting job's headline numbers: last-value
+    /// gauges keyed per first-level-covered, cumulative run counters.
+    fn record_job_metrics(&self, k: usize, stats: &JobStats) {
+        let Some(reg) = &self.registry else { return };
+        reg.gauge(&format!("mr.job.{k}.map_ms")).set(stats.map_secs * 1e3);
+        reg.gauge(&format!("mr.job.{k}.reduce_ms"))
+            .set(stats.reduce_secs * 1e3);
+        reg.counter("mr.jobs").inc();
+        reg.counter("mr.shuffle.records")
+            .add(stats.shuffle_records as u64);
+        reg.counter("mr.output.records")
+            .add(stats.output_records as u64);
     }
 
     /// The counting engine map tasks run (the incremental delta jobs
@@ -357,7 +399,9 @@ impl MrApriori {
         let splits = plan_splits(db, self.split_tx);
         let mut dfs = Dfs::new(&self.cluster);
         let blocks = dfs.write_splits(&splits)?;
-        let runner = JobRunner::new(&self.cluster, &dfs, &blocks);
+        let mine_span = self.trace.as_ref().map(|ctx| mine_span(ctx, db, threshold, false));
+        let mine_ctx = mine_span.as_ref().map(|s| s.ctx());
+        let mut runner = JobRunner::new(&self.cluster, &dfs, &blocks);
         // One dataset view per mine: every level job (and its speculative
         // twins) reuses the same per-split index builds.
         let cache_gen = self.cache.begin_generation();
@@ -372,6 +416,8 @@ impl MrApriori {
 
         // ---- level 1 ----
         let app = ItemCountApp { threshold, capture_all: capture };
+        let span = mine_ctx.as_ref().map(|c| level_span(c, 1, db.n_items));
+        runner.trace = span.as_ref().map(|s| s.ctx());
         let lt0 = Instant::now();
         let (out, stats) = runner.run(&app, db, &splits, &self.job)?;
         let f1 = if capture {
@@ -386,6 +432,7 @@ impl MrApriori {
         } else {
             out
         };
+        close_level_span(span, f1.len(), &stats);
         push_level(
             &mut result,
             &mut profiles,
@@ -413,6 +460,8 @@ impl MrApriori {
                 CandidateCountApp::new(cands.clone(), self.engine.as_ref(), db.n_items, threshold);
             app.capture_all = capture;
             let app = self.attach_cache(app, cache_gen);
+            let span = mine_ctx.as_ref().map(|c| level_span(c, k, n_cands));
+            runner.trace = span.as_ref().map(|s| s.ctx());
             let lt0 = Instant::now();
             let (out, stats) = runner.run(&app, db, &splits, &self.job)?;
             let fk = if capture {
@@ -427,6 +476,7 @@ impl MrApriori {
             } else {
                 out
             };
+            close_level_span(span, fk.len(), &stats);
             push_level(
                 &mut result,
                 &mut profiles,
@@ -444,6 +494,12 @@ impl MrApriori {
             k += 1;
         }
         result.normalize();
+        if let Some(mut s) = mine_span {
+            s.add("levels", result.levels.len() as f64);
+        }
+        for (k, stats) in &jobs {
+            self.record_job_metrics(*k, stats);
+        }
 
         // Charge the cache's resident index bytes to the datanode fleet
         // (like `dfs::BlockStore` checkpoint blocks): residency must show
@@ -490,7 +546,11 @@ impl MrApriori {
         let avg_split_tx = avg_split(&splits);
         let mut dfs = Dfs::new(&self.cluster);
         let blocks = dfs.write_splits(&splits)?;
-        let runner = JobRunner::new(&self.cluster, &dfs, &blocks);
+        let mine_span = self.trace.as_ref().map(|ctx| mine_span(ctx, db, threshold, true));
+        let mut runner = JobRunner::new(&self.cluster, &dfs, &blocks);
+        // Levels overlap in the job DAG, so task spans attach directly to
+        // the mine root instead of per-level spans.
+        runner.trace = mine_span.as_ref().map(|s| s.ctx());
         let runner = &runner;
         // One dataset view for the whole job DAG: overlapping map waves of
         // successive jobs hit the same per-split index builds.
@@ -649,6 +709,12 @@ impl MrApriori {
         });
         outcome?;
         result.normalize();
+        if let Some(mut s) = mine_span {
+            s.add("levels", result.levels.len() as f64);
+        }
+        for (k, stats) in &jobs {
+            self.record_job_metrics(*k, stats);
+        }
 
         // Same residency charge as the synchronous loop: the cache's
         // index bytes count against datanode capacity.
@@ -832,6 +898,35 @@ fn zero_fill(cands: Vec<Itemset>, out: &[(Itemset, u64)]) -> Vec<(Itemset, u64)>
             (c, s)
         })
         .collect()
+}
+
+/// Open the root `mine` span (cat `mine`) for one driver run.
+fn mine_span(ctx: &TraceCtx, db: &TransactionDb, threshold: u64, pipelined: bool) -> Span {
+    let mut s = ctx.span("mine", "mine");
+    s.add("n_tx", db.len() as f64);
+    s.add("threshold", threshold as f64);
+    s.add("pipelined", if pipelined { 1.0 } else { 0.0 });
+    s
+}
+
+/// Open one level job's span (`level.{k}`, cat `mine`) under the mine
+/// root, stamped with the level's candidate count.
+fn level_span(ctx: &TraceCtx, k: usize, n_candidates: usize) -> Span {
+    let mut s = ctx.span("mine", format!("level.{k}"));
+    s.add("k", k as f64);
+    s.add("candidates", n_candidates as f64);
+    s
+}
+
+/// Annotate a finished level's span with the job's headline counters;
+/// the drop records it.
+fn close_level_span(span: Option<Span>, n_frequent: usize, stats: &JobStats) {
+    if let Some(mut s) = span {
+        s.add("frequent", n_frequent as f64);
+        s.add("map_ms", stats.map_secs * 1e3);
+        s.add("reduce_ms", stats.reduce_secs * 1e3);
+        s.add("shuffle_records", stats.shuffle_records as f64);
+    }
 }
 
 fn avg_split(splits: &[Split]) -> usize {

@@ -24,6 +24,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::metrics::Counter;
+use crate::obs::{MetricsRegistry, RegistryError};
 
 use super::VerticalIndex;
 
@@ -45,16 +46,30 @@ struct Inner {
 }
 
 /// The resident index cache. One per [`crate::coordinator::MrApriori`].
+/// The hit/miss counters live behind `Arc` so the same instruments can
+/// be registered with a [`MetricsRegistry`] — the cache keeps its
+/// wait-free increments, the registry snapshots the shared atomics.
 #[derive(Default)]
 pub struct IndexCache {
     inner: Mutex<Inner>,
-    hits: Counter,
-    misses: Counter,
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
 }
 
 impl IndexCache {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Register the cache's counters under `<prefix>.hits` /
+    /// `<prefix>.misses` (conventionally `engine.cache`).
+    pub fn register_metrics(
+        &self,
+        registry: &MetricsRegistry,
+        prefix: &str,
+    ) -> Result<(), RegistryError> {
+        registry.register_counter(&format!("{prefix}.hits"), Arc::clone(&self.hits))?;
+        registry.register_counter(&format!("{prefix}.misses"), Arc::clone(&self.misses))
     }
 
     /// Open a new generation: every entry of the previous one is dropped

@@ -19,7 +19,7 @@
 //!
 //! [`simnet`]: crate::simnet
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -27,6 +27,8 @@ use crate::apriori::rules::Rule;
 use crate::cluster::{ClusterConfig, NodeId};
 use crate::data::ItemId;
 use crate::metrics::histogram::{HistogramSnapshot, LatencyHistogram};
+use crate::metrics::Counter;
+use crate::obs::{MetricsRegistry, RegistryError, TraceCtx};
 use crate::serve::snapshot::SnapshotCell;
 use crate::simnet::{Flow, Network};
 
@@ -100,12 +102,15 @@ pub struct QueryRouter {
     /// Hedging off = pure primary-replica latency (the ablation's
     /// baseline arm). Failover is unaffected.
     hedging: bool,
-    shard_latency: Vec<LatencyHistogram>,
-    merged_latency: LatencyHistogram,
-    queries: AtomicU64,
-    failovers: AtomicU64,
-    hedges_fired: AtomicU64,
-    hedge_wins: AtomicU64,
+    // Instruments live behind `Arc` so the same atomics can be
+    // registered with a `MetricsRegistry` without an indirection on the
+    // hot path (see [`QueryRouter::register_metrics`]).
+    shard_latency: Vec<Arc<LatencyHistogram>>,
+    merged_latency: Arc<LatencyHistogram>,
+    queries: Arc<Counter>,
+    failovers: Arc<Counter>,
+    hedges_fired: Arc<Counter>,
+    hedge_wins: Arc<Counter>,
 }
 
 impl QueryRouter {
@@ -132,13 +137,39 @@ impl QueryRouter {
             node_down: (0..n_nodes).map(|_| AtomicBool::new(false)).collect(),
             hedge: Duration::from_millis(hedge_ms),
             hedging: true,
-            shard_latency: (0..n_shards).map(|_| LatencyHistogram::new()).collect(),
-            merged_latency: LatencyHistogram::new(),
-            queries: AtomicU64::new(0),
-            failovers: AtomicU64::new(0),
-            hedges_fired: AtomicU64::new(0),
-            hedge_wins: AtomicU64::new(0),
+            shard_latency: (0..n_shards)
+                .map(|_| Arc::new(LatencyHistogram::new()))
+                .collect(),
+            merged_latency: Arc::new(LatencyHistogram::new()),
+            queries: Arc::new(Counter::new()),
+            failovers: Arc::new(Counter::new()),
+            hedges_fired: Arc::new(Counter::new()),
+            hedge_wins: Arc::new(Counter::new()),
         }
+    }
+
+    /// Register the router's counters and latency histograms under
+    /// `prefix` (conventionally `fabric`): the four scatter counters,
+    /// the merged end-to-end latency, and one histogram per shard.
+    pub fn register_metrics(
+        &self,
+        registry: &MetricsRegistry,
+        prefix: &str,
+    ) -> Result<(), RegistryError> {
+        registry.register_counter(&format!("{prefix}.queries"), Arc::clone(&self.queries))?;
+        registry.register_counter(&format!("{prefix}.failovers"), Arc::clone(&self.failovers))?;
+        registry.register_counter(
+            &format!("{prefix}.hedges_fired"),
+            Arc::clone(&self.hedges_fired),
+        )?;
+        registry
+            .register_counter(&format!("{prefix}.hedge_wins"), Arc::clone(&self.hedge_wins))?;
+        registry
+            .register_histogram(&format!("{prefix}.latency"), Arc::clone(&self.merged_latency))?;
+        for (s, h) in self.shard_latency.iter().enumerate() {
+            registry.register_histogram(&format!("{prefix}.shard.{s}.latency"), Arc::clone(h))?;
+        }
+        Ok(())
     }
 
     /// Disable hedging (ablation arm); failover still works.
@@ -210,6 +241,20 @@ impl QueryRouter {
     /// Answer one basket query by scatter-gather over every shard of the
     /// current cut.
     pub fn route(&self, basket: &[ItemId], top_k: usize) -> Result<RoutedResponse, RouterError> {
+        self.route_traced(basket, top_k, None)
+    }
+
+    /// [`route`](Self::route) with tracing: a `scatter` span (cat
+    /// `serve`, wall clock) covers the fan-out, and every per-replica
+    /// leg records an `rpc` span whose duration is the **simulated**
+    /// wire time. When a hedge fires both the primary and the hedge leg
+    /// are recorded — winner and loser — with `winner`/`hedged` flags.
+    pub fn route_traced(
+        &self,
+        basket: &[ItemId],
+        top_k: usize,
+        ctx: Option<&TraceCtx>,
+    ) -> Result<RoutedResponse, RouterError> {
         let (cut, generation) = self.cut.load_with_generation();
         let n_shards = cut.n_shards();
         assert_eq!(
@@ -217,6 +262,13 @@ impl QueryRouter {
             self.placement.n_shards(),
             "cut and placement must agree on the shard count"
         );
+        let scatter = ctx.map(|c| {
+            let mut sp = c.span("serve", "scatter");
+            sp.add("shards", n_shards as f64);
+            sp.add("generation", generation as f64);
+            sp
+        });
+        let scatter_ctx = scatter.as_ref().map(|sp| sp.ctx());
         let request_bytes = 16 + 4 * basket.len() as u64;
         let mut candidates = Vec::new();
         let mut merged_secs = 0.0f64;
@@ -226,35 +278,56 @@ impl QueryRouter {
                 return Err(RouterError::ShardUnavailable { shard: s });
             };
             if primary != self.placement.replicas_of(s)[0] {
-                self.failovers.fetch_add(1, Ordering::Relaxed);
+                self.failovers.inc();
             }
             let shard_answer = cut.shard(s).candidates(basket, top_k);
             // a rule is ~an id + two small itemsets + three measures
             let reply_bytes = 16 + 56 * shard_answer.len() as u64;
+            let rpc_span = |replica: NodeId, secs: f64, winner: bool, hedged: bool| {
+                if let Some(c) = scatter_ctx.as_ref() {
+                    let mut sp = c.span("rpc", format!("rpc.shard.{s}"));
+                    sp.add("shard", s as f64);
+                    sp.add("replica", replica as f64);
+                    sp.add("bytes", (request_bytes + reply_bytes) as f64);
+                    sp.add("winner", if winner { 1.0 } else { 0.0 });
+                    sp.add("hedged", if hedged { 1.0 } else { 0.0 });
+                    sp.set_dur_us((secs * 1e6) as u64);
+                }
+            };
             let primary_secs = self.leg_secs(primary, request_bytes, reply_bytes, n_shards);
             let leg_secs = match (self.hedging, live.get(1)) {
                 (true, Some(&secondary)) => {
                     let delay = self.hedge_delay(s).as_secs_f64();
                     if primary_secs > delay {
-                        self.hedges_fired.fetch_add(1, Ordering::Relaxed);
+                        self.hedges_fired.inc();
                         let hedged =
                             delay + self.leg_secs(secondary, request_bytes, reply_bytes, n_shards);
-                        if hedged < primary_secs {
-                            self.hedge_wins.fetch_add(1, Ordering::Relaxed);
+                        let secondary_won = hedged < primary_secs;
+                        if secondary_won {
+                            self.hedge_wins.inc();
                         }
+                        rpc_span(primary, primary_secs, !secondary_won, true);
+                        rpc_span(secondary, hedged, secondary_won, true);
                         primary_secs.min(hedged)
                     } else {
+                        rpc_span(primary, primary_secs, true, false);
                         primary_secs
                     }
                 }
-                _ => primary_secs,
+                _ => {
+                    rpc_span(primary, primary_secs, true, false);
+                    primary_secs
+                }
             };
             self.shard_latency[s].record(Duration::from_secs_f64(leg_secs));
             merged_secs = merged_secs.max(leg_secs);
             candidates.extend(shard_answer);
         }
         self.merged_latency.record(Duration::from_secs_f64(merged_secs));
-        self.queries.fetch_add(1, Ordering::Relaxed);
+        self.queries.inc();
+        if let Some(mut sp) = scatter {
+            sp.add("sim_latency_ms", merged_secs * 1e3);
+        }
         Ok(RoutedResponse {
             generation,
             recommendations: ShardedRuleIndex::merge(candidates, top_k),
@@ -278,10 +351,10 @@ impl QueryRouter {
             .map(|s| s.p50_p95_p99())
             .unwrap_or((Duration::ZERO, Duration::ZERO, Duration::ZERO));
         RouterStats {
-            queries: self.queries.load(Ordering::Relaxed),
-            failovers: self.failovers.load(Ordering::Relaxed),
-            hedges_fired: self.hedges_fired.load(Ordering::Relaxed),
-            hedge_wins: self.hedge_wins.load(Ordering::Relaxed),
+            queries: self.queries.get(),
+            failovers: self.failovers.get(),
+            hedges_fired: self.hedges_fired.get(),
+            hedge_wins: self.hedge_wins.get(),
             merged_p50_p95_p99: self.merged_latency.snapshot().p50_p95_p99(),
             shard_p50_p95_p99: shard_tails,
         }
@@ -375,6 +448,37 @@ mod tests {
         assert_eq!(resp.generation, 1);
         let oracle = reference_recommend(&generate_rules(&result, 0.99), &[0, 1], 50);
         assert_eq!(render_lines(&resp.recommendations), render_lines(&oracle));
+    }
+
+    #[test]
+    fn traced_route_records_scatter_and_one_rpc_per_shard() {
+        use crate::obs::{TraceCtx, TraceSink};
+        let r = router(3, 2);
+        let registry = MetricsRegistry::new();
+        r.register_metrics(&registry, "fabric").unwrap();
+        let sink = TraceSink::new();
+        let ctx = TraceCtx::root(Arc::clone(&sink));
+        let traced = r.route_traced(&[0, 1], 5, Some(&ctx)).unwrap();
+        let plain = r.route(&[0, 1], 5).unwrap();
+        assert_eq!(
+            render_lines(&traced.recommendations),
+            render_lines(&plain.recommendations),
+            "tracing must not change the answer"
+        );
+        let events = sink.events();
+        let scatter = events.iter().find(|e| e.name == "scatter").unwrap();
+        assert_eq!(scatter.cat, "serve");
+        let rpcs: Vec<_> = events.iter().filter(|e| e.cat == "rpc").collect();
+        // no hedges on a cold router (floor delay >> simulated legs)
+        assert_eq!(rpcs.len(), 3);
+        for rpc in &rpcs {
+            assert_eq!(rpc.parent_id, scatter.span_id);
+            assert!(rpc.dur_us > 0, "simulated wire time must be recorded");
+        }
+        // the registry sees the same counters the stats path reports
+        let snap = registry.snapshot();
+        assert_eq!(snap.counter("fabric.queries"), Some(r.stats().queries));
+        assert_eq!(snap.counter("fabric.failovers"), Some(0));
     }
 
     #[test]

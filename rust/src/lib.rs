@@ -40,6 +40,7 @@ pub mod fabric;
 pub mod incremental;
 pub mod mapreduce;
 pub mod metrics;
+pub mod obs;
 pub mod perfmodel;
 pub mod runtime;
 pub mod serve;
@@ -84,6 +85,9 @@ pub mod prelude {
     pub use crate::mapreduce::{JobConfig, JobStats, SimReport, Simulator};
     pub use crate::metrics::bench::{BenchTable, Series};
     pub use crate::metrics::histogram::{HistogramSnapshot, LatencyHistogram};
+    pub use crate::obs::{
+        LogLevel, MetricsRegistry, MetricsSnapshot, RegistryError, Span, TraceCtx, TraceSink,
+    };
     pub use crate::perfmodel::{EtaModel, KernelRoofline};
     pub use crate::runtime::{ArtifactManifest, TensorService, TensorServiceHandle};
     pub use crate::serve::{

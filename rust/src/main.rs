@@ -19,7 +19,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use mr_apriori::prelude::*;
-use mr_apriori::{apriori, coordinator, data, engine, perfmodel, runtime};
+use mr_apriori::{apriori, coordinator, data, engine, log, obs, perfmodel, runtime};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -30,7 +30,8 @@ fn main() -> ExitCode {
     let flags = match Flags::parse(rest) {
         Ok(f) => f,
         Err(e) => {
-            eprintln!("error: {e}\n{USAGE}");
+            log!(Error, "{e}");
+            eprintln!("{USAGE}");
             return ExitCode::FAILURE;
         }
     };
@@ -51,7 +52,7 @@ fn main() -> ExitCode {
     match result {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
-            eprintln!("error: {e}");
+            log!(Error, "{e}");
             ExitCode::FAILURE
         }
     }
@@ -67,6 +68,7 @@ USAGE:
              [--split-tx N] [--transactions N | --input FILE] [--rules CONF]
              [--pipeline true|false] [--batch-levels 1|2]
              [--store-dir DIR] [--retain N] [--min-confidence F]
+             [--trace-out FILE] [--log-level error|warn|info|debug]
   repro rules  <mine flags> [--min-confidence F] [--top N]
   repro serve  <mine flags> [--min-confidence F] [--top K] [--workers N]
                [--queue-depth N] [--internal-queue-depth N] [--deadline-ms MS]
@@ -74,7 +76,8 @@ USAGE:
                [--refresh-tx N] [--refresh-mode full|incremental]
                [--check-final true|false] [--store-dir DIR] [--retain N]
                [--no-persist true|false] [--shards S] [--replicas R]
-               [--hedge-ms MS] [--kill-node N]
+               [--hedge-ms MS] [--kill-node N] [--trace-out FILE]
+               [--log-level error|warn|info|debug]
   repro simulate [--config FILE] [--preset P] [--nodes N] [--transactions N]
                  [--pipeline true|false]
   repro bench --figure fig4|fig5|eta
@@ -227,7 +230,46 @@ fn experiment_config(flags: &Flags) -> Result<ExperimentConfig, String> {
     if let Some(b) = flags.parse_opt::<bool>("no-persist")? {
         cfg.store.no_persist = b;
     }
+    if let Some(l) = flags.parse_opt::<LogLevel>("log-level")? {
+        cfg.obs.log_level = l;
+    }
+    // Apply the resolved level right away: every command that assembles
+    // a config gets leveled logging without per-command wiring.
+    obs::set_log_level(cfg.obs.log_level);
     Ok(cfg)
+}
+
+/// `--trace-out FILE`: the sink a traced run records spans into, plus
+/// where the exporters write when the run finishes.
+fn trace_sink(flags: &Flags) -> Option<(PathBuf, Arc<TraceSink>)> {
+    flags
+        .get("trace-out")
+        .map(|p| (PathBuf::from(p), TraceSink::new()))
+}
+
+/// Write the Chrome `trace_event` file and its `.jsonl` sibling.
+fn export_trace(path: &Path, sink: &TraceSink) -> Result<(), String> {
+    let events = sink.events();
+    obs::write_chrome_trace(path, &events).map_err(|e| e.to_string())?;
+    let jsonl = path.with_extension("jsonl");
+    obs::write_jsonl(&jsonl, &events).map_err(|e| e.to_string())?;
+    log!(
+        Info,
+        "wrote {} trace events to {} (+ {})",
+        events.len(),
+        path.display(),
+        jsonl.display()
+    );
+    Ok(())
+}
+
+/// The one-page metrics dump: always at `--trace-out` exit, otherwise
+/// only when someone asked for `--log-level debug`.
+fn dump_metrics(registry: &MetricsRegistry, tracing: bool) {
+    let gate = if tracing { LogLevel::Info } else { LogLevel::Debug };
+    if obs::enabled(gate) {
+        eprint!("{}", registry.render_text());
+    }
 }
 
 /// Open the configured snapshot store (even with `--no-persist true` —
@@ -339,11 +381,16 @@ fn cmd_generate(flags: &Flags) -> Result<(), String> {
 fn cmd_mine(flags: &Flags) -> Result<(), String> {
     let cfg = experiment_config(flags)?;
     let db = load_or_generate(flags, &cfg)?;
-    let driver = build_driver(&cfg)?;
+    let trace = trace_sink(flags);
+    let registry = Arc::new(MetricsRegistry::new());
+    let driver = build_driver(&cfg)?
+        .with_trace(trace.as_ref().map(|(_, s)| TraceCtx::root(Arc::clone(s))))
+        .with_registry(Arc::clone(&registry));
     // Open (and thereby validate) the store *before* the mine — an
     // unwritable --store-dir must not cost a completed mining run.
     let store = if cfg.store.writes_enabled() { open_store(&cfg)? } else { None };
-    println!(
+    log!(
+        Info,
         "mining {} transactions on {:?}/{} nodes (engine={}, min_support={}, schedule={})",
         db.len(),
         cfg.preset,
@@ -415,6 +462,10 @@ fn cmd_mine(flags: &Flags) -> Result<(), String> {
             store.dir().display(),
         );
     }
+    if let Some((path, sink)) = &trace {
+        export_trace(path, sink)?;
+    }
+    dump_metrics(&registry, trace.is_some());
     Ok(())
 }
 
@@ -443,6 +494,12 @@ fn cmd_rules(flags: &Flags) -> Result<(), String> {
 
 fn cmd_serve(flags: &Flags) -> Result<(), String> {
     let cfg = experiment_config(flags)?;
+    let trace = trace_sink(flags);
+    // Each call derives a fresh root context on the shared sink, so the
+    // cold-start mine, the refresher, and every served request get their
+    // own trace ids while landing in one exported file.
+    let root_ctx = || trace.as_ref().map(|(_, s)| TraceCtx::root(Arc::clone(s)));
+    let registry = Arc::new(MetricsRegistry::new());
     let queries: usize = flags.parse_opt("queries")?.unwrap_or(200);
     let check: bool = flags.parse_opt("check")?.unwrap_or(false);
     let check_final: bool = flags.parse_opt("check-final")?.unwrap_or(false);
@@ -464,8 +521,9 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
     if let Some(store) = &store {
         match mr_apriori::store::resume_serving(store, &mut db, base_ref.expect("store is open")) {
             Ok(r) => resumed = r,
-            Err(StoreError::BaseMismatch { .. }) => eprintln!(
-                "warning: store at {} belongs to a different base database; cold-starting \
+            Err(StoreError::BaseMismatch { .. }) => log!(
+                Warn,
+                "store at {} belongs to a different base database; cold-starting \
                  (a store directory serves one dataset — use a fresh --store-dir)",
                 store.dir().display()
             ),
@@ -505,8 +563,18 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
             (r.cell, r.result, r.generation, r.state)
         }
         None => {
-            let driver = build_driver(&cfg)?;
-            println!("mining {} transactions for the serving snapshot ...", db.len());
+            // The refresher's driver is the long-lived miner, so it gets
+            // the registry when refreshes run; this one-shot cold-start
+            // driver takes it otherwise (`engine.cache.*` registers once).
+            let mut driver = build_driver(&cfg)?.with_trace(root_ctx());
+            if s.refresh_batches == 0 {
+                driver = driver.with_registry(Arc::clone(&registry));
+            }
+            log!(
+                Info,
+                "mining {} transactions for the serving snapshot ...",
+                db.len()
+            );
             // Capture the border state whenever it will be persisted (so
             // a restarted incremental serve resumes from it) — results
             // are byte-identical to a plain mine.
@@ -586,6 +654,9 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
             start_generation,
         ));
         let router = Arc::new(QueryRouter::new(cut, placement, &cluster, cfg.fabric.hedge_ms));
+        router
+            .register_metrics(&registry, "fabric")
+            .map_err(|e| e.to_string())?;
         let fstore = if persist {
             let dir = cfg
                 .store
@@ -621,8 +692,12 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
             internal_queue_depth: s.internal_queue_depth,
             deadline: (s.deadline_ms > 0)
                 .then(|| std::time::Duration::from_millis(s.deadline_ms)),
+            trace: root_ctx(),
         },
     ));
+    server
+        .register_metrics(&registry, "serve")
+        .map_err(|e| e.to_string())?;
 
     // Optional concurrent micro-batch refresh (the db moves to that
     // thread and comes back with the outcome; queries keep hitting
@@ -630,8 +705,12 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
     // validated by probe queries on the server's *internal* lane — they
     // can never crowd out user traffic.
     let refresh_handle = if s.refresh_batches > 0 {
-        let refresher = Refresher::new(build_driver(&cfg)?, s.min_confidence)
-            .with_incremental(cfg.incremental.clone());
+        let driver = build_driver(&cfg)?
+            .with_trace(root_ctx())
+            .with_registry(Arc::clone(&registry));
+        let refresher = Refresher::new(driver, s.min_confidence)
+            .with_incremental(cfg.incremental.clone())
+            .with_trace(root_ctx());
         let refresher = match (&store, persist) {
             (Some(store), true) => refresher.with_store(
                 Arc::clone(store),
@@ -662,6 +741,8 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
         let refresh_router = router.clone();
         let refresh_fstore = fabric_store.clone();
         let n_shards = cfg.fabric.shards;
+        let cycle_registry = Arc::clone(&registry);
+        let cycle_dump = trace.is_some();
         let mut moved_db = std::mem::take(&mut db);
         Some(std::thread::spawn(move || {
             let mut all = Vec::new();
@@ -716,6 +797,8 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
                     }
                 }
                 all.push(st);
+                // the per-cycle metrics page (DESIGN.md §Observability)
+                dump_metrics(&cycle_registry, cycle_dump);
             }
             (Ok(all), moved_db)
         }))
@@ -768,7 +851,8 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
                 (None, true) => "full re-mine (frontier blowup fallback)".into(),
                 (None, false) => "full re-mine".into(),
             };
-            println!(
+            log!(
+                Info,
                 "refresh gen {}: +{} tx -> {} tx, {} itemsets, {} rules \
                  (mine {:.3}s, build {:.3}s; cache {}h/{}m; {strategy})",
                 st.generation,
@@ -895,6 +979,10 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
             final_db.len(),
         );
     }
+    if let Some((path, sink)) = &trace {
+        export_trace(path, sink)?;
+    }
+    dump_metrics(&registry, trace.is_some());
     Ok(())
 }
 
@@ -1100,6 +1188,23 @@ mod tests {
             let f = flags(&bad).unwrap();
             assert!(experiment_config(&f).is_err(), "{bad:?} must be rejected");
         }
+    }
+
+    #[test]
+    fn obs_flags_apply_and_validate() {
+        // cfg carries the parsed level (the global setter also runs, but
+        // concurrent tests share that atomic, so only the cfg is asserted)
+        let f = flags(&["--log-level", "debug"]).unwrap();
+        let cfg = experiment_config(&f).unwrap();
+        assert_eq!(cfg.obs.log_level, LogLevel::Debug);
+        obs::set_log_level(LogLevel::Info);
+        let f = flags(&["--log-level", "loud"]).unwrap();
+        assert!(experiment_config(&f).is_err());
+        let f = flags(&["--trace-out", "/tmp/t.json"]).unwrap();
+        let (path, sink) = trace_sink(&f).expect("a sink when --trace-out is given");
+        assert_eq!(path, PathBuf::from("/tmp/t.json"));
+        assert!(sink.is_empty());
+        assert!(trace_sink(&flags(&[]).unwrap()).is_none());
     }
 
     #[test]

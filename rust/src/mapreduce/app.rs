@@ -55,6 +55,13 @@ pub trait MapReduceApp: Send + Sync {
     fn record_bytes_hint(&self) -> usize {
         16
     }
+
+    /// How many broadcast candidates each map task counts against its
+    /// split — a Hadoop-style job counter the tracer stamps on every
+    /// map-task span. Apps without a candidate set report 0.
+    fn n_candidates(&self) -> usize {
+        0
+    }
 }
 
 /// A trivial word-count-style app over item ids, used by the substrate's

@@ -21,6 +21,7 @@ use crate::cluster::{ClusterConfig, NodeId};
 use crate::data::split::{split_transactions, Split};
 use crate::data::TransactionDb;
 use crate::dfs::{BlockId, Dfs};
+use crate::obs::TraceCtx;
 
 use super::app::MapReduceApp;
 use super::shuffle::{combine_local_in_place, group_by_key, partition_drain};
@@ -152,6 +153,10 @@ pub struct JobRunner<'a> {
     pub dfs: &'a Dfs,
     /// `blocks[i]` backs `splits[i]` (from `Dfs::write_splits`).
     pub blocks: &'a [BlockId],
+    /// When set, every map/reduce task and the shuffle record spans
+    /// (annotated with Hadoop-style job counters) under this context.
+    /// `pub(crate)` so the coordinator can re-parent per level job.
+    pub(crate) trace: Option<TraceCtx>,
 }
 
 /// A completed map wave, ready for [`JobRunner::reduce_stage`]: the
@@ -186,7 +191,14 @@ struct MapPhase<K, V> {
 
 impl<'a> JobRunner<'a> {
     pub fn new(cluster: &'a ClusterConfig, dfs: &'a Dfs, blocks: &'a [BlockId]) -> Self {
-        Self { cluster, dfs, blocks }
+        Self { cluster, dfs, blocks, trace: None }
+    }
+
+    /// Attach (or detach) a tracing context; task-level spans become
+    /// children of it. `None` — the default — is the zero-cost off path.
+    pub fn with_trace(mut self, trace: Option<TraceCtx>) -> Self {
+        self.trace = trace;
+        self
     }
 
     /// Run one job to completion. Output is key-sorted and deterministic.
@@ -248,6 +260,7 @@ impl<'a> JobRunner<'a> {
         // up front from the per-partition record totals, and the parked
         // map outputs are moved in, never cloned.
         let t1 = Instant::now();
+        let shuffle_span = self.trace.as_ref().map(|ctx| ctx.span("mr", "shuffle"));
         let mut task_ids: Vec<usize> = outputs.keys().copied().collect();
         task_ids.sort_unstable();
         let mut part_sizes = vec![0usize; cfg.n_reducers];
@@ -266,6 +279,13 @@ impl<'a> JobRunner<'a> {
                 stats.shuffle_records += part.len();
                 reduce_inputs[r].extend(part);
             }
+        }
+        if let Some(mut s) = shuffle_span {
+            s.add("shuffle_records", stats.shuffle_records as f64);
+            s.add(
+                "shuffle_bytes",
+                (stats.shuffle_records * app.record_bytes_hint()) as f64,
+            );
         }
 
         let output = self.reduce_phase(app, reduce_inputs, cfg, &mut stats)?;
@@ -414,18 +434,29 @@ impl<'a> JobRunner<'a> {
             };
 
             // --- execute the attempt outside the lock ---
+            let mut span = self.trace.as_ref().map(|ctx| {
+                let mut s = ctx.span("mr", format!("map.task.{task}"));
+                s.add("task", task as f64);
+                s.add("attempt", attempt as f64);
+                s.add("speculative", if speculative { 1.0 } else { 0.0 });
+                s.add("candidates", app.n_candidates() as f64);
+                s
+            });
             let started = Instant::now();
             let failed = cfg
                 .failure
                 .map(|f| f.fails(f.map_fail_prob, task, attempt))
                 .unwrap_or(false);
             let result = if failed {
+                if let Some(s) = span.as_mut() {
+                    s.add("failed", 1.0);
+                }
                 None
             } else {
                 records.clear();
-                app.map(&splits[task], split_transactions(db, &splits[task]), &mut |k, v| {
-                    records.push((k, v))
-                });
+                let input = split_transactions(db, &splits[task]);
+                app.map(&splits[task], input, &mut |k, v| records.push((k, v)));
+                let map_output_records = records.len();
                 if cfg.enable_combiner {
                     combine_local_in_place(
                         &mut records,
@@ -433,8 +464,27 @@ impl<'a> JobRunner<'a> {
                         &mut combine_scratch,
                     );
                 }
+                if let Some(s) = span.as_mut() {
+                    s.add("records_read", input.len() as f64);
+                    s.add("map_output_records", map_output_records as f64);
+                    s.add("combine_output_records", records.len() as f64);
+                    s.add(
+                        "combiner_ratio",
+                        if map_output_records > 0 {
+                            records.len() as f64 / map_output_records as f64
+                        } else {
+                            1.0
+                        },
+                    );
+                    s.add(
+                        "shuffle_bytes",
+                        (records.len() * app.record_bytes_hint()) as f64,
+                    );
+                }
                 Some(partition_drain(&mut records, cfg.n_reducers))
             };
+            // Record the span before contending for the report lock.
+            drop(span);
 
             // --- report under the lock ---
             let mut st = state.lock().unwrap();
@@ -565,12 +615,23 @@ impl<'a> JobRunner<'a> {
                             .unwrap()
                             .take()
                             .expect("reduce input consumed twice");
+                        let mut span = self.trace.as_ref().map(|ctx| {
+                            let mut s = ctx.span("mr", format!("reduce.task.{task}"));
+                            s.add("task", task as f64);
+                            s.add("attempt", attempt as f64);
+                            s.add("reduce_input_records", input.len() as f64);
+                            s
+                        });
                         let mut out: Vec<(A::K, A::V)> = Vec::new();
                         for (k, vs) in group_by_key(input) {
                             if let Some(v) = app.reduce(&k, &vs) {
                                 out.push((k, v));
                             }
                         }
+                        if let Some(s) = span.as_mut() {
+                            s.add("output_records", out.len() as f64);
+                        }
+                        drop(span);
                         let mut st = state.lock().unwrap();
                         st.done.insert(task, out);
                     });

@@ -57,13 +57,18 @@ impl Default for Timer {
     }
 }
 
-/// Median / mean / min / max over repeated measurements — the aggregation
-/// every bench row reports.
+/// Median / mean / p95 / min / max over repeated measurements — the
+/// aggregation every bench row reports. The p95 gives ablation tables a
+/// tail column, so a regression that only hurts the slowest runs still
+/// shows up.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
     pub n: usize,
     pub mean: f64,
     pub median: f64,
+    /// 95th percentile by the nearest-rank method (`ceil(0.95·n)`-th
+    /// smallest sample); equals `max` for `n < 20`.
+    pub p95: f64,
     pub min: f64,
     pub max: f64,
 }
@@ -74,6 +79,7 @@ impl Summary {
         let mut s = samples.to_vec();
         s.sort_by(f64::total_cmp);
         let n = s.len();
+        let rank95 = ((0.95 * n as f64).ceil() as usize).clamp(1, n);
         Self {
             n,
             mean: s.iter().sum::<f64>() / n as f64,
@@ -82,6 +88,7 @@ impl Summary {
             } else {
                 (s[n / 2 - 1] + s[n / 2]) / 2.0
             },
+            p95: s[rank95 - 1],
             min: s[0],
             max: s[n - 1],
         }
@@ -115,9 +122,21 @@ mod tests {
         assert_eq!(s.median, 2.0);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
+        assert_eq!(s.p95, 3.0, "n < 20: nearest-rank p95 is the max");
         assert!((s.mean - 2.0).abs() < 1e-12);
         let e = Summary::of(&[4.0, 1.0, 2.0, 3.0]);
         assert_eq!(e.median, 2.5);
+    }
+
+    #[test]
+    fn summary_p95_nearest_rank() {
+        // 1..=100: ceil(0.95 * 100) = 95 -> the 95th smallest sample.
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(Summary::of(&samples).p95, 95.0);
+        // 1..=20: ceil(0.95 * 20) = 19.
+        let samples: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        assert_eq!(Summary::of(&samples).p95, 19.0);
+        assert_eq!(Summary::of(&[7.0]).p95, 7.0);
     }
 
     #[test]

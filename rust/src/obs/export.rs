@@ -1,0 +1,209 @@
+//! Exporters: Chrome `trace_event` JSON (Perfetto / `about://tracing`
+//! loadable), a JSONL event log, and the one-page plain-text metrics
+//! dump.
+//!
+//! Both trace formats are emitted from the same [`TraceEvent`] buffer:
+//! the Chrome file is what `mine --trace-out` / `serve --trace-out`
+//! write (and `tools/trace_check.py` validates in CI); the JSONL
+//! sibling (`<trace-out>` with an `.jsonl` extension) is the
+//! machine-readable event log for ad-hoc analysis — one compact JSON
+//! object per line, no enclosing array to parse.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::registry::{MetricValue, MetricsSnapshot};
+use super::trace::TraceEvent;
+
+/// One trace event as a Chrome `trace_event` "complete" (`ph: "X"`)
+/// record. The span/parent/trace ids ride in `args` next to the job
+/// counters — the viewer shows them on click, `trace_check.py` uses
+/// them to verify the tree.
+fn chrome_event(ev: &TraceEvent) -> Json {
+    let mut args = BTreeMap::new();
+    args.insert("trace_id".to_string(), Json::num(ev.trace_id as f64));
+    args.insert("span_id".to_string(), Json::num(ev.span_id as f64));
+    args.insert("parent_id".to_string(), Json::num(ev.parent_id as f64));
+    for (k, v) in &ev.args {
+        args.insert(k.clone(), Json::num(*v));
+    }
+    Json::obj(vec![
+        ("name", Json::str(ev.name.clone())),
+        ("cat", Json::str(ev.cat)),
+        ("ph", Json::str("X")),
+        ("ts", Json::num(ev.start_us as f64)),
+        ("dur", Json::num(ev.dur_us as f64)),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(ev.tid as f64)),
+        ("args", Json::Obj(args)),
+    ])
+}
+
+/// Render the full Chrome `trace_event` document.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events.iter().map(chrome_event).collect())),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Write the Perfetto-loadable Chrome trace file.
+pub fn write_chrome_trace(path: impl AsRef<Path>, events: &[TraceEvent]) -> io::Result<()> {
+    std::fs::write(path, format!("{}\n", chrome_trace_json(events)))
+}
+
+/// Write the JSONL event log: one flat object per completed span.
+pub fn write_jsonl(path: impl AsRef<Path>, events: &[TraceEvent]) -> io::Result<()> {
+    let mut out = String::new();
+    for ev in events {
+        let mut fields = vec![
+            ("name", Json::str(ev.name.clone())),
+            ("cat", Json::str(ev.cat)),
+            ("trace_id", Json::num(ev.trace_id as f64)),
+            ("span_id", Json::num(ev.span_id as f64)),
+            ("parent_id", Json::num(ev.parent_id as f64)),
+            ("start_us", Json::num(ev.start_us as f64)),
+            ("dur_us", Json::num(ev.dur_us as f64)),
+            ("tid", Json::num(ev.tid as f64)),
+        ];
+        let args: BTreeMap<String, Json> = ev
+            .args
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(*v)))
+            .collect();
+        fields.push(("args", Json::Obj(args)));
+        out.push_str(&Json::obj(fields).to_string());
+        out.push('\n');
+    }
+    std::fs::write(path, out)
+}
+
+/// The one-page plain-text dump of a metrics cut, sorted by key —
+/// printed per refresh cycle and at exit when observability is on.
+pub fn render_metrics(snapshot: &MetricsSnapshot) -> String {
+    let mut out = String::from("== metrics ==\n");
+    if snapshot.entries.is_empty() {
+        out.push_str("(no instruments registered)\n");
+        return out;
+    }
+    let width = snapshot
+        .entries
+        .iter()
+        .map(|(k, _)| k.len())
+        .max()
+        .unwrap_or(0);
+    for (key, value) in &snapshot.entries {
+        let rendered = match value {
+            MetricValue::Counter(v) => format!("{v}"),
+            MetricValue::Gauge(v) => {
+                if v.fract() == 0.0 && v.abs() < 1e15 {
+                    format!("{}", *v as i64)
+                } else {
+                    format!("{v:.3}")
+                }
+            }
+            MetricValue::Histogram(h) => {
+                let (p50, p95, p99) = h.p50_p95_p99();
+                format!("n={} p50={p50:?} p95={p95:?} p99={p99:?}", h.count())
+            }
+        };
+        out.push_str(&format!("{key:<width$}  {rendered}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::MetricsRegistry;
+    use crate::obs::trace::{TraceCtx, TraceSink};
+    use crate::util::tempdir::TempDir;
+    use std::sync::Arc;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        let sink = TraceSink::new();
+        let root = TraceCtx::root(Arc::clone(&sink));
+        {
+            let mut job = root.span("mine", "job");
+            job.add("n_tx", 400.0);
+            let mut task = job.ctx().span("mr", "map.task.0");
+            task.add("records_read", 133.0);
+        }
+        sink.events()
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_the_json_parser() {
+        let events = sample_events();
+        let doc = chrome_trace_json(&events);
+        let parsed = Json::parse(&doc.to_string()).expect("valid JSON");
+        let arr = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr.len(), 2);
+        for ev in arr {
+            assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+            assert!(ev.get("ts").and_then(Json::as_f64).is_some());
+            assert!(ev.get("dur").and_then(Json::as_f64).is_some());
+            let args = ev.get("args").unwrap();
+            assert!(args.get("span_id").and_then(Json::as_f64).unwrap() > 0.0);
+        }
+        // the task span's parent is the job span
+        let task = arr
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("map.task.0"))
+            .unwrap();
+        let job = arr
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("job"))
+            .unwrap();
+        assert_eq!(
+            task.get("args").unwrap().get("parent_id").and_then(Json::as_f64),
+            job.get("args").unwrap().get("span_id").and_then(Json::as_f64),
+        );
+        assert_eq!(
+            task.get("args").unwrap().get("records_read").and_then(Json::as_f64),
+            Some(133.0)
+        );
+    }
+
+    #[test]
+    fn files_are_written_and_line_parseable() {
+        let tmp = TempDir::new("obs_export");
+        let events = sample_events();
+        let chrome = tmp.path().join("trace.json");
+        let jsonl = tmp.path().join("trace.jsonl");
+        write_chrome_trace(&chrome, &events).unwrap();
+        write_jsonl(&jsonl, &events).unwrap();
+        let doc = std::fs::read_to_string(&chrome).unwrap();
+        assert!(Json::parse(&doc).is_ok());
+        let lines = std::fs::read_to_string(&jsonl).unwrap();
+        let mut n = 0;
+        for line in lines.lines() {
+            let ev = Json::parse(line).expect("each line is one JSON object");
+            assert!(ev.get("span_id").and_then(Json::as_f64).is_some());
+            n += 1;
+        }
+        assert_eq!(n, events.len());
+    }
+
+    #[test]
+    fn metrics_dump_is_one_line_per_instrument() {
+        let reg = MetricsRegistry::new();
+        reg.counter("serve.served").add(7);
+        reg.gauge("mr.job.2.map_ms").set(1.25);
+        reg.histogram("serve.latency")
+            .record(std::time::Duration::from_millis(2));
+        let text = reg.render_text();
+        assert!(text.starts_with("== metrics ==\n"));
+        assert_eq!(text.lines().count(), 4);
+        assert!(text.contains("serve.served"));
+        assert!(text.contains("7"));
+        assert!(text.contains("mr.job.2.map_ms"));
+        assert!(text.contains("1.250"));
+        assert!(text.contains("n=1 p50="));
+        let empty = MetricsRegistry::new().render_text();
+        assert!(empty.contains("no instruments"));
+    }
+}

@@ -1,0 +1,171 @@
+//! Observability: the shared nervous system of the mine→serve→persist
+//! product.
+//!
+//! The paper's Hadoop deployment reads the framework's job counters and
+//! task logs to understand where a voluminous-data mine spends its time;
+//! this module is our zero-dependency equivalent, three layers deep:
+//!
+//! * **[`registry`]** — a process-wide [`MetricsRegistry`] of named
+//!   counters, gauges, and the existing log-linear latency histograms,
+//!   registered under hierarchical dotted keys (`mr.job.3.map_ms`,
+//!   `serve.served`, `fabric.router.hedge_wins`) and snapshot-able as one
+//!   coherent cut under a single lock acquisition.
+//! * **[`trace`]** — span-based tracing with explicit parent ids:
+//!   a [`TraceCtx`] is threaded through the mining driver (job → level →
+//!   map-task/reduce-task spans annotated with Hadoop-style job
+//!   counters), the serve path (request → shard-scatter → per-replica
+//!   RPC spans, the trace id carried across the `simnet` flow model so a
+//!   hedged query's winner and loser are both visible), and the durable
+//!   publish commits.
+//! * **[`export`]** — a JSONL event log and a Chrome `trace_event`
+//!   (Perfetto-loadable) file written by `mine --trace-out` /
+//!   `serve --trace-out`, plus a one-page plain-text metrics dump.
+//!
+//! Leveled logging rides along: [`log!`] replaces the ad-hoc
+//! `eprintln!` call sites with structured `[level] target: message`
+//! lines on **stderr** — stdout stays reserved for results and bench
+//! tables (several CI smokes grep it).
+
+pub mod export;
+pub mod registry;
+pub mod trace;
+
+pub use export::{render_metrics, write_chrome_trace, write_jsonl};
+pub use registry::{
+    Gauge, Metric, MetricValue, MetricsRegistry, MetricsSnapshot, RegistryError,
+};
+pub use trace::{Span, TraceCtx, TraceEvent, TraceSink};
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severities, most severe first. The global filter keeps everything
+/// at or above (numerically at or below) the configured level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum LogLevel {
+    Error = 0,
+    Warn = 1,
+    #[default]
+    Info = 2,
+    Debug = 3,
+}
+
+impl LogLevel {
+    fn tag(self) -> &'static str {
+        match self {
+            Self::Error => "error",
+            Self::Warn => "warn",
+            Self::Info => "info",
+            Self::Debug => "debug",
+        }
+    }
+}
+
+impl std::str::FromStr for LogLevel {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "error" => Ok(Self::Error),
+            "warn" => Ok(Self::Warn),
+            "info" => Ok(Self::Info),
+            "debug" => Ok(Self::Debug),
+            other => Err(format!(
+                "unknown log level '{other}' (want error|warn|info|debug)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for LogLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.tag())
+    }
+}
+
+/// The `[obs]` config section (`--log-level` overrides it on the CLI).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ObsConfig {
+    pub log_level: LogLevel,
+}
+
+/// Process-wide log filter; `Info` by default (`--log-level` / `[obs]`
+/// override it at startup).
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(LogLevel::Info as u8);
+
+pub fn set_log_level(level: LogLevel) {
+    LOG_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn log_level() -> LogLevel {
+    match LOG_LEVEL.load(Ordering::Relaxed) {
+        0 => LogLevel::Error,
+        1 => LogLevel::Warn,
+        2 => LogLevel::Info,
+        _ => LogLevel::Debug,
+    }
+}
+
+/// Would an event at `level` pass the global filter? The [`log!`] macro
+/// checks this before formatting, so suppressed events cost one relaxed
+/// atomic load.
+pub fn enabled(level: LogLevel) -> bool {
+    level <= log_level()
+}
+
+/// Write one formatted event to stderr. Called by [`log!`] after the
+/// level check; the line shape is `[level] target: message`.
+pub fn emit(level: LogLevel, target: &str, args: std::fmt::Arguments<'_>) {
+    eprintln!("[{}] {}: {}", level.tag(), target, args);
+}
+
+/// Leveled structured logging: `obs::log!(Warn, "slow cycle: {secs}s")`.
+///
+/// Events go to stderr (stdout belongs to results); the target is the
+/// call site's module path. Formatting is skipped entirely when the
+/// level is filtered out.
+#[macro_export]
+macro_rules! log {
+    ($level:ident, $($arg:tt)*) => {
+        if $crate::obs::enabled($crate::obs::LogLevel::$level) {
+            $crate::obs::emit(
+                $crate::obs::LogLevel::$level,
+                module_path!(),
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+pub use crate::log;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::str::FromStr;
+
+    #[test]
+    fn levels_order_and_parse() {
+        assert!(LogLevel::Error < LogLevel::Warn);
+        assert!(LogLevel::Warn < LogLevel::Info);
+        assert!(LogLevel::Info < LogLevel::Debug);
+        for s in ["error", "warn", "info", "debug"] {
+            assert_eq!(LogLevel::from_str(s).unwrap().to_string(), s);
+        }
+        assert!(LogLevel::from_str("verbose").is_err());
+        assert_eq!(LogLevel::default(), LogLevel::Info);
+    }
+
+    #[test]
+    fn filter_respects_global_level() {
+        // Tests run concurrently in one process; restore the default so
+        // other tests' log expectations are unaffected.
+        set_log_level(LogLevel::Warn);
+        assert!(enabled(LogLevel::Error));
+        assert!(enabled(LogLevel::Warn));
+        assert!(!enabled(LogLevel::Info));
+        assert!(!enabled(LogLevel::Debug));
+        set_log_level(LogLevel::Info);
+        assert!(enabled(LogLevel::Info));
+        log!(Debug, "filtered out, never formatted");
+    }
+}

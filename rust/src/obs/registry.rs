@@ -1,0 +1,299 @@
+//! A process-wide metrics registry: named counters, gauges, and latency
+//! histograms under hierarchical dotted keys, snapshot-able as one
+//! coherent cut.
+//!
+//! The registry does not own a global singleton — each command (`mine`,
+//! `serve`, a test) constructs its own [`MetricsRegistry`] and hands it
+//! to the subsystems it wires together. Components keep their hot-path
+//! instruments as plain `Arc<Counter>` / `Arc<LatencyHistogram>` fields
+//! (lock-free increments, exactly as before) and *register* those arcs
+//! under stable keys; the registry is only locked to register, to
+//! enumerate, and to snapshot. A snapshot reads every instrument under a
+//! single lock acquisition, so no registration can interleave with the
+//! cut — the "no torn cut" contract `tests/obs.rs` pins.
+//!
+//! Key naming scheme (see DESIGN.md §Observability): lowercase dotted
+//! hierarchy, subsystem first — `mr.job.3.map_ms`, `engine.cache.hits`,
+//! `serve.served`, `fabric.router.hedge_wins`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::histogram::{HistogramSnapshot, LatencyHistogram};
+use crate::metrics::Counter;
+
+/// A last-value instrument for sampled quantities (resident bytes, the
+/// current generation, a phase's wall-clock). Stores `f64` bits in an
+/// atomic, so `set`/`get` are wait-free like [`Counter`].
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&self, value: f64) {
+        self.0.store(value.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// One registered instrument. Shared ownership: the component keeps one
+/// arc for its hot path, the registry keeps the other for snapshots.
+#[derive(Debug, Clone)]
+pub enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<LatencyHistogram>),
+}
+
+/// The value of one instrument inside a [`MetricsSnapshot`].
+#[derive(Debug, Clone)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(HistogramSnapshot),
+}
+
+/// Typed registration failure: every key names exactly one instrument.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RegistryError {
+    DuplicateKey { key: String },
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::DuplicateKey { key } => {
+                write!(f, "metric key '{key}' is already registered")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// The registry proper. `BTreeMap` keeps enumeration (snapshots, the
+/// text dump) in stable sorted key order.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an existing instrument under `key`. This is how
+    /// components absorb their loose counters: keep the arc, share it.
+    pub fn register(&self, key: &str, metric: Metric) -> Result<(), RegistryError> {
+        let mut map = self.inner.lock().unwrap();
+        if map.contains_key(key) {
+            return Err(RegistryError::DuplicateKey { key: key.to_string() });
+        }
+        map.insert(key.to_string(), metric);
+        Ok(())
+    }
+
+    pub fn register_counter(&self, key: &str, c: Arc<Counter>) -> Result<(), RegistryError> {
+        self.register(key, Metric::Counter(c))
+    }
+
+    pub fn register_gauge(&self, key: &str, g: Arc<Gauge>) -> Result<(), RegistryError> {
+        self.register(key, Metric::Gauge(g))
+    }
+
+    pub fn register_histogram(
+        &self,
+        key: &str,
+        h: Arc<LatencyHistogram>,
+    ) -> Result<(), RegistryError> {
+        self.register(key, Metric::Histogram(h))
+    }
+
+    /// Get-or-create a counter under `key`. Idempotent (concurrent
+    /// callers converge on one instrument); panics if the key already
+    /// names a different instrument kind — that is a wiring bug, not a
+    /// runtime condition.
+    pub fn counter(&self, key: &str) -> Arc<Counter> {
+        let mut map = self.inner.lock().unwrap();
+        match map
+            .entry(key.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())))
+        {
+            Metric::Counter(c) => Arc::clone(c),
+            other => panic!("metric key '{key}' is not a counter: {other:?}"),
+        }
+    }
+
+    /// Get-or-create a gauge under `key` (same contract as `counter`).
+    pub fn gauge(&self, key: &str) -> Arc<Gauge> {
+        let mut map = self.inner.lock().unwrap();
+        match map
+            .entry(key.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new())))
+        {
+            Metric::Gauge(g) => Arc::clone(g),
+            other => panic!("metric key '{key}' is not a gauge: {other:?}"),
+        }
+    }
+
+    /// Get-or-create a latency histogram under `key`.
+    pub fn histogram(&self, key: &str) -> Arc<LatencyHistogram> {
+        let mut map = self.inner.lock().unwrap();
+        match map
+            .entry(key.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(LatencyHistogram::new())))
+        {
+            Metric::Histogram(h) => Arc::clone(h),
+            other => panic!("metric key '{key}' is not a histogram: {other:?}"),
+        }
+    }
+
+    /// Number of registered instruments.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().is_empty()
+    }
+
+    /// One coherent cut: every instrument is read under a single lock
+    /// acquisition, so no concurrent registration can add or remove keys
+    /// mid-snapshot. (Individual counters keep ticking — the cut is
+    /// coherent over the key set and each value is a single atomic read.)
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let map = self.inner.lock().unwrap();
+        let entries = map
+            .iter()
+            .map(|(k, m)| {
+                let v = match m {
+                    Metric::Counter(c) => MetricValue::Counter(c.get()),
+                    Metric::Gauge(g) => MetricValue::Gauge(g.get()),
+                    Metric::Histogram(h) => MetricValue::Histogram(h.snapshot()),
+                };
+                (k.clone(), v)
+            })
+            .collect();
+        MetricsSnapshot { entries }
+    }
+
+    /// The one-page plain-text dump (per refresh cycle / at exit).
+    pub fn render_text(&self) -> String {
+        super::export::render_metrics(&self.snapshot())
+    }
+}
+
+/// A point-in-time cut of every registered instrument, in sorted key
+/// order.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub entries: Vec<(String, MetricValue)>,
+}
+
+impl MetricsSnapshot {
+    pub fn get(&self, key: &str) -> Option<&MetricValue> {
+        self.entries
+            .binary_search_by(|(k, _)| k.as_str().cmp(key))
+            .ok()
+            .map(|i| &self.entries[i].1)
+    }
+
+    /// Convenience for tests and gates: the value of a counter key.
+    pub fn counter(&self, key: &str) -> Option<u64> {
+        match self.get(key) {
+            Some(MetricValue::Counter(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn gauge(&self, key: &str) -> Option<f64> {
+        match self.get(key) {
+            Some(MetricValue::Gauge(v)) => Some(*v),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_snapshot_round_trip() {
+        let reg = MetricsRegistry::new();
+        reg.counter("mr.shuffle.records").add(41);
+        reg.counter("mr.shuffle.records").inc(); // get-or-create converges
+        reg.gauge("mr.job.2.map_ms").set(12.5);
+        let hist = reg.histogram("serve.latency");
+        hist.record(std::time::Duration::from_millis(3));
+        let snap = reg.snapshot();
+        assert_eq!(reg.len(), 3);
+        assert_eq!(snap.counter("mr.shuffle.records"), Some(42));
+        assert_eq!(snap.gauge("mr.job.2.map_ms"), Some(12.5));
+        match snap.get("serve.latency") {
+            Some(MetricValue::Histogram(h)) => assert_eq!(h.count(), 1),
+            other => panic!("expected histogram, got {other:?}"),
+        }
+        assert!(snap.get("nope").is_none());
+        assert!(snap.counter("mr.job.2.map_ms").is_none(), "wrong-kind probe");
+    }
+
+    #[test]
+    fn duplicate_key_is_a_typed_error() {
+        let reg = MetricsRegistry::new();
+        reg.register_counter("engine.cache.hits", Arc::new(Counter::new()))
+            .unwrap();
+        let err = reg
+            .register_counter("engine.cache.hits", Arc::new(Counter::new()))
+            .unwrap_err();
+        assert_eq!(
+            err,
+            RegistryError::DuplicateKey { key: "engine.cache.hits".into() }
+        );
+        assert!(err.to_string().contains("engine.cache.hits"));
+        // a different kind under the same key is just as duplicate
+        let err = reg
+            .register_gauge("engine.cache.hits", Arc::new(Gauge::new()))
+            .unwrap_err();
+        assert!(matches!(err, RegistryError::DuplicateKey { .. }));
+    }
+
+    #[test]
+    #[should_panic(expected = "is not a counter")]
+    fn kind_mismatch_on_get_or_create_panics() {
+        let reg = MetricsRegistry::new();
+        reg.gauge("x");
+        reg.counter("x");
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_binary_searchable() {
+        let reg = MetricsRegistry::new();
+        for key in ["z.last", "a.first", "m.mid"] {
+            reg.counter(key).inc();
+        }
+        let snap = reg.snapshot();
+        let keys: Vec<&str> = snap.entries.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["a.first", "m.mid", "z.last"]);
+        for key in keys {
+            assert_eq!(snap.counter(key), Some(1));
+        }
+    }
+
+    #[test]
+    fn gauge_stores_last_value() {
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0.0);
+        g.set(1.5);
+        g.set(-3.25);
+        assert_eq!(g.get(), -3.25);
+    }
+}

@@ -1,0 +1,287 @@
+//! Span-based tracing with explicit parent ids.
+//!
+//! A [`TraceSink`] buffers completed spans as flat [`TraceEvent`]s; a
+//! [`TraceCtx`] is the cheap, cloneable handle a caller threads through
+//! the code it wants traced (the mining driver, the serve path, the
+//! publish commits). Opening a [`Span`] from a context stamps the start
+//! time; dropping it records the event, so the tree shape falls out of
+//! ordinary scoping. Disabled tracing is represented as
+//! `Option<TraceCtx> = None` at every integration point — the off path
+//! costs one branch, which is what keeps the measured overhead of the
+//! instrumentation under the 5% budget `benches/ablation_obs.rs` gates.
+//!
+//! Two clocks coexist (DESIGN.md §Observability): spans on the real
+//! execution path (`cat` `mine`/`mr`/`serve`/`store`) measure wall-clock
+//! time, while spans inside the *simulated* cluster (`cat` `rpc`/`net`)
+//! carry a wall-clock start but a **simulated** duration injected via
+//! [`Span::set_dur_us`] — the flow-model transfer time the `simnet`
+//! module computed. Exporters keep both; nesting checks only trust the
+//! wall-clock categories.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One completed span, flattened for export.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: String,
+    /// Coarse category: `mine`, `mr`, `serve`, `rpc`, `net`, `store`.
+    pub cat: &'static str,
+    /// Groups every span of one logical operation (a mine run, one
+    /// served request) — propagated unchanged to every child.
+    pub trace_id: u64,
+    /// Unique per sink; `parent_id == 0` marks a root span.
+    pub span_id: u64,
+    pub parent_id: u64,
+    /// Microseconds since the sink's epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Recording thread (stable hash of the OS thread id) — Perfetto
+    /// lays concurrent map tasks out on separate rows by this.
+    pub tid: u64,
+    /// Hadoop-style job counters and other numeric annotations.
+    pub args: Vec<(String, f64)>,
+}
+
+/// The shared buffer completed spans land in. One sink per traced
+/// command; cheap enough to leave attached for a whole serve run.
+#[derive(Debug)]
+pub struct TraceSink {
+    epoch: Instant,
+    next_id: AtomicU64,
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+impl TraceSink {
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self {
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(1),
+            events: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Microseconds since the sink was created.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn record(&self, event: TraceEvent) {
+        self.events.lock().unwrap().push(event);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// A copy of everything recorded so far (export-time call; spans
+    /// still open are not included).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.lock().unwrap().clone()
+    }
+}
+
+/// A position in the span tree: "children opened through me get this
+/// span as their parent". Clone + Send so it crosses the scoped-thread
+/// boundaries of the map/reduce phases and the serve workers.
+#[derive(Debug, Clone)]
+pub struct TraceCtx {
+    sink: Arc<TraceSink>,
+    pub trace_id: u64,
+    /// The surrounding span (0 at the root).
+    pub span_id: u64,
+}
+
+impl TraceCtx {
+    /// A fresh root context: the next span opened from it starts a new
+    /// tree, and `trace_id` tags the whole tree.
+    pub fn root(sink: Arc<TraceSink>) -> Self {
+        let trace_id = sink.next_id();
+        Self { sink, trace_id, span_id: 0 }
+    }
+
+    pub fn sink(&self) -> &Arc<TraceSink> {
+        &self.sink
+    }
+
+    /// Open a child span. Recorded when dropped.
+    pub fn span(&self, cat: &'static str, name: impl Into<String>) -> Span {
+        Span {
+            sink: Arc::clone(&self.sink),
+            trace_id: self.trace_id,
+            span_id: self.sink.next_id(),
+            parent_id: self.span_id,
+            cat,
+            name: name.into(),
+            start_us: self.sink.now_us(),
+            dur_us: None,
+            args: Vec::new(),
+        }
+    }
+}
+
+/// An open span; records itself into the sink on drop.
+#[derive(Debug)]
+pub struct Span {
+    sink: Arc<TraceSink>,
+    trace_id: u64,
+    span_id: u64,
+    parent_id: u64,
+    cat: &'static str,
+    name: String,
+    start_us: u64,
+    /// Simulated-duration override (see module docs); `None` means
+    /// wall-clock measured at drop.
+    dur_us: Option<u64>,
+    args: Vec<(String, f64)>,
+}
+
+impl Span {
+    /// Attach a numeric annotation (a Hadoop-style job counter, a byte
+    /// count, a flag encoded 0/1).
+    pub fn add(&mut self, key: &str, value: f64) {
+        self.args.push((key.to_string(), value));
+    }
+
+    /// Override the duration with simulated time (µs) — used by the
+    /// `rpc`/`net` spans whose cost comes from the flow model, not the
+    /// wall clock.
+    pub fn set_dur_us(&mut self, dur_us: u64) {
+        self.dur_us = Some(dur_us);
+    }
+
+    /// A context for children of this span.
+    pub fn ctx(&self) -> TraceCtx {
+        TraceCtx {
+            sink: Arc::clone(&self.sink),
+            trace_id: self.trace_id,
+            span_id: self.span_id,
+        }
+    }
+
+    pub fn span_id(&self) -> u64 {
+        self.span_id
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let dur_us = self
+            .dur_us
+            .unwrap_or_else(|| self.sink.now_us().saturating_sub(self.start_us));
+        self.sink.record(TraceEvent {
+            name: std::mem::take(&mut self.name),
+            cat: self.cat,
+            trace_id: self.trace_id,
+            span_id: self.span_id,
+            parent_id: self.parent_id,
+            start_us: self.start_us,
+            dur_us,
+            tid: current_tid(),
+            args: std::mem::take(&mut self.args),
+        });
+    }
+}
+
+/// A stable small-ish integer for the current OS thread: `ThreadId` has
+/// no stable numeric accessor, so hash it.
+fn current_tid() -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    std::thread::current().id().hash(&mut h);
+    h.finish() % 1_000_000
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_record_on_drop_with_parent_links() {
+        let sink = TraceSink::new();
+        let root = TraceCtx::root(Arc::clone(&sink));
+        {
+            let mut job = root.span("mine", "job");
+            job.add("n_tx", 9.0);
+            {
+                let mut level = job.ctx().span("mine", "level.2");
+                level.add("candidates", 10.0);
+            }
+        }
+        let events = sink.events();
+        assert_eq!(events.len(), 2);
+        // children drop (and record) before their parents
+        let (level, job) = (&events[0], &events[1]);
+        assert_eq!(level.name, "level.2");
+        assert_eq!(job.name, "job");
+        assert_eq!(job.parent_id, 0);
+        assert_eq!(level.parent_id, job.span_id);
+        assert_eq!(level.trace_id, job.trace_id);
+        assert_ne!(level.span_id, job.span_id);
+        assert_eq!(job.args, vec![("n_tx".to_string(), 9.0)]);
+        // wall-clock containment: the parent closed after the child
+        assert!(job.start_us <= level.start_us);
+        assert!(job.start_us + job.dur_us >= level.start_us + level.dur_us);
+    }
+
+    #[test]
+    fn simulated_duration_overrides_wall_clock() {
+        let sink = TraceSink::new();
+        let ctx = TraceCtx::root(Arc::clone(&sink));
+        {
+            let mut rpc = ctx.span("rpc", "shard.0");
+            rpc.set_dur_us(5_000_000); // 5 simulated seconds, ~0 wall
+            rpc.add("winner", 1.0);
+        }
+        let ev = &sink.events()[0];
+        assert_eq!(ev.dur_us, 5_000_000);
+        assert_eq!(ev.cat, "rpc");
+    }
+
+    #[test]
+    fn contexts_cross_threads() {
+        let sink = TraceSink::new();
+        let root = TraceCtx::root(Arc::clone(&sink));
+        let parent = root.span("mr", "map_phase");
+        std::thread::scope(|scope| {
+            for task in 0..4 {
+                let ctx = parent.ctx();
+                scope.spawn(move || {
+                    let mut span = ctx.span("mr", format!("map.task.{task}"));
+                    span.add("records_read", 100.0);
+                });
+            }
+        });
+        let parent_id = parent.span_id();
+        drop(parent);
+        let events = sink.events();
+        assert_eq!(events.len(), 5);
+        assert_eq!(
+            events.iter().filter(|e| e.parent_id == parent_id).count(),
+            4
+        );
+        // ids are unique even under concurrent allocation
+        let mut ids: Vec<u64> = events.iter().map(|e| e.span_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 5);
+    }
+
+    #[test]
+    fn distinct_roots_get_distinct_trace_ids() {
+        let sink = TraceSink::new();
+        let a = TraceCtx::root(Arc::clone(&sink));
+        let b = TraceCtx::root(Arc::clone(&sink));
+        assert_ne!(a.trace_id, b.trace_id);
+    }
+}

@@ -35,6 +35,7 @@ use crate::coordinator::{MineError, MrApriori, RunReport, WorkloadProfile};
 use crate::data::{ItemId, Transaction, TransactionDb};
 use crate::incremental::{DeltaApply, DeltaStats, IncrementalConfig, MinedState};
 use crate::metrics::Timer;
+use crate::obs::TraceCtx;
 use crate::store::{BaseRef, SnapshotRef, SnapshotStore, StoreError};
 use crate::util::rng::Xoshiro256;
 
@@ -146,6 +147,7 @@ pub struct Refresher {
     incremental: IncrementalConfig,
     state: Mutex<Option<MinedState>>,
     store: Option<StoreSink>,
+    trace: Option<TraceCtx>,
 }
 
 /// Where (and relative to which base) published generations persist.
@@ -169,7 +171,18 @@ impl Refresher {
             incremental: IncrementalConfig::default(),
             state: Mutex::new(None),
             store: None,
+            trace: None,
         }
+    }
+
+    /// Trace every refresh cycle into `ctx`'s sink: each cycle becomes a
+    /// root `refresh.cycle` span with the mine and (when a store is
+    /// attached) `store.publish` spans nested under it. The driver's own
+    /// job/level spans land in the same sink when it was built
+    /// `with_trace` on the same context.
+    pub fn with_trace(mut self, trace: Option<TraceCtx>) -> Self {
+        self.trace = trace;
+        self
     }
 
     /// Persist every generation this refresher publishes into `store`.
@@ -231,6 +244,12 @@ impl Refresher {
         cell: &SnapshotCell<RuleIndex>,
     ) -> Result<(RunReport, RefreshStats), RefreshError> {
         let delta_tx = delta.len();
+        let mut cycle_span = self.trace.as_ref().map(|c| {
+            let mut s = c.span("serve", "refresh.cycle");
+            s.add("delta_tx", delta_tx as f64);
+            s
+        });
+        let cycle_ctx = cycle_span.as_ref().map(|s| s.ctx());
         let (old_len, old_n_items) = (db.len(), db.n_items);
         // Backup for the persist-failure rollback (the mine-failure path
         // never mutates the state, so it only needs the db rollback).
@@ -263,16 +282,19 @@ impl Refresher {
             let generation = cell.generation() + 1;
             let outcome = {
                 let state_guard = self.state.lock().unwrap();
-                sink.store.publish(&SnapshotRef {
-                    generation,
-                    base: sink.base,
-                    min_support: self.driver.apriori.min_support,
-                    max_k: self.driver.apriori.max_k,
-                    delta: &db.transactions[sink.base_tx..],
-                    result: &report.result,
-                    state: state_guard.as_ref(),
-                    index: &index,
-                })
+                sink.store.publish_traced(
+                    &SnapshotRef {
+                        generation,
+                        base: sink.base,
+                        min_support: self.driver.apriori.min_support,
+                        max_k: self.driver.apriori.max_k,
+                        delta: &db.transactions[sink.base_tx..],
+                        result: &report.result,
+                        state: state_guard.as_ref(),
+                        index: &index,
+                    },
+                    cycle_ctx.as_ref(),
+                )
             };
             if let Err(e) = outcome {
                 rollback(db);
@@ -283,6 +305,15 @@ impl Refresher {
             }
         }
         let generation = cell.store(Arc::new(index));
+        if let Some(s) = cycle_span.as_mut() {
+            s.add("generation", generation as f64);
+            s.add("mine_ms", mine_secs * 1e3);
+            s.add("build_ms", build_secs * 1e3);
+            s.add("n_frequent", n_frequent as f64);
+            s.add("n_rules", n_rules as f64);
+            s.add("fell_back", if fell_back { 1.0 } else { 0.0 });
+        }
+        drop(cycle_span);
         let stats = RefreshStats {
             generation,
             delta_tx,
@@ -657,6 +688,45 @@ mod tests {
         );
         assert_eq!(cell.generation(), 1);
         assert_eq!(cell.load().n_transactions, len_before);
+    }
+
+    #[test]
+    fn traced_cycle_nests_store_publish_under_refresh_cycle() {
+        use crate::obs::{TraceCtx, TraceSink};
+        use crate::store::{BaseRef, SnapshotStore};
+        let tmp = TempDir::new("refresh_traced");
+        let store = Arc::new(SnapshotStore::open(tmp.path(), 4).unwrap());
+        let mut db = textbook_db();
+        let base = BaseRef::of(&db);
+        let base_tx = db.len();
+        let result0 = ClassicalApriori::default().mine(&db, &cfg());
+        let cell = SnapshotCell::new(Arc::new(RuleIndex::build(&result0, 0.3)));
+        let sink = TraceSink::new();
+        let root = TraceCtx::root(Arc::clone(&sink));
+        let driver = MrApriori::new(ClusterConfig::standalone(), cfg()).with_split_tx(4);
+        let refresher = Refresher::new(driver, 0.3)
+            .with_store(Arc::clone(&store), base, base_tx)
+            .with_trace(Some(root));
+        refresher
+            .refresh_once(&mut db, synth_delta(4, db.n_items, 1), &cell)
+            .unwrap();
+        let events = sink.events();
+        let cycle = events
+            .iter()
+            .find(|e| e.name == "refresh.cycle")
+            .expect("cycle span");
+        assert_eq!(cycle.cat, "serve");
+        let publish = events
+            .iter()
+            .find(|e| e.name == "store.publish")
+            .expect("publish span");
+        assert_eq!(publish.cat, "store");
+        assert_eq!(publish.parent_id, cycle.span_id);
+        assert!(publish.args.iter().any(|(k, v)| k == "bytes" && *v > 0.0));
+        assert!(cycle
+            .args
+            .iter()
+            .any(|(k, v)| k == "generation" && *v == 1.0));
     }
 
     #[test]

@@ -17,7 +17,6 @@
 //! [`load`]: super::snapshot::SnapshotCell::load
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -26,6 +25,8 @@ use crate::apriori::rules::Rule;
 use crate::data::ItemId;
 use crate::fabric::QueryRouter;
 use crate::metrics::histogram::{HistogramSnapshot, LatencyHistogram};
+use crate::metrics::Counter;
+use crate::obs::{MetricsRegistry, RegistryError, TraceCtx};
 
 use super::index::{render_lines, RuleIndex};
 use super::snapshot::SnapshotCell;
@@ -231,6 +232,12 @@ pub struct ServeOptions {
     /// `Some(Duration::ZERO)` sheds unconditionally (the comparison is
     /// inclusive, so it cannot depend on clock granularity).
     pub deadline: Option<std::time::Duration>,
+    /// Tracing hook: when set, every answered request opens a `request`
+    /// span as a fresh trace rooted in this context's sink (one trace id
+    /// per request), and the fabric backend nests its scatter + RPC
+    /// spans beneath it. `None` — the default — is the zero-cost off
+    /// path.
+    pub trace: Option<TraceCtx>,
 }
 
 impl Default for ServeOptions {
@@ -240,6 +247,7 @@ impl Default for ServeOptions {
             queue_depth: 64,
             internal_queue_depth: 16,
             deadline: None,
+            trace: None,
         }
     }
 }
@@ -291,7 +299,12 @@ pub enum Backend {
 }
 
 impl Backend {
-    fn answer(&self, basket: &[ItemId], top_k: usize) -> Result<QueryResponse, ServeError> {
+    fn answer(
+        &self,
+        basket: &[ItemId],
+        top_k: usize,
+        ctx: Option<&TraceCtx>,
+    ) -> Result<QueryResponse, ServeError> {
         match self {
             Self::Local(cell) => {
                 let (index, generation) = cell.load_with_generation();
@@ -300,7 +313,7 @@ impl Backend {
                     recommendations: index.recommend(basket, top_k),
                 })
             }
-            Self::Fabric(router) => match router.route(basket, top_k) {
+            Self::Fabric(router) => match router.route_traced(basket, top_k, ctx) {
                 Ok(routed) => Ok(QueryResponse {
                     generation: routed.generation,
                     recommendations: routed.recommendations,
@@ -315,16 +328,19 @@ struct ServerInner {
     backend: Backend,
     queue: BoundedQueue<Job>,
     deadline: Option<std::time::Duration>,
-    served: AtomicU64,
-    rejected: AtomicU64,
-    deadline_shed: AtomicU64,
-    internal_served: AtomicU64,
-    internal_rejected: AtomicU64,
-    internal_deadline_shed: AtomicU64,
+    trace: Option<TraceCtx>,
+    // Instruments live behind `Arc` so [`RuleServer::register_metrics`]
+    // can share them with a registry; increments stay wait-free.
+    served: Arc<Counter>,
+    rejected: Arc<Counter>,
+    deadline_shed: Arc<Counter>,
+    internal_served: Arc<Counter>,
+    internal_rejected: Arc<Counter>,
+    internal_deadline_shed: Arc<Counter>,
     /// Fabric backend only: queries refused because a shard had no live
     /// replica (never answered partially).
-    unavailable: AtomicU64,
-    latency: LatencyHistogram,
+    unavailable: Arc<Counter>,
+    latency: Arc<LatencyHistogram>,
 }
 
 /// The serving tier. Start it over a [`SnapshotCell`]; refreshes swap the
@@ -348,14 +364,15 @@ impl RuleServer {
             backend,
             queue: BoundedQueue::with_lanes(opts.queue_depth, opts.internal_queue_depth),
             deadline: opts.deadline,
-            served: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-            deadline_shed: AtomicU64::new(0),
-            internal_served: AtomicU64::new(0),
-            internal_rejected: AtomicU64::new(0),
-            internal_deadline_shed: AtomicU64::new(0),
-            unavailable: AtomicU64::new(0),
-            latency: LatencyHistogram::new(),
+            trace: opts.trace,
+            served: Arc::new(Counter::new()),
+            rejected: Arc::new(Counter::new()),
+            deadline_shed: Arc::new(Counter::new()),
+            internal_served: Arc::new(Counter::new()),
+            internal_rejected: Arc::new(Counter::new()),
+            internal_deadline_shed: Arc::new(Counter::new()),
+            unavailable: Arc::new(Counter::new()),
+            latency: Arc::new(LatencyHistogram::new()),
         });
         let workers = (0..opts.workers)
             .map(|_| {
@@ -404,7 +421,7 @@ impl RuleServer {
                     QueryClass::User => &self.inner.rejected,
                     QueryClass::Internal => &self.inner.internal_rejected,
                 };
-                counter.fetch_add(1, Ordering::Relaxed);
+                counter.inc();
                 Err(ServeError::QueueFull)
             }
             Err(PushError::Closed(_)) => Err(ServeError::Closed),
@@ -416,15 +433,45 @@ impl RuleServer {
         self.submit(basket, top_k)?.wait()
     }
 
+    /// Register the server's counters and the user-facing latency
+    /// histogram under `prefix` (conventionally `serve`).
+    pub fn register_metrics(
+        &self,
+        registry: &MetricsRegistry,
+        prefix: &str,
+    ) -> Result<(), RegistryError> {
+        let i = &self.inner;
+        registry.register_counter(&format!("{prefix}.served"), Arc::clone(&i.served))?;
+        registry.register_counter(&format!("{prefix}.rejected"), Arc::clone(&i.rejected))?;
+        registry.register_counter(
+            &format!("{prefix}.deadline_shed"),
+            Arc::clone(&i.deadline_shed),
+        )?;
+        registry.register_counter(
+            &format!("{prefix}.internal.served"),
+            Arc::clone(&i.internal_served),
+        )?;
+        registry.register_counter(
+            &format!("{prefix}.internal.rejected"),
+            Arc::clone(&i.internal_rejected),
+        )?;
+        registry.register_counter(
+            &format!("{prefix}.internal.deadline_shed"),
+            Arc::clone(&i.internal_deadline_shed),
+        )?;
+        registry.register_counter(&format!("{prefix}.unavailable"), Arc::clone(&i.unavailable))?;
+        registry.register_histogram(&format!("{prefix}.latency"), Arc::clone(&i.latency))
+    }
+
     pub fn stats(&self) -> ServerStats {
         ServerStats {
-            served: self.inner.served.load(Ordering::Relaxed),
-            rejected: self.inner.rejected.load(Ordering::Relaxed),
-            deadline_shed: self.inner.deadline_shed.load(Ordering::Relaxed),
-            internal_served: self.inner.internal_served.load(Ordering::Relaxed),
-            internal_rejected: self.inner.internal_rejected.load(Ordering::Relaxed),
-            internal_deadline_shed: self.inner.internal_deadline_shed.load(Ordering::Relaxed),
-            unavailable: self.inner.unavailable.load(Ordering::Relaxed),
+            served: self.inner.served.get(),
+            rejected: self.inner.rejected.get(),
+            deadline_shed: self.inner.deadline_shed.get(),
+            internal_served: self.inner.internal_served.get(),
+            internal_rejected: self.inner.internal_rejected.get(),
+            internal_deadline_shed: self.inner.internal_deadline_shed.get(),
+            unavailable: self.inner.unavailable.get(),
             latency: self.inner.latency.snapshot(),
         }
     }
@@ -464,32 +511,56 @@ fn worker_loop(inner: &ServerInner) {
                     QueryClass::User => &inner.deadline_shed,
                     QueryClass::Internal => &inner.internal_deadline_shed,
                 };
-                counter.fetch_add(1, Ordering::Relaxed);
+                counter.inc();
                 let _ = job.reply.send(Err(ServeError::DeadlineExceeded));
                 continue;
             }
         }
+        // Each answered request is its own trace: a fresh root span in
+        // the serve run's sink, so the fabric's scatter + per-replica
+        // RPC spans group under one trace id per query.
+        let mut span = inner.trace.as_ref().map(|c| {
+            let root = TraceCtx::root(Arc::clone(c.sink()));
+            let mut s = root.span("serve", "request");
+            s.add(
+                "class",
+                match job.class {
+                    QueryClass::User => 0.0,
+                    QueryClass::Internal => 1.0,
+                },
+            );
+            s.add("queue_us", job.enqueued.elapsed().as_micros() as f64);
+            s.add("top_k", job.top_k as f64);
+            s.add("basket_len", job.basket.len() as f64);
+            s
+        });
+        let ctx = span.as_ref().map(|s| s.ctx());
         // One snapshot/cut load per request; a concurrent refresh never
         // blocks this (SnapshotCell's critical section is an Arc clone,
         // and the fabric router loads its cut the same way).
-        match inner.backend.answer(&job.basket, job.top_k) {
+        match inner.backend.answer(&job.basket, job.top_k, ctx.as_ref()) {
             Ok(response) => {
                 match job.class {
                     QueryClass::User => {
                         // Only user answers feed the histogram: the tails
                         // are the user-facing SLO, not probe latency.
                         inner.latency.record(job.enqueued.elapsed());
-                        inner.served.fetch_add(1, Ordering::Relaxed);
+                        inner.served.inc();
                     }
                     QueryClass::Internal => {
-                        inner.internal_served.fetch_add(1, Ordering::Relaxed);
+                        inner.internal_served.inc();
                     }
                 }
+                drop(span);
                 // A dropped ticket means the client stopped waiting.
                 let _ = job.reply.send(Ok(response));
             }
             Err(e) => {
-                inner.unavailable.fetch_add(1, Ordering::Relaxed);
+                inner.unavailable.inc();
+                if let Some(s) = span.as_mut() {
+                    s.add("unavailable", 1.0);
+                }
+                drop(span);
                 let _ = job.reply.send(Err(e));
             }
         }
@@ -724,6 +795,7 @@ mod tests {
                 queue_depth: 16,
                 internal_queue_depth: 2,
                 deadline: Some(std::time::Duration::ZERO),
+                ..Default::default()
             },
         );
         let mut admitted = 0;
@@ -799,6 +871,64 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.served, 2);
         assert_eq!(stats.unavailable, 1);
+    }
+
+    #[test]
+    fn traced_requests_nest_scatter_under_per_request_traces() {
+        use crate::cluster::ClusterConfig;
+        use crate::fabric::{FabricPlacement, QueryRouter, ShardedRuleIndex};
+        use crate::obs::{TraceCtx, TraceSink};
+
+        let result = ClassicalApriori::default().mine(
+            &textbook_db(),
+            &AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 },
+        );
+        let cut = ShardedRuleIndex::build(&result, 0.3, 2);
+        let cluster = ClusterConfig::fhssc(4);
+        let bytes: Vec<u64> = cut.shard_rule_counts().iter().map(|&n| 56 * n + 16).collect();
+        let placement = FabricPlacement::place(&cluster, 2, &bytes).unwrap();
+        let router = Arc::new(QueryRouter::new(
+            Arc::new(SnapshotCell::new(Arc::new(cut))),
+            placement,
+            &cluster,
+            5,
+        ));
+        let sink = TraceSink::new();
+        let registry = MetricsRegistry::new();
+        let server = RuleServer::start_with_backend(
+            Backend::Fabric(router),
+            ServeOptions {
+                trace: Some(TraceCtx::root(Arc::clone(&sink))),
+                ..Default::default()
+            },
+        );
+        server.register_metrics(&registry, "serve").unwrap();
+        server.query(&[0, 1], 5).unwrap();
+        server.query(&[1, 2], 5).unwrap();
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 2);
+        assert_eq!(registry.snapshot().counter("serve.served"), Some(2));
+
+        let events = sink.events();
+        let requests: Vec<_> = events.iter().filter(|e| e.name == "request").collect();
+        assert_eq!(requests.len(), 2);
+        assert_ne!(
+            requests[0].trace_id, requests[1].trace_id,
+            "each request is its own trace"
+        );
+        for req in &requests {
+            let scatter = events
+                .iter()
+                .find(|e| e.name == "scatter" && e.trace_id == req.trace_id)
+                .expect("scatter under each request");
+            assert_eq!(scatter.parent_id, req.span_id);
+            assert!(
+                events
+                    .iter()
+                    .any(|e| e.cat == "rpc" && e.parent_id == scatter.span_id),
+                "per-replica RPC spans under the scatter"
+            );
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! (shuffle fan-in — the dominant contention pattern in MapReduce).
 
 use crate::cluster::NodeId;
+use crate::obs::TraceCtx;
 
 /// Switch/link parameters.
 #[derive(Debug, Clone, PartialEq)]
@@ -153,6 +154,32 @@ impl Network {
             self.flow_mbps(f, fanout, fanin, active)
         };
         latency + (f.bytes as f64 * 8.0) / (mbps * 1_000_000.0)
+    }
+
+    /// [`transfer_secs`](Self::transfer_secs), recording a `net` span
+    /// under `ctx` when tracing is on. The span's duration is the
+    /// **simulated** wire time (via the span's duration override), not
+    /// the host-side cost of evaluating the model — exporters label the
+    /// category so wall-clock containment checks skip it.
+    pub fn transfer_secs_traced(
+        &self,
+        f: &Flow,
+        fanout: usize,
+        fanin: usize,
+        active: usize,
+        ctx: Option<&TraceCtx>,
+        name: &'static str,
+    ) -> f64 {
+        let secs = self.transfer_secs(f, fanout, fanin, active);
+        if let Some(ctx) = ctx {
+            let mut span = ctx.span("net", name);
+            span.add("src", f.src as f64);
+            span.add("dst", f.dst as f64);
+            span.add("bytes", f.bytes as f64);
+            span.add("sim_ms", secs * 1e3);
+            span.set_dur_us((secs * 1e6) as u64);
+        }
+        secs
     }
 
     /// Makespan (seconds) of an all-to-all shuffle: every (src, dst) pair
@@ -346,6 +373,26 @@ mod tests {
             racked.transfer_secs(&f, 1, 1, 1),
             "same-rack flows never touch the uplink"
         );
+    }
+
+    #[test]
+    fn traced_transfer_matches_and_records_simulated_duration() {
+        use crate::obs::{TraceCtx, TraceSink};
+        let net = gige(2);
+        let f = Flow { src: 0, dst: 1, bytes: 125_000_000 };
+        let sink = TraceSink::new();
+        let ctx = TraceCtx::root(std::sync::Arc::clone(&sink));
+        let secs = net.transfer_secs_traced(&f, 1, 1, 1, Some(&ctx), "rpc.leg");
+        assert_eq!(secs, net.transfer_secs(&f, 1, 1, 1));
+        let events = sink.events();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].cat, "net");
+        // ~1 simulated second on the wire, recorded as the span duration
+        // even though evaluating the model took ~no wall time.
+        assert_eq!(events[0].dur_us, (secs * 1e6) as u64);
+        // None is the zero-cost off path: no span recorded.
+        net.transfer_secs_traced(&f, 1, 1, 1, None, "rpc.leg");
+        assert_eq!(sink.len(), 1);
     }
 
     #[test]

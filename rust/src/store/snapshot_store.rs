@@ -209,6 +209,26 @@ impl SnapshotStore {
         self.publish_with_hook(snap, &mut |_| true).map(|_| ())
     }
 
+    /// [`publish`](Self::publish), recording a `store.publish` span (cat
+    /// `store`, wall clock — this is real fsync time) annotated with the
+    /// generation and the bytes the commit added.
+    pub fn publish_traced(
+        &self,
+        snap: &SnapshotRef<'_>,
+        ctx: Option<&crate::obs::TraceCtx>,
+    ) -> Result<(), StoreError> {
+        let Some(ctx) = ctx else {
+            return self.publish(snap);
+        };
+        let mut span = ctx.span("store", "store.publish");
+        span.add("generation", snap.generation as f64);
+        let before = self.bytes_written();
+        let out = self.publish(snap);
+        span.add("bytes", self.bytes_written().saturating_sub(before) as f64);
+        span.add("ok", if out.is_ok() { 1.0 } else { 0.0 });
+        out
+    }
+
     /// Commit with a crash-injection hook: `keep_going` fires after each
     /// [`CommitStep`]; returning `false` abandons the commit right there
     /// (returning `Ok(false)`), leaving the disk exactly as a kill at

@@ -1,0 +1,161 @@
+//! Observability integration: registry behaviour under concurrency, the
+//! no-torn-cut snapshot contract, and the differential guarantee that
+//! instrumenting a mine never changes what it computes.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use mr_apriori::metrics::Counter;
+use mr_apriori::prelude::*;
+
+#[test]
+fn concurrent_registration_and_increments_are_lossless() {
+    let reg = MetricsRegistry::new();
+    std::thread::scope(|scope| {
+        for t in 0..8u64 {
+            let reg = &reg;
+            scope.spawn(move || {
+                // every thread races get-or-create on one shared key and
+                // registers one private key of its own
+                for _ in 0..1_000 {
+                    reg.counter("shared.events").inc();
+                }
+                reg.counter(&format!("thread.{t}.events")).add(t);
+            });
+        }
+    });
+    let snap = reg.snapshot();
+    assert_eq!(snap.counter("shared.events"), Some(8_000));
+    for t in 0..8u64 {
+        assert_eq!(snap.counter(&format!("thread.{t}.events")), Some(t));
+    }
+}
+
+#[test]
+fn snapshot_is_a_coherent_cut_under_concurrent_writers() {
+    // The cut contract: the key set is captured under one lock (a key is
+    // either absent or carries a value — never half-registered), and a
+    // counter's value never goes backwards across successive cuts.
+    let reg = MetricsRegistry::new();
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let (reg, stop) = (&reg, &stop);
+            scope.spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    reg.counter("cut.events").inc();
+                    reg.gauge(&format!("cut.gauge.{}", i % 16)).set(i as f64);
+                    i += 1;
+                }
+            });
+        }
+        let mut last = 0;
+        for _ in 0..200 {
+            let snap = reg.snapshot();
+            for (key, _) in &snap.entries {
+                assert!(snap.get(key).is_some(), "torn cut: {key} has no value");
+            }
+            if let Some(v) = snap.counter("cut.events") {
+                assert!(v >= last, "counter went backwards across cuts");
+                last = v;
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+}
+
+#[test]
+fn duplicate_registration_is_a_typed_error() {
+    let reg = MetricsRegistry::new();
+    let hits = Arc::new(Counter::new());
+    reg.register_counter("engine.cache.hits", Arc::clone(&hits))
+        .unwrap();
+    let err = reg
+        .register_counter("engine.cache.hits", hits)
+        .unwrap_err();
+    assert_eq!(
+        err,
+        RegistryError::DuplicateKey { key: "engine.cache.hits".into() }
+    );
+}
+
+/// The tentpole differential check: a fully instrumented mine (tracing +
+/// registry) is byte-identical to an uninstrumented one, and the trace it
+/// leaves behind has the job → level → task tree with the Hadoop-style
+/// counters on every map task.
+#[test]
+fn instrumented_mine_matches_uninstrumented_and_traces_the_job_tree() {
+    let db = QuestGenerator::new(QuestParams::dense(400).with_seed(7)).generate();
+    let cfg = AprioriConfig { min_support: 0.05, max_k: 3 };
+    let plain = MrApriori::new(ClusterConfig::fhssc(3), cfg.clone()).with_split_tx(100);
+    let want = plain.mine(&db).expect("plain mine");
+
+    let sink = TraceSink::new();
+    let registry = Arc::new(MetricsRegistry::new());
+    let traced = MrApriori::new(ClusterConfig::fhssc(3), cfg)
+        .with_split_tx(100)
+        .with_trace(Some(TraceCtx::root(Arc::clone(&sink))))
+        .with_registry(Arc::clone(&registry));
+    let got = traced.mine(&db).expect("instrumented mine");
+
+    assert_eq!(
+        got.result.frequent, want.result.frequent,
+        "instrumentation changed the mining output"
+    );
+    assert_eq!(got.result.levels.len(), want.result.levels.len());
+
+    // trace tree: one mine root, levels under it, tasks under levels
+    let events = sink.events();
+    let mine: Vec<_> = events.iter().filter(|e| e.name == "mine").collect();
+    assert_eq!(mine.len(), 1, "exactly one mine root span");
+    let mine = mine[0];
+    assert_eq!(mine.parent_id, 0);
+    assert_eq!(mine.cat, "mine");
+    let levels: Vec<_> = events
+        .iter()
+        .filter(|e| e.name.starts_with("level."))
+        .collect();
+    assert_eq!(levels.len(), got.result.levels.len());
+    for l in &levels {
+        assert_eq!(l.parent_id, mine.span_id, "{} not under mine", l.name);
+        assert_eq!(l.trace_id, mine.trace_id);
+    }
+    let level_ids: Vec<u64> = levels.iter().map(|l| l.span_id).collect();
+    let maps: Vec<_> = events
+        .iter()
+        .filter(|e| e.name.starts_with("map.task."))
+        .collect();
+    assert!(!maps.is_empty());
+    for m in &maps {
+        assert!(
+            level_ids.contains(&m.parent_id),
+            "{} not under a level span",
+            m.name
+        );
+        for key in [
+            "records_read",
+            "map_output_records",
+            "combine_output_records",
+            "combiner_ratio",
+            "shuffle_bytes",
+        ] {
+            assert!(
+                m.args.iter().any(|(k, _)| k == key),
+                "{} missing counter {key}",
+                m.name
+            );
+        }
+    }
+    assert!(
+        events.iter().any(|e| e.name.starts_with("reduce.task.")),
+        "no reduce-task spans recorded"
+    );
+
+    // the registry absorbed the per-job counters and the cache telemetry
+    let snap = registry.snapshot();
+    assert_eq!(snap.counter("mr.jobs"), Some(got.jobs.len() as u64));
+    assert!(snap.gauge("mr.job.1.map_ms").is_some());
+    assert!(snap.counter("mr.shuffle.records").unwrap_or(0) > 0);
+    assert!(snap.counter("engine.cache.hits").is_some());
+}

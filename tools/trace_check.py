@@ -1,0 +1,163 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace_event file emitted by `repro ... --trace-out`.
+
+Checks (stdlib only, like tools/bench_gate.py):
+
+* the file is valid JSON with a ``traceEvents`` array of ``ph == "X"``
+  complete events carrying ``ts``/``dur`` and the span/parent/trace ids
+  in ``args``;
+* **tree shape** — every non-root span's ``parent_id`` resolves to a
+  recorded span in the same trace, and a parent's wall-clock window
+  contains each child's. Containment is only enforced for the wall-clock
+  categories (``mine``/``mr``/``serve``/``store``): the simulated-cluster
+  spans (``rpc``/``net``) carry flow-model durations on a wall-clock
+  start, so their windows are deliberately out of scale
+  (DESIGN.md §Observability, the two-clock note);
+* **mine mode** (``--mode mine``) — exactly one root ``mine`` span,
+  ``level.k`` spans under it, and every ``map.task.*`` span carries the
+  full Hadoop-style counter set with non-zero shuffle bytes overall;
+* **serve mode** (``--mode serve``) — at least one per-request root
+  ``request`` span, each carrying its own trace id.
+
+Exit status 0 on a clean trace; 1 with per-failure lines on stderr.
+"""
+
+import argparse
+import json
+import sys
+
+WALL_CLOCK_CATS = {"mine", "mr", "serve", "store"}
+MAP_COUNTERS = [
+    "records_read",
+    "map_output_records",
+    "combine_output_records",
+    "combiner_ratio",
+    "shuffle_bytes",
+]
+
+
+def load_events(path):
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        raise ValueError("traceEvents missing or empty")
+    return events
+
+
+def check_common(events):
+    """Event well-formedness + tree shape. Returns (failures, by_id)."""
+    failures = []
+    by_id = {}
+    for i, ev in enumerate(events):
+        for field in ("name", "cat", "ph", "ts", "dur", "args"):
+            if field not in ev:
+                failures.append(f"event {i} ({ev.get('name')}): missing {field}")
+        if ev.get("ph") != "X":
+            failures.append(f"event {i} ({ev.get('name')}): ph {ev.get('ph')!r} != 'X'")
+            continue
+        args = ev.get("args", {})
+        for field in ("trace_id", "span_id", "parent_id"):
+            if field not in args:
+                failures.append(f"event {i} ({ev.get('name')}): args missing {field}")
+        sid = args.get("span_id")
+        if sid in by_id:
+            failures.append(f"duplicate span_id {sid}")
+        by_id[sid] = ev
+    if failures:
+        return failures, by_id
+
+    for ev in events:
+        args = ev["args"]
+        if args["parent_id"] == 0:
+            continue
+        parent = by_id.get(args["parent_id"])
+        if parent is None:
+            failures.append(
+                f"{ev['name']}: parent span {args['parent_id']} never recorded")
+            continue
+        if parent["args"]["trace_id"] != args["trace_id"]:
+            failures.append(
+                f"{ev['name']}: trace id differs from parent {parent['name']}")
+        # wall-clock containment only where both clocks are real
+        if ev["cat"] in WALL_CLOCK_CATS and parent["cat"] in WALL_CLOCK_CATS:
+            slack = 1.0  # µs rounding
+            if ev["ts"] + slack < parent["ts"] or \
+               ev["ts"] + ev["dur"] > parent["ts"] + parent["dur"] + slack:
+                failures.append(
+                    f"{ev['name']} [{ev['ts']}, {ev['ts'] + ev['dur']}] not inside "
+                    f"{parent['name']} [{parent['ts']}, {parent['ts'] + parent['dur']}]")
+    return failures, by_id
+
+
+def check_mine(events):
+    failures = []
+    roots = [e for e in events
+             if e["name"] == "mine" and e["args"]["parent_id"] == 0]
+    if len(roots) != 1:
+        failures.append(f"expected exactly one root mine span, found {len(roots)}")
+        return failures
+    root = roots[0]
+    levels = [e for e in events if e["name"].startswith("level.")]
+    if not levels:
+        failures.append("no level.k spans recorded")
+    for lv in levels:
+        if lv["args"]["parent_id"] != root["args"]["span_id"]:
+            failures.append(f"{lv['name']} is not a child of the mine root")
+    maps = [e for e in events if e["name"].startswith("map.task.")]
+    if not maps:
+        failures.append("no map.task spans recorded")
+    for m in maps:
+        for counter in MAP_COUNTERS:
+            if counter not in m["args"]:
+                failures.append(f"{m['name']}: missing job counter {counter}")
+    if maps and sum(m["args"].get("shuffle_bytes", 0) for m in maps) <= 0:
+        failures.append("total map-side shuffle_bytes is zero")
+    if not any(e["name"].startswith("reduce.task.") for e in events):
+        failures.append("no reduce.task spans recorded")
+    return failures
+
+
+def check_serve(events):
+    failures = []
+    requests = [e for e in events
+                if e["name"] == "request" and e["args"]["parent_id"] == 0]
+    if not requests:
+        failures.append("no root request spans recorded")
+    trace_ids = [r["args"]["trace_id"] for r in requests]
+    if len(set(trace_ids)) != len(trace_ids):
+        failures.append("served requests share a trace id (must be per-request)")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace_event JSON file")
+    ap.add_argument("--mode", choices=["mine", "serve", "tree-only"],
+                    default="tree-only",
+                    help="extra shape checks for a known trace kind")
+    args = ap.parse_args()
+
+    try:
+        events = load_events(args.trace)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"FAIL {args.trace}: {e}", file=sys.stderr)
+        sys.exit(1)
+
+    failures, _ = check_common(events)
+    if not failures:
+        if args.mode == "mine":
+            failures += check_mine(events)
+        elif args.mode == "serve":
+            failures += check_serve(events)
+
+    if failures:
+        for line in failures:
+            print(f"FAIL {line}", file=sys.stderr)
+        sys.exit(1)
+    print(f"ok: {args.trace} — {len(events)} spans, tree and counters check out"
+          f" (mode: {args.mode})")
+
+
+if __name__ == "__main__":
+    main()
