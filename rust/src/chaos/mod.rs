@@ -1,0 +1,566 @@
+//! Deterministic chaos: seedable fault plans injected through one clock.
+//!
+//! The paper's case for running Apriori on Hadoop is commodity-cluster
+//! fault tolerance, so the repo needs a way to *exercise* machine
+//! failure without giving up reproducibility. A [`FaultPlan`] is a list
+//! of fault events keyed to **logical** execution coordinates — "kill
+//! node 2 at level 3", "fail the fetch of map 5's output twice", "one
+//! transient store I/O error" — rather than wall-clock instants, so the
+//! same plan replays identically on any machine. One [`FaultClock`]
+//! built from the plan is shared (via `Arc`) by the job runner, the
+//! multi-level drivers, the snapshot store, and the refresher; each
+//! consumer asks the clock whether its next action is faulted.
+//!
+//! Because triggers are logical, *which* map attempt observes a
+//! `@maps:N` kill may vary across runs of a genuinely multi-threaded
+//! runner — the replayable contract is the differential invariant
+//! (`tests/chaos.rs`): under any plan that leaves at least one live
+//! node holding every block, the mined output is byte-identical to the
+//! fault-free run, per-task attempts stay bounded, and the blacklist
+//! only grows.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::NodeId;
+use crate::metrics::Counter;
+use crate::obs::{MetricsRegistry, RegistryError};
+use crate::util::rng::Xoshiro256;
+
+/// When an event fires, in logical (replayable) coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultTrigger {
+    /// At the start of Apriori level `k` (drivers call
+    /// [`FaultClock::begin_level`]).
+    AtLevel(usize),
+    /// After the `n`-th map-task completion across the run (the runner
+    /// calls [`FaultClock::on_map_completion`]).
+    AfterMaps(usize),
+    /// Immediately, when the clock is built.
+    Now,
+}
+
+/// What goes wrong.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The tasktracker + datanode on `node` stop heartbeating: running
+    /// attempts are lost, completed map output on its local disk is
+    /// gone, its DFS replicas need re-replication.
+    KillNode(NodeId),
+    /// `node` keeps working but `factor`× slower (speculation bait).
+    SlowNode { node: NodeId, factor: f64 },
+    /// The next `times` reducer fetches of `map_task`'s output fail
+    /// (serve-side of the shuffle went away mid-transfer).
+    ShuffleFetchFail { map_task: usize, times: usize },
+    /// The next `times` snapshot-store syscalls fail transiently.
+    StoreIo { times: usize },
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub trigger: FaultTrigger,
+    pub kind: FaultKind,
+}
+
+/// A seedable, replayable schedule of faults.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    /// The seed the plan was derived from (0 for hand-written specs);
+    /// carried for reports so a failing chaos run names its replay key.
+    pub seed: u64,
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Parse the CLI/config grammar: `;`-separated events, each
+    /// `KIND@TRIGGER`.
+    ///
+    /// Kinds: `kill:NODE`, `slow:NODE:FACTOR`, `fetchfail:TASK:TIMES`,
+    /// `storeio:TIMES`. Triggers: `level:K`, `maps:N`, `now`.
+    ///
+    /// Example: `kill:1@level:2;slow:0:4@now;storeio:2@now`.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut events = Vec::new();
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind_s, trig_s) = part
+                .split_once('@')
+                .ok_or_else(|| format!("fault '{part}': missing '@TRIGGER'"))?;
+            let trigger = match trig_s.split_once(':') {
+                Some(("level", k)) => FaultTrigger::AtLevel(parse_num(k, part, "level")?),
+                Some(("maps", n)) => FaultTrigger::AfterMaps(parse_num(n, part, "maps")?),
+                None if trig_s == "now" => FaultTrigger::Now,
+                _ => {
+                    return Err(format!(
+                        "fault '{part}': unknown trigger '{trig_s}' (want level:K|maps:N|now)"
+                    ))
+                }
+            };
+            let fields: Vec<&str> = kind_s.split(':').collect();
+            let kind = match fields.as_slice() {
+                ["kill", node] => FaultKind::KillNode(parse_num(node, part, "node")?),
+                ["slow", node, factor] => FaultKind::SlowNode {
+                    node: parse_num(node, part, "node")?,
+                    factor: factor
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|f| *f >= 1.0)
+                        .ok_or_else(|| format!("fault '{part}': factor must be ≥ 1"))?,
+                },
+                ["fetchfail", task, times] => FaultKind::ShuffleFetchFail {
+                    map_task: parse_num(task, part, "task")?,
+                    times: parse_num(times, part, "times")?,
+                },
+                ["storeio", times] => FaultKind::StoreIo { times: parse_num(times, part, "times")? },
+                _ => {
+                    return Err(format!(
+                        "fault '{part}': unknown kind '{kind_s}' \
+                         (want kill:N|slow:N:F|fetchfail:T:N|storeio:N)"
+                    ))
+                }
+            };
+            events.push(FaultEvent { trigger, kind });
+        }
+        if events.is_empty() {
+            return Err("empty fault plan".into());
+        }
+        Ok(Self { seed: 0, events })
+    }
+
+    /// A random *survivable* plan: at most `replication - 1` distinct
+    /// nodes are killed (so every block keeps a live replica) and at
+    /// least one node always survives. Deterministic in `seed` — the
+    /// proptest's replay key.
+    pub fn random(seed: u64, n_nodes: usize, replication: usize) -> Self {
+        assert!(n_nodes > 0, "need at least one node");
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xC4A0_5BAD_F00D);
+        let max_kills = replication.saturating_sub(1).min(n_nodes.saturating_sub(1));
+        let n_kills = rng.range_usize(0, max_kills + 1);
+        let victims = rng.sample_distinct(n_nodes, n_kills);
+        let mut events = Vec::new();
+        for &node in &victims {
+            let trigger = match rng.gen_range(3) {
+                0 => FaultTrigger::Now,
+                1 => FaultTrigger::AtLevel(rng.range_usize(1, 4)),
+                _ => FaultTrigger::AfterMaps(rng.range_usize(1, 9)),
+            };
+            events.push(FaultEvent { trigger, kind: FaultKind::KillNode(node) });
+        }
+        // a straggler that is not one of the kills, when one is free
+        if rng.bool_with(0.5) {
+            if let Some(node) = (0..n_nodes).find(|n| !victims.contains(n)) {
+                events.push(FaultEvent {
+                    trigger: FaultTrigger::Now,
+                    kind: FaultKind::SlowNode { node, factor: 2.0 + rng.next_f64() * 6.0 },
+                });
+            }
+        }
+        for _ in 0..rng.range_usize(0, 3) {
+            events.push(FaultEvent {
+                trigger: FaultTrigger::Now,
+                kind: FaultKind::ShuffleFetchFail {
+                    map_task: rng.range_usize(0, 8),
+                    times: rng.range_usize(1, 3),
+                },
+            });
+        }
+        Self { seed, events }
+    }
+
+    /// Distinct nodes this plan kills, in node order.
+    pub fn killed_nodes(&self) -> Vec<NodeId> {
+        let set: BTreeSet<NodeId> = self
+            .events
+            .iter()
+            .filter_map(|e| match e.kind {
+                FaultKind::KillNode(n) => Some(n),
+                _ => None,
+            })
+            .collect();
+        set.into_iter().collect()
+    }
+
+    /// Whether the plan provably leaves every block a live replica:
+    /// fewer than `replication` distinct kills and at least one
+    /// survivor. (The differential invariant only holds for survivable
+    /// plans.)
+    pub fn is_survivable(&self, n_nodes: usize, replication: usize) -> bool {
+        let kills = self.killed_nodes().len();
+        kills < replication && kills < n_nodes
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(s: &str, part: &str, what: &str) -> Result<T, String> {
+    s.parse::<T>()
+        .map_err(|_| format!("fault '{part}': bad {what} '{s}'"))
+}
+
+impl fmt::Display for FaultPlan {
+    /// Round-trips through [`FaultPlan::parse`] (for seeded plans the
+    /// rendered spec is the replayable artifact a report can print).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                f.write_str(";")?;
+            }
+            match e.kind {
+                FaultKind::KillNode(n) => write!(f, "kill:{n}")?,
+                FaultKind::SlowNode { node, factor } => write!(f, "slow:{node}:{factor}")?,
+                FaultKind::ShuffleFetchFail { map_task, times } => {
+                    write!(f, "fetchfail:{map_task}:{times}")?
+                }
+                FaultKind::StoreIo { times } => write!(f, "storeio:{times}")?,
+            }
+            match e.trigger {
+                FaultTrigger::AtLevel(k) => write!(f, "@level:{k}")?,
+                FaultTrigger::AfterMaps(n) => write!(f, "@maps:{n}")?,
+                FaultTrigger::Now => write!(f, "@now")?,
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The `[chaos]` experiment-config section: an explicit fault-plan spec
+/// and/or a seed for a random survivable plan. Both default to "off".
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChaosConfig {
+    /// A [`FaultPlan::parse`] spec (`kill:1@level:2;...`). Takes
+    /// precedence over `seed` when both are set.
+    pub plan: Option<String>,
+    /// When nonzero (and no spec is given), derive a random survivable
+    /// plan from this seed via [`FaultPlan::random`].
+    pub seed: u64,
+}
+
+impl ChaosConfig {
+    pub fn enabled(&self) -> bool {
+        self.plan.is_some() || self.seed != 0
+    }
+
+    /// Resolve the section into a plan: parse the spec when present,
+    /// else derive from the seed; `Ok(None)` when chaos is off.
+    pub fn resolve(
+        &self,
+        n_nodes: usize,
+        replication: usize,
+    ) -> Result<Option<FaultPlan>, String> {
+        if let Some(spec) = &self.plan {
+            return FaultPlan::parse(spec).map(Some);
+        }
+        if self.seed != 0 {
+            return Ok(Some(FaultPlan::random(self.seed, n_nodes, replication)));
+        }
+        Ok(None)
+    }
+}
+
+/// Cumulative injection totals (mirrors the `chaos.*` counters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ChaosStats {
+    pub faults_injected: u64,
+    pub nodes_killed: u64,
+    pub fetch_faults: u64,
+    pub store_faults: u64,
+    pub blacklisted: u64,
+}
+
+/// The shared fault clock: owns the plan, advances on logical progress
+/// callbacks, and answers "is this action faulted?" queries from every
+/// subsystem. All methods take `&self`; share it with `Arc`.
+#[derive(Debug)]
+pub struct FaultClock {
+    plan: FaultPlan,
+    /// One flag per plan event; an event fires exactly once.
+    fired: Mutex<Vec<bool>>,
+    dead: Mutex<BTreeSet<NodeId>>,
+    slow: Mutex<BTreeMap<NodeId, f64>>,
+    /// map task → remaining injected fetch failures.
+    shuffle_budget: Mutex<BTreeMap<usize, usize>>,
+    /// Remaining injected transient store I/O errors.
+    store_budget: AtomicUsize,
+    maps_done: AtomicUsize,
+    /// Append-only record of blacklisted nodes (monotonicity evidence
+    /// for the proptest); the runner reports, the clock never removes.
+    blacklist_log: Mutex<Vec<NodeId>>,
+    faults_injected: Arc<Counter>,
+    nodes_killed: Arc<Counter>,
+    fetch_faults: Arc<Counter>,
+    store_faults: Arc<Counter>,
+    blacklists: Arc<Counter>,
+}
+
+impl FaultClock {
+    pub fn new(plan: FaultPlan) -> Self {
+        let clock = Self {
+            fired: Mutex::new(vec![false; plan.events.len()]),
+            plan,
+            dead: Mutex::new(BTreeSet::new()),
+            slow: Mutex::new(BTreeMap::new()),
+            shuffle_budget: Mutex::new(BTreeMap::new()),
+            store_budget: AtomicUsize::new(0),
+            maps_done: AtomicUsize::new(0),
+            blacklist_log: Mutex::new(Vec::new()),
+            faults_injected: Arc::new(Counter::new()),
+            nodes_killed: Arc::new(Counter::new()),
+            fetch_faults: Arc::new(Counter::new()),
+            store_faults: Arc::new(Counter::new()),
+            blacklists: Arc::new(Counter::new()),
+        };
+        clock.fire_due(|t| matches!(t, FaultTrigger::Now));
+        clock
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Fire every not-yet-fired event whose trigger satisfies `due`.
+    fn fire_due(&self, due: impl Fn(FaultTrigger) -> bool) {
+        let mut fired = self.fired.lock().unwrap();
+        for (i, e) in self.plan.events.iter().enumerate() {
+            if fired[i] || !due(e.trigger) {
+                continue;
+            }
+            fired[i] = true;
+            self.faults_injected.inc();
+            match e.kind {
+                FaultKind::KillNode(n) => {
+                    if self.dead.lock().unwrap().insert(n) {
+                        self.nodes_killed.inc();
+                    }
+                }
+                FaultKind::SlowNode { node, factor } => {
+                    self.slow.lock().unwrap().insert(node, factor);
+                }
+                FaultKind::ShuffleFetchFail { map_task, times } => {
+                    *self.shuffle_budget.lock().unwrap().entry(map_task).or_insert(0) += times;
+                }
+                FaultKind::StoreIo { times } => {
+                    self.store_budget.fetch_add(times, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// Driver callback: Apriori level `k` is starting. Fires every
+    /// pending `@level:j` event with `j ≤ k` (a mine that converges
+    /// before a scheduled level still observes earlier ones).
+    pub fn begin_level(&self, k: usize) {
+        self.fire_due(|t| matches!(t, FaultTrigger::AtLevel(j) if j <= k));
+    }
+
+    /// Runner callback: one map task just completed (first successful
+    /// attempt). Fires pending `@maps:n` events once the cross-run
+    /// completion count reaches `n`.
+    pub fn on_map_completion(&self) {
+        let done = self.maps_done.fetch_add(1, Ordering::Relaxed) + 1;
+        self.fire_due(|t| matches!(t, FaultTrigger::AfterMaps(n) if n <= done));
+    }
+
+    /// Has the tasktracker/datanode on `node` stopped heartbeating?
+    pub fn is_dead(&self, node: NodeId) -> bool {
+        self.dead.lock().unwrap().contains(&node)
+    }
+
+    /// Every node currently dead, in node order.
+    pub fn dead_nodes(&self) -> Vec<NodeId> {
+        self.dead.lock().unwrap().iter().copied().collect()
+    }
+
+    /// Work multiplier for `node` (1.0 = healthy).
+    pub fn slow_factor(&self, node: NodeId) -> f64 {
+        self.slow.lock().unwrap().get(&node).copied().unwrap_or(1.0)
+    }
+
+    /// Should this fetch of `map_task`'s output fail? Consumes one unit
+    /// of the task's injected-failure budget.
+    pub fn take_shuffle_fault(&self, map_task: usize) -> bool {
+        let mut budget = self.shuffle_budget.lock().unwrap();
+        match budget.get_mut(&map_task) {
+            Some(n) if *n > 0 => {
+                *n -= 1;
+                self.fetch_faults.inc();
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Should this store syscall fail transiently? Consumes one unit of
+    /// the injected I/O-error budget.
+    pub fn take_store_fault(&self) -> bool {
+        let mut cur = self.store_budget.load(Ordering::Relaxed);
+        while cur > 0 {
+            match self.store_budget.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.store_faults.inc();
+                    return true;
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+        false
+    }
+
+    /// Runner report: `node` was blacklisted. Append-only.
+    pub fn note_blacklisted(&self, node: NodeId) {
+        let mut log = self.blacklist_log.lock().unwrap();
+        if !log.contains(&node) {
+            log.push(node);
+            self.blacklists.inc();
+        }
+    }
+
+    /// The blacklist in report order (only ever grows).
+    pub fn blacklisted(&self) -> Vec<NodeId> {
+        self.blacklist_log.lock().unwrap().clone()
+    }
+
+    pub fn stats(&self) -> ChaosStats {
+        ChaosStats {
+            faults_injected: self.faults_injected.get(),
+            nodes_killed: self.nodes_killed.get(),
+            fetch_faults: self.fetch_faults.get(),
+            store_faults: self.store_faults.get(),
+            blacklisted: self.blacklists.get(),
+        }
+    }
+
+    /// Register the clock's counters under `prefix` (conventionally
+    /// `chaos`): faults fired, nodes killed, fetch/store faults
+    /// injected, nodes blacklisted.
+    pub fn register_metrics(
+        &self,
+        registry: &MetricsRegistry,
+        prefix: &str,
+    ) -> Result<(), RegistryError> {
+        registry.register_counter(
+            &format!("{prefix}.faults_injected"),
+            Arc::clone(&self.faults_injected),
+        )?;
+        registry
+            .register_counter(&format!("{prefix}.nodes_killed"), Arc::clone(&self.nodes_killed))?;
+        registry
+            .register_counter(&format!("{prefix}.fetch_faults"), Arc::clone(&self.fetch_faults))?;
+        registry
+            .register_counter(&format!("{prefix}.store_faults"), Arc::clone(&self.store_faults))?;
+        registry.register_counter(&format!("{prefix}.blacklisted"), Arc::clone(&self.blacklists))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        let spec = "kill:1@level:2;slow:0:4@now;fetchfail:3:2@maps:5;storeio:2@now";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.events.len(), 4);
+        assert_eq!(plan.to_string(), spec);
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+        assert_eq!(
+            plan.events[0],
+            FaultEvent { trigger: FaultTrigger::AtLevel(2), kind: FaultKind::KillNode(1) }
+        );
+    }
+
+    #[test]
+    fn bad_specs_are_typed_errors() {
+        for bad in [
+            "",
+            "kill:1",            // no trigger
+            "kill@now",          // missing node
+            "slow:1:0.5@now",    // factor < 1
+            "boom:1@now",        // unknown kind
+            "kill:1@when:soon",  // unknown trigger
+            "kill:x@now",        // non-numeric node
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn random_plans_are_deterministic_and_survivable() {
+        for seed in 0..50u64 {
+            let a = FaultPlan::random(seed, 4, 3);
+            assert_eq!(a, FaultPlan::random(seed, 4, 3), "seed {seed}");
+            assert!(a.is_survivable(4, 3), "seed {seed}: {a}");
+            assert!(a.killed_nodes().len() <= 2);
+        }
+        assert_ne!(FaultPlan::random(1, 4, 3), FaultPlan::random(2, 4, 3));
+    }
+
+    #[test]
+    fn now_events_fire_at_construction() {
+        let clock = FaultClock::new(FaultPlan::parse("kill:2@now;slow:1:3@now").unwrap());
+        assert!(clock.is_dead(2));
+        assert!(!clock.is_dead(1));
+        assert_eq!(clock.slow_factor(1), 3.0);
+        assert_eq!(clock.slow_factor(0), 1.0);
+        assert_eq!(clock.dead_nodes(), vec![2]);
+        let s = clock.stats();
+        assert_eq!((s.faults_injected, s.nodes_killed), (2, 1));
+    }
+
+    #[test]
+    fn level_and_map_triggers_fire_once_and_catch_up() {
+        let clock = FaultClock::new(FaultPlan::parse("kill:0@level:2;kill:1@maps:3").unwrap());
+        assert!(clock.dead_nodes().is_empty());
+        clock.begin_level(1);
+        assert!(!clock.is_dead(0));
+        clock.begin_level(3); // skipped past 2: still fires
+        assert!(clock.is_dead(0));
+        for _ in 0..2 {
+            clock.on_map_completion();
+        }
+        assert!(!clock.is_dead(1));
+        clock.on_map_completion();
+        assert!(clock.is_dead(1));
+        clock.begin_level(4); // no double fire
+        assert_eq!(clock.stats().nodes_killed, 2);
+    }
+
+    #[test]
+    fn fetch_and_store_budgets_are_consumed() {
+        let clock = FaultClock::new(FaultPlan::parse("fetchfail:5:2@now;storeio:1@now").unwrap());
+        assert!(clock.take_shuffle_fault(5));
+        assert!(clock.take_shuffle_fault(5));
+        assert!(!clock.take_shuffle_fault(5), "budget exhausted");
+        assert!(!clock.take_shuffle_fault(4), "other tasks unaffected");
+        assert!(clock.take_store_fault());
+        assert!(!clock.take_store_fault());
+        let s = clock.stats();
+        assert_eq!((s.fetch_faults, s.store_faults), (2, 1));
+    }
+
+    #[test]
+    fn blacklist_log_is_append_only_and_deduped() {
+        let clock = FaultClock::new(FaultPlan::parse("storeio:0@now").unwrap());
+        clock.note_blacklisted(3);
+        clock.note_blacklisted(1);
+        clock.note_blacklisted(3);
+        assert_eq!(clock.blacklisted(), vec![3, 1]);
+        assert_eq!(clock.stats().blacklisted, 2);
+    }
+
+    #[test]
+    fn metrics_registry_sees_the_counters() {
+        let clock = FaultClock::new(FaultPlan::parse("kill:1@now;storeio:1@now").unwrap());
+        let reg = MetricsRegistry::new();
+        clock.register_metrics(&reg, "chaos").unwrap();
+        clock.take_store_fault();
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("chaos.nodes_killed"), Some(1));
+        assert_eq!(snap.counter("chaos.store_faults"), Some(1));
+        assert_eq!(snap.counter("chaos.faults_injected"), Some(2));
+    }
+}

@@ -8,6 +8,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::apriori::AprioriConfig;
+use crate::chaos::ChaosConfig;
 use crate::cluster::ClusterConfig;
 use crate::coordinator::PipelineConfig;
 use crate::engine::EngineKind;
@@ -69,6 +70,9 @@ pub struct ExperimentConfig {
     pub store: StoreConfig,
     /// Observability (`[obs]` section; `--log-level` / `--trace-out`).
     pub obs: ObsConfig,
+    /// Deterministic fault injection (`[chaos]` section;
+    /// `mine --fault-plan`). Off by default.
+    pub chaos: ChaosConfig,
     /// Workload: transactions to generate (Quest T10.I4) when no input
     /// file is given.
     pub transactions: usize,
@@ -92,6 +96,7 @@ impl Default for ExperimentConfig {
             incremental: IncrementalConfig::default(),
             store: StoreConfig::default(),
             obs: ObsConfig::default(),
+            chaos: ChaosConfig::default(),
             transactions: 10_000,
             seed: 0xACE5_2012,
         }
@@ -305,6 +310,15 @@ impl ExperimentConfig {
                 }
                 "obs.log_level" => {
                     cfg.obs.log_level = value.parse().map_err(|e: String| bad(&e))?;
+                }
+                "chaos.plan" => {
+                    // Validate the spec at load time so a typo'd plan
+                    // fails before any mining starts.
+                    crate::chaos::FaultPlan::parse(value).map_err(|e| bad(&e))?;
+                    cfg.chaos.plan = Some(value.clone());
+                }
+                "chaos.seed" => {
+                    cfg.chaos.seed = value.parse().map_err(|_| bad("want integer"))?;
                 }
                 other => {
                     return Err(ConfigError::BadValue {
@@ -655,6 +669,36 @@ mod tests {
         assert!(ExperimentConfig::parse("[fabric]\nreplicas = 0").is_err());
         assert!(ExperimentConfig::parse("[fabric]\nshards = many").is_err());
         assert!(ExperimentConfig::parse("[fabric]\nhedge_ms = -1").is_err());
+    }
+
+    #[test]
+    fn chaos_section_parses_and_validates() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+            [chaos]
+            plan = "kill:1@level:2;storeio:1@now"
+            seed = 7
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.chaos.plan.as_deref(), Some("kill:1@level:2;storeio:1@now"));
+        assert_eq!(cfg.chaos.seed, 7);
+        assert!(cfg.chaos.enabled());
+        // an explicit plan wins over the seed
+        let plan = cfg.chaos.resolve(3, 3).unwrap().unwrap();
+        assert_eq!(plan.to_string(), "kill:1@level:2;storeio:1@now");
+        // seed alone derives a survivable random plan
+        let seeded = ExperimentConfig::parse("[chaos]\nseed = 7").unwrap();
+        let plan = seeded.chaos.resolve(4, 3).unwrap().unwrap();
+        assert!(plan.is_survivable(4, 3));
+        // defaults: chaos off
+        let d = ExperimentConfig::default().chaos;
+        assert!(!d.enabled());
+        assert!(d.resolve(3, 3).unwrap().is_none());
+        // a typo'd spec fails at load time, naming the key
+        let err = ExperimentConfig::parse("[chaos]\nplan = \"boom:1@now\"").unwrap_err();
+        assert!(matches!(err, ConfigError::BadValue { ref key, .. } if key == "chaos.plan"));
+        assert!(ExperimentConfig::parse("[chaos]\nseed = many").is_err());
     }
 
     #[test]

@@ -38,6 +38,7 @@ use std::time::Instant;
 
 use crate::apriori::mr::{CandidateCountApp, ItemCountApp};
 use crate::apriori::{candidates, AprioriConfig, Itemset, LevelStats, MiningResult};
+use crate::chaos::FaultClock;
 use crate::cluster::ClusterConfig;
 use crate::data::split::{plan_splits, Split};
 use crate::data::TransactionDb;
@@ -210,6 +211,12 @@ pub struct MrApriori {
     /// `mr.shuffle.records`, ...) and the resident index-cache counters
     /// are published here.
     registry: Option<Arc<MetricsRegistry>>,
+    /// Shared fault clock. When set, every job the driver schedules
+    /// (level loops, the pipelined DAG, delta jobs, exact recounts)
+    /// injects the plan's faults, and the level loop recovers from node
+    /// loss by reaping dead nodes from the DFS and resuming from the
+    /// last completed level instead of restarting the mine.
+    chaos: Option<Arc<FaultClock>>,
 }
 
 /// What a pipelined reduce lane hands back.
@@ -233,6 +240,7 @@ impl MrApriori {
             cache: IndexCache::new(),
             trace: None,
             registry: None,
+            chaos: None,
         }
     }
 
@@ -270,6 +278,21 @@ impl MrApriori {
     pub fn with_trace(mut self, trace: Option<TraceCtx>) -> Self {
         self.trace = trace;
         self
+    }
+
+    /// Attach (or detach) a shared fault clock. `None` — the default —
+    /// is the zero-cost off path: no fault checks anywhere on the hot
+    /// loops beyond one `Option` test.
+    pub fn with_chaos(mut self, chaos: Option<Arc<FaultClock>>) -> Self {
+        self.chaos = chaos;
+        self
+    }
+
+    /// The attached fault clock, if any. The incremental delta jobs and
+    /// the refresher read it so faults span every schedule the driver
+    /// owns, not just the level loop.
+    pub fn chaos(&self) -> Option<&Arc<FaultClock>> {
+        self.chaos.as_ref()
     }
 
     /// Publish this driver's metrics (per-job timings/counters plus the
@@ -329,6 +352,53 @@ impl MrApriori {
             app.with_cache(&self.cache, generation)
         } else {
             app
+        }
+    }
+
+    /// Run one level's counting job with node-loss recovery: fire the
+    /// fault plan's level-boundary events, reap already-dead nodes from
+    /// the DFS (re-replicating their blocks onto survivors, namenode
+    /// style), build a fresh runner over the updated placement, and —
+    /// when the job strands mid-run because its nodes died under it —
+    /// retry the level against the survivors. Levels already mined stand
+    /// untouched, so a recovered mine resumes from the last completed
+    /// level instead of restarting. Bounded: after `LEVEL_RETRIES`
+    /// stranded attempts (or with no live node left) the error surfaces.
+    fn run_level_job<A: MapReduceApp>(
+        &self,
+        k: usize,
+        app: &A,
+        db: &TransactionDb,
+        splits: &[Split],
+        dfs: &mut Dfs,
+        blocks: &[BlockId],
+        trace: Option<TraceCtx>,
+    ) -> Result<(Vec<(A::K, A::V)>, JobStats), MineError> {
+        const LEVEL_RETRIES: usize = 2;
+        let mut tries = 0usize;
+        loop {
+            if let Some(clock) = &self.chaos {
+                clock.begin_level(k);
+                dfs.reap_dead_nodes(&clock.dead_nodes());
+            }
+            let mut runner =
+                JobRunner::new(&self.cluster, dfs, blocks).with_chaos(self.chaos.clone());
+            runner.trace = trace.clone();
+            match runner.run(app, db, splits, &self.job) {
+                Err(JobError::NodesLost { .. })
+                    if tries < LEVEL_RETRIES
+                        && self
+                            .chaos
+                            .as_ref()
+                            .is_some_and(|c| c.dead_nodes().len() < self.cluster.n_nodes()) =>
+                {
+                    // The heartbeat noticed the loss after the job
+                    // stranded: reap at the loop top and resume this
+                    // level on the survivors.
+                    tries += 1;
+                }
+                other => return Ok(other?),
+            }
         }
     }
 
@@ -398,10 +468,14 @@ impl MrApriori {
         let threshold = self.apriori.threshold(db.len());
         let splits = plan_splits(db, self.split_tx);
         let mut dfs = Dfs::new(&self.cluster);
+        if let Some(clock) = &self.chaos {
+            // Nodes the plan killed before the mine even started never
+            // receive block placements.
+            dfs.reap_dead_nodes(&clock.dead_nodes());
+        }
         let blocks = dfs.write_splits(&splits)?;
         let mine_span = self.trace.as_ref().map(|ctx| mine_span(ctx, db, threshold, false));
         let mine_ctx = mine_span.as_ref().map(|s| s.ctx());
-        let mut runner = JobRunner::new(&self.cluster, &dfs, &blocks);
         // One dataset view per mine: every level job (and its speculative
         // twins) reuses the same per-split index builds.
         let cache_gen = self.cache.begin_generation();
@@ -417,9 +491,16 @@ impl MrApriori {
         // ---- level 1 ----
         let app = ItemCountApp { threshold, capture_all: capture };
         let span = mine_ctx.as_ref().map(|c| level_span(c, 1, db.n_items));
-        runner.trace = span.as_ref().map(|s| s.ctx());
         let lt0 = Instant::now();
-        let (out, stats) = runner.run(&app, db, &splits, &self.job)?;
+        let (out, stats) = self.run_level_job(
+            1,
+            &app,
+            db,
+            &splits,
+            &mut dfs,
+            &blocks,
+            span.as_ref().map(|s| s.ctx()),
+        )?;
         let f1 = if capture {
             let counted = zero_fill(candidates::unit_candidates(db.n_items), &out);
             let f1: Vec<(Itemset, u64)> = counted
@@ -461,9 +542,16 @@ impl MrApriori {
             app.capture_all = capture;
             let app = self.attach_cache(app, cache_gen);
             let span = mine_ctx.as_ref().map(|c| level_span(c, k, n_cands));
-            runner.trace = span.as_ref().map(|s| s.ctx());
             let lt0 = Instant::now();
-            let (out, stats) = runner.run(&app, db, &splits, &self.job)?;
+            let (out, stats) = self.run_level_job(
+                k,
+                &app,
+                db,
+                &splits,
+                &mut dfs,
+                &blocks,
+                span.as_ref().map(|s| s.ctx()),
+            )?;
             let fk = if capture {
                 let counted = zero_fill(cands, &out);
                 let fk: Vec<(Itemset, u64)> = counted
@@ -545,9 +633,19 @@ impl MrApriori {
         let splits = plan_splits(db, self.split_tx);
         let avg_split_tx = avg_split(&splits);
         let mut dfs = Dfs::new(&self.cluster);
+        if let Some(clock) = &self.chaos {
+            // Pipelined jobs overlap, so the DFS cannot be reaped between
+            // levels (the whole DAG borrows one placement). Reap the
+            // plan's pre-mine kills here; nodes lost mid-DAG are handled
+            // by the runner alone — workers on dead nodes exit and their
+            // tasks requeue to survivors (heartbeat-lag semantics), with
+            // namenode re-replication deferred to the next mine.
+            dfs.reap_dead_nodes(&clock.dead_nodes());
+        }
         let blocks = dfs.write_splits(&splits)?;
         let mine_span = self.trace.as_ref().map(|ctx| mine_span(ctx, db, threshold, true));
-        let mut runner = JobRunner::new(&self.cluster, &dfs, &blocks);
+        let mut runner =
+            JobRunner::new(&self.cluster, &dfs, &blocks).with_chaos(self.chaos.clone());
         // Levels overlap in the job DAG, so task spans attach directly to
         // the mine root instead of per-level spans.
         runner.trace = mine_span.as_ref().map(|s| s.ctx());
@@ -588,6 +686,7 @@ impl MrApriori {
         let record_bytes =
             CandidateCountApp::new(Vec::new(), self.engine.as_ref(), db.n_items, threshold)
                 .record_bytes_hint();
+        let splits_ref: &[Split] = &splits;
         let outcome: Result<(), MineError> = std::thread::scope(|scope| {
             // The in-flight predecessor: (first level, counted groups,
             // reduce lane handle). At most one job's reduce is pending.
@@ -600,6 +699,11 @@ impl MrApriori {
             let mut chain_dead = false;
 
             while !chain_dead && self.apriori.level_allowed(k) {
+                if let Some(clock) = &self.chaos {
+                    // Fire level-boundary faults as the DAG reaches each
+                    // level; the runner's own checks see the deaths.
+                    clock.begin_level(k);
+                }
                 // -- candidate groups for the job starting at level k --
                 let mut base: Vec<Itemset> = match &pending {
                     Some((_, prev_groups, _)) => {
@@ -683,8 +787,8 @@ impl MrApriori {
                 }
                 let n_levels = groups.len();
                 let job_cfg = &self.job;
-                let handle =
-                    scope.spawn(move || runner.reduce_stage(&app, map_outputs, job_cfg));
+                let handle = scope
+                    .spawn(move || runner.reduce_stage(&app, db, splits_ref, map_outputs, job_cfg));
                 pending = Some((k, groups, handle));
                 k += n_levels;
             }
@@ -783,8 +887,29 @@ impl<'a> ExactCounter<'a> {
         let app = CandidateCountApp::new(unique, self.driver.engine.as_ref(), db.n_items, 0)
             .with_capture();
         let app = self.driver.attach_cache(app, self.cache_gen);
-        let runner = JobRunner::new(&self.driver.cluster, &self.dfs, &self.blocks);
-        let (out, _stats) = runner.run(&app, db, &self.splits, &self.driver.job)?;
+        // Same recovery discipline as the level loop: reap dead nodes
+        // before each scan (the placement is long-lived, so a node lost
+        // between counts must be evicted from it), retry once if nodes
+        // die under the scan itself.
+        let mut tries = 0usize;
+        let (out, _stats) = loop {
+            if let Some(clock) = self.driver.chaos() {
+                self.dfs.reap_dead_nodes(&clock.dead_nodes());
+            }
+            let runner = JobRunner::new(&self.driver.cluster, &self.dfs, &self.blocks)
+                .with_chaos(self.driver.chaos().cloned());
+            match runner.run(&app, db, &self.splits, &self.driver.job) {
+                Err(JobError::NodesLost { .. })
+                    if tries < 2
+                        && self.driver.chaos().is_some_and(|c| {
+                            c.dead_nodes().len() < self.driver.cluster.n_nodes()
+                        }) =>
+                {
+                    tries += 1;
+                }
+                other => break other?,
+            }
+        };
         let counts: std::collections::HashMap<&Itemset, u64> =
             out.iter().map(|(is, s)| (is, *s)).collect();
         self.recharge_cache_bytes()?;
@@ -1309,6 +1434,59 @@ mod tests {
         let mut counter = ExactCounter::new(&driver, &db).unwrap();
         assert_eq!(counter.count(&db, &itemsets).unwrap(), want);
         assert_eq!(counter.count(&db, &[vec![1]]).unwrap(), vec![db.support(&[1]) as u64]);
+    }
+
+    #[test]
+    fn mine_recovers_from_mid_mine_node_loss_byte_identically() {
+        let db = QuestGenerator::new(QuestParams::dense(400)).generate();
+        let cfg = AprioriConfig { min_support: 0.05, max_k: 4 };
+        let clean = MrApriori::new(ClusterConfig::fhssc(3), cfg.clone())
+            .with_split_tx(100)
+            .mine(&db)
+            .unwrap();
+
+        // Synchronous: a node dies at the level-2 boundary; the loop
+        // reaps it, re-replicates, and resumes from level 2.
+        let clock = Arc::new(FaultClock::new(
+            crate::chaos::FaultPlan::parse("kill:1@level:2").unwrap(),
+        ));
+        let chaotic = MrApriori::new(ClusterConfig::fhssc(3), cfg.clone())
+            .with_split_tx(100)
+            .with_chaos(Some(Arc::clone(&clock)))
+            .mine(&db)
+            .unwrap();
+        assert_eq!(chaotic.result.frequent, clean.result.frequent);
+        assert_eq!(clock.dead_nodes(), vec![1]);
+
+        // Pipelined: a node dies mid map wave; the runner requeues its
+        // work to survivors without touching the shared placement.
+        let clock = Arc::new(FaultClock::new(
+            crate::chaos::FaultPlan::parse("kill:2@maps:3").unwrap(),
+        ));
+        let piped = MrApriori::new(ClusterConfig::fhssc(3), cfg)
+            .with_split_tx(100)
+            .with_pipeline(PipelineConfig::pipelined())
+            .with_chaos(Some(Arc::clone(&clock)))
+            .mine(&db)
+            .unwrap();
+        assert_eq!(piped.result.frequent, clean.result.frequent);
+        assert_eq!(clock.dead_nodes(), vec![2]);
+    }
+
+    #[test]
+    fn count_exact_survives_a_pre_declared_dead_node() {
+        let db = textbook_db();
+        let cfg = AprioriConfig { min_support: 2.0 / 9.0, max_k: 0 };
+        let clock = Arc::new(FaultClock::new(
+            crate::chaos::FaultPlan::parse("kill:0@now").unwrap(),
+        ));
+        let driver = MrApriori::new(ClusterConfig::fhssc(3), cfg)
+            .with_split_tx(3)
+            .with_chaos(Some(clock));
+        let itemsets: Vec<Itemset> = vec![vec![0], vec![0, 1], vec![3, 4]];
+        let counts = driver.count_exact(&db, &itemsets).unwrap();
+        let want: Vec<u64> = itemsets.iter().map(|is| db.support(is) as u64).collect();
+        assert_eq!(counts, want);
     }
 
     #[test]

@@ -329,6 +329,31 @@ impl Dfs {
         self.nodes[node].blocks.clear();
         Ok(moved)
     }
+
+    /// Number of datanodes still alive (not decommissioned).
+    pub fn n_live(&self) -> usize {
+        self.nodes.iter().filter(|n| !n.decommissioned).count()
+    }
+
+    pub fn is_decommissioned(&self, node: NodeId) -> bool {
+        self.nodes[node].decommissioned
+    }
+
+    /// Heartbeat reaping: decommission every newly-dead node (idempotent
+    /// — nodes already processed are skipped) and clamp the replication
+    /// target to the surviving population so later placements keep
+    /// succeeding instead of erroring `NotEnoughNodes`. Returns the
+    /// number of re-replicated block replicas.
+    pub fn reap_dead_nodes(&mut self, dead: &[NodeId]) -> usize {
+        let mut moved = 0;
+        for &node in dead {
+            if node < self.nodes.len() && !self.nodes[node].decommissioned {
+                moved += self.decommission(node).unwrap_or(0);
+            }
+        }
+        self.replication = self.replication.min(self.n_live()).max(1);
+        moved
+    }
 }
 
 impl BlockStore for Dfs {
@@ -454,6 +479,26 @@ mod tests {
         for id in &ids {
             let locs = dfs.locations(*id).unwrap();
             assert_eq!(locs.len(), 2, "no spare node: under-replicated");
+        }
+    }
+
+    #[test]
+    fn reap_is_idempotent_and_clamps_replication() {
+        let (mut dfs, splits) = setup(3, 300, 100);
+        let ids = dfs.write_splits(&splits).unwrap();
+        assert_eq!(dfs.n_live(), 3);
+        dfs.reap_dead_nodes(&[1]);
+        assert!(dfs.is_decommissioned(1));
+        assert_eq!(dfs.n_live(), 2);
+        assert_eq!(dfs.replication, 2, "clamped to survivors");
+        // same dead list again: no error, no change
+        dfs.reap_dead_nodes(&[1]);
+        assert_eq!(dfs.n_live(), 2);
+        // new placements succeed at the clamped factor
+        let id = dfs.put_bytes(100).unwrap();
+        assert_eq!(dfs.locations(id).unwrap().len(), 2);
+        for id in &ids {
+            assert!(!dfs.locations(*id).unwrap().contains(&1));
         }
     }
 

@@ -17,7 +17,7 @@ use crate::apriori::Itemset;
 use crate::coordinator::{MineError, MrApriori};
 use crate::data::{split::Split, Transaction, TransactionDb};
 use crate::engine::{IndexCache, SupportEngine};
-use crate::mapreduce::{app::MapReduceApp, run_adhoc, JobStats};
+use crate::mapreduce::{app::MapReduceApp, run_adhoc_chaos, JobStats};
 
 /// Count a fixed (possibly mixed-length) tracked-itemset list over the
 /// delta with no threshold filter. A thin wrapper over
@@ -106,7 +106,18 @@ pub fn run_delta_count(
         let generation = driver.index_cache().begin_generation();
         app = app.with_cache(driver.index_cache(), generation);
     }
-    let (out, stats) = run_adhoc(&driver.cluster, &delta_db, driver.split_tx, &app, &driver.job)?;
+    // Thread the driver's fault clock through so Δ-jobs fired from a
+    // refresh cycle inject (and recover from) the same plan as the level
+    // loops: dead nodes are reaped from the throwaway placement and a
+    // stranded job retries once against the survivors.
+    let (out, stats) = run_adhoc_chaos(
+        &driver.cluster,
+        &delta_db,
+        driver.split_tx,
+        &app,
+        &driver.job,
+        driver.chaos(),
+    )?;
     Ok((out.into_iter().collect(), stats))
 }
 

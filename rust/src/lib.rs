@@ -30,6 +30,7 @@
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod apriori;
+pub mod chaos;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
@@ -60,6 +61,9 @@ pub mod prelude {
         rules::{format_rule, generate_rules, Rule},
         son::{SonApriori, SonReport},
         AprioriConfig, Itemset, MiningResult,
+    };
+    pub use crate::chaos::{
+        ChaosConfig, ChaosStats, FaultClock, FaultEvent, FaultKind, FaultPlan, FaultTrigger,
     };
     pub use crate::cluster::{ClusterConfig, ClusterConfigError, DeployMode, NodeProfile};
     pub use crate::config::{ExperimentConfig, Preset};

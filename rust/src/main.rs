@@ -68,6 +68,7 @@ USAGE:
              [--split-tx N] [--transactions N | --input FILE] [--rules CONF]
              [--pipeline true|false] [--batch-levels 1|2]
              [--store-dir DIR] [--retain N] [--min-confidence F]
+             [--fault-plan SPEC] [--chaos-seed N]
              [--trace-out FILE] [--log-level error|warn|info|debug]
   repro rules  <mine flags> [--min-confidence F] [--top N]
   repro serve  <mine flags> [--min-confidence F] [--top K] [--workers N]
@@ -76,7 +77,8 @@ USAGE:
                [--refresh-tx N] [--refresh-mode full|incremental]
                [--check-final true|false] [--store-dir DIR] [--retain N]
                [--no-persist true|false] [--shards S] [--replicas R]
-               [--hedge-ms MS] [--kill-node N] [--trace-out FILE]
+               [--hedge-ms MS] [--kill-node N] [--fault-plan SPEC]
+               [--chaos-seed N] [--trace-out FILE]
                [--log-level error|warn|info|debug]
   repro simulate [--config FILE] [--preset P] [--nodes N] [--transactions N]
                  [--pipeline true|false]
@@ -230,6 +232,14 @@ fn experiment_config(flags: &Flags) -> Result<ExperimentConfig, String> {
     if let Some(b) = flags.parse_opt::<bool>("no-persist")? {
         cfg.store.no_persist = b;
     }
+    if let Some(spec) = flags.get("fault-plan") {
+        // Validate eagerly: a typo'd plan must fail before any mining.
+        FaultPlan::parse(spec).map_err(|e| format!("--fault-plan: {e}"))?;
+        cfg.chaos.plan = Some(spec.to_string());
+    }
+    if let Some(s) = flags.parse_opt::<u64>("chaos-seed")? {
+        cfg.chaos.seed = s;
+    }
     if let Some(l) = flags.parse_opt::<LogLevel>("log-level")? {
         cfg.obs.log_level = l;
     }
@@ -272,16 +282,35 @@ fn dump_metrics(registry: &MetricsRegistry, tracing: bool) {
     }
 }
 
+/// Resolve the `[chaos]` section (or `--fault-plan`/`--chaos-seed`)
+/// into the run's shared fault clock. `None` when chaos is off — the
+/// default, with zero overhead anywhere on the hot path.
+fn fault_clock(cfg: &ExperimentConfig) -> Result<Option<Arc<FaultClock>>, String> {
+    let cluster = cfg.cluster();
+    let replication = Dfs::new(&cluster).replication;
+    let plan = cfg
+        .chaos
+        .resolve(cluster.n_nodes(), replication)
+        .map_err(|e| format!("fault plan: {e}"))?;
+    Ok(plan.map(|p| Arc::new(FaultClock::new(p))))
+}
+
 /// Open the configured snapshot store (even with `--no-persist true` —
 /// warm restart still reads it; only writes are gated), with its bytes
 /// charged against a simulated DFS of the configured cluster.
-fn open_store(cfg: &ExperimentConfig) -> Result<Option<Arc<SnapshotStore>>, String> {
+fn open_store(
+    cfg: &ExperimentConfig,
+    chaos: Option<&Arc<FaultClock>>,
+) -> Result<Option<Arc<SnapshotStore>>, String> {
     let Some(dir) = &cfg.store.dir else {
         return Ok(None);
     };
-    let store = SnapshotStore::open(dir, cfg.store.retain)
+    let mut store = SnapshotStore::open(dir, cfg.store.retain)
         .map_err(|e| e.to_string())?
         .with_block_accounting(Box::new(Dfs::new(&cfg.cluster())));
+    if let Some(clock) = chaos {
+        store = store.with_chaos(Arc::clone(clock));
+    }
     Ok(Some(Arc::new(store)))
 }
 
@@ -383,12 +412,24 @@ fn cmd_mine(flags: &Flags) -> Result<(), String> {
     let db = load_or_generate(flags, &cfg)?;
     let trace = trace_sink(flags);
     let registry = Arc::new(MetricsRegistry::new());
+    let chaos = fault_clock(&cfg)?;
+    if let Some(clock) = &chaos {
+        clock
+            .register_metrics(&registry, "chaos")
+            .map_err(|e| e.to_string())?;
+        log!(Info, "chaos: injecting fault plan '{}'", clock.plan());
+    }
     let driver = build_driver(&cfg)?
         .with_trace(trace.as_ref().map(|(_, s)| TraceCtx::root(Arc::clone(s))))
-        .with_registry(Arc::clone(&registry));
+        .with_registry(Arc::clone(&registry))
+        .with_chaos(chaos.clone());
     // Open (and thereby validate) the store *before* the mine — an
     // unwritable --store-dir must not cost a completed mining run.
-    let store = if cfg.store.writes_enabled() { open_store(&cfg)? } else { None };
+    let store = if cfg.store.writes_enabled() {
+        open_store(&cfg, chaos.as_ref())?
+    } else {
+        None
+    };
     log!(
         Info,
         "mining {} transactions on {:?}/{} nodes (engine={}, min_support={}, schedule={})",
@@ -433,6 +474,20 @@ fn cmd_mine(flags: &Flags) -> Result<(), String> {
             / report.jobs.len().max(1) as f64
             * 100.0
     );
+    if let Some(clock) = &chaos {
+        let cs = clock.stats();
+        println!(
+            "chaos: plan '{}' fired {} fault(s) — {} node(s) dead {:?}, {} fetch fault(s), \
+             {} store fault(s), blacklist {:?}; mined on the survivors",
+            clock.plan(),
+            cs.faults_injected,
+            cs.nodes_killed,
+            clock.dead_nodes(),
+            cs.fetch_faults,
+            cs.store_faults,
+            clock.blacklisted(),
+        );
+    }
     if let Some(conf) = flags.parse_opt::<f64>("rules")? {
         let rules = generate_rules(&report.result, conf);
         println!("\n{} association rules at confidence >= {conf}:", rules.len());
@@ -505,7 +560,14 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
     let check_final: bool = flags.parse_opt("check-final")?.unwrap_or(false);
     let mut db = load_or_generate(flags, &cfg)?;
     let base_tx = db.len();
-    let store = open_store(&cfg)?;
+    let chaos = fault_clock(&cfg)?;
+    if let Some(clock) = &chaos {
+        clock
+            .register_metrics(&registry, "chaos")
+            .map_err(|e| e.to_string())?;
+        log!(Info, "chaos: injecting fault plan '{}'", clock.plan());
+    }
+    let store = open_store(&cfg, chaos.as_ref())?;
     // Base identity before any recovered delta lands: the store journals
     // cumulative deltas relative to this exact database. The O(|D|)
     // fingerprint only runs when a store is actually configured.
@@ -531,6 +593,7 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
         }
     }
 
+    let warm_restart = resumed.is_some();
     let (cell, result, start_generation, seed_state) = match resumed {
         Some(r) => {
             // a persisted generation is exact only under the parameters
@@ -566,7 +629,9 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
             // The refresher's driver is the long-lived miner, so it gets
             // the registry when refreshes run; this one-shot cold-start
             // driver takes it otherwise (`engine.cache.*` registers once).
-            let mut driver = build_driver(&cfg)?.with_trace(root_ctx());
+            let mut driver = build_driver(&cfg)?
+                .with_trace(root_ctx())
+                .with_chaos(chaos.clone());
             if s.refresh_batches == 0 {
                 driver = driver.with_registry(Arc::clone(&registry));
             }
@@ -634,7 +699,41 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
                 ));
             }
         }
-        let sharded = shard_index(&cell.load(), cfg.fabric.shards);
+        let fstore = if persist {
+            let dir = cfg
+                .store
+                .dir
+                .as_ref()
+                .expect("writes_enabled implies a dir")
+                .join("fabric");
+            Some(Arc::new(
+                FabricStore::open(&dir, cfg.fabric.shards, cfg.fabric.replicas)
+                    .map_err(|e| e.to_string())?
+                    .with_retain(cfg.store.retain),
+            ))
+        } else {
+            None
+        };
+        // Warm start: a restarted fabric reloads the persisted shard cut
+        // for the resumed generation instead of re-sharding the snapshot
+        // — the on-disk replicas already *are* this cut, so the router
+        // serves the byte-identical generation with no shard rebuild. A
+        // missing/older/mismatched cut quietly falls back to re-sharding.
+        let mut warm_cut = None;
+        if warm_restart {
+            if let Some(fs) = &fstore {
+                if let Some((m, cut)) = fs.load_cut() {
+                    if m.generation == start_generation {
+                        warm_cut = Some(cut);
+                    }
+                }
+            }
+        }
+        let from_store = warm_cut.is_some();
+        let sharded = match warm_cut {
+            Some(cut) => cut,
+            None => shard_index(&cell.load(), cfg.fabric.shards),
+        };
         // a rule is ~an id + two small itemsets + three measures
         let shard_bytes: Vec<u64> =
             sharded.shard_rule_counts().iter().map(|&n| 16 + 56 * n).collect();
@@ -642,12 +741,17 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
             .map_err(|e| e.to_string())?;
         println!(
             "fabric: {} shards x {} replicas on {} nodes \
-             (hedge floor {}ms, simulated DFS utilization {:.2}%)",
+             (hedge floor {}ms, simulated DFS utilization {:.2}%{})",
             cfg.fabric.shards,
             cfg.fabric.replicas,
             cluster.n_nodes(),
             cfg.fabric.hedge_ms,
             placement.utilization() * 100.0,
+            if from_store {
+                format!(", cut warm-started at generation {start_generation}")
+            } else {
+                String::new()
+            },
         );
         let cut = Arc::new(SnapshotCell::with_generation(
             Arc::new(sharded),
@@ -657,24 +761,14 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
         router
             .register_metrics(&registry, "fabric")
             .map_err(|e| e.to_string())?;
-        let fstore = if persist {
-            let dir = cfg
-                .store
-                .dir
-                .as_ref()
-                .expect("writes_enabled implies a dir")
-                .join("fabric");
-            let fs = Arc::new(
-                FabricStore::open(&dir, cfg.fabric.shards, cfg.fabric.replicas)
-                    .map_err(|e| e.to_string())?
-                    .with_retain(cfg.store.retain),
-            );
-            fs.publish(&router.cut().load(), start_generation)
-                .map_err(|e| e.to_string())?;
-            Some(fs)
-        } else {
-            None
-        };
+        if let Some(fs) = &fstore {
+            // Re-publishing a warm-started cut would be a no-op rewrite
+            // of the very files it was loaded from; skip it.
+            if !from_store {
+                fs.publish(&router.cut().load(), start_generation)
+                    .map_err(|e| e.to_string())?;
+            }
+        }
         (Some(router), fstore)
     } else {
         (None, None)
@@ -707,7 +801,8 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
     let refresh_handle = if s.refresh_batches > 0 {
         let driver = build_driver(&cfg)?
             .with_trace(root_ctx())
-            .with_registry(Arc::clone(&registry));
+            .with_registry(Arc::clone(&registry))
+            .with_chaos(chaos.clone());
         let refresher = Refresher::new(driver, s.min_confidence)
             .with_incremental(cfg.incremental.clone())
             .with_trace(root_ctx());
@@ -925,6 +1020,20 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
                 .utilization()
                 .map(|u| format!(", simulated DFS utilization {:.2}%", u * 100.0))
                 .unwrap_or_default(),
+        );
+    }
+    if let Some(clock) = &chaos {
+        let cs = clock.stats();
+        println!(
+            "chaos: plan '{}' fired {} fault(s) — {} node(s) dead {:?}, {} fetch fault(s), \
+             {} store fault(s), blacklist {:?}",
+            clock.plan(),
+            cs.faults_injected,
+            cs.nodes_killed,
+            clock.dead_nodes(),
+            cs.fetch_faults,
+            cs.store_faults,
+            clock.blacklisted(),
         );
     }
     if check {
@@ -1205,6 +1314,32 @@ mod tests {
         assert_eq!(path, PathBuf::from("/tmp/t.json"));
         assert!(sink.is_empty());
         assert!(trace_sink(&flags(&[]).unwrap()).is_none());
+    }
+
+    #[test]
+    fn chaos_flags_apply_and_validate() {
+        let f = flags(&["--fault-plan", "kill:1@level:2;storeio:2@now"]).unwrap();
+        let cfg = experiment_config(&f).unwrap();
+        assert_eq!(
+            cfg.chaos.plan.as_deref(),
+            Some("kill:1@level:2;storeio:2@now")
+        );
+        assert!(cfg.chaos.enabled());
+        let clock = fault_clock(&cfg).unwrap().expect("chaos is on");
+        assert_eq!(clock.plan().to_string(), "kill:1@level:2;storeio:2@now");
+        // a seed alone derives a survivable random plan for the cluster
+        let f = flags(&["--chaos-seed", "7", "--nodes", "3"]).unwrap();
+        let cfg = experiment_config(&f).unwrap();
+        assert_eq!(cfg.chaos.seed, 7);
+        let clock = fault_clock(&cfg).unwrap().expect("seeded chaos is on");
+        assert!(clock.plan().is_survivable());
+        // off by default: no clock anywhere near the hot path
+        let cfg = experiment_config(&flags(&[]).unwrap()).unwrap();
+        assert!(!cfg.chaos.enabled());
+        assert!(fault_clock(&cfg).unwrap().is_none());
+        // a typo'd plan fails at flag time, before any mining runs
+        let f = flags(&["--fault-plan", "explode:1@now"]).unwrap();
+        assert!(experiment_config(&f).is_err());
     }
 
     #[test]

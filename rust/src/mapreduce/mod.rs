@@ -87,9 +87,48 @@ pub fn run_adhoc<A: MapReduceApp>(
     app: &A,
     cfg: &JobConfig,
 ) -> Result<(Vec<(A::K, A::V)>, JobStats), AdhocJobError> {
+    run_adhoc_chaos(cluster, db, split_tx, app, cfg, None)
+}
+
+/// [`run_adhoc`] under a shared fault clock: already-dead nodes are
+/// reaped from the fresh DFS before placement (so locality scheduling
+/// works over survivors), and a job stranded by nodes lost *mid-run* is
+/// retried once against the reaped placement — the delta jobs' node-loss
+/// recovery. With `chaos = None` this is exactly [`run_adhoc`].
+pub fn run_adhoc_chaos<A: MapReduceApp>(
+    cluster: &ClusterConfig,
+    db: &TransactionDb,
+    split_tx: usize,
+    app: &A,
+    cfg: &JobConfig,
+    chaos: Option<&std::sync::Arc<crate::chaos::FaultClock>>,
+) -> Result<(Vec<(A::K, A::V)>, JobStats), AdhocJobError> {
     let splits = plan_splits(db, split_tx);
     let mut dfs = Dfs::new(cluster);
+    if let Some(clock) = chaos {
+        dfs.reap_dead_nodes(&clock.dead_nodes());
+    }
     let blocks = dfs.write_splits(&splits)?;
-    let runner = JobRunner::new(cluster, &dfs, &blocks);
-    Ok(runner.run(app, db, &splits, cfg)?)
+    let first = JobRunner::new(cluster, &dfs, &blocks)
+        .with_chaos(chaos.map(std::sync::Arc::clone))
+        .run(app, db, &splits, cfg);
+    match first {
+        Err(JobError::NodesLost { .. }) if chaos.is_some_and(|c| !c.dead_nodes().is_empty()) => {
+            let clock = chaos.expect("guarded");
+            if clock.dead_nodes().len() >= cluster.n_nodes() {
+                return Err(JobError::NodesLost {
+                    pending: splits.len(),
+                    dead: clock.dead_nodes().len(),
+                }
+                .into());
+            }
+            let mut dfs = Dfs::new(cluster);
+            dfs.reap_dead_nodes(&clock.dead_nodes());
+            let blocks = dfs.write_splits(&splits)?;
+            let runner = JobRunner::new(cluster, &dfs, &blocks)
+                .with_chaos(Some(std::sync::Arc::clone(clock)));
+            Ok(runner.run(app, db, &splits, cfg)?)
+        }
+        other => Ok(other?),
+    }
 }

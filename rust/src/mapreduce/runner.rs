@@ -12,11 +12,22 @@
 //! threads — they are the business of `sim`; this engine measures real
 //! wall-clock and real scheduling behaviour (locality ratios, speculation
 //! wins/waste, failure retries).
+//!
+//! **Node loss** (chaos-injected via [`FaultClock`]): a tasktracker whose
+//! node stops heartbeating is *lost* — its running attempts are requeued
+//! and, Hadoop-faithfully, so are its **completed** map tasks, because
+//! map output lives on the node's local disk and the shuffle can no
+//! longer fetch it. Nodes that keep failing attempts are blacklisted
+//! (never the last live one). A job whose every tasktracker is gone
+//! returns [`JobError::NodesLost`] instead of deadlocking, so multi-level
+//! drivers can re-replicate blocks and resume from the last completed
+//! level.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::{Condvar, Mutex};
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
+use crate::chaos::FaultClock;
 use crate::cluster::{ClusterConfig, NodeId};
 use crate::data::split::{split_transactions, Split};
 use crate::data::TransactionDb;
@@ -25,6 +36,11 @@ use crate::obs::TraceCtx;
 
 use super::app::MapReduceApp;
 use super::shuffle::{combine_local_in_place, group_by_key, partition_drain};
+
+/// Failed fetches of one map's output tolerated before the shuffle
+/// declares the output lost and re-executes the map (Hadoop's
+/// fetch-failure → map re-execution threshold).
+const SHUFFLE_FETCH_MAX_RETRIES: usize = 3;
 
 /// Knobs of one job submission (Hadoop's `JobConf` analogue).
 #[derive(Debug, Clone)]
@@ -39,7 +55,13 @@ pub struct JobConfig {
     /// of the median completed map duration.
     pub speculation_slowdown: f64,
     /// Max attempts per task before the job aborts (Hadoop default 4).
+    /// Attempts lost to a dead node do **not** count — only genuine
+    /// attempt failures do (Hadoop's lost-tracker requeue semantics).
     pub max_attempts: usize,
+    /// Blacklist a tasktracker after this many attempt failures on it
+    /// (Hadoop's `mapred.max.tracker.failures`, default 4). The last
+    /// live node is never blacklisted.
+    pub node_blacklist_failures: usize,
     /// Deterministic failure injection, if any.
     pub failure: Option<FailureSpec>,
 }
@@ -52,6 +74,7 @@ impl Default for JobConfig {
             speculative: true,
             speculation_slowdown: 1.5,
             max_attempts: 4,
+            node_blacklist_failures: 4,
             failure: None,
         }
     }
@@ -96,6 +119,17 @@ pub struct JobStats {
     pub reduce_attempts: usize,
     pub reduce_failures: usize,
     pub output_records: usize,
+    /// Tasktrackers lost (stopped heartbeating) during this job.
+    pub lost_nodes: usize,
+    /// Completed map tasks requeued because their output died with a
+    /// lost node (map output lives on node-local disk).
+    pub lost_maps_requeued: usize,
+    /// Nodes blacklisted for repeated attempt failures.
+    pub nodes_blacklisted: usize,
+    /// Reducer fetches of map output that failed and were retried.
+    pub shuffle_fetch_retries: usize,
+    /// Maps re-executed after a reducer exhausted its fetch retries.
+    pub maps_reexecuted: usize,
     pub map_secs: f64,
     pub reduce_secs: f64,
     pub total_secs: f64,
@@ -126,6 +160,10 @@ pub enum JobError {
     },
     BadPlacement { splits: usize, blocks: usize },
     NoReducers,
+    /// Every tasktracker that could run the remaining tasks is gone —
+    /// the job is stranded, not failed. Multi-level drivers recover by
+    /// re-replicating blocks onto survivors and re-running the level.
+    NodesLost { pending: usize, dead: usize },
 }
 
 impl std::fmt::Display for JobError {
@@ -141,6 +179,12 @@ impl std::fmt::Display for JobError {
                 write!(f, "splits/blocks length mismatch: {splits} vs {blocks}")
             }
             Self::NoReducers => write!(f, "n_reducers must be >= 1"),
+            Self::NodesLost { pending, dead } => {
+                write!(
+                    f,
+                    "job stranded: {pending} tasks unrunnable after losing {dead} node(s)"
+                )
+            }
         }
     }
 }
@@ -157,6 +201,9 @@ pub struct JobRunner<'a> {
     /// (annotated with Hadoop-style job counters) under this context.
     /// `pub(crate)` so the coordinator can re-parent per level job.
     pub(crate) trace: Option<TraceCtx>,
+    /// When set, the shared chaos clock: workers heartbeat against it
+    /// (node death, slowdown) and the shuffle consults it per fetch.
+    pub(crate) chaos: Option<Arc<FaultClock>>,
 }
 
 /// A completed map wave, ready for [`JobRunner::reduce_stage`]: the
@@ -179,25 +226,84 @@ impl<K, V> MapOutputs<K, V> {
 /// Jobtracker state shared by all tasktracker threads.
 struct MapPhase<K, V> {
     pending: Vec<usize>,
-    /// task -> (attempt count started, started instants of live attempts)
-    running: HashMap<usize, Vec<Instant>>,
+    /// task -> live attempts as (node running it, start instant)
+    running: HashMap<usize, Vec<(NodeId, Instant)>>,
     attempts_started: HashMap<usize, usize>,
+    /// task -> genuine attempt failures (lost-node requeues excluded) —
+    /// this, not the attempt number, is what `max_attempts` bounds.
+    failed_attempts: HashMap<usize, usize>,
     completed: HashSet<usize>,
+    /// task -> node whose local disk holds the completed map output.
+    completed_on: HashMap<usize, NodeId>,
     completed_durations: Vec<f64>,
+    /// node -> attempt failures charged to it (blacklisting input).
+    node_failures: HashMap<NodeId, usize>,
+    blacklisted: HashSet<NodeId>,
+    /// Nodes whose loss this jobtracker has already processed.
+    lost_nodes: HashSet<NodeId>,
     outputs: HashMap<usize, Vec<Vec<(K, V)>>>,
     stats: JobStats,
     abort: Option<JobError>,
 }
 
+impl<K, V> MapPhase<K, V> {
+    /// Lost-tasktracker cleanup (Hadoop's heartbeat-timeout path): drop
+    /// the node's running attempts, requeue its completed map tasks —
+    /// their output lived on its local disk — and requeue anything left
+    /// with no live attempt. Idempotent per node.
+    fn lose_node(&mut self, node: NodeId) {
+        if !self.lost_nodes.insert(node) {
+            return;
+        }
+        self.stats.lost_nodes += 1;
+        let mut stranded: Vec<usize> = Vec::new();
+        for (&task, starts) in self.running.iter_mut() {
+            let before = starts.len();
+            starts.retain(|&(n, _)| n != node);
+            if starts.len() < before && starts.is_empty() {
+                stranded.push(task);
+            }
+        }
+        self.running.retain(|_, starts| !starts.is_empty());
+        for task in stranded {
+            if !self.completed.contains(&task) && !self.pending.contains(&task) {
+                self.pending.push(task);
+            }
+        }
+        let lost_outputs: Vec<usize> = self
+            .completed_on
+            .iter()
+            .filter(|&(_, &n)| n == node)
+            .map(|(&t, _)| t)
+            .collect();
+        for task in lost_outputs {
+            self.completed_on.remove(&task);
+            self.completed.remove(&task);
+            self.outputs.remove(&task);
+            self.stats.lost_maps_requeued += 1;
+            if !self.pending.contains(&task) && !self.running.contains_key(&task) {
+                self.pending.push(task);
+            }
+        }
+    }
+}
+
 impl<'a> JobRunner<'a> {
     pub fn new(cluster: &'a ClusterConfig, dfs: &'a Dfs, blocks: &'a [BlockId]) -> Self {
-        Self { cluster, dfs, blocks, trace: None }
+        Self { cluster, dfs, blocks, trace: None, chaos: None }
     }
 
     /// Attach (or detach) a tracing context; task-level spans become
     /// children of it. `None` — the default — is the zero-cost off path.
     pub fn with_trace(mut self, trace: Option<TraceCtx>) -> Self {
         self.trace = trace;
+        self
+    }
+
+    /// Attach (or detach) the shared fault clock. `None` — the default —
+    /// runs fault-free with zero overhead on the hot path.
+    pub fn with_chaos(mut self, chaos: Option<Arc<FaultClock>>) -> Self {
+        self.chaos = chaos;
         self
     }
 
@@ -211,7 +317,7 @@ impl<'a> JobRunner<'a> {
         cfg: &JobConfig,
     ) -> Result<(Vec<(A::K, A::V)>, JobStats), JobError> {
         let outputs = self.map_stage(app, db, splits, cfg)?;
-        self.reduce_stage(app, outputs, cfg)
+        self.reduce_stage(app, db, splits, outputs, cfg)
     }
 
     /// Run just the map wave of a job: validate, schedule the map tasks
@@ -247,9 +353,15 @@ impl<'a> JobRunner<'a> {
     /// Shuffle + reduce wave over a completed map stage. Output is
     /// key-sorted and deterministic regardless of what else is running on
     /// the cluster (the shuffle pulls partitions in task order).
+    ///
+    /// `db` and `splits` are the map stage's inputs: a fetch of some
+    /// map's output that keeps failing past the retry cap is resolved —
+    /// Hadoop-faithfully — by re-executing that map, which needs them.
     pub fn reduce_stage<A: MapReduceApp>(
         &self,
         app: &A,
+        db: &TransactionDb,
+        splits: &[Split],
         map_outputs: MapOutputs<A::K, A::V>,
         cfg: &JobConfig,
     ) -> Result<(Vec<(A::K, A::V)>, JobStats), JobError> {
@@ -274,7 +386,26 @@ impl<'a> JobRunner<'a> {
             .map(|&n| Vec::with_capacity(n))
             .collect();
         for tid in task_ids {
-            let parts = outputs.remove(&tid).expect("task id came from the key set");
+            let mut parts = outputs.remove(&tid).expect("task id came from the key set");
+            if let Some(clock) = &self.chaos {
+                // Fetch-failure handling, Hadoop semantics: retry with
+                // capped exponential backoff; past the cap, declare the
+                // map output lost and re-execute the map (deterministic
+                // ⇒ byte-identical replacement output).
+                let mut backoff = Duration::from_millis(1);
+                let mut failures = 0usize;
+                while clock.take_shuffle_fault(tid) {
+                    failures += 1;
+                    stats.shuffle_fetch_retries += 1;
+                    if failures >= SHUFFLE_FETCH_MAX_RETRIES {
+                        parts = self.execute_map(app, db, &splits[tid], cfg);
+                        stats.maps_reexecuted += 1;
+                        break;
+                    }
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(8));
+                }
+            }
             for (r, part) in parts.into_iter().enumerate() {
                 stats.shuffle_records += part.len();
                 reduce_inputs[r].extend(part);
@@ -298,6 +429,27 @@ impl<'a> JobRunner<'a> {
         Ok((output, stats))
     }
 
+    /// One clean map execution of `split` (no failure injection, no
+    /// scheduling): the shuffle's map re-execution path. The app's map
+    /// and combiner are deterministic, so the partitions are
+    /// byte-identical to the output the lost node held.
+    fn execute_map<A: MapReduceApp>(
+        &self,
+        app: &A,
+        db: &TransactionDb,
+        split: &Split,
+        cfg: &JobConfig,
+    ) -> Vec<Vec<(A::K, A::V)>> {
+        let mut records: Vec<(A::K, A::V)> = Vec::new();
+        let mut scratch: Vec<A::V> = Vec::new();
+        let input = split_transactions(db, split);
+        app.map(split, input, &mut |k, v| records.push((k, v)));
+        if cfg.enable_combiner {
+            combine_local_in_place(&mut records, |k, vs| app.combine(k, vs), &mut scratch);
+        }
+        partition_drain(&mut records, cfg.n_reducers)
+    }
+
     /// The map wave: tasktracker threads pull tasks with locality
     /// preference; stragglers get speculative duplicates.
     #[allow(clippy::type_complexity)]
@@ -313,8 +465,13 @@ impl<'a> JobRunner<'a> {
             pending: (0..n_tasks).collect(),
             running: HashMap::new(),
             attempts_started: HashMap::new(),
+            failed_attempts: HashMap::new(),
             completed: HashSet::new(),
+            completed_on: HashMap::new(),
             completed_durations: Vec::with_capacity(n_tasks),
+            node_failures: HashMap::new(),
+            blacklisted: HashSet::new(),
+            lost_nodes: HashSet::new(),
             // One entry per map task — sized once, never rehashed.
             outputs: HashMap::with_capacity(n_tasks),
             stats: JobStats {
@@ -342,6 +499,14 @@ impl<'a> JobRunner<'a> {
         if let Some(err) = st.abort.take() {
             return Err(err);
         }
+        if st.completed.len() != st.stats.maps_total {
+            // Every worker exited (dead or blacklisted trackers stop
+            // pulling) with tasks still unfinished: the job is stranded.
+            return Err(JobError::NodesLost {
+                pending: st.stats.maps_total - st.completed.len(),
+                dead: st.lost_nodes.len(),
+            });
+        }
         let outputs = std::mem::take(&mut st.outputs);
         Ok((outputs, st.stats.clone()))
     }
@@ -367,6 +532,20 @@ impl<'a> JobRunner<'a> {
             let picked: Option<(usize, usize, bool)> = {
                 let mut st = state.lock().unwrap();
                 loop {
+                    // 0. heartbeat: a dead tasktracker takes its running
+                    // attempts and node-local map outputs with it; a
+                    // blacklisted one just stops pulling work.
+                    if let Some(clock) = &self.chaos {
+                        if clock.is_dead(node) {
+                            st.lose_node(node);
+                            cv.notify_all();
+                            return;
+                        }
+                    }
+                    if st.blacklisted.contains(&node) {
+                        cv.notify_all();
+                        return;
+                    }
                     if st.abort.is_some() || st.completed.len() == st.stats.maps_total {
                         cv.notify_all();
                         return;
@@ -390,7 +569,7 @@ impl<'a> JobRunner<'a> {
                             .entry(task)
                             .and_modify(|a| *a += 1)
                             .or_insert(1);
-                        st.running.entry(task).or_default().push(Instant::now());
+                        st.running.entry(task).or_default().push((node, Instant::now()));
                         st.stats.map_attempts += 1;
                         break Some((task, attempt, false));
                     }
@@ -406,7 +585,7 @@ impl<'a> JobRunner<'a> {
                             .filter(|(t, starts)| {
                                 !st.completed.contains(t)
                                     && starts.len() == 1 // not yet duplicated
-                                    && starts[0].elapsed().as_secs_f64() > threshold
+                                    && starts[0].1.elapsed().as_secs_f64() > threshold
                             })
                             .map(|(&t, _)| t)
                             .next();
@@ -416,7 +595,7 @@ impl<'a> JobRunner<'a> {
                                 .entry(task)
                                 .and_modify(|a| *a += 1)
                                 .or_insert(1);
-                            st.running.get_mut(&task).unwrap().push(Instant::now());
+                            st.running.get_mut(&task).unwrap().push((node, Instant::now()));
                             st.stats.map_attempts += 1;
                             st.stats.speculative_launched += 1;
                             break Some((task, attempt, true));
@@ -485,15 +664,38 @@ impl<'a> JobRunner<'a> {
             };
             // Record the span before contending for the report lock.
             drop(span);
+            // A degraded node does the same work, slower (bounded so
+            // chaos runs stay fast; the *scheduling* consequences —
+            // speculation, blacklist pressure — are what matter).
+            if let Some(clock) = &self.chaos {
+                let factor = clock.slow_factor(node);
+                if factor > 1.0 {
+                    let extra = started.elapsed().mul_f64(factor - 1.0);
+                    std::thread::sleep(extra.min(Duration::from_millis(50)));
+                }
+            }
 
             // --- report under the lock ---
             let mut st = state.lock().unwrap();
+            if let Some(clock) = &self.chaos {
+                if clock.is_dead(node) {
+                    // the node died while this attempt ran: its output
+                    // never reaches the jobtracker
+                    st.lose_node(node);
+                    cv.notify_all();
+                    return;
+                }
+            }
             match result {
                 Some(partitions) => {
                     if st.completed.insert(task) {
+                        st.completed_on.insert(task, node);
                         st.completed_durations
                             .push(started.elapsed().as_secs_f64());
                         st.outputs.insert(task, partitions);
+                        if let Some(clock) = &self.chaos {
+                            clock.on_map_completion();
+                        }
                     } else if speculative || attempt > 1 {
                         st.stats.speculative_wasted += 1;
                     }
@@ -503,17 +705,44 @@ impl<'a> JobRunner<'a> {
                     st.stats.map_failures += 1;
                     // remove this attempt's start record
                     if let Some(starts) = st.running.get_mut(&task) {
-                        starts.pop();
+                        if let Some(pos) = starts.iter().position(|&(n, _)| n == node) {
+                            starts.remove(pos);
+                        }
                         if starts.is_empty() {
                             st.running.remove(&task);
                         }
                     }
+                    // charge the node; blacklist repeat offenders, but
+                    // never the last node still pulling work
+                    let node_fails = {
+                        let e = st.node_failures.entry(node).or_insert(0);
+                        *e += 1;
+                        *e
+                    };
+                    if node_fails >= cfg.node_blacklist_failures {
+                        let live = self
+                            .cluster
+                            .n_nodes()
+                            .saturating_sub(st.lost_nodes.len())
+                            .saturating_sub(st.blacklisted.len());
+                        if live > 1 && st.blacklisted.insert(node) {
+                            st.stats.nodes_blacklisted += 1;
+                            if let Some(clock) = &self.chaos {
+                                clock.note_blacklisted(node);
+                            }
+                        }
+                    }
+                    let failed = {
+                        let e = st.failed_attempts.entry(task).or_insert(0);
+                        *e += 1;
+                        *e
+                    };
                     if st.completed.contains(&task) {
                         // a twin already finished; nothing to do
-                    } else if attempt >= cfg.max_attempts {
+                    } else if failed >= cfg.max_attempts {
                         st.abort = Some(JobError::MapTaskFailed {
                             task,
-                            attempts: attempt,
+                            attempts: failed,
                             max: cfg.max_attempts,
                         });
                     } else if !st.pending.contains(&task)
@@ -564,10 +793,19 @@ impl<'a> JobRunner<'a> {
         let inputs = &inputs;
 
         std::thread::scope(|scope| {
-            for profile in self.cluster.nodes.iter() {
+            for (node, profile) in self.cluster.nodes.iter().enumerate() {
                 for _slot in 0..profile.slots {
                     let state = &state;
                     scope.spawn(move || loop {
+                        // heartbeat: a dead node's reducers stop pulling;
+                        // unclaimed partitions fail over to survivors
+                        // (an in-flight attempt finishes — the input was
+                        // already fetched, Hadoop's heartbeat lag).
+                        if let Some(clock) = &self.chaos {
+                            if clock.is_dead(node) {
+                                return;
+                            }
+                        }
                         let picked = {
                             let mut st = state.lock().unwrap();
                             if st.abort.is_some() || st.done.len() == n {
@@ -643,6 +881,12 @@ impl<'a> JobRunner<'a> {
         if let Some(err) = st.abort.take() {
             return Err(err);
         }
+        if st.done.len() != n {
+            return Err(JobError::NodesLost {
+                pending: n - st.done.len(),
+                dead: self.chaos.as_ref().map(|c| c.dead_nodes().len()).unwrap_or(0),
+            });
+        }
         stats.reduce_attempts = st.attempts_total;
         stats.reduce_failures = st.failures;
         // Deterministic final order: concat partitions by id, sort by key.
@@ -706,7 +950,7 @@ mod tests {
         let mo = runner.map_stage(&ItemCount, &db, &splits, &cfg).unwrap();
         assert_eq!(mo.stats().maps_total, splits.len());
         assert_eq!(mo.stats().shuffle_records, 0, "shuffle not yet pulled");
-        let (staged, s2) = runner.reduce_stage(&ItemCount, mo, &cfg).unwrap();
+        let (staged, s2) = runner.reduce_stage(&ItemCount, &db, &splits, mo, &cfg).unwrap();
         assert_eq!(one_shot, staged);
         assert_eq!(s1.shuffle_records, s2.shuffle_records);
         assert_eq!(s1.output_records, s2.output_records);
@@ -726,9 +970,10 @@ mod tests {
 
         let mo_a = runner.map_stage(&ItemCount, &db, &splits, &cfg).unwrap();
         let ((out_a, stats_a), (out_b, stats_b)) = std::thread::scope(|s| {
-            let reduce_a = s.spawn(|| runner.reduce_stage(&ItemCount, mo_a, &cfg).unwrap());
+            let reduce_a =
+                s.spawn(|| runner.reduce_stage(&ItemCount, &db, &splits, mo_a, &cfg).unwrap());
             let mo_b = runner.map_stage(&ItemCount, &db, &splits, &cfg).unwrap();
-            let b = runner.reduce_stage(&ItemCount, mo_b, &cfg).unwrap();
+            let b = runner.reduce_stage(&ItemCount, &db, &splits, mo_b, &cfg).unwrap();
             (reduce_a.join().unwrap(), b)
         });
         assert_eq!(out_a, truth);
@@ -846,6 +1091,101 @@ mod tests {
             runner.run(&ItemCount, &db, &splits, &cfg),
             Err(JobError::ReduceTaskFailed { .. })
         ));
+    }
+
+    #[test]
+    fn killed_node_requeues_its_completed_maps_and_job_recovers() {
+        use crate::chaos::{FaultClock, FaultPlan};
+        let (cluster, db, splits) = fixture(3, 1200);
+        let mut dfs = Dfs::new(&cluster);
+        let blocks = dfs.write_splits(&splits).unwrap();
+        let truth = ground_truth(&db);
+        // node 1 dies after its tracker has had a chance to complete
+        // maps: those outputs are gone and must be re-executed elsewhere
+        let clock = Arc::new(FaultClock::new(FaultPlan::parse("kill:1@maps:2").unwrap()));
+        let runner = JobRunner::new(&cluster, &dfs, &blocks).with_chaos(Some(Arc::clone(&clock)));
+        let cfg = JobConfig { n_reducers: 2, ..Default::default() };
+        let (out, stats) = runner.run(&ItemCount, &db, &splits, &cfg).unwrap();
+        assert_eq!(out, truth, "recovery must not change the answer");
+        assert_eq!(stats.lost_nodes, 1);
+        assert!(clock.is_dead(1));
+    }
+
+    #[test]
+    fn losing_every_node_strands_the_job_with_a_typed_error() {
+        use crate::chaos::{FaultClock, FaultPlan};
+        let (cluster, db, splits) = fixture(2, 400);
+        let mut dfs = Dfs::new(&cluster);
+        let blocks = dfs.write_splits(&splits).unwrap();
+        let clock = Arc::new(FaultClock::new(FaultPlan::parse("kill:0@now;kill:1@now").unwrap()));
+        let runner = JobRunner::new(&cluster, &dfs, &blocks).with_chaos(Some(clock));
+        match runner.run(&ItemCount, &db, &splits, &JobConfig::default()) {
+            Err(JobError::NodesLost { pending, dead }) => {
+                assert_eq!(pending, splits.len());
+                assert_eq!(dead, 2);
+            }
+            other => panic!("expected NodesLost, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn repeated_failures_blacklist_a_node_but_never_the_last_one() {
+        let (cluster, db, splits) = fixture(2, 800);
+        let mut dfs = Dfs::new(&cluster);
+        let blocks = dfs.write_splits(&splits).unwrap();
+        let runner = JobRunner::new(&cluster, &dfs, &blocks);
+        let cfg = JobConfig {
+            failure: Some(FailureSpec { map_fail_prob: 0.5, reduce_fail_prob: 0.0, seed: 11 }),
+            max_attempts: 64,
+            node_blacklist_failures: 2,
+            speculative: false,
+            n_reducers: 2,
+            ..Default::default()
+        };
+        let (out, stats) = runner.run(&ItemCount, &db, &splits, &cfg).unwrap();
+        assert_eq!(out, ground_truth(&db));
+        assert!(
+            stats.nodes_blacklisted <= 1,
+            "one node must survive: {} blacklisted",
+            stats.nodes_blacklisted
+        );
+    }
+
+    #[test]
+    fn shuffle_fetch_faults_retry_then_reexecute_byte_identically() {
+        use crate::chaos::{FaultClock, FaultPlan};
+        let (cluster, db, splits) = fixture(2, 600);
+        let mut dfs = Dfs::new(&cluster);
+        let blocks = dfs.write_splits(&splits).unwrap();
+        let clean = JobRunner::new(&cluster, &dfs, &blocks)
+            .run(&ItemCount, &db, &splits, &JobConfig { n_reducers: 2, ..Default::default() })
+            .unwrap()
+            .0;
+        // task 0: two transient faults → retries absorb them;
+        // task 1: a burst past the cap → map re-execution
+        let clock = Arc::new(FaultClock::new(
+            FaultPlan::parse("fetchfail:0:2@now;fetchfail:1:9@now").unwrap(),
+        ));
+        let runner = JobRunner::new(&cluster, &dfs, &blocks).with_chaos(Some(Arc::clone(&clock)));
+        let (out, stats) = runner
+            .run(&ItemCount, &db, &splits, &JobConfig { n_reducers: 2, ..Default::default() })
+            .unwrap();
+        assert_eq!(out, clean, "fetch recovery must not change the answer");
+        assert!(stats.shuffle_fetch_retries >= 2, "got {}", stats.shuffle_fetch_retries);
+        assert_eq!(stats.maps_reexecuted, 1, "task 1 re-executed exactly once");
+    }
+
+    #[test]
+    fn slow_node_is_survived_and_results_unchanged() {
+        use crate::chaos::{FaultClock, FaultPlan};
+        let (cluster, db, splits) = fixture(2, 600);
+        let mut dfs = Dfs::new(&cluster);
+        let blocks = dfs.write_splits(&splits).unwrap();
+        let clock = Arc::new(FaultClock::new(FaultPlan::parse("slow:0:6@now").unwrap()));
+        let runner = JobRunner::new(&cluster, &dfs, &blocks).with_chaos(Some(clock));
+        let cfg = JobConfig { n_reducers: 2, ..Default::default() };
+        let (out, _) = runner.run(&ItemCount, &db, &splits, &cfg).unwrap();
+        assert_eq!(out, ground_truth(&db));
     }
 
     #[test]

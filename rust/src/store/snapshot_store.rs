@@ -34,8 +34,10 @@ use std::fs;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
+use crate::chaos::FaultClock;
 use crate::dfs::BlockStore;
 
 use super::{codec, BaseRef, CodecError, Manifest, Snapshot, SnapshotRef};
@@ -47,6 +49,9 @@ use super::{codec, BaseRef, CodecError, Manifest, Snapshot, SnapshotRef};
 pub enum StoreError {
     Io { path: PathBuf, err: std::io::Error },
     Codec { path: PathBuf, err: CodecError },
+    /// A commit syscall kept failing past the bounded retry budget
+    /// (transient-fault tolerance exhausted); `err` is the last failure.
+    Exhausted { op: &'static str, path: PathBuf, attempts: usize, err: std::io::Error },
     /// A generation file decoded to a different generation number than
     /// its name claims — treated like corruption.
     GenerationMismatch { path: PathBuf, want: u64, got: u64 },
@@ -60,6 +65,11 @@ impl std::fmt::Display for StoreError {
         match self {
             Self::Io { path, err } => write!(f, "{}: {err}", path.display()),
             Self::Codec { path, err } => write!(f, "{}: {err}", path.display()),
+            Self::Exhausted { op, path, attempts, err } => write!(
+                f,
+                "{}: {op} still failing after {attempts} attempts: {err}",
+                path.display()
+            ),
             Self::GenerationMismatch { path, want, got } => write!(
                 f,
                 "{}: file named generation {want} decodes as generation {got}",
@@ -80,6 +90,7 @@ impl std::error::Error for StoreError {
         match self {
             Self::Io { err, .. } => Some(err),
             Self::Codec { err, .. } => Some(err),
+            Self::Exhausted { err, .. } => Some(err),
             _ => None,
         }
     }
@@ -130,6 +141,10 @@ pub struct SnapshotStore {
     /// generation in `charged`.
     accounting: Mutex<Option<Box<dyn BlockStore + Send>>>,
     charged: Mutex<std::collections::HashMap<u64, crate::dfs::BlockId>>,
+    /// Optional fault clock: when set, each commit syscall first asks it
+    /// for an injected transient error (consumed from the plan's
+    /// `storeio` budget) before touching the disk.
+    chaos: Option<Arc<FaultClock>>,
 }
 
 impl std::fmt::Debug for SnapshotStore {
@@ -155,7 +170,15 @@ impl SnapshotStore {
             bytes_written: AtomicU64::new(0),
             accounting: Mutex::new(None),
             charged: Mutex::new(std::collections::HashMap::new()),
+            chaos: None,
         })
+    }
+
+    /// Attach a shared fault clock (chaos harness): transient injected
+    /// I/O errors exercise the commit path's bounded retry.
+    pub fn with_chaos(mut self, clock: Arc<FaultClock>) -> Self {
+        self.chaos = Some(clock);
+        self
     }
 
     /// Charge each committed snapshot's bytes against a simulated block
@@ -194,6 +217,48 @@ impl SnapshotStore {
 
     fn io_err(path: &Path) -> impl Fn(std::io::Error) -> StoreError + '_ {
         move |err| StoreError::Io { path: path.to_path_buf(), err }
+    }
+
+    /// How many times a commit syscall is retried before the typed
+    /// [`StoreError::Exhausted`] surfaces (so a commit sees at most
+    /// `1 + IO_RETRIES` attempts per step).
+    const IO_RETRIES: usize = 3;
+
+    /// Run one commit step with bounded retry-with-backoff around
+    /// transient I/O errors. When a fault clock is attached, an injected
+    /// fault is consumed *instead of* issuing the syscall, so injection
+    /// never leaves partial on-disk state behind; real errors retry the
+    /// closure whole (every caller's closure is restartable — `create`
+    /// truncates). Backoff doubles from 1ms, capped at 4ms: enough to
+    /// model "the disk came back", cheap enough for tests.
+    fn retry_io<T>(
+        &self,
+        op: &'static str,
+        path: &Path,
+        mut step: impl FnMut() -> std::io::Result<T>,
+    ) -> Result<T, StoreError> {
+        let mut attempt = 0usize;
+        loop {
+            attempt += 1;
+            let injected = self.chaos.as_deref().is_some_and(FaultClock::take_store_fault);
+            let res = if injected {
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::Interrupted,
+                    "injected transient store fault",
+                ))
+            } else {
+                step()
+            };
+            match res {
+                Ok(v) => return Ok(v),
+                Err(err) if attempt > Self::IO_RETRIES => {
+                    return Err(StoreError::Exhausted { op, path: path.to_path_buf(), attempts: attempt, err });
+                }
+                Err(_) => {
+                    std::thread::sleep(Duration::from_millis(1 << (attempt - 1).min(2)));
+                }
+            }
+        }
     }
 
     /// Best-effort directory fsync (makes the rename itself durable on
@@ -244,21 +309,27 @@ impl SnapshotStore {
         let final_path = self.generation_path(snap.generation);
         let tmp_path = self.dir.join(format!("gen-{:08}.tmp", snap.generation));
 
-        // 1-2: temp write + fsync
+        // 1-2: temp write + fsync (each step retried around transient
+        // faults — `create` truncates, so a retried write restarts clean)
         {
-            let mut f = fs::File::create(&tmp_path).map_err(Self::io_err(&tmp_path))?;
-            f.write_all(&bytes).map_err(Self::io_err(&tmp_path))?;
+            let f = self.retry_io("snapshot write", &tmp_path, || {
+                let mut f = fs::File::create(&tmp_path)?;
+                f.write_all(&bytes)?;
+                Ok(f)
+            })?;
             if !keep_going(CommitStep::SnapTempWritten) {
                 return Ok(false);
             }
-            f.sync_all().map_err(Self::io_err(&tmp_path))?;
+            self.retry_io("snapshot fsync", &tmp_path, || f.sync_all())?;
         }
         if !keep_going(CommitStep::SnapSynced) {
             return Ok(false);
         }
 
         // 3: atomic rename — the generation becomes durable
-        fs::rename(&tmp_path, &final_path).map_err(Self::io_err(&final_path))?;
+        self.retry_io("snapshot rename", &final_path, || {
+            fs::rename(&tmp_path, &final_path)
+        })?;
         self.sync_dir();
         if !keep_going(CommitStep::SnapRenamed) {
             return Ok(false);
@@ -292,18 +363,21 @@ impl SnapshotStore {
         let mbytes = codec::encode_manifest(&manifest);
         let mtmp = self.dir.join("MANIFEST.tmp");
         {
-            let mut f = fs::File::create(&mtmp).map_err(Self::io_err(&mtmp))?;
-            f.write_all(&mbytes).map_err(Self::io_err(&mtmp))?;
+            let f = self.retry_io("manifest write", &mtmp, || {
+                let mut f = fs::File::create(&mtmp)?;
+                f.write_all(&mbytes)?;
+                Ok(f)
+            })?;
             if !keep_going(CommitStep::ManifestTempWritten) {
                 return Ok(false);
             }
-            f.sync_all().map_err(Self::io_err(&mtmp))?;
+            self.retry_io("manifest fsync", &mtmp, || f.sync_all())?;
         }
         if !keep_going(CommitStep::ManifestSynced) {
             return Ok(false);
         }
         let mpath = self.manifest_path();
-        fs::rename(&mtmp, &mpath).map_err(Self::io_err(&mpath))?;
+        self.retry_io("manifest rename", &mpath, || fs::rename(&mtmp, &mpath))?;
         self.sync_dir();
         if !keep_going(CommitStep::ManifestRenamed) {
             return Ok(false);
@@ -601,6 +675,50 @@ mod tests {
         // ...but if the manifest is also gone, the newest intact file wins
         fs::remove_file(store.manifest_path()).unwrap();
         assert_eq!(store.load_latest().unwrap().unwrap().generation, 2);
+    }
+
+    #[test]
+    fn transient_store_faults_are_retried_then_the_commit_succeeds() {
+        use crate::chaos::FaultPlan;
+        let tmp = TempDir::new("chaos_retry");
+        let clock = Arc::new(FaultClock::new(FaultPlan::parse("storeio:2@now").unwrap()));
+        let store = SnapshotStore::open(tmp.path(), 4)
+            .unwrap()
+            .with_chaos(Arc::clone(&clock));
+        let base = textbook_db();
+        publish_gen(&store, &base, 1);
+        assert_eq!(store.load_latest().unwrap().unwrap().generation, 1);
+        assert_eq!(clock.stats().store_faults, 2, "both injected faults consumed");
+    }
+
+    #[test]
+    fn exhausted_store_faults_surface_typed_and_leave_the_previous_generation_live() {
+        use crate::chaos::FaultPlan;
+        let tmp = TempDir::new("chaos_exhausted");
+        let base = textbook_db();
+        let healthy = SnapshotStore::open(tmp.path(), 4).unwrap();
+        publish_gen(&healthy, &base, 1);
+
+        let clock = Arc::new(FaultClock::new(FaultPlan::parse("storeio:99@now").unwrap()));
+        let store = SnapshotStore::open(tmp.path(), 4).unwrap().with_chaos(clock);
+        let result = mined(&base);
+        let index = RuleIndex::build(&result, 0.3);
+        let snap = SnapshotRef {
+            generation: 2,
+            base: BaseRef::of(&base),
+            min_support: 2.0 / 9.0,
+            max_k: 0,
+            delta: &[],
+            result: &result,
+            state: None,
+            index: &index,
+        };
+        match store.publish(&snap) {
+            Err(StoreError::Exhausted { attempts, .. }) => assert_eq!(attempts, 4),
+            other => panic!("want StoreError::Exhausted, got {other:?}"),
+        }
+        // the failed commit never moved the published state
+        assert_eq!(healthy.load_latest().unwrap().unwrap().generation, 1);
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Chaos-harness integration: differential property tests over random
+//! fault plans, and the refresh-cycle atomicity contract under node
+//! loss.
+//!
+//! The replayability contract is differential, not temporal: for any
+//! survivable [`FaultPlan`] (every block still has a live replica), the
+//! mined output must be **byte-identical** to the fault-free run, with
+//! attempts bounded and the blacklist append-only. Fault *timing* is
+//! keyed to logical coordinates (level boundaries, map completions), so
+//! a plan replays exactly from its spec string.
+
+use mr_apriori::data::Transaction;
+use mr_apriori::mapreduce::JobConfig;
+use mr_apriori::prelude::*;
+use std::sync::Arc;
+
+fn quest(n: usize, seed: u64) -> TransactionDb {
+    QuestGenerator::new(QuestParams::t10_i4(n).with_seed(seed)).generate()
+}
+
+/// Generous upper bound on map attempts for one job: every scheduled
+/// map (originals + lost-node requeues + fetch-exhaustion re-executions)
+/// may burn up to `max_attempts` genuine failures, plus speculation.
+fn attempts_bounded(s: &JobStats, max_attempts: usize) -> bool {
+    s.map_attempts
+        <= (s.maps_total + s.lost_maps_requeued + s.maps_reexecuted) * max_attempts
+            + s.speculative_launched
+}
+
+/// The core invariant, property-tested over random databases and random
+/// survivable fault plans, for both schedules: chaos changes *how* the
+/// answer is computed (requeues, retries, re-replication), never *what*
+/// it is.
+#[test]
+fn random_survivable_fault_plans_preserve_results_byte_identically() {
+    let max_attempts = JobConfig::default().max_attempts;
+    for seed in 1u64..=6 {
+        let n_nodes = 3 + (seed as usize % 2);
+        let cluster = ClusterConfig::fhssc(n_nodes);
+        let replication = Dfs::new(&cluster).replication;
+        let db = quest(250 + (seed as usize * 37) % 200, seed ^ 0xD1FF);
+        let cfg = AprioriConfig { min_support: 0.05, max_k: 3 };
+
+        let clean = MrApriori::new(cluster.clone(), cfg.clone())
+            .with_split_tx(80)
+            .mine(&db)
+            .unwrap_or_else(|e| panic!("seed {seed}: clean mine: {e}"));
+
+        let plan = FaultPlan::random(seed, n_nodes, replication);
+        assert!(plan.is_survivable(), "seed {seed}: {plan}");
+        // the spec string is the replay artifact — it must round-trip
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+
+        for pipelined in [false, true] {
+            let clock = Arc::new(FaultClock::new(plan.clone()));
+            let mut driver = MrApriori::new(cluster.clone(), cfg.clone())
+                .with_split_tx(80)
+                .with_chaos(Some(Arc::clone(&clock)));
+            if pipelined {
+                driver = driver.with_pipeline(PipelineConfig::pipelined());
+            }
+            let chaotic = driver
+                .mine(&db)
+                .unwrap_or_else(|e| panic!("seed {seed} (pipelined={pipelined}): {plan}: {e}"));
+
+            // byte-identity: same itemsets, same counts, same order
+            assert_eq!(
+                chaotic.result.frequent, clean.result.frequent,
+                "seed {seed} (pipelined={pipelined}): {plan}"
+            );
+            // attempts bounded: recovery must not retry unboundedly
+            for (k, s) in &chaotic.jobs {
+                assert!(
+                    attempts_bounded(s, max_attempts),
+                    "seed {seed} level {k}: unbounded attempts {s:?}"
+                );
+            }
+            // the clock only ever kills nodes the plan names
+            let killed = clock.dead_nodes();
+            assert!(
+                killed.iter().all(|n| plan.killed_nodes().contains(n)),
+                "seed {seed}: dead {killed:?} not in plan {plan}"
+            );
+            // blacklist is append-only and duplicate-free by contract
+            let bl = clock.blacklisted();
+            let mut dedup = bl.clone();
+            dedup.dedup();
+            assert_eq!(bl, dedup, "seed {seed}: blacklist {bl:?}");
+            assert!(bl.len() < n_nodes, "seed {seed}: blacklisted every node");
+        }
+    }
+}
+
+/// Hand-written plans at every trigger kind, exercised through the
+/// synchronous level loop on one fixed database.
+#[test]
+fn each_fault_kind_is_recovered_from_in_isolation() {
+    let db = quest(400, 0xFA117);
+    let cfg = AprioriConfig { min_support: 0.05, max_k: 3 };
+    let cluster = ClusterConfig::fhssc(3);
+    let clean = MrApriori::new(cluster.clone(), cfg.clone())
+        .with_split_tx(100)
+        .mine(&db)
+        .unwrap();
+    for spec in [
+        "kill:0@now",
+        "kill:2@level:2",
+        "kill:1@maps:2",
+        "slow:1:6@now",
+        "fetchfail:0:2@now;fetchfail:1:5@level:2",
+        "kill:2@level:2;slow:0:3@now;fetchfail:0:2@now",
+    ] {
+        let clock = Arc::new(FaultClock::new(FaultPlan::parse(spec).unwrap()));
+        let chaotic = MrApriori::new(cluster.clone(), cfg.clone())
+            .with_split_tx(100)
+            .with_chaos(Some(Arc::clone(&clock)))
+            .mine(&db)
+            .unwrap_or_else(|e| panic!("{spec}: {e}"));
+        assert_eq!(chaotic.result.frequent, clean.result.frequent, "{spec}");
+        assert!(clock.stats().faults_injected >= 1, "{spec}: plan never fired");
+    }
+}
+
+/// Losing every node is not survivable — the driver must surface a
+/// typed error rather than loop or return a partial result. Depending
+/// on when the last node dies the error is either the placement's
+/// ("exceeds live datanodes") or the scheduler's ("job stranded").
+#[test]
+fn losing_every_node_is_a_typed_error_not_a_hang() {
+    let db = quest(200, 7);
+    let cfg = AprioriConfig { min_support: 0.05, max_k: 2 };
+    let plan = FaultPlan::parse("kill:0@now;kill:1@now").unwrap();
+    assert!(!plan.is_survivable());
+    let err = MrApriori::new(ClusterConfig::fhssc(2), cfg)
+        .with_split_tx(50)
+        .with_chaos(Some(Arc::new(FaultClock::new(plan))))
+        .mine(&db)
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("datanodes") || msg.contains("stranded"),
+        "unexpected error: {msg}"
+    );
+}
+
+fn delta(n: usize, n_items: usize, seed: u64) -> Vec<Transaction> {
+    synth_delta(n, n_items, seed)
+}
+
+/// A refresh cycle that loses a node mid-mine publishes byte-identically
+/// when the loss is survivable.
+#[test]
+fn incremental_refresh_survives_a_lost_node_byte_identically() {
+    let db0 = quest(400, 21);
+    let cfg = AprioriConfig { min_support: 0.05, max_k: 3 };
+    let conf = 0.6;
+    let inc = IncrementalConfig { enabled: true, ..Default::default() };
+    let d = delta(60, db0.n_items, 0xADD);
+
+    // fault-free reference cycle
+    let driver = MrApriori::new(ClusterConfig::fhssc(3), cfg.clone()).with_split_tx(100);
+    let (report0, state0) = MinedState::capture(&driver, &db0).unwrap();
+    let refresher = Refresher::new(driver, conf).with_incremental(inc.clone());
+    refresher.seed_state(state0.clone());
+    let cell = SnapshotCell::new(Arc::new(RuleIndex::build(&report0.result, conf)));
+    let mut db = db0.clone();
+    let (want, _) = refresher.refresh_once(&mut db, d.clone(), &cell).unwrap();
+
+    // same cycle with node 1 dead before the delta job schedules
+    let clock = Arc::new(FaultClock::new(FaultPlan::parse("kill:1@now").unwrap()));
+    let driver = MrApriori::new(ClusterConfig::fhssc(3), cfg.clone())
+        .with_split_tx(100)
+        .with_chaos(Some(Arc::clone(&clock)));
+    let refresher = Refresher::new(driver, conf).with_incremental(inc);
+    refresher.seed_state(state0);
+    let cell = SnapshotCell::new(Arc::new(RuleIndex::build(&report0.result, conf)));
+    let mut db = db0.clone();
+    let (got, _) = refresher.refresh_once(&mut db, d, &cell).unwrap();
+
+    assert_eq!(got.result.frequent, want.result.frequent);
+    assert_eq!(clock.dead_nodes(), vec![1]);
+}
+
+/// ... and rolls back atomically when it is not: the append is undone,
+/// the served snapshot and generation stay untouched, and retrying the
+/// same delta after the fault clears does not double-append.
+#[test]
+fn unsurvivable_refresh_rolls_back_the_cycle_whole() {
+    let db0 = quest(300, 33);
+    let cfg = AprioriConfig { min_support: 0.05, max_k: 2 };
+    let conf = 0.6;
+    let d = delta(40, db0.n_items, 0xBAD);
+
+    let plan = FaultPlan::parse("kill:0@now;kill:1@now;kill:2@now").unwrap();
+    assert!(!plan.is_survivable());
+    let driver = MrApriori::new(ClusterConfig::fhssc(3), cfg.clone())
+        .with_split_tx(100)
+        .with_chaos(Some(Arc::new(FaultClock::new(plan))));
+    let base = driver.mine(&db0); // all nodes dead: even the base mine fails
+    assert!(base.is_err());
+
+    // seed the refresher from a healthy capture, then lose the cluster
+    let healthy = MrApriori::new(ClusterConfig::fhssc(3), cfg.clone()).with_split_tx(100);
+    let (report0, state0) = MinedState::capture(&healthy, &db0).unwrap();
+    let refresher = Refresher::new(driver, conf)
+        .with_incremental(IncrementalConfig { enabled: true, ..Default::default() });
+    refresher.seed_state(state0);
+    let index0 = Arc::new(RuleIndex::build(&report0.result, conf));
+    let cell = SnapshotCell::new(Arc::clone(&index0));
+    let gen_before = cell.generation();
+
+    let mut db = db0.clone();
+    let err = refresher.refresh_once(&mut db, d.clone(), &cell).unwrap_err();
+    assert!(matches!(err, RefreshError::Mine(_)), "{err}");
+    // rollback contract: db restored, snapshot and generation untouched
+    assert_eq!(db.transactions, db0.transactions);
+    assert_eq!(cell.generation(), gen_before);
+    assert_eq!(cell.load().n_rules(), index0.n_rules());
+
+    // after the fault clears, the same delta applies exactly once and
+    // matches the cycle that never saw a fault
+    let refresher = Refresher::new(
+        MrApriori::new(ClusterConfig::fhssc(3), cfg.clone()).with_split_tx(100),
+        conf,
+    )
+    .with_incremental(IncrementalConfig { enabled: true, ..Default::default() });
+    let (_, state0) = MinedState::capture(&healthy, &db0).unwrap();
+    refresher.seed_state(state0);
+    let (retried, st) = refresher.refresh_once(&mut db, d, &cell).unwrap();
+    assert_eq!(db.len(), db0.len() + 40);
+    assert_eq!(st.delta_tx, 40);
+    let full = healthy.mine(&db).unwrap();
+    assert_eq!(retried.result.frequent, full.result.frequent);
+}

@@ -286,9 +286,9 @@ fn overlapping_jobs_preserve_shuffle_invariants() {
     // Overlapped: B's map wave runs while A's reduce wave is in flight.
     let mo_a = runner.map_stage(&ItemCount, &db, &splits, &cfg).unwrap();
     let ((out_a, stats_a), (out_b, stats_b)) = std::thread::scope(|s| {
-        let lane_a = s.spawn(|| runner.reduce_stage(&ItemCount, mo_a, &cfg).unwrap());
+        let lane_a = s.spawn(|| runner.reduce_stage(&ItemCount, &db, &splits, mo_a, &cfg).unwrap());
         let mo_b = runner.map_stage(&ItemCount, &db, &splits, &cfg).unwrap();
-        let b = runner.reduce_stage(&ItemCount, mo_b, &cfg).unwrap();
+        let b = runner.reduce_stage(&ItemCount, &db, &splits, mo_b, &cfg).unwrap();
         (lane_a.join().unwrap(), b)
     });
     assert_eq!(out_a, seq_a, "overlap changed job A's output");
