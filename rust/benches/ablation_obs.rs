@@ -10,9 +10,9 @@
 //! (byte-identical frequent itemsets), and emits `BENCH_obs.json`
 //! (directory override: `BENCH_OUT_DIR`) for the perf-trajectory gate.
 //!
-//! The table reports median and p95 per configuration — the tail column
-//! exists so a tracing overhead that only bites the slowest runs (lock
-//! contention on the sink, say) still shows up.
+//! The table reports median, p95 and p99 per configuration — the tail
+//! columns exist so a tracing overhead that only bites the slowest runs
+//! (lock contention on the sink, say) still shows up.
 
 use std::sync::Arc;
 
@@ -66,13 +66,14 @@ fn main() {
     let overhead = traced.median / plain.median.max(1e-9);
     let under_budget = overhead < OVERHEAD_BUDGET;
 
-    println!("config | median(ms) | p95(ms) | mean(ms)");
+    println!("config | median(ms) | p95(ms) | p99(ms) | mean(ms)");
     for (name, s) in [("plain", &plain), ("traced", &traced)] {
         println!(
-            "{:>6} | {:>10.1} | {:>7.1} | {:>8.1}",
+            "{:>6} | {:>10.1} | {:>7.1} | {:>7.1} | {:>8.1}",
             name,
             s.median * 1e3,
             s.p95 * 1e3,
+            s.p99 * 1e3,
             s.mean * 1e3
         );
     }
@@ -100,6 +101,10 @@ fn main() {
         "p95_ms",
         vec![plain.p95 * 1e3, traced.p95 * 1e3],
     ));
+    table.push_series(Series::new(
+        "p99_ms",
+        vec![plain.p99 * 1e3, traced.p99 * 1e3],
+    ));
     table.emit();
 
     let summary_json = |s: &Summary| {
@@ -107,6 +112,7 @@ fn main() {
             ("n", Json::num(s.n as f64)),
             ("median_ms", Json::num(s.median * 1e3)),
             ("p95_ms", Json::num(s.p95 * 1e3)),
+            ("p99_ms", Json::num(s.p99 * 1e3)),
             ("mean_ms", Json::num(s.mean * 1e3)),
             ("min_ms", Json::num(s.min * 1e3)),
             ("max_ms", Json::num(s.max * 1e3)),

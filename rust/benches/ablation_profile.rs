@@ -1,0 +1,162 @@
+//! Ablation: what does the profiling layer cost?
+//!
+//! The profiler's design claim (DESIGN.md §Profiling & SLOs) is that the
+//! *collection* side — span recording with the flight-recorder tee on the
+//! sink's hot path, plus the per-level workload sampling in the
+//! coordinator — stays within the same 5% wall-clock budget as base
+//! observability, and that all analysis cost is paid offline by `repro
+//! analyze`, not by the mine. This bench measures three things:
+//!
+//!  1. plain vs fully profiled mine (trace sink + flight ring + registry),
+//!     asserting the <5% overhead budget and byte-identical output;
+//!  2. the offline `analyze()` pass over the captured span buffer, so the
+//!     "analysis is free at mine time, cheap afterwards" claim has a
+//!     number attached;
+//!  3. attribution coverage of the captured trace (the CI smoke asserts
+//!     the same `>= 0.95` bound on a real trace file).
+//!
+//! Emits `BENCH_profile.json` (directory override: `BENCH_OUT_DIR`) for
+//! the perf-trajectory gate.
+
+use std::sync::Arc;
+
+use mr_apriori::metrics::{measure, Summary};
+use mr_apriori::obs::flight::DEFAULT_CAPACITY;
+use mr_apriori::obs::profile::{analyze, ParsedSpan};
+use mr_apriori::prelude::*;
+use mr_apriori::util::json::Json;
+use mr_apriori::util::tempdir::TempDir;
+
+const WARMUP: usize = 1;
+const RUNS: usize = 7;
+const OVERHEAD_BUDGET: f64 = 1.05;
+
+fn driver(apriori: &AprioriConfig) -> MrApriori {
+    MrApriori::new(ClusterConfig::fhssc(3), apriori.clone())
+        .with_job(JobConfig { n_reducers: 3, ..Default::default() })
+        .with_split_tx(500)
+}
+
+/// A sink with the flight recorder teed in — the full collection path the
+/// profiler adds over bare tracing.
+fn profiled_sink(flight_dir: &std::path::Path) -> Arc<TraceSink> {
+    let sink = TraceSink::new();
+    sink.attach_flight(FlightRecorder::new(flight_dir, DEFAULT_CAPACITY));
+    sink
+}
+
+fn main() {
+    println!("== Ablation: critical-path profiler collection + analysis cost ==\n");
+    let db = QuestGenerator::new(QuestParams::t10_i4(4_000)).generate();
+    let apriori = AprioriConfig { min_support: 0.02, max_k: 3 };
+    let tmp = TempDir::new("ablation_profile_flights");
+
+    // output-invariance first: profiling must not change the answer
+    let want = driver(&apriori).mine(&db).expect("plain mine");
+    let sink = profiled_sink(tmp.path());
+    let got = driver(&apriori)
+        .with_trace(Some(TraceCtx::root(Arc::clone(&sink))))
+        .with_registry(Arc::new(MetricsRegistry::new()))
+        .mine(&db)
+        .expect("profiled mine");
+    let byte_identical = got.result.frequent == want.result.frequent;
+    assert!(byte_identical, "profiling changed the mining output");
+
+    // the captured buffer is what `repro analyze` consumes offline
+    let spans: Vec<ParsedSpan> =
+        sink.events().iter().map(ParsedSpan::from_event).collect();
+    let profile = analyze(&spans).expect("captured trace analyzes");
+    let coverage = profile.coverage();
+    assert!(
+        coverage >= 0.95,
+        "attribution coverage {coverage:.3} below the 0.95 bound"
+    );
+
+    let plain = measure(WARMUP, RUNS, || {
+        driver(&apriori).mine(&db).expect("plain mine");
+    });
+    // fresh sink + ring per iteration: steady-state tee cost, not one
+    // giant buffer amortised across runs
+    let profiled = measure(WARMUP, RUNS, || {
+        driver(&apriori)
+            .with_trace(Some(TraceCtx::root(profiled_sink(tmp.path()))))
+            .with_registry(Arc::new(MetricsRegistry::new()))
+            .mine(&db)
+            .expect("profiled mine");
+    });
+    let analysis = measure(WARMUP, RUNS, || {
+        analyze(&spans).expect("captured trace analyzes");
+    });
+
+    let overhead = profiled.median / plain.median.max(1e-9);
+    let under_budget = overhead < OVERHEAD_BUDGET;
+
+    println!("config   | median(ms) | p95(ms) | p99(ms) | mean(ms)");
+    for (name, s) in [("plain", &plain), ("profiled", &profiled), ("analyze", &analysis)] {
+        println!(
+            "{:>8} | {:>10.2} | {:>7.2} | {:>7.2} | {:>8.2}",
+            name,
+            s.median * 1e3,
+            s.p95 * 1e3,
+            s.p99 * 1e3,
+            s.mean * 1e3
+        );
+    }
+    println!(
+        "\nprofiling overhead: {:.2}% on the median ({} spans, coverage {:.3}); budget {:.0}%",
+        (overhead - 1.0) * 100.0,
+        spans.len(),
+        coverage,
+        (OVERHEAD_BUDGET - 1.0) * 100.0,
+    );
+    assert!(
+        under_budget,
+        "profiling overhead {overhead:.3}x exceeds the {OVERHEAD_BUDGET}x budget"
+    );
+
+    let mut table = BenchTable::new(
+        "Ablation: profiler collection + offline analysis (T10.I4 4k, fhssc/3)",
+        "config",
+        vec![0.0, 1.0, 2.0],
+    );
+    table.push_series(Series::new(
+        "median_ms",
+        vec![plain.median * 1e3, profiled.median * 1e3, analysis.median * 1e3],
+    ));
+    table.push_series(Series::new(
+        "p99_ms",
+        vec![plain.p99 * 1e3, profiled.p99 * 1e3, analysis.p99 * 1e3],
+    ));
+    table.emit();
+
+    let summary_json = |s: &Summary| {
+        Json::obj(vec![
+            ("n", Json::num(s.n as f64)),
+            ("median_ms", Json::num(s.median * 1e3)),
+            ("p95_ms", Json::num(s.p95 * 1e3)),
+            ("p99_ms", Json::num(s.p99 * 1e3)),
+            ("mean_ms", Json::num(s.mean * 1e3)),
+            ("min_ms", Json::num(s.min * 1e3)),
+            ("max_ms", Json::num(s.max * 1e3)),
+        ])
+    };
+    let doc = Json::obj(vec![
+        ("plain", summary_json(&plain)),
+        ("profiled", summary_json(&profiled)),
+        ("analyze", summary_json(&analysis)),
+        ("overhead_ratio", Json::num(overhead)),
+        (
+            "speedup_plain_vs_profiled",
+            Json::num(plain.median / profiled.median.max(1e-9)),
+        ),
+        ("overhead_under_budget", Json::Bool(under_budget)),
+        ("byte_identical", Json::Bool(byte_identical)),
+        ("coverage", Json::num(coverage)),
+        ("coverage_at_least_095", Json::Bool(coverage >= 0.95)),
+        ("n_trace_events", Json::num(spans.len() as f64)),
+    ]);
+    let out_dir = std::env::var("BENCH_OUT_DIR").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&out_dir).join("BENCH_profile.json");
+    std::fs::write(&path, format!("{doc}\n")).expect("write BENCH_profile.json");
+    println!("\nwrote {}", path.display());
+}

@@ -22,11 +22,11 @@
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::cluster::NodeId;
 use crate::metrics::Counter;
-use crate::obs::{MetricsRegistry, RegistryError};
+use crate::obs::{MetricsRegistry, RegistryError, TraceCtx};
 use crate::util::rng::Xoshiro256;
 
 /// When an event fires, in logical (replayable) coordinates.
@@ -290,6 +290,11 @@ pub struct FaultClock {
     fetch_faults: Arc<Counter>,
     store_faults: Arc<Counter>,
     blacklists: Arc<Counter>,
+    /// Attach-once trace context: when set, every fault the clock fires
+    /// is recorded as a `cat: chaos` span, so flight-recorder dumps and
+    /// `repro analyze` show the injections inline with the stages they
+    /// perturbed.
+    trace: OnceLock<TraceCtx>,
 }
 
 impl FaultClock {
@@ -308,6 +313,7 @@ impl FaultClock {
             fetch_faults: Arc::new(Counter::new()),
             store_faults: Arc::new(Counter::new()),
             blacklists: Arc::new(Counter::new()),
+            trace: OnceLock::new(),
         };
         clock.fire_due(|t| matches!(t, FaultTrigger::Now));
         clock
@@ -315,6 +321,56 @@ impl FaultClock {
 
     pub fn plan(&self) -> &FaultPlan {
         &self.plan
+    }
+
+    /// Attach a trace context (at most one per clock; later attaches are
+    /// no-ops). From now on every fault the clock fires records a
+    /// `cat: chaos` span. The plan's `@now` events fired at construction
+    /// — before any sink could exist — so they are recorded
+    /// retroactively here, keeping the trace's injection history
+    /// complete.
+    pub fn attach_trace(&self, ctx: TraceCtx) {
+        if self.trace.set(ctx).is_err() {
+            return;
+        }
+        let fired = self.fired.lock().unwrap();
+        for (i, e) in self.plan.events.iter().enumerate() {
+            if fired[i] {
+                self.record_fault_span(e);
+            }
+        }
+    }
+
+    /// One injection as an instantaneous `cat: chaos` span carrying the
+    /// fault's coordinates — the analyzer cross-references `fault.slow`
+    /// spans against flagged stragglers.
+    fn record_fault_span(&self, event: &FaultEvent) {
+        let Some(ctx) = self.trace.get() else { return };
+        let name = match event.kind {
+            FaultKind::KillNode(_) => "fault.kill",
+            FaultKind::SlowNode { .. } => "fault.slow",
+            FaultKind::ShuffleFetchFail { .. } => "fault.fetchfail",
+            FaultKind::StoreIo { .. } => "fault.storeio",
+        };
+        let mut span = ctx.span("chaos", name);
+        span.set_dur_us(1);
+        match event.kind {
+            FaultKind::KillNode(n) => span.add("node", n as f64),
+            FaultKind::SlowNode { node, factor } => {
+                span.add("node", node as f64);
+                span.add("factor", factor);
+            }
+            FaultKind::ShuffleFetchFail { map_task, times } => {
+                span.add("map_task", map_task as f64);
+                span.add("times", times as f64);
+            }
+            FaultKind::StoreIo { times } => span.add("times", times as f64),
+        }
+        match event.trigger {
+            FaultTrigger::AtLevel(k) => span.add("at_level", k as f64),
+            FaultTrigger::AfterMaps(n) => span.add("after_maps", n as f64),
+            FaultTrigger::Now => span.add("at_start", 1.0),
+        }
     }
 
     /// Fire every not-yet-fired event whose trigger satisfies `due`.
@@ -326,6 +382,7 @@ impl FaultClock {
             }
             fired[i] = true;
             self.faults_injected.inc();
+            self.record_fault_span(e);
             match e.kind {
                 FaultKind::KillNode(n) => {
                     if self.dead.lock().unwrap().insert(n) {
@@ -550,6 +607,39 @@ mod tests {
         clock.note_blacklisted(3);
         assert_eq!(clock.blacklisted(), vec![3, 1]);
         assert_eq!(clock.stats().blacklisted, 2);
+    }
+
+    #[test]
+    fn fault_injections_record_chaos_spans_including_retroactive_now_events() {
+        use crate::obs::{TraceCtx, TraceSink};
+        let clock = FaultClock::new(
+            FaultPlan::parse("slow:1:3@now;kill:0@level:2;fetchfail:4:2@maps:1").unwrap(),
+        );
+        // the @now event fired before any trace existed
+        let sink = TraceSink::new();
+        clock.attach_trace(TraceCtx::root(Arc::clone(&sink)));
+        let ev = sink.events();
+        assert_eq!(ev.len(), 1, "retroactive span for the already-fired @now fault");
+        assert_eq!(ev[0].cat, "chaos");
+        assert_eq!(ev[0].name, "fault.slow");
+        assert!(ev[0].args.contains(&("node".into(), 1.0)));
+        assert!(ev[0].args.contains(&("factor".into(), 3.0)));
+
+        clock.begin_level(2);
+        clock.on_map_completion();
+        let ev = sink.events();
+        assert_eq!(ev.len(), 3, "live spans per subsequently fired fault");
+        let kill = ev.iter().find(|e| e.name == "fault.kill").unwrap();
+        assert!(kill.args.contains(&("node".into(), 0.0)));
+        assert!(kill.args.contains(&("at_level".into(), 2.0)));
+        let fetch = ev.iter().find(|e| e.name == "fault.fetchfail").unwrap();
+        assert!(fetch.args.contains(&("map_task".into(), 4.0)));
+        assert!(fetch.args.contains(&("after_maps".into(), 1.0)));
+
+        // second attach is a no-op; nothing double-records
+        clock.attach_trace(TraceCtx::root(TraceSink::new()));
+        clock.begin_level(3); // nothing left to fire
+        assert_eq!(sink.len(), 3);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::engine::EngineKind;
 use crate::fabric::FabricConfig;
 use crate::incremental::IncrementalConfig;
 use crate::mapreduce::JobConfig;
-use crate::obs::ObsConfig;
+use crate::obs::{ObsConfig, SloConfig};
 use crate::serve::ServeConfig;
 use crate::store::StoreConfig;
 
@@ -73,6 +73,9 @@ pub struct ExperimentConfig {
     /// Deterministic fault injection (`[chaos]` section;
     /// `mine --fault-plan`). Off by default.
     pub chaos: ChaosConfig,
+    /// Serve-side SLO watching (`[slo]` section; `--slo-p99-ms`).
+    /// Off by default (`p99_ms = 0`).
+    pub slo: SloConfig,
     /// Workload: transactions to generate (Quest T10.I4) when no input
     /// file is given.
     pub transactions: usize,
@@ -97,6 +100,7 @@ impl Default for ExperimentConfig {
             store: StoreConfig::default(),
             obs: ObsConfig::default(),
             chaos: ChaosConfig::default(),
+            slo: SloConfig::default(),
             transactions: 10_000,
             seed: 0xACE5_2012,
         }
@@ -319,6 +323,17 @@ impl ExperimentConfig {
                 }
                 "chaos.seed" => {
                     cfg.chaos.seed = value.parse().map_err(|_| bad("want integer"))?;
+                }
+                "slo.p99_ms" => {
+                    cfg.slo.p99_ms = value.parse().map_err(|_| bad("want float"))?;
+                    cfg.slo.validate().map_err(|e| bad(&e))?;
+                }
+                "slo.window_ms" => {
+                    cfg.slo.window_ms = value.parse().map_err(|_| bad("want integer"))?;
+                    cfg.slo.validate().map_err(|e| bad(&e))?;
+                }
+                "slo.min_requests" => {
+                    cfg.slo.min_requests = value.parse().map_err(|_| bad("want integer"))?;
                 }
                 other => {
                     return Err(ConfigError::BadValue {
@@ -699,6 +714,33 @@ mod tests {
         let err = ExperimentConfig::parse("[chaos]\nplan = \"boom:1@now\"").unwrap_err();
         assert!(matches!(err, ConfigError::BadValue { ref key, .. } if key == "chaos.plan"));
         assert!(ExperimentConfig::parse("[chaos]\nseed = many").is_err());
+    }
+
+    #[test]
+    fn slo_section_parses_and_validates() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+            [slo]
+            p99_ms = 5.5
+            window_ms = 2000
+            min_requests = 10
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.slo.p99_ms, 5.5);
+        assert_eq!(cfg.slo.window_ms, 2000);
+        assert_eq!(cfg.slo.min_requests, 10);
+        assert!(cfg.slo.enabled());
+        // defaults: watcher off
+        let d = ExperimentConfig::default().slo;
+        assert!(!d.enabled());
+        assert!(d.validate().is_ok());
+        // bad values fail at load time, naming the key
+        let err = ExperimentConfig::parse("[slo]\np99_ms = -2").unwrap_err();
+        assert!(matches!(err, ConfigError::BadValue { ref key, .. } if key == "slo.p99_ms"));
+        let err = ExperimentConfig::parse("[slo]\nwindow_ms = 0").unwrap_err();
+        assert!(matches!(err, ConfigError::BadValue { ref key, .. } if key == "slo.window_ms"));
+        assert!(ExperimentConfig::parse("[slo]\nmin_requests = many").is_err());
     }
 
     #[test]

@@ -319,6 +319,43 @@ impl MrApriori {
             .add(stats.output_records as u64);
     }
 
+    /// Sample one level's workload statistics — the calibration inputs
+    /// the `perfmodel/` autotuner consumes: a 1 µs `profile.level.{k}`
+    /// span under `level_ctx` (cat `profile`, so `repro analyze` can
+    /// collect it per level) plus `profile.level.{k}.*` gauges.
+    /// `n_prev_frequent` is the predecessor level's frequent-set size
+    /// (1 for level 1 — the empty itemset), making `candidate_fanout`
+    /// the blowup this level paid.
+    fn sample_workload(
+        &self,
+        level_ctx: Option<TraceCtx>,
+        k: usize,
+        shape: Option<&DbShape>,
+        n_candidates: usize,
+        n_prev_frequent: usize,
+    ) {
+        let Some(shape) = shape else { return };
+        let fanout = n_candidates as f64 / n_prev_frequent.max(1) as f64;
+        if let Some(ctx) = level_ctx {
+            let mut s = ctx.span("profile", format!("profile.level.{k}"));
+            s.set_dur_us(1);
+            s.add("density", shape.density);
+            s.add("item_skew", shape.item_skew);
+            s.add("avg_basket_width", shape.avg_basket_width);
+            s.add("candidate_fanout", fanout);
+        }
+        if let Some(reg) = &self.registry {
+            reg.gauge(&format!("profile.level.{k}.density"))
+                .set(shape.density);
+            reg.gauge(&format!("profile.level.{k}.item_skew"))
+                .set(shape.item_skew);
+            reg.gauge(&format!("profile.level.{k}.avg_basket_width"))
+                .set(shape.avg_basket_width);
+            reg.gauge(&format!("profile.level.{k}.candidate_fanout"))
+                .set(fanout);
+        }
+    }
+
     /// The counting engine map tasks run (the incremental delta jobs
     /// reuse it so the delta path counts exactly like the batch path).
     pub fn engine(&self) -> &dyn SupportEngine {
@@ -479,6 +516,10 @@ impl MrApriori {
         // One dataset view per mine: every level job (and its speculative
         // twins) reuses the same per-split index builds.
         let cache_gen = self.cache.begin_generation();
+        // Workload shape is sampled once per mine and reused by every
+        // level's profile span; the extra dataset pass is skipped
+        // entirely when nothing is observing.
+        let shape = (self.trace.is_some() || self.registry.is_some()).then(|| db_shape(db));
 
         let mut result = MiningResult {
             n_transactions: db.len(),
@@ -513,6 +554,7 @@ impl MrApriori {
         } else {
             out
         };
+        self.sample_workload(span.as_ref().map(|s| s.ctx()), 1, shape.as_ref(), db.n_items, 1);
         close_level_span(span, f1.len(), &stats);
         push_level(
             &mut result,
@@ -564,6 +606,13 @@ impl MrApriori {
             } else {
                 out
             };
+            self.sample_workload(
+                span.as_ref().map(|s| s.ctx()),
+                k,
+                shape.as_ref(),
+                n_cands,
+                frequent_prev.len(),
+            );
             close_level_span(span, fk.len(), &stats);
             push_level(
                 &mut result,
@@ -653,6 +702,10 @@ impl MrApriori {
         // One dataset view for the whole job DAG: overlapping map waves of
         // successive jobs hit the same per-split index builds.
         let cache_gen = self.cache.begin_generation();
+        // Profile samples attach straight to the mine root (like the task
+        // spans): the job DAG has no per-level spans.
+        let mine_ctx = mine_span.as_ref().map(|s| s.ctx());
+        let shape = (self.trace.is_some() || self.registry.is_some()).then(|| db_shape(db));
 
         let mut result = MiningResult {
             n_transactions: db.len(),
@@ -677,6 +730,7 @@ impl MrApriori {
             lt0.elapsed().as_secs_f64(),
         );
         jobs.push((1, stats));
+        self.sample_workload(mine_ctx.clone(), 1, shape.as_ref(), db.n_items, 1);
         let mut freq_by_level: Vec<Vec<Itemset>> = vec![Vec::new(), Vec::new()];
         freq_by_level[1] = f1.iter().map(|(is, _)| is.clone()).collect();
         result.frequent.extend(f1);
@@ -741,6 +795,14 @@ impl MrApriori {
                 if base.is_empty() {
                     break;
                 }
+                // Fanout against the set the candidates were generated
+                // from: the optimistic predecessor group while the lane
+                // is pending, the exact frequent set otherwise.
+                let n_parent = match &pending {
+                    Some((_, groups, _)) => groups.last().expect("job has groups").len(),
+                    None => freq_by_level[k - 1].len(),
+                };
+                self.sample_workload(mine_ctx.clone(), k, shape.as_ref(), base.len(), n_parent);
                 let mut groups = vec![base];
                 if self.pipeline.batch_levels >= 2 && self.apriori.level_allowed(k + 1) {
                     let ahead = candidates::generate(&groups[0]);
@@ -1051,6 +1113,39 @@ fn close_level_span(span: Option<Span>, n_frequent: usize, stats: &JobStats) {
         s.add("map_ms", stats.map_secs * 1e3);
         s.add("reduce_ms", stats.reduce_secs * 1e3);
         s.add("shuffle_records", stats.shuffle_records as f64);
+    }
+}
+
+/// Database shape statistics, computed once per mine and shared by
+/// every level's `profile.level.{k}` sample.
+struct DbShape {
+    /// Average fraction of the item universe present per basket.
+    density: f64,
+    /// Most-frequent-item support over mean item support.
+    item_skew: f64,
+    avg_basket_width: f64,
+}
+
+fn db_shape(db: &TransactionDb) -> DbShape {
+    if db.is_empty() || db.n_items == 0 {
+        return DbShape { density: 0.0, item_skew: 0.0, avg_basket_width: 0.0 };
+    }
+    let mut counts = vec![0u64; db.n_items];
+    for tx in &db.transactions {
+        for &item in &tx.items {
+            if let Some(c) = counts.get_mut(item as usize) {
+                *c += 1;
+            }
+        }
+    }
+    let total: u64 = counts.iter().sum();
+    let max = counts.iter().copied().max().unwrap_or(0);
+    let mean = total as f64 / db.n_items as f64;
+    let avg_basket_width = total as f64 / db.len() as f64;
+    DbShape {
+        density: avg_basket_width / db.n_items as f64,
+        item_skew: if mean > 0.0 { max as f64 / mean } else { 0.0 },
+        avg_basket_width,
     }
 }
 

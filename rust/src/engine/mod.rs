@@ -511,7 +511,7 @@ mod tests {
     fn tensor_engine_agrees_with_naive() {
         let dir = ArtifactManifest::default_dir();
         if !dir.join("manifest.json").exists() {
-            eprintln!("skipping tensor engine test: run `make artifacts`");
+            crate::log!(Warn, "skipping tensor engine test: run `make artifacts`");
             return;
         }
         let svc = TensorService::start(ArtifactManifest::load(&dir).unwrap());
@@ -526,7 +526,7 @@ mod tests {
     fn tensor_engine_shared_across_threads() {
         let dir = ArtifactManifest::default_dir();
         if !dir.join("manifest.json").exists() {
-            eprintln!("skipping tensor engine test: run `make artifacts`");
+            crate::log!(Warn, "skipping tensor engine test: run `make artifacts`");
             return;
         }
         let svc = TensorService::start(ArtifactManifest::load(&dir).unwrap());

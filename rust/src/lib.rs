@@ -90,7 +90,9 @@ pub mod prelude {
     pub use crate::metrics::bench::{BenchTable, Series};
     pub use crate::metrics::histogram::{HistogramSnapshot, LatencyHistogram};
     pub use crate::obs::{
-        LogLevel, MetricsRegistry, MetricsSnapshot, RegistryError, Span, TraceCtx, TraceSink,
+        FlightRecorder, LogLevel, MetricsRegistry, MetricsSnapshot, MineProfile, ParsedSpan,
+        ProfileError, RegistryError, SloConfig, SloVerdict, SloWatcher, Span, TraceCtx,
+        TraceSink,
     };
     pub use crate::perfmodel::{EtaModel, KernelRoofline};
     pub use crate::runtime::{ArtifactManifest, TensorService, TensorServiceHandle};

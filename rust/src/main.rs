@@ -6,6 +6,7 @@
 //!   rules     — mine, then print the association rules
 //!   serve     — mine, then run the online rule server (one-shot load)
 //!   simulate  — replay a workload on a simulated cluster (fig-4/5 method)
+//!   analyze   — critical-path/straggler report over a --trace-out file
 //!   bench     — regenerate a paper figure (fig4 | fig5 | eta)
 //!   report    — print artifact + kernel-roofline info
 //!
@@ -27,6 +28,17 @@ fn main() -> ExitCode {
         eprintln!("{USAGE}");
         return ExitCode::FAILURE;
     };
+    // `analyze` takes a positional path and a bare `--json` switch, so
+    // it parses its own arguments instead of the `--key value` flag bag.
+    if cmd == "analyze" {
+        return match cmd_analyze(rest) {
+            Ok(()) => ExitCode::SUCCESS,
+            Err(e) => {
+                log!(Error, "{e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
     let flags = match Flags::parse(rest) {
         Ok(f) => f,
         Err(e) => {
@@ -69,7 +81,8 @@ USAGE:
              [--pipeline true|false] [--batch-levels 1|2]
              [--store-dir DIR] [--retain N] [--min-confidence F]
              [--fault-plan SPEC] [--chaos-seed N]
-             [--trace-out FILE] [--log-level error|warn|info|debug]
+             [--trace-out FILE] [--flight-dir DIR]
+             [--log-level error|warn|info|debug]
   repro rules  <mine flags> [--min-confidence F] [--top N]
   repro serve  <mine flags> [--min-confidence F] [--top K] [--workers N]
                [--queue-depth N] [--internal-queue-depth N] [--deadline-ms MS]
@@ -78,10 +91,12 @@ USAGE:
                [--check-final true|false] [--store-dir DIR] [--retain N]
                [--no-persist true|false] [--shards S] [--replicas R]
                [--hedge-ms MS] [--kill-node N] [--fault-plan SPEC]
-               [--chaos-seed N] [--trace-out FILE]
+               [--chaos-seed N] [--trace-out FILE] [--flight-dir DIR]
+               [--slo-p99-ms MS] [--slo-window-ms MS] [--slo-min-requests N]
                [--log-level error|warn|info|debug]
   repro simulate [--config FILE] [--preset P] [--nodes N] [--transactions N]
                  [--pipeline true|false]
+  repro analyze TRACE.json [--json]
   repro bench --figure fig4|fig5|eta
   repro report
 ";
@@ -240,6 +255,16 @@ fn experiment_config(flags: &Flags) -> Result<ExperimentConfig, String> {
     if let Some(s) = flags.parse_opt::<u64>("chaos-seed")? {
         cfg.chaos.seed = s;
     }
+    if let Some(ms) = flags.parse_opt::<f64>("slo-p99-ms")? {
+        cfg.slo.p99_ms = ms;
+    }
+    if let Some(ms) = flags.parse_opt::<u64>("slo-window-ms")? {
+        cfg.slo.window_ms = ms;
+    }
+    if let Some(n) = flags.parse_opt::<u64>("slo-min-requests")? {
+        cfg.slo.min_requests = n;
+    }
+    cfg.slo.validate().map_err(|e| format!("slo: {e}"))?;
     if let Some(l) = flags.parse_opt::<LogLevel>("log-level")? {
         cfg.obs.log_level = l;
     }
@@ -255,6 +280,39 @@ fn trace_sink(flags: &Flags) -> Option<(PathBuf, Arc<TraceSink>)> {
     flags
         .get("trace-out")
         .map(|p| (PathBuf::from(p), TraceSink::new()))
+}
+
+/// The sink spans record into: the `--trace-out` one when tracing,
+/// otherwise a fresh sink created just so `--flight-dir` has something
+/// to tee off (its ring is then the only consumer — nothing exported).
+fn span_sink(flags: &Flags, trace: &Option<(PathBuf, Arc<TraceSink>)>) -> Option<Arc<TraceSink>> {
+    match (trace, flags.get("flight-dir")) {
+        (Some((_, s)), _) => Some(Arc::clone(s)),
+        (None, Some(_)) => Some(TraceSink::new()),
+        (None, None) => None,
+    }
+}
+
+/// `--flight-dir DIR`: attach a flight recorder to the run's sink. The
+/// ring only dumps when a trigger fires (job error, chaos kill
+/// escalation, SLO breach) — steady-state runs write nothing.
+fn attach_flight(flags: &Flags, sink: Option<&Arc<TraceSink>>) -> Option<Arc<FlightRecorder>> {
+    let dir = flags.get("flight-dir")?;
+    let sink = sink?;
+    let recorder = FlightRecorder::new(PathBuf::from(dir), obs::flight::DEFAULT_CAPACITY);
+    sink.attach_flight(Arc::clone(&recorder));
+    Some(recorder)
+}
+
+/// Dump the flight ring (with a coherent metrics cut) for `reason`.
+/// Failure to write the incident file is logged, never fatal — the
+/// recorder must not turn an incident into a second error.
+fn flight_dump(flight: Option<&Arc<FlightRecorder>>, registry: &MetricsRegistry, reason: &str) {
+    let Some(rec) = flight else { return };
+    match rec.dump(reason, Some(&registry.snapshot())) {
+        Ok(path) => log!(Warn, "flight recorder dumped to {} ({reason})", path.display()),
+        Err(e) => log!(Error, "flight dump to {} failed: {e}", rec.dir().display()),
+    }
 }
 
 /// Write the Chrome `trace_event` file and its `.jsonl` sibling.
@@ -411,16 +469,23 @@ fn cmd_mine(flags: &Flags) -> Result<(), String> {
     let cfg = experiment_config(flags)?;
     let db = load_or_generate(flags, &cfg)?;
     let trace = trace_sink(flags);
+    let sink = span_sink(flags, &trace);
+    let flight = attach_flight(flags, sink.as_ref());
     let registry = Arc::new(MetricsRegistry::new());
     let chaos = fault_clock(&cfg)?;
     if let Some(clock) = &chaos {
         clock
             .register_metrics(&registry, "chaos")
             .map_err(|e| e.to_string())?;
+        // Fault injections record `cat: chaos` spans so the exported
+        // trace (and any flight dump) carries the fault context inline.
+        if let Some(s) = &sink {
+            clock.attach_trace(TraceCtx::root(Arc::clone(s)));
+        }
         log!(Info, "chaos: injecting fault plan '{}'", clock.plan());
     }
     let driver = build_driver(&cfg)?
-        .with_trace(trace.as_ref().map(|(_, s)| TraceCtx::root(Arc::clone(s))))
+        .with_trace(sink.as_ref().map(|s| TraceCtx::root(Arc::clone(s))))
         .with_registry(Arc::clone(&registry))
         .with_chaos(chaos.clone());
     // Open (and thereby validate) the store *before* the mine — an
@@ -447,11 +512,20 @@ fn cmd_mine(flags: &Flags) -> Result<(), String> {
     // With a store attached, mine in capture mode (byte-identical
     // result) so the border state lands in the generation-0 snapshot and
     // an incremental `serve --store-dir` warm-starts without any mining.
-    let (report, captured_state) = if store.is_some() {
-        let (r, st) = MinedState::capture(&driver, &db).map_err(|e| e.to_string())?;
-        (r, Some(st))
+    let mined = if store.is_some() {
+        MinedState::capture(&driver, &db)
+            .map(|(r, st)| (r, Some(st)))
+            .map_err(|e| e.to_string())
     } else {
-        (driver.mine(&db).map_err(|e| e.to_string())?, None)
+        driver.mine(&db).map(|r| (r, None)).map_err(|e| e.to_string())
+    };
+    let (report, captured_state) = match mined {
+        Ok(out) => out,
+        Err(e) => {
+            // The job failed: the ring holds the last spans before death.
+            flight_dump(flight.as_ref(), &registry, &format!("mine error: {e}"));
+            return Err(e);
+        }
     };
 
     println!("\nlevel | candidates | frequent | wall(s)");
@@ -487,6 +561,11 @@ fn cmd_mine(flags: &Flags) -> Result<(), String> {
             cs.store_faults,
             clock.blacklisted(),
         );
+        if cs.nodes_killed > 0 {
+            // Node loss is the chaos escalation the recorder is for:
+            // keep the last spans around the kill for the post-mortem.
+            flight_dump(flight.as_ref(), &registry, "chaos kill escalation");
+        }
     }
     if let Some(conf) = flags.parse_opt::<f64>("rules")? {
         let rules = generate_rules(&report.result, conf);
@@ -550,10 +629,12 @@ fn cmd_rules(flags: &Flags) -> Result<(), String> {
 fn cmd_serve(flags: &Flags) -> Result<(), String> {
     let cfg = experiment_config(flags)?;
     let trace = trace_sink(flags);
+    let sink = span_sink(flags, &trace);
+    let flight = attach_flight(flags, sink.as_ref());
     // Each call derives a fresh root context on the shared sink, so the
     // cold-start mine, the refresher, and every served request get their
     // own trace ids while landing in one exported file.
-    let root_ctx = || trace.as_ref().map(|(_, s)| TraceCtx::root(Arc::clone(s)));
+    let root_ctx = || sink.as_ref().map(|s| TraceCtx::root(Arc::clone(s)));
     let registry = Arc::new(MetricsRegistry::new());
     let queries: usize = flags.parse_opt("queries")?.unwrap_or(200);
     let check: bool = flags.parse_opt("check")?.unwrap_or(false);
@@ -565,6 +646,9 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
         clock
             .register_metrics(&registry, "chaos")
             .map_err(|e| e.to_string())?;
+        if let Some(s) = &sink {
+            clock.attach_trace(TraceCtx::root(Arc::clone(s)));
+        }
         log!(Info, "chaos: injecting fault plan '{}'", clock.plan());
     }
     let store = open_store(&cfg, chaos.as_ref())?;
@@ -793,6 +877,51 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
         .register_metrics(&registry, "serve")
         .map_err(|e| e.to_string())?;
 
+    // SLO watcher: judge the user lane's p99 per burn-rate window on its
+    // own thread. A breach logs at Warn, bumps the `slo.*` counters, and
+    // triggers the flight recorder. The evaluation itself is pure
+    // (`SloWatcher::evaluate`); this thread only owns the cadence.
+    let slo_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let slo_handle = cfg.slo.enabled().then(|| {
+        let watcher = SloWatcher::new(cfg.slo.clone(), server.latency_histogram())
+            .register_metrics(&registry);
+        let stop = Arc::clone(&slo_stop);
+        let flight = flight.clone();
+        let registry = Arc::clone(&registry);
+        std::thread::spawn(move || {
+            let window = std::time::Duration::from_millis(watcher.config().window_ms);
+            // sleep in short slices so shutdown stays prompt
+            let slice = std::time::Duration::from_millis(10).min(window);
+            let mut elapsed = std::time::Duration::ZERO;
+            loop {
+                std::thread::sleep(slice);
+                elapsed += slice;
+                let stopping = stop.load(std::sync::atomic::Ordering::Relaxed);
+                // the final (partial) window is still judged at stop
+                if elapsed >= window || stopping {
+                    elapsed = std::time::Duration::ZERO;
+                    if let Some(v) = watcher.evaluate() {
+                        if v.breached {
+                            log!(
+                                Warn,
+                                "SLO breach: p99 {:?} > {:?} target over {} requests \
+                                 (burn rate {:.1}x)",
+                                v.p99,
+                                watcher.config().target(),
+                                v.requests,
+                                v.burn_rate
+                            );
+                            flight_dump(flight.as_ref(), &registry, "slo breach");
+                        }
+                    }
+                }
+                if stopping {
+                    break;
+                }
+            }
+        })
+    });
+
     // Optional concurrent micro-batch refresh (the db moves to that
     // thread and comes back with the outcome; queries keep hitting
     // whatever snapshot is current). Each published generation is
@@ -931,6 +1060,15 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
     }
     let wall = t0.elapsed().as_secs_f64();
 
+    // User traffic is done: close out the SLO watcher (it judges the
+    // final partial window on the way out).
+    slo_stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    if let Some(handle) = slo_handle {
+        handle
+            .join()
+            .map_err(|_| "slo watcher thread panicked".to_string())?;
+    }
+
     let mut final_db = None;
     if let Some(handle) = refresh_handle {
         let (outcome, moved_db) = handle
@@ -1035,6 +1173,9 @@ fn cmd_serve(flags: &Flags) -> Result<(), String> {
             cs.store_faults,
             clock.blacklisted(),
         );
+        if cs.nodes_killed > 0 {
+            flight_dump(flight.as_ref(), &registry, "chaos kill escalation");
+        }
     }
     if check {
         println!("differential check: {checked} answers byte-identical to direct generate_rules");
@@ -1132,6 +1273,30 @@ fn cmd_bench(flags: &Flags) -> Result<(), String> {
         other => return Err(format!("unknown figure '{other}'")),
     };
     println!("regenerate with: cargo bench --bench {bench}");
+    Ok(())
+}
+
+/// `repro analyze <trace-file> [--json]`: the post-hoc critical-path
+/// report over a `--trace-out` file — stage attribution, per-wave
+/// straggler verdicts cross-referenced against chaos faults, and the
+/// sampled per-level workload statistics.
+fn cmd_analyze(args: &[String]) -> Result<(), String> {
+    let mut path: Option<PathBuf> = None;
+    let mut json = false;
+    for a in args {
+        match a.as_str() {
+            "--json" => json = true,
+            other if !other.starts_with('-') && path.is_none() => path = Some(other.into()),
+            other => return Err(format!("analyze: unexpected argument '{other}'")),
+        }
+    }
+    let path = path.ok_or("analyze: usage: repro analyze <trace-file> [--json]")?;
+    let profile = obs::profile::analyze_file(&path).map_err(|e| e.to_string())?;
+    if json {
+        println!("{}", obs::profile::to_json(&profile));
+    } else {
+        print!("{}", obs::profile::render_table(&profile));
+    }
     Ok(())
 }
 
@@ -1332,7 +1497,10 @@ mod tests {
         let cfg = experiment_config(&f).unwrap();
         assert_eq!(cfg.chaos.seed, 7);
         let clock = fault_clock(&cfg).unwrap().expect("seeded chaos is on");
-        assert!(clock.plan().is_survivable());
+        let cluster = cfg.cluster();
+        assert!(clock
+            .plan()
+            .is_survivable(cluster.n_nodes(), Dfs::new(&cluster).replication));
         // off by default: no clock anywhere near the hot path
         let cfg = experiment_config(&flags(&[]).unwrap()).unwrap();
         assert!(!cfg.chaos.enabled());
@@ -1340,6 +1508,46 @@ mod tests {
         // a typo'd plan fails at flag time, before any mining runs
         let f = flags(&["--fault-plan", "explode:1@now"]).unwrap();
         assert!(experiment_config(&f).is_err());
+    }
+
+    #[test]
+    fn slo_and_flight_flags_apply_and_validate() {
+        let f = flags(&[
+            "--slo-p99-ms", "5", "--slo-window-ms", "500", "--slo-min-requests", "10",
+        ])
+        .unwrap();
+        let cfg = experiment_config(&f).unwrap();
+        assert_eq!(cfg.slo.p99_ms, 5.0);
+        assert_eq!(cfg.slo.window_ms, 500);
+        assert_eq!(cfg.slo.min_requests, 10);
+        assert!(cfg.slo.enabled());
+        // off by default: no watcher thread, no instruments
+        assert!(!experiment_config(&flags(&[]).unwrap()).unwrap().slo.enabled());
+        for bad in [["--slo-p99-ms", "-1"], ["--slo-window-ms", "0"]] {
+            let f = flags(&bad).unwrap();
+            assert!(experiment_config(&f).is_err(), "{bad:?} must be rejected");
+        }
+        // --flight-dir without --trace-out still gets a sink to tee off
+        let f = flags(&["--flight-dir", "/tmp/flights"]).unwrap();
+        let trace = trace_sink(&f);
+        assert!(trace.is_none());
+        let sink = span_sink(&f, &trace).expect("a sink when --flight-dir is given");
+        let rec = attach_flight(&f, Some(&sink)).expect("a recorder too");
+        assert_eq!(rec.dir(), Path::new("/tmp/flights"));
+        // neither flag: no sink, no recorder
+        let f = flags(&[]).unwrap();
+        assert!(span_sink(&f, &trace_sink(&f)).is_none());
+        assert!(attach_flight(&f, Some(&sink)).is_none());
+    }
+
+    #[test]
+    fn analyze_args_parse_and_surface_typed_errors() {
+        assert!(cmd_analyze(&[]).is_err());
+        let err = cmd_analyze(&["/nonexistent/trace.json".to_string()]).unwrap_err();
+        assert!(err.contains("trace file"), "io error surfaces: {err}");
+        let err =
+            cmd_analyze(&["a.json".to_string(), "b.json".to_string()]).unwrap_err();
+        assert!(err.contains("unexpected"));
     }
 
     #[test]

@@ -619,6 +619,7 @@ impl<'a> JobRunner<'a> {
                 s.add("attempt", attempt as f64);
                 s.add("speculative", if speculative { 1.0 } else { 0.0 });
                 s.add("candidates", app.n_candidates() as f64);
+                s.add("node", node as f64);
                 s
             });
             let started = Instant::now();
@@ -662,11 +663,12 @@ impl<'a> JobRunner<'a> {
                 }
                 Some(partition_drain(&mut records, cfg.n_reducers))
             };
-            // Record the span before contending for the report lock.
-            drop(span);
             // A degraded node does the same work, slower (bounded so
             // chaos runs stay fast; the *scheduling* consequences —
-            // speculation, blacklist pressure — are what matter).
+            // speculation, blacklist pressure — are what matter). The
+            // sleep happens while the attempt's span is still open, so a
+            // `slow:` fault shows up in the task's traced duration and
+            // the analyzer can attribute the straggler to this node.
             if let Some(clock) = &self.chaos {
                 let factor = clock.slow_factor(node);
                 if factor > 1.0 {
@@ -674,6 +676,8 @@ impl<'a> JobRunner<'a> {
                     std::thread::sleep(extra.min(Duration::from_millis(50)));
                 }
             }
+            // Record the span before contending for the report lock.
+            drop(span);
 
             // --- report under the lock ---
             let mut st = state.lock().unwrap();
@@ -856,6 +860,7 @@ impl<'a> JobRunner<'a> {
                         let mut span = self.trace.as_ref().map(|ctx| {
                             let mut s = ctx.span("mr", format!("reduce.task.{task}"));
                             s.add("task", task as f64);
+                            s.add("node", node as f64);
                             s.add("attempt", attempt as f64);
                             s.add("reduce_input_records", input.len() as f64);
                             s

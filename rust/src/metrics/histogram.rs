@@ -124,6 +124,27 @@ impl HistogramSnapshot {
         (self.quantile(0.50), self.quantile(0.95), self.quantile(0.99))
     }
 
+    /// Fraction of observations strictly above `threshold` — the SLO
+    /// watcher's burn-rate numerator. Bucketing is conservative: a
+    /// bucket straddling the threshold counts as above (its upper bound
+    /// exceeds it), so the burn rate never under-reports. Empty
+    /// snapshot -> 0.
+    pub fn fraction_above(&self, threshold: Duration) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let nanos = threshold.as_nanos().min(u64::MAX as u128) as u64;
+        let over: u64 = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(b, _)| bucket_upper(*b) > nanos)
+            .map(|(_, &n)| n)
+            .sum();
+        over as f64 / total as f64
+    }
+
     /// Combine two snapshots by per-bucket addition — the scatter-gather
     /// aggregation: per-shard histograms merge into one fabric-level
     /// distribution without double-counting, because each observation
@@ -185,6 +206,27 @@ mod tests {
         let s = LatencyHistogram::new().snapshot();
         assert_eq!(s.count(), 0);
         assert_eq!(s.quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn fraction_above_splits_a_bimodal_stream() {
+        let h = LatencyHistogram::new();
+        for _ in 0..90 {
+            h.record(Duration::from_micros(10));
+        }
+        for _ in 0..10 {
+            h.record(Duration::from_millis(10));
+        }
+        let s = h.snapshot();
+        let f = s.fraction_above(Duration::from_millis(1));
+        assert!((f - 0.10).abs() < 1e-9, "10% of the stream is slow, got {f}");
+        assert_eq!(s.fraction_above(Duration::from_secs(1)), 0.0);
+        // everything exceeds a sub-bucket threshold
+        assert_eq!(s.fraction_above(Duration::ZERO), 1.0);
+        assert_eq!(
+            LatencyHistogram::new().snapshot().fraction_above(Duration::ZERO),
+            0.0
+        );
     }
 
     #[test]

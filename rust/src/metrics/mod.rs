@@ -57,10 +57,10 @@ impl Default for Timer {
     }
 }
 
-/// Median / mean / p95 / min / max over repeated measurements — the
-/// aggregation every bench row reports. The p95 gives ablation tables a
-/// tail column, so a regression that only hurts the slowest runs still
-/// shows up.
+/// Median / mean / p95 / p99 / min / max over repeated measurements —
+/// the aggregation every bench row reports. The tail percentiles give
+/// ablation tables their tail columns, so a regression that only hurts
+/// the slowest runs still shows up.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
     pub n: usize,
@@ -69,6 +69,9 @@ pub struct Summary {
     /// 95th percentile by the nearest-rank method (`ceil(0.95·n)`-th
     /// smallest sample); equals `max` for `n < 20`.
     pub p95: f64,
+    /// 99th percentile, same nearest-rank method; equals `max` for
+    /// `n < 100`.
+    pub p99: f64,
     pub min: f64,
     pub max: f64,
 }
@@ -79,7 +82,7 @@ impl Summary {
         let mut s = samples.to_vec();
         s.sort_by(f64::total_cmp);
         let n = s.len();
-        let rank95 = ((0.95 * n as f64).ceil() as usize).clamp(1, n);
+        let rank = |q: f64| ((q * n as f64).ceil() as usize).clamp(1, n);
         Self {
             n,
             mean: s.iter().sum::<f64>() / n as f64,
@@ -88,7 +91,8 @@ impl Summary {
             } else {
                 (s[n / 2 - 1] + s[n / 2]) / 2.0
             },
-            p95: s[rank95 - 1],
+            p95: s[rank(0.95) - 1],
+            p99: s[rank(0.99) - 1],
             min: s[0],
             max: s[n - 1],
         }
@@ -137,6 +141,20 @@ mod tests {
         let samples: Vec<f64> = (1..=20).map(|i| i as f64).collect();
         assert_eq!(Summary::of(&samples).p95, 19.0);
         assert_eq!(Summary::of(&[7.0]).p95, 7.0);
+    }
+
+    #[test]
+    fn summary_p99_nearest_rank() {
+        // 1..=100: ceil(0.99 * 100) = 99 -> the 99th smallest sample.
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(Summary::of(&samples).p99, 99.0);
+        // 1..=200: ceil(0.99 * 200) = 198.
+        let samples: Vec<f64> = (1..=200).map(|i| i as f64).collect();
+        assert_eq!(Summary::of(&samples).p99, 198.0);
+        // small n: p99 collapses to the max, and the tail stays ordered
+        let s = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.p99, 3.0);
+        assert!(s.p99 >= s.p95);
     }
 
     #[test]

@@ -189,6 +189,19 @@ mod tests {
     }
 
     #[test]
+    fn empty_trace_exports_are_valid_documents() {
+        let tmp = TempDir::new("obs_export_empty");
+        let chrome = tmp.path().join("empty.json");
+        let jsonl = tmp.path().join("empty.jsonl");
+        write_chrome_trace(&chrome, &[]).unwrap();
+        write_jsonl(&jsonl, &[]).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&chrome).unwrap()).unwrap();
+        let arr = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(arr.is_empty());
+        assert_eq!(std::fs::read_to_string(&jsonl).unwrap(), "");
+    }
+
+    #[test]
     fn metrics_dump_is_one_line_per_instrument() {
         let reg = MetricsRegistry::new();
         reg.counter("serve.served").add(7);

@@ -1,0 +1,247 @@
+//! The flight recorder: a bounded ring of the most recent spans plus a
+//! coherent metrics cut, dumped to disk when something goes wrong.
+//!
+//! Post-mortem tracing has a cost problem: a long serve run records
+//! millions of spans, but the interesting ones are always the last few
+//! thousand before the incident. The recorder tees every span the
+//! [`TraceSink`] records into a fixed-capacity ring (old spans
+//! overwritten, never reallocated), and [`FlightRecorder::dump`] writes
+//! the ring — as a normal Chrome trace document, loadable in Perfetto
+//! and parseable by `repro analyze` — together with a metrics snapshot
+//! and the trigger reason, into `--flight-dir`. Triggers wired in
+//! `main.rs`: a mine job error, chaos kill-fault escalation, and a serve
+//! SLO breach ([`super::slo`]).
+//!
+//! [`TraceSink`]: super::trace::TraceSink
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+use super::export::chrome_trace_json;
+use super::registry::{MetricValue, MetricsSnapshot};
+use super::trace::TraceEvent;
+
+/// Default ring capacity — enough for the full map/reduce task tree of
+/// several mine levels or a few thousand serve requests, at roughly
+/// 100 bytes a span.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+#[derive(Debug)]
+struct Ring {
+    /// Storage; grows to `capacity` then holds.
+    slots: Vec<TraceEvent>,
+    /// Next slot to overwrite once the ring is full.
+    next: usize,
+}
+
+/// The bounded span ring + dump machinery. One per process, attached to
+/// the trace sink with [`TraceSink::attach_flight`]; `observe` is called
+/// from the sink's record path, everything else from trigger sites.
+///
+/// [`TraceSink::attach_flight`]: super::trace::TraceSink::attach_flight
+#[derive(Debug)]
+pub struct FlightRecorder {
+    capacity: usize,
+    dir: PathBuf,
+    ring: Mutex<Ring>,
+    /// Spans ever observed (`>= capacity` means the ring wrapped).
+    observed: AtomicU64,
+    /// Dump file sequence number, so repeated triggers never clobber.
+    dumps: AtomicU64,
+}
+
+impl FlightRecorder {
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new(dir: impl Into<PathBuf>, capacity: usize) -> Arc<Self> {
+        Arc::new(Self {
+            capacity: capacity.max(1),
+            dir: dir.into(),
+            ring: Mutex::new(Ring { slots: Vec::new(), next: 0 }),
+            observed: AtomicU64::new(0),
+            dumps: AtomicU64::new(0),
+        })
+    }
+
+    /// Tee one completed span into the ring (called by the sink under
+    /// its own record path; the ring lock is held only for the copy).
+    pub fn observe(&self, event: &TraceEvent) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.slots.len() < self.capacity {
+            ring.slots.push(event.clone());
+        } else {
+            let next = ring.next;
+            ring.slots[next] = event.clone();
+            ring.next = (next + 1) % self.capacity;
+        }
+        self.observed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Spans ever observed (kept spans = `min(observed, capacity)`).
+    pub fn observed(&self) -> u64 {
+        self.observed.load(Ordering::Relaxed)
+    }
+
+    /// The retained window, oldest first.
+    pub fn recent(&self) -> Vec<TraceEvent> {
+        let ring = self.ring.lock().unwrap();
+        let mut out = Vec::with_capacity(ring.slots.len());
+        out.extend_from_slice(&ring.slots[ring.next..]);
+        out.extend_from_slice(&ring.slots[..ring.next]);
+        out
+    }
+
+    /// Dump the ring + a metrics cut to `<dir>/flight-<seq>-<reason>.json`
+    /// and return the path. The document's `trace` field is a complete
+    /// Chrome trace (Perfetto-loadable after extraction); `metrics` maps
+    /// dotted keys to values with histograms as `{count,p50,p95,p99}`.
+    pub fn dump(
+        &self,
+        reason: &str,
+        metrics: Option<&MetricsSnapshot>,
+    ) -> io::Result<PathBuf> {
+        let events = self.recent();
+        let seq = self.dumps.fetch_add(1, Ordering::Relaxed);
+        let slug: String = reason
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+            .take(48)
+            .collect();
+        std::fs::create_dir_all(&self.dir)?;
+        let path = self.dir.join(format!("flight-{seq:03}-{slug}.json"));
+        let doc = Json::obj(vec![
+            ("reason", Json::str(reason)),
+            ("spans_retained", Json::num(events.len() as f64)),
+            ("spans_observed", Json::num(self.observed() as f64)),
+            ("trace", chrome_trace_json(&events)),
+            (
+                "metrics",
+                metrics.map_or(Json::Null, render_metrics_json),
+            ),
+        ]);
+        std::fs::write(&path, format!("{doc}\n"))?;
+        Ok(path)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+/// A metrics cut as JSON: counters and gauges as numbers, histograms as
+/// their count + tail quantiles (the full bucket vector is overkill for
+/// an incident file).
+fn render_metrics_json(snapshot: &MetricsSnapshot) -> Json {
+    let mut fields = Vec::with_capacity(snapshot.entries.len());
+    for (key, value) in &snapshot.entries {
+        let v = match value {
+            MetricValue::Counter(v) => Json::num(*v as f64),
+            MetricValue::Gauge(v) => Json::num(*v),
+            MetricValue::Histogram(h) => {
+                let (p50, p95, p99) = h.p50_p95_p99();
+                Json::obj(vec![
+                    ("count", Json::num(h.count() as f64)),
+                    ("p50_us", Json::num(p50.as_micros() as f64)),
+                    ("p95_us", Json::num(p95.as_micros() as f64)),
+                    ("p99_us", Json::num(p99.as_micros() as f64)),
+                ])
+            }
+        };
+        fields.push((key.as_str(), v));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::MetricsRegistry;
+    use crate::obs::trace::{TraceCtx, TraceSink};
+    use crate::util::tempdir::TempDir;
+
+    fn event(name: &str, span_id: u64) -> TraceEvent {
+        TraceEvent {
+            name: name.into(),
+            cat: "mr",
+            trace_id: 1,
+            span_id,
+            parent_id: 0,
+            start_us: span_id,
+            dur_us: 1,
+            tid: 1,
+            args: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn ring_wraps_keeping_the_newest_spans_in_order() {
+        let tmp = TempDir::new("flight_wrap");
+        let rec = FlightRecorder::new(tmp.path(), 4);
+        for i in 0..10u64 {
+            rec.observe(&event(&format!("s{i}"), i + 1));
+        }
+        assert_eq!(rec.observed(), 10);
+        let kept = rec.recent();
+        assert_eq!(kept.len(), 4, "ring holds exactly its capacity");
+        let names: Vec<&str> = kept.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["s6", "s7", "s8", "s9"], "oldest first");
+    }
+
+    #[test]
+    fn under_capacity_nothing_is_dropped() {
+        let tmp = TempDir::new("flight_small");
+        let rec = FlightRecorder::new(tmp.path(), 100);
+        for i in 0..3u64 {
+            rec.observe(&event(&format!("s{i}"), i + 1));
+        }
+        let names: Vec<String> = rec.recent().iter().map(|e| e.name.clone()).collect();
+        assert_eq!(names, vec!["s0", "s1", "s2"]);
+    }
+
+    #[test]
+    fn dump_writes_a_parseable_incident_file() {
+        let tmp = TempDir::new("flight_dump");
+        let rec = FlightRecorder::new(tmp.path().join("flights"), 8);
+        for i in 0..12u64 {
+            rec.observe(&event(&format!("s{i}"), i + 1));
+        }
+        let reg = MetricsRegistry::new();
+        reg.counter("slo.breach").inc();
+        reg.histogram("serve.latency")
+            .record(std::time::Duration::from_millis(3));
+        let path = rec.dump("slo breach: p99", Some(&reg.snapshot())).unwrap();
+        assert!(path.file_name().unwrap().to_str().unwrap().starts_with("flight-000-"));
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("reason").and_then(Json::as_str), Some("slo breach: p99"));
+        assert_eq!(doc.get("spans_retained").and_then(Json::as_f64), Some(8.0));
+        assert_eq!(doc.get("spans_observed").and_then(Json::as_f64), Some(12.0));
+        // the embedded trace is itself analyzable Chrome format
+        let trace = doc.get("trace").unwrap();
+        let events = trace.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(events.len(), 8);
+        let metrics = doc.get("metrics").unwrap();
+        assert_eq!(metrics.get("slo.breach").and_then(Json::as_f64), Some(1.0));
+        assert!(metrics.get("serve.latency").unwrap().get("p99_us").is_some());
+        // a second dump gets a fresh sequence number
+        let path2 = rec.dump("again", None).unwrap();
+        assert_ne!(path, path2);
+    }
+
+    #[test]
+    fn sink_tee_feeds_the_recorder() {
+        let tmp = TempDir::new("flight_tee");
+        let sink = TraceSink::new();
+        let rec = FlightRecorder::new(tmp.path(), 4);
+        sink.attach_flight(Arc::clone(&rec));
+        let root = TraceCtx::root(Arc::clone(&sink));
+        for i in 0..6 {
+            let _span = root.span("serve", format!("req.{i}"));
+        }
+        assert_eq!(sink.len(), 6, "sink keeps everything");
+        assert_eq!(rec.observed(), 6);
+        assert_eq!(rec.recent().len(), 4, "recorder keeps the window");
+    }
+}

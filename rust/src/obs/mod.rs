@@ -21,19 +21,39 @@
 //!   (Perfetto-loadable) file written by `mine --trace-out` /
 //!   `serve --trace-out`, plus a one-page plain-text metrics dump.
 //!
+//! On top of the raw telemetry sits the *analysis* layer:
+//!
+//! * **[`profile`]** — the critical-path extractor behind
+//!   `repro analyze`: stage attribution (map / shuffle / reduce /
+//!   barrier idle / driver, summing to the makespan by construction),
+//!   per-wave straggler and skew detection cross-referenced against
+//!   chaos `slow:` faults, and the per-level workload statistics the
+//!   autotuner roadmap item calibrates on.
+//! * **[`flight`]** — the flight recorder: a bounded ring of recent
+//!   spans teed off the sink, dumped with a metrics cut to
+//!   `--flight-dir` on job error, chaos escalation, or SLO breach.
+//! * **[`slo`]** — the serve-side SLO watcher: a p99 target judged per
+//!   burn-rate window over the existing latency histograms.
+//!
 //! Leveled logging rides along: [`log!`] replaces the ad-hoc
 //! `eprintln!` call sites with structured `[level] target: message`
 //! lines on **stderr** — stdout stays reserved for results and bench
 //! tables (several CI smokes grep it).
 
 pub mod export;
+pub mod flight;
+pub mod profile;
 pub mod registry;
+pub mod slo;
 pub mod trace;
 
 pub use export::{render_metrics, write_chrome_trace, write_jsonl};
+pub use flight::FlightRecorder;
+pub use profile::{MineProfile, ParsedSpan, ProfileError};
 pub use registry::{
     Gauge, Metric, MetricValue, MetricsRegistry, MetricsSnapshot, RegistryError,
 };
+pub use slo::{SloConfig, SloVerdict, SloWatcher};
 pub use trace::{Span, TraceCtx, TraceEvent, TraceSink};
 
 use std::sync::atomic::{AtomicU8, Ordering};

@@ -1,0 +1,925 @@
+//! Post-hoc trace analysis: turn a completed mine's span tree into
+//! *answers* — which stage bounds the makespan, which node straggles,
+//! which level's candidate blowup dominates.
+//!
+//! The input is the Chrome `trace_event` file `mine --trace-out` wrote
+//! (parsed back through the in-tree JSON parser into [`ParsedSpan`]s) or
+//! a live [`TraceSink`] buffer. [`analyze`] walks the `mine` root's span
+//! tree and produces a [`MineProfile`]:
+//!
+//! * **stage attribution** — a sweep-line over each `level.k` window
+//!   assigns every microsecond to exactly one of `map` / `shuffle` /
+//!   `reduce` / `barrier_idle` (overlap resolved in that priority
+//!   order); time inside the mine span but outside every level window is
+//!   the `driver` stage (planning, candidate generation, DFS writes).
+//!   The five stages partition the makespan, so attribution sums to
+//!   100% by construction — the CI smoke asserts it.
+//! * **straggler / skew detection** — per wave (the map tasks of one
+//!   level, the reduce tasks of one level), the slowest task's duration
+//!   against the wave median. A ratio past [`STRAGGLER_RATIO`] flags the
+//!   slowest task's node; flagged nodes are cross-referenced against
+//!   `cat: chaos` `fault.slow` spans so a planted `slow:N` fault shows
+//!   up as a *corroborated* straggler on node N.
+//! * **per-level workload statistics** — the `profile.level.k` spans the
+//!   coordinator samples (density, item skew, average basket width,
+//!   candidate fanout) collected per level: the calibration inputs the
+//!   `perfmodel/` autotuner roadmap item consumes.
+//!
+//! Surfaced as `repro analyze <trace-file>` (human table or `--json`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::trace::TraceEvent;
+
+/// Wave tasks slower than this multiple of the wave median are flagged
+/// as stragglers (Hadoop's speculative-execution heuristic uses ~1.2 on
+/// progress rate; we compare completed durations, where the planted
+/// chaos `slow:` factors sit well past 2).
+pub const STRAGGLER_RATIO: f64 = 2.0;
+
+/// Waves smaller than this skip straggler detection — a 2-task wave's
+/// "median" is too noisy to accuse a node over.
+pub const MIN_WAVE_TASKS: usize = 4;
+
+/// A span parsed back from an exported trace file. Mirrors
+/// [`TraceEvent`] but owns its `cat` (arbitrary files can't intern into
+/// the `&'static str` the live sink uses).
+#[derive(Debug, Clone)]
+pub struct ParsedSpan {
+    pub name: String,
+    pub cat: String,
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent_id: u64,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub args: Vec<(String, f64)>,
+}
+
+impl ParsedSpan {
+    pub fn from_event(ev: &TraceEvent) -> Self {
+        Self {
+            name: ev.name.clone(),
+            cat: ev.cat.to_string(),
+            trace_id: ev.trace_id,
+            span_id: ev.span_id,
+            parent_id: ev.parent_id,
+            start_us: ev.start_us,
+            dur_us: ev.dur_us,
+            args: ev.args.clone(),
+        }
+    }
+
+    pub fn arg(&self, key: &str) -> Option<f64> {
+        self.args
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| *v)
+    }
+
+    pub fn end_us(&self) -> u64 {
+        self.start_us.saturating_add(self.dur_us)
+    }
+}
+
+/// Typed analysis failure: I/O on the trace path, a garbage/truncated
+/// file, or a structurally valid trace with nothing to analyze.
+#[derive(Debug)]
+pub enum ProfileError {
+    Io(std::io::Error),
+    /// The file is not a Chrome trace document (truncated write, wrong
+    /// file, or malformed JSON). Carries the parser's position message.
+    Parse(String),
+    /// Valid trace, but no root `mine` span to attribute — e.g. a serve
+    /// trace passed to `analyze`.
+    NoMineRoot,
+}
+
+impl std::fmt::Display for ProfileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "trace file: {e}"),
+            Self::Parse(msg) => write!(f, "not a Chrome trace: {msg}"),
+            Self::NoMineRoot => write!(f, "trace has no root `mine` span to attribute"),
+        }
+    }
+}
+
+impl std::error::Error for ProfileError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ProfileError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
+}
+
+/// Parse a Chrome `trace_event` document (the `--trace-out` format) back
+/// into flat spans. Only `ph: "X"` complete events are kept.
+pub fn parse_chrome_trace(text: &str) -> Result<Vec<ParsedSpan>, ProfileError> {
+    let doc = Json::parse(text).map_err(|e| ProfileError::Parse(e.to_string()))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ProfileError::Parse("no traceEvents array".into()))?;
+    let mut spans = Vec::with_capacity(events.len());
+    for ev in events {
+        if ev.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        let field = |key: &str| {
+            ev.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| ProfileError::Parse(format!("event missing numeric `{key}`")))
+        };
+        let args_obj = ev.get("args");
+        let id_arg = |key: &str| {
+            args_obj
+                .and_then(|a| a.get(key))
+                .and_then(Json::as_f64)
+                .ok_or_else(|| ProfileError::Parse(format!("event args missing `{key}`")))
+        };
+        let mut args = Vec::new();
+        if let Some(Json::Obj(map)) = args_obj {
+            for (k, v) in map {
+                if matches!(k.as_str(), "trace_id" | "span_id" | "parent_id") {
+                    continue;
+                }
+                if let Some(n) = v.as_f64() {
+                    args.push((k.clone(), n));
+                }
+            }
+        }
+        spans.push(ParsedSpan {
+            name: ev
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ProfileError::Parse("event missing `name`".into()))?
+                .to_string(),
+            cat: ev
+                .get("cat")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            trace_id: id_arg("trace_id")? as u64,
+            span_id: id_arg("span_id")? as u64,
+            parent_id: id_arg("parent_id")? as u64,
+            start_us: field("ts")? as u64,
+            dur_us: field("dur")? as u64,
+            args,
+        });
+    }
+    Ok(spans)
+}
+
+/// Read and parse a `--trace-out` file.
+pub fn load_chrome_trace(path: impl AsRef<Path>) -> Result<Vec<ParsedSpan>, ProfileError> {
+    let text = std::fs::read_to_string(path)?;
+    parse_chrome_trace(&text)
+}
+
+/// One named stage's share of the makespan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSlice {
+    pub stage: &'static str,
+    pub us: u64,
+    /// `us / makespan` — the five stages sum to 1.0 by construction.
+    pub fraction: f64,
+}
+
+/// Straggler verdict for one wave of tasks.
+#[derive(Debug, Clone)]
+pub struct WaveStats {
+    /// Level the wave belongs to (0 for a pipelined DAG's merged waves).
+    pub k: usize,
+    /// `"map"` or `"reduce"`.
+    pub wave: &'static str,
+    pub n_tasks: usize,
+    pub median_us: u64,
+    pub max_us: u64,
+    /// `max_us / median_us` — duration skew across the wave.
+    pub skew: f64,
+    /// Node id of the slowest task (from the `node` span arg).
+    pub slowest_node: Option<u64>,
+    /// Skew past [`STRAGGLER_RATIO`] on a wave of at least
+    /// [`MIN_WAVE_TASKS`].
+    pub straggler: bool,
+    /// The flagged node also appears in a `fault.slow` chaos span — the
+    /// straggler is *explained*, not anomalous.
+    pub chaos_slow_node: bool,
+}
+
+/// One level window's stage split (µs within the level span).
+#[derive(Debug, Clone)]
+pub struct LevelBreakdown {
+    pub k: usize,
+    pub span_us: u64,
+    pub map_us: u64,
+    pub shuffle_us: u64,
+    pub reduce_us: u64,
+    /// Level time no map/shuffle/reduce span covers: job setup, the
+    /// barrier between waves, result collection.
+    pub idle_us: u64,
+    pub n_candidates: Option<f64>,
+    pub n_frequent: Option<f64>,
+}
+
+/// Per-level workload statistics sampled by the coordinator
+/// (`profile.level.k` spans) — autotuner calibration inputs.
+#[derive(Debug, Clone)]
+pub struct LevelWorkload {
+    pub k: usize,
+    /// Average fraction of the item universe present per basket.
+    pub density: f64,
+    /// Most-frequent-item support over mean item support.
+    pub item_skew: f64,
+    pub avg_basket_width: f64,
+    /// `candidates(k) / frequent(k-1)` — the blowup the level paid.
+    pub candidate_fanout: f64,
+}
+
+/// A chaos fault injection found in the trace, for inline context.
+#[derive(Debug, Clone)]
+pub struct FaultNote {
+    pub name: String,
+    pub node: Option<u64>,
+    pub start_us: u64,
+    pub args: Vec<(String, f64)>,
+}
+
+/// Everything [`analyze`] extracts from one mine trace.
+#[derive(Debug, Clone)]
+pub struct MineProfile {
+    pub makespan_us: u64,
+    /// `map` / `shuffle` / `reduce` / `barrier_idle` / `driver`, in that
+    /// order; fractions sum to 1.0.
+    pub stages: Vec<StageSlice>,
+    pub levels: Vec<LevelBreakdown>,
+    pub waves: Vec<WaveStats>,
+    pub workload: Vec<LevelWorkload>,
+    pub faults: Vec<FaultNote>,
+}
+
+impl MineProfile {
+    /// Fraction of the makespan attributed to a named stage — 1.0 by
+    /// construction; the CI smoke asserts `>= 0.95` against this.
+    pub fn coverage(&self) -> f64 {
+        self.stages.iter().map(|s| s.fraction).sum()
+    }
+
+    /// Nodes flagged as stragglers across all waves, deduplicated.
+    pub fn straggler_nodes(&self) -> Vec<u64> {
+        let mut nodes: Vec<u64> = self
+            .waves
+            .iter()
+            .filter(|w| w.straggler)
+            .filter_map(|w| w.slowest_node)
+            .collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes
+    }
+}
+
+/// Microseconds of `[window]` covered by the union of `intervals`,
+/// minus any instant already covered by a higher-priority union in
+/// `claimed`. Appends its own covered segments to `claimed`.
+fn sweep_claim(
+    window: (u64, u64),
+    intervals: &[(u64, u64)],
+    claimed: &mut Vec<(u64, u64)>,
+) -> u64 {
+    // Elementary-segment sweep: cut the window at every boundary of
+    // every interval (own + claimed), then test each segment's midpoint.
+    // Span counts are small (tasks per level), so O(segments · spans)
+    // is fine and avoids a fiddly interval-algebra implementation.
+    let mut cuts: Vec<u64> = vec![window.0, window.1];
+    for &(s, e) in intervals.iter().chain(claimed.iter()) {
+        cuts.push(s.clamp(window.0, window.1));
+        cuts.push(e.clamp(window.0, window.1));
+    }
+    cuts.sort_unstable();
+    cuts.dedup();
+    let mut won = 0u64;
+    let mut own_segments = Vec::new();
+    for pair in cuts.windows(2) {
+        let (s, e) = (pair[0], pair[1]);
+        if s >= e {
+            continue;
+        }
+        let covers = |ivs: &[(u64, u64)]| ivs.iter().any(|&(a, b)| a <= s && e <= b);
+        if covers(intervals) && !covers(claimed) {
+            won += e - s;
+            own_segments.push((s, e));
+        }
+    }
+    claimed.extend(own_segments);
+    won
+}
+
+fn spans_of<'a>(
+    spans: &'a [ParsedSpan],
+    parent: u64,
+    prefix: &str,
+) -> Vec<&'a ParsedSpan> {
+    spans
+        .iter()
+        .filter(|s| s.parent_id == parent && s.name.starts_with(prefix))
+        .collect()
+}
+
+fn wave_stats(
+    k: usize,
+    wave: &'static str,
+    tasks: &[&ParsedSpan],
+    slow_nodes: &[u64],
+) -> Option<WaveStats> {
+    if tasks.is_empty() {
+        return None;
+    }
+    let mut durs: Vec<(u64, Option<u64>)> = tasks
+        .iter()
+        .map(|t| (t.dur_us, t.arg("node").map(|n| n as u64)))
+        .collect();
+    durs.sort_unstable_by_key(|(d, _)| *d);
+    let median_us = durs[durs.len() / 2].0;
+    let &(max_us, slowest_node) = durs.last().expect("non-empty wave");
+    let skew = max_us as f64 / median_us.max(1) as f64;
+    let straggler = durs.len() >= MIN_WAVE_TASKS && skew >= STRAGGLER_RATIO;
+    let chaos_slow_node =
+        straggler && slowest_node.is_some_and(|n| slow_nodes.contains(&n));
+    Some(WaveStats {
+        k,
+        wave,
+        n_tasks: durs.len(),
+        median_us,
+        max_us,
+        skew,
+        slowest_node,
+        straggler,
+        chaos_slow_node,
+    })
+}
+
+/// Analyze one mine's spans (parsed from a trace file or converted from
+/// a live sink via [`ParsedSpan::from_event`]).
+pub fn analyze(spans: &[ParsedSpan]) -> Result<MineProfile, ProfileError> {
+    let mine = spans
+        .iter()
+        .filter(|s| s.cat == "mine" && s.name == "mine" && s.parent_id == 0)
+        .max_by_key(|s| s.dur_us)
+        .ok_or(ProfileError::NoMineRoot)?;
+    let makespan_us = mine.dur_us.max(1);
+    let window_of = |s: &ParsedSpan| {
+        (
+            s.start_us.clamp(mine.start_us, mine.end_us()),
+            s.end_us().clamp(mine.start_us, mine.end_us()),
+        )
+    };
+
+    // Chaos fault spans are roots of their own (the clock outlives any
+    // single mine), so collect them sink-wide for cross-referencing.
+    let faults: Vec<FaultNote> = spans
+        .iter()
+        .filter(|s| s.cat == "chaos")
+        .map(|s| FaultNote {
+            name: s.name.clone(),
+            node: s.arg("node").map(|n| n as u64),
+            start_us: s.start_us,
+            args: s.args.clone(),
+        })
+        .collect();
+    let slow_nodes: Vec<u64> = faults
+        .iter()
+        .filter(|f| f.name == "fault.slow")
+        .filter_map(|f| f.node)
+        .collect();
+
+    // Level windows under the mine root. A pipelined DAG attaches tasks
+    // directly to the root; treat the whole mine window as one merged
+    // "level 0" so attribution still partitions the makespan.
+    let synthetic_root = ParsedSpan {
+        name: "level.0".into(),
+        ..mine.clone()
+    };
+    let mut level_spans: Vec<&ParsedSpan> = spans_of(spans, mine.span_id, "level.");
+    level_spans.sort_by_key(|s| s.start_us);
+    let merged_dag = level_spans.is_empty();
+    if merged_dag {
+        level_spans.push(&synthetic_root);
+    }
+
+    let mut levels = Vec::new();
+    let mut waves = Vec::new();
+    let mut workload = Vec::new();
+    let (mut map_total, mut shuffle_total, mut reduce_total, mut idle_total) =
+        (0u64, 0u64, 0u64, 0u64);
+    let mut level_union: Vec<(u64, u64)> = Vec::new();
+
+    for level in &level_spans {
+        let k = level
+            .name
+            .strip_prefix("level.")
+            .and_then(|k| k.parse::<usize>().ok())
+            .unwrap_or(0);
+        // Tasks parent to the level span synchronously, to the mine root
+        // in the pipelined DAG.
+        let task_parent = if merged_dag { mine.span_id } else { level.span_id };
+        let maps = spans_of(spans, task_parent, "map.task.");
+        let reduces = spans_of(spans, task_parent, "reduce.task.");
+        let shuffles = spans_of(spans, task_parent, "shuffle");
+
+        let window = window_of(level);
+        let span_us = window.1 - window.0;
+        // Priority map > shuffle > reduce: an instant covered by several
+        // stages (pipelined overlap, shuffle running under late maps)
+        // counts once, for the earliest stage.
+        let mut claimed = Vec::new();
+        let ivs = |ss: &[&ParsedSpan]| -> Vec<(u64, u64)> {
+            ss.iter().map(|s| (s.start_us, s.end_us())).collect()
+        };
+        let map_us = sweep_claim(window, &ivs(&maps), &mut claimed);
+        let shuffle_us = sweep_claim(window, &ivs(&shuffles), &mut claimed);
+        let reduce_us = sweep_claim(window, &ivs(&reduces), &mut claimed);
+        let idle_us = span_us.saturating_sub(map_us + shuffle_us + reduce_us);
+        map_total += map_us;
+        shuffle_total += shuffle_us;
+        reduce_total += reduce_us;
+        idle_total += idle_us;
+        level_union.push(window);
+
+        waves.extend(wave_stats(k, "map", &maps, &slow_nodes));
+        waves.extend(wave_stats(k, "reduce", &reduces, &slow_nodes));
+
+        for p in spans
+            .iter()
+            .filter(|s| s.cat == "profile" && s.parent_id == level.span_id)
+        {
+            workload.push(LevelWorkload {
+                k,
+                density: p.arg("density").unwrap_or(0.0),
+                item_skew: p.arg("item_skew").unwrap_or(0.0),
+                avg_basket_width: p.arg("avg_basket_width").unwrap_or(0.0),
+                candidate_fanout: p.arg("candidate_fanout").unwrap_or(0.0),
+            });
+        }
+
+        levels.push(LevelBreakdown {
+            k,
+            span_us,
+            map_us,
+            shuffle_us,
+            reduce_us,
+            idle_us,
+            n_candidates: level.arg("candidates"),
+            n_frequent: level.arg("frequent"),
+        });
+    }
+
+    // Driver stage: mine time outside every level window (planning,
+    // candidate generation, DFS writes, result collection).
+    let mut claimed = Vec::new();
+    let covered = sweep_claim((mine.start_us, mine.end_us()), &level_union, &mut claimed);
+    let driver_us = makespan_us.saturating_sub(covered);
+
+    let slice = |stage: &'static str, us: u64| StageSlice {
+        stage,
+        us,
+        fraction: us as f64 / makespan_us as f64,
+    };
+    let stages = vec![
+        slice("map", map_total),
+        slice("shuffle", shuffle_total),
+        slice("reduce", reduce_total),
+        slice("barrier_idle", idle_total),
+        slice("driver", driver_us),
+    ];
+
+    Ok(MineProfile {
+        makespan_us,
+        stages,
+        levels,
+        waves,
+        workload,
+        faults,
+    })
+}
+
+/// Convenience: load, parse, analyze.
+pub fn analyze_file(path: impl AsRef<Path>) -> Result<MineProfile, ProfileError> {
+    analyze(&load_chrome_trace(path)?)
+}
+
+fn ms(us: u64) -> f64 {
+    us as f64 / 1e3
+}
+
+/// The human-readable attribution table `repro analyze` prints.
+pub fn render_table(p: &MineProfile) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "== analyze: makespan {:.3} ms, {:.1}% attributed ==",
+        ms(p.makespan_us),
+        p.coverage() * 100.0
+    );
+    let _ = writeln!(out, "{:<14} {:>12} {:>8}", "stage", "time_ms", "share");
+    for s in &p.stages {
+        let _ = writeln!(
+            out,
+            "{:<14} {:>12.3} {:>7.1}%",
+            s.stage,
+            ms(s.us),
+            s.fraction * 100.0
+        );
+    }
+    let _ = writeln!(
+        out,
+        "\n{:<7} {:>10} {:>7} {:>9} {:>8} {:>7} {:>11}",
+        "level", "span_ms", "map%", "shuffle%", "reduce%", "idle%", "candidates"
+    );
+    for l in &p.levels {
+        let pct = |us: u64| 100.0 * us as f64 / l.span_us.max(1) as f64;
+        let _ = writeln!(
+            out,
+            "{:<7} {:>10.3} {:>6.1}% {:>8.1}% {:>7.1}% {:>6.1}% {:>11}",
+            l.k,
+            ms(l.span_us),
+            pct(l.map_us),
+            pct(l.shuffle_us),
+            pct(l.reduce_us),
+            pct(l.idle_us),
+            l.n_candidates.map_or_else(|| "-".into(), |c| format!("{c:.0}")),
+        );
+    }
+    let stragglers: Vec<&WaveStats> = p.waves.iter().filter(|w| w.straggler).collect();
+    if stragglers.is_empty() {
+        let _ = writeln!(out, "\nstragglers: none (all waves under {STRAGGLER_RATIO}x median)");
+    } else {
+        let _ = writeln!(out, "\nstragglers:");
+        for w in stragglers {
+            let _ = writeln!(
+                out,
+                "  level {} {} wave: node {} slowest ({:.1}x median over {} tasks){}",
+                w.k,
+                w.wave,
+                w.slowest_node.map_or_else(|| "?".into(), |n| n.to_string()),
+                w.skew,
+                w.n_tasks,
+                if w.chaos_slow_node {
+                    " — matches injected slow: fault"
+                } else {
+                    ""
+                }
+            );
+        }
+    }
+    if !p.faults.is_empty() {
+        let _ = writeln!(out, "\nfaults:");
+        for f in &p.faults {
+            let _ = writeln!(
+                out,
+                "  {} node={} @ {:.3} ms",
+                f.name,
+                f.node.map_or_else(|| "-".into(), |n| n.to_string()),
+                ms(f.start_us)
+            );
+        }
+    }
+    if !p.workload.is_empty() {
+        let _ = writeln!(
+            out,
+            "\n{:<7} {:>9} {:>10} {:>13} {:>10}",
+            "level", "density", "item_skew", "basket_width", "fanout"
+        );
+        for w in &p.workload {
+            let _ = writeln!(
+                out,
+                "{:<7} {:>9.4} {:>10.2} {:>13.2} {:>10.2}",
+                w.k, w.density, w.item_skew, w.avg_basket_width, w.candidate_fanout
+            );
+        }
+    }
+    out
+}
+
+/// The machine-readable form (`repro analyze --json`).
+pub fn to_json(p: &MineProfile) -> Json {
+    let stage = |s: &StageSlice| {
+        Json::obj(vec![
+            ("stage", Json::str(s.stage)),
+            ("us", Json::num(s.us as f64)),
+            ("fraction", Json::num(s.fraction)),
+        ])
+    };
+    let level = |l: &LevelBreakdown| {
+        Json::obj(vec![
+            ("k", Json::num(l.k as f64)),
+            ("span_us", Json::num(l.span_us as f64)),
+            ("map_us", Json::num(l.map_us as f64)),
+            ("shuffle_us", Json::num(l.shuffle_us as f64)),
+            ("reduce_us", Json::num(l.reduce_us as f64)),
+            ("idle_us", Json::num(l.idle_us as f64)),
+        ])
+    };
+    let wave = |w: &WaveStats| {
+        Json::obj(vec![
+            ("k", Json::num(w.k as f64)),
+            ("wave", Json::str(w.wave)),
+            ("n_tasks", Json::num(w.n_tasks as f64)),
+            ("median_us", Json::num(w.median_us as f64)),
+            ("max_us", Json::num(w.max_us as f64)),
+            ("skew", Json::num(w.skew)),
+            (
+                "slowest_node",
+                w.slowest_node.map_or(Json::Null, |n| Json::num(n as f64)),
+            ),
+            ("straggler", Json::Bool(w.straggler)),
+            ("chaos_slow_node", Json::Bool(w.chaos_slow_node)),
+        ])
+    };
+    let load = |w: &LevelWorkload| {
+        Json::obj(vec![
+            ("k", Json::num(w.k as f64)),
+            ("density", Json::num(w.density)),
+            ("item_skew", Json::num(w.item_skew)),
+            ("avg_basket_width", Json::num(w.avg_basket_width)),
+            ("candidate_fanout", Json::num(w.candidate_fanout)),
+        ])
+    };
+    let fault = |f: &FaultNote| {
+        let mut fields = vec![
+            ("name", Json::str(f.name.clone())),
+            ("start_us", Json::num(f.start_us as f64)),
+            (
+                "node",
+                f.node.map_or(Json::Null, |n| Json::num(n as f64)),
+            ),
+        ];
+        let args: BTreeMap<String, Json> = f
+            .args
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(*v)))
+            .collect();
+        fields.push(("args", Json::Obj(args)));
+        Json::obj(fields)
+    };
+    Json::obj(vec![
+        ("makespan_us", Json::num(p.makespan_us as f64)),
+        ("coverage", Json::num(p.coverage())),
+        ("stages", Json::Arr(p.stages.iter().map(stage).collect())),
+        ("levels", Json::Arr(p.levels.iter().map(level).collect())),
+        ("waves", Json::Arr(p.waves.iter().map(wave).collect())),
+        ("workload", Json::Arr(p.workload.iter().map(load).collect())),
+        ("faults", Json::Arr(p.faults.iter().map(fault).collect())),
+        (
+            "straggler_nodes",
+            Json::Arr(
+                p.straggler_nodes()
+                    .iter()
+                    .map(|&n| Json::num(n as f64))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(
+        name: &str,
+        cat: &str,
+        span_id: u64,
+        parent_id: u64,
+        start_us: u64,
+        dur_us: u64,
+        args: &[(&str, f64)],
+    ) -> ParsedSpan {
+        ParsedSpan {
+            name: name.into(),
+            cat: cat.into(),
+            trace_id: 1,
+            span_id,
+            parent_id,
+            start_us,
+            dur_us,
+            args: args.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        }
+    }
+
+    /// A hand-built two-level mine: level windows inside the mine span,
+    /// task waves inside the levels, known gaps for idle/driver time.
+    fn synthetic_mine() -> Vec<ParsedSpan> {
+        let mut spans = vec![span("mine", "mine", 1, 0, 0, 1000, &[])];
+        // level 1: [100, 400); maps union [100,240), shuffle [250,300),
+        // reduce [300,380)
+        spans.push(span("level.1", "mine", 2, 1, 100, 300, &[("candidates", 8.0)]));
+        for t in 0..4u64 {
+            spans.push(span(
+                &format!("map.task.{t}"),
+                "mr",
+                10 + t,
+                2,
+                100 + t * 10,
+                110,
+                &[("node", t as f64 % 2.0)],
+            ));
+        }
+        spans.push(span("shuffle", "mr", 20, 2, 250, 50, &[]));
+        spans.push(span("reduce.task.0", "mr", 21, 2, 300, 80, &[("node", 0.0)]));
+        // level 2: [500, 900) with a planted straggler on node 1
+        spans.push(span("level.2", "mine", 3, 1, 500, 400, &[("candidates", 5.0)]));
+        for t in 0..4u64 {
+            let (dur, node) = if t == 3 { (390, 1.0) } else { (80, 0.0) };
+            spans.push(span(
+                &format!("map.task.{t}"),
+                "mr",
+                30 + t,
+                3,
+                500,
+                dur,
+                &[("node", node)],
+            ));
+        }
+        spans.push(span(
+            "profile.level.2",
+            "profile",
+            40,
+            3,
+            500,
+            1,
+            &[
+                ("density", 0.25),
+                ("item_skew", 3.0),
+                ("avg_basket_width", 10.0),
+                ("candidate_fanout", 1.5),
+            ],
+        ));
+        spans
+    }
+
+    #[test]
+    fn attribution_partitions_the_makespan() {
+        let profile = analyze(&synthetic_mine()).unwrap();
+        assert_eq!(profile.makespan_us, 1000);
+        let total: u64 = profile.stages.iter().map(|s| s.us).sum();
+        assert_eq!(total, 1000, "stages must partition the makespan exactly");
+        assert!((profile.coverage() - 1.0).abs() < 1e-9);
+        // known geometry: driver = [0,100) + [400,500) + [900,1000)
+        let get = |name: &str| {
+            profile
+                .stages
+                .iter()
+                .find(|s| s.stage == name)
+                .unwrap()
+                .us
+        };
+        assert_eq!(get("driver"), 300);
+        // level 1's staggered maps union to [100,240), level 2's to
+        // [500,890) (the straggler stretches the wave)
+        assert_eq!(get("map"), 140 + 390);
+        assert_eq!(get("shuffle"), 50);
+        assert_eq!(get("reduce"), 80);
+        assert_eq!(get("barrier_idle"), 1000 - 300 - 530 - 50 - 80);
+    }
+
+    #[test]
+    fn straggler_flagged_on_the_slow_node_and_chaos_corroborated() {
+        let mut spans = synthetic_mine();
+        // no chaos span yet: straggler flagged but not corroborated
+        let p = analyze(&spans).unwrap();
+        let wave = p
+            .waves
+            .iter()
+            .find(|w| w.k == 2 && w.wave == "map")
+            .unwrap();
+        assert!(wave.straggler, "4.9x median must flag");
+        assert_eq!(wave.slowest_node, Some(1));
+        assert!(!wave.chaos_slow_node);
+        assert_eq!(p.straggler_nodes(), vec![1]);
+        // level 1's tight wave must NOT flag
+        let tight = p
+            .waves
+            .iter()
+            .find(|w| w.k == 1 && w.wave == "map")
+            .unwrap();
+        assert!(!tight.straggler);
+
+        spans.push(span(
+            "fault.slow",
+            "chaos",
+            90,
+            0,
+            0,
+            1,
+            &[("node", 1.0), ("factor", 3.0)],
+        ));
+        let p = analyze(&spans).unwrap();
+        let wave = p
+            .waves
+            .iter()
+            .find(|w| w.k == 2 && w.wave == "map")
+            .unwrap();
+        assert!(wave.chaos_slow_node, "slow: fault on node 1 corroborates");
+        assert_eq!(p.faults.len(), 1);
+    }
+
+    #[test]
+    fn workload_stats_are_collected_per_level() {
+        let p = analyze(&synthetic_mine()).unwrap();
+        assert_eq!(p.workload.len(), 1);
+        let w = &p.workload[0];
+        assert_eq!(w.k, 2);
+        assert!((w.density - 0.25).abs() < 1e-9);
+        assert!((w.candidate_fanout - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chrome_roundtrip_then_analyze() {
+        use crate::obs::trace::{TraceCtx, TraceSink};
+        use std::sync::Arc;
+        let sink = TraceSink::new();
+        let root = TraceCtx::root(Arc::clone(&sink));
+        {
+            let mine = root.span("mine", "mine");
+            {
+                let level = mine.ctx().span("mine", "level.1");
+                for t in 0..4 {
+                    let mut task = level.ctx().span("mr", format!("map.task.{t}"));
+                    task.add("node", (t % 2) as f64);
+                }
+            }
+        }
+        let doc = crate::obs::export::chrome_trace_json(&sink.events());
+        let spans = parse_chrome_trace(&doc.to_string()).unwrap();
+        assert_eq!(spans.len(), 6);
+        let p = analyze(&spans).unwrap();
+        assert!((p.coverage() - 1.0).abs() < 1e-9);
+        assert_eq!(p.levels.len(), 1);
+        // table + json render without panicking and carry the headline
+        let table = render_table(&p);
+        assert!(table.contains("makespan"));
+        let json = to_json(&p);
+        assert!(json.get("coverage").and_then(Json::as_f64).is_some());
+    }
+
+    #[test]
+    fn garbage_and_truncated_input_is_a_typed_parse_error() {
+        assert!(matches!(
+            parse_chrome_trace("not json at all"),
+            Err(ProfileError::Parse(_))
+        ));
+        // a real document, truncated mid-write
+        let doc = r#"{"traceEvents": [{"name": "mine", "cat": "mine", "ph":"#;
+        assert!(matches!(
+            parse_chrome_trace(doc),
+            Err(ProfileError::Parse(_))
+        ));
+        // valid JSON, wrong shape
+        assert!(matches!(
+            parse_chrome_trace(r#"{"hello": 1}"#),
+            Err(ProfileError::Parse(_))
+        ));
+        // valid trace, nothing to analyze
+        assert!(matches!(
+            analyze(&[]),
+            Err(ProfileError::NoMineRoot)
+        ));
+    }
+
+    #[test]
+    fn pipelined_trace_without_level_spans_still_partitions() {
+        // tasks attach straight to the mine root (the job-DAG shape)
+        let mut spans = vec![span("mine", "mine", 1, 0, 0, 500, &[])];
+        for t in 0..4u64 {
+            spans.push(span(
+                &format!("map.task.{t}"),
+                "mr",
+                10 + t,
+                1,
+                50 + t * 50,
+                100,
+                &[("node", t as f64)],
+            ));
+        }
+        spans.push(span("reduce.task.0", "mr", 20, 1, 300, 100, &[]));
+        let p = analyze(&spans).unwrap();
+        assert!((p.coverage() - 1.0).abs() < 1e-9);
+        assert_eq!(p.levels.len(), 1);
+        assert_eq!(p.levels[0].k, 0);
+        let total: u64 = p.stages.iter().map(|s| s.us).sum();
+        assert_eq!(total, 500);
+    }
+}

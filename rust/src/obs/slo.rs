@@ -1,0 +1,225 @@
+//! Serve-side SLO tracking: a p99 latency target checked over a sliding
+//! burn-rate window of the existing latency histograms.
+//!
+//! The `[slo]` config names a p99 target; the watcher polls the server's
+//! user-lane histogram every `window_ms`, diffs consecutive snapshots
+//! ([`HistogramSnapshot::diff`] — the same per-phase mechanism the
+//! benches use), and evaluates each window in isolation:
+//!
+//! * **breach** — the window's p99 exceeds the target (only windows with
+//!   at least `min_requests` count, so an idle server's single slow
+//!   request can't page anyone);
+//! * **burn rate** — the fraction of the window's requests over the
+//!   target divided by the SLO's error budget (1 − 0.99): burn 1.0 means
+//!   exactly on budget, 2.0 means burning it twice as fast.
+//!
+//! Breaches log at `Warn`, bump the `slo.*` counters, and (when a
+//! [`FlightRecorder`] is attached) trigger an incident dump — the last
+//! few thousand request spans plus the metrics cut at breach time.
+//!
+//! [`FlightRecorder`]: super::flight::FlightRecorder
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::metrics::histogram::{HistogramSnapshot, LatencyHistogram};
+
+use super::registry::MetricsRegistry;
+
+/// The `[slo]` config section (`--slo-p99-ms` and friends override it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloConfig {
+    /// p99 latency target in milliseconds; 0 disables the watcher.
+    pub p99_ms: f64,
+    /// Evaluation window.
+    pub window_ms: u64,
+    /// Windows with fewer requests than this are skipped (not judged).
+    pub min_requests: u64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        Self {
+            p99_ms: 0.0,
+            window_ms: 1_000,
+            min_requests: 50,
+        }
+    }
+}
+
+impl SloConfig {
+    pub fn enabled(&self) -> bool {
+        self.p99_ms > 0.0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.p99_ms < 0.0 || !self.p99_ms.is_finite() {
+            return Err(format!("slo.p99_ms must be finite and >= 0, got {}", self.p99_ms));
+        }
+        if self.window_ms == 0 {
+            return Err("slo.window_ms must be > 0".into());
+        }
+        Ok(())
+    }
+
+    pub fn target(&self) -> Duration {
+        Duration::from_nanos((self.p99_ms * 1e6) as u64)
+    }
+}
+
+/// One evaluated window's verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloVerdict {
+    /// Requests the window saw.
+    pub requests: u64,
+    /// The window's p99.
+    pub p99: Duration,
+    pub breached: bool,
+    /// Error-budget burn rate: fraction of requests over target / 0.01.
+    pub burn_rate: f64,
+}
+
+/// Watches one latency histogram against one [`SloConfig`]. The
+/// evaluation step is pure state-machine ([`Self::evaluate`] — cover it
+/// in tests without sleeping); `main.rs` owns the polling thread.
+pub struct SloWatcher {
+    cfg: SloConfig,
+    histogram: Arc<LatencyHistogram>,
+    last: Mutex<HistogramSnapshot>,
+    registry: Option<Arc<MetricsRegistry>>,
+}
+
+impl SloWatcher {
+    pub fn new(cfg: SloConfig, histogram: Arc<LatencyHistogram>) -> Self {
+        let last = Mutex::new(histogram.snapshot());
+        Self { cfg, histogram, last, registry: None }
+    }
+
+    /// Publish `slo.windows`, `slo.breach`, `slo.burn_rate` under
+    /// `registry` (counters cumulative, burn rate a last-window gauge).
+    /// Get-or-create semantics: the keys are namespaced to this watcher,
+    /// so the instruments exist (at zero) before the first window closes.
+    pub fn register_metrics(mut self, registry: &Arc<MetricsRegistry>) -> Self {
+        registry.counter("slo.windows");
+        registry.counter("slo.breach");
+        registry.gauge("slo.burn_rate");
+        self.registry = Some(Arc::clone(registry));
+        self
+    }
+
+    pub fn config(&self) -> &SloConfig {
+        &self.cfg
+    }
+
+    /// Close the current window and judge it: diff the histogram against
+    /// the previous snapshot, apply the `min_requests` floor, compare
+    /// p99 to target. Returns `None` for skipped (under-traffic)
+    /// windows. Call once per `window_ms` tick.
+    pub fn evaluate(&self) -> Option<SloVerdict> {
+        let now = self.histogram.snapshot();
+        let window = {
+            let mut last = self.last.lock().unwrap();
+            let window = now.diff(&last);
+            *last = now;
+            window
+        };
+        let requests = window.count();
+        if requests < self.cfg.min_requests.max(1) {
+            return None;
+        }
+        let p99 = window.quantile(0.99);
+        let target = self.cfg.target();
+        let over = window.fraction_above(target);
+        let verdict = SloVerdict {
+            requests,
+            p99,
+            breached: p99 > target,
+            burn_rate: over / 0.01,
+        };
+        if let Some(reg) = &self.registry {
+            reg.counter("slo.windows").inc();
+            reg.gauge("slo.burn_rate").set(verdict.burn_rate);
+            if verdict.breached {
+                reg.counter("slo.breach").inc();
+            }
+        }
+        Some(verdict)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn watcher(p99_ms: f64, min_requests: u64) -> SloWatcher {
+        let cfg = SloConfig { p99_ms, min_requests, ..Default::default() };
+        SloWatcher::new(cfg, Arc::new(LatencyHistogram::new()))
+    }
+
+    #[test]
+    fn config_validates_and_gates() {
+        assert!(!SloConfig::default().enabled());
+        assert!(SloConfig::default().validate().is_ok());
+        let on = SloConfig { p99_ms: 5.0, ..Default::default() };
+        assert!(on.enabled());
+        assert!(on.validate().is_ok());
+        assert!(SloConfig { p99_ms: -1.0, ..Default::default() }.validate().is_err());
+        assert!(SloConfig { window_ms: 0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn quiet_window_is_skipped_not_judged() {
+        let w = watcher(1.0, 50);
+        assert_eq!(w.evaluate(), None);
+        for _ in 0..49 {
+            w.histogram.record(Duration::from_millis(100));
+        }
+        assert_eq!(w.evaluate(), None, "49 slow requests stay under the floor");
+    }
+
+    #[test]
+    fn breach_and_burn_rate_over_one_window() {
+        let w = watcher(1.0, 10);
+        // 95 fast + 5 slow: p99 lands in the slow mode, 5% over target
+        for _ in 0..95 {
+            w.histogram.record(Duration::from_micros(100));
+        }
+        for _ in 0..5 {
+            w.histogram.record(Duration::from_millis(50));
+        }
+        let v = w.evaluate().expect("enough traffic");
+        assert_eq!(v.requests, 100);
+        assert!(v.breached, "p99 {:?} must exceed 1ms", v.p99);
+        assert!(
+            (4.0..=6.5).contains(&v.burn_rate),
+            "5% over a 1% budget burns ~5x, got {}",
+            v.burn_rate
+        );
+
+        // the next window starts clean: all-fast traffic passes
+        for _ in 0..100 {
+            w.histogram.record(Duration::from_micros(100));
+        }
+        let v = w.evaluate().expect("enough traffic");
+        assert!(!v.breached, "windows are independent (diff semantics)");
+        assert_eq!(v.burn_rate, 0.0);
+    }
+
+    #[test]
+    fn counters_accumulate_across_windows() {
+        let reg = Arc::new(crate::obs::MetricsRegistry::new());
+        let w = watcher(1.0, 1).register_metrics(&reg);
+        for _ in 0..10 {
+            w.histogram.record(Duration::from_millis(10));
+        }
+        assert!(w.evaluate().unwrap().breached);
+        for _ in 0..10 {
+            w.histogram.record(Duration::from_micros(10));
+        }
+        assert!(!w.evaluate().unwrap().breached);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("slo.windows"), Some(2));
+        assert_eq!(snap.counter("slo.breach"), Some(1));
+        assert_eq!(snap.gauge("slo.burn_rate"), Some(0.0));
+    }
+}

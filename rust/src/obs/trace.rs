@@ -19,8 +19,10 @@
 //! wall-clock categories.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
+
+use super::flight::FlightRecorder;
 
 /// One completed span, flattened for export.
 #[derive(Debug, Clone)]
@@ -51,6 +53,9 @@ pub struct TraceSink {
     epoch: Instant,
     next_id: AtomicU64,
     events: Mutex<Vec<TraceEvent>>,
+    /// Optional flight-recorder tee (attach-once; the off path costs one
+    /// atomic load per record, keeping the instrumentation budget).
+    flight: OnceLock<Arc<FlightRecorder>>,
 }
 
 impl TraceSink {
@@ -60,7 +65,20 @@ impl TraceSink {
             epoch: Instant::now(),
             next_id: AtomicU64::new(1),
             events: Mutex::new(Vec::new()),
+            flight: OnceLock::new(),
         })
+    }
+
+    /// Tee every span recorded from now on into `recorder` (its bounded
+    /// ring). At most one recorder per sink; later attaches are no-ops.
+    pub fn attach_flight(&self, recorder: Arc<FlightRecorder>) {
+        let _ = self.flight.set(recorder);
+    }
+
+    /// The attached flight recorder, if any — trigger sites (job error,
+    /// chaos escalation, SLO breach) reach it through the sink.
+    pub fn flight(&self) -> Option<&Arc<FlightRecorder>> {
+        self.flight.get()
     }
 
     /// Microseconds since the sink was created.
@@ -73,6 +91,9 @@ impl TraceSink {
     }
 
     pub fn record(&self, event: TraceEvent) {
+        if let Some(flight) = self.flight.get() {
+            flight.observe(&event);
+        }
         self.events.lock().unwrap().push(event);
     }
 

@@ -212,7 +212,7 @@ mod tests {
     fn loads_real_artifacts_if_built() {
         let dir = ArtifactManifest::default_dir();
         if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: run `make artifacts` first");
+            crate::log!(Warn, "skipping: run `make artifacts` first");
             return;
         }
         let m = ArtifactManifest::load(&dir).unwrap();

@@ -300,7 +300,7 @@ mod tests {
     fn service() -> Option<TensorService> {
         let dir = ArtifactManifest::default_dir();
         if !dir.join("manifest.json").exists() {
-            eprintln!("skipping tensor-service test: run `make artifacts`");
+            crate::log!(Warn, "skipping tensor-service test: run `make artifacts`");
             return None;
         }
         Some(TensorService::start(ArtifactManifest::load(&dir).unwrap()))

@@ -463,6 +463,13 @@ impl RuleServer {
         registry.register_histogram(&format!("{prefix}.latency"), Arc::clone(&i.latency))
     }
 
+    /// The user-facing latency histogram (enqueue-to-answer; internal
+    /// refresh probes excluded) — the SLO watcher judges its burn-rate
+    /// windows against this.
+    pub fn latency_histogram(&self) -> Arc<LatencyHistogram> {
+        Arc::clone(&self.inner.latency)
+    }
+
     pub fn stats(&self) -> ServerStats {
         ServerStats {
             served: self.inner.served.get(),

@@ -80,6 +80,36 @@ fn duplicate_registration_is_a_typed_error() {
     );
 }
 
+#[test]
+fn sink_is_lossless_under_concurrent_producers_and_tees_the_flight_ring() {
+    // Eight producers hammer one sink while the flight recorder tees
+    // every record: the sink must keep all spans with unique ids, and
+    // the ring must hold exactly its capacity after wrapping.
+    let tmp = mr_apriori::util::tempdir::TempDir::new("obs_concurrent_tee");
+    let sink = TraceSink::new();
+    let flight = FlightRecorder::new(tmp.path(), 64);
+    sink.attach_flight(Arc::clone(&flight));
+    std::thread::scope(|scope| {
+        for t in 0..8 {
+            let root = TraceCtx::root(Arc::clone(&sink));
+            scope.spawn(move || {
+                for i in 0..250 {
+                    let mut span = root.span("mr", format!("produce.{t}.{i}"));
+                    span.add("i", i as f64);
+                }
+            });
+        }
+    });
+    let events = sink.events();
+    assert_eq!(events.len(), 2_000, "sink dropped spans under contention");
+    let mut ids: Vec<u64> = events.iter().map(|e| e.span_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 2_000, "span ids collided under contention");
+    assert_eq!(flight.observed(), 2_000, "flight tee missed records");
+    assert_eq!(flight.recent().len(), 64, "ring must hold exactly capacity");
+}
+
 /// The tentpole differential check: a fully instrumented mine (tracing +
 /// registry) is byte-identical to an uninstrumented one, and the trace it
 /// leaves behind has the job → level → task tree with the Hadoop-style
@@ -151,6 +181,25 @@ fn instrumented_mine_matches_uninstrumented_and_traces_the_job_tree() {
         events.iter().any(|e| e.name.starts_with("reduce.task.")),
         "no reduce-task spans recorded"
     );
+
+    // workload-statistics spans: one per level, parented to its level span,
+    // carrying the four autotuner calibration inputs
+    let profiles: Vec<_> = events
+        .iter()
+        .filter(|e| e.name.starts_with("profile.level."))
+        .collect();
+    assert_eq!(profiles.len(), got.result.levels.len());
+    for p in &profiles {
+        assert_eq!(p.cat, "profile");
+        assert!(level_ids.contains(&p.parent_id), "{} not under a level", p.name);
+        for key in ["density", "item_skew", "avg_basket_width", "candidate_fanout"] {
+            assert!(
+                p.args.iter().any(|(k, _)| k == key),
+                "{} missing stat {key}",
+                p.name
+            );
+        }
+    }
 
     // the registry absorbed the per-job counters and the cache telemetry
     let snap = registry.snapshot();

@@ -16,7 +16,7 @@ use mr_apriori::util::rng::Xoshiro256;
 fn service() -> Option<TensorService> {
     let dir = ArtifactManifest::default_dir();
     if !dir.join("manifest.json").exists() {
-        eprintln!("skipping runtime roundtrip: run `make artifacts`");
+        mr_apriori::log!(Warn, "skipping runtime roundtrip: run `make artifacts`");
         return None;
     }
     Some(TensorService::start(ArtifactManifest::load(&dir).unwrap()))

@@ -16,6 +16,12 @@ Checks (stdlib only, like tools/bench_gate.py):
 * **mine mode** (``--mode mine``) — exactly one root ``mine`` span,
   ``level.k`` spans under it, and every ``map.task.*`` span carries the
   full Hadoop-style counter set with non-zero shuffle bytes overall;
+  additionally, any ``profile.level.k`` workload-statistics span must
+  carry all four autotuner stats and hang off a level span (or the mine
+  root, in pipelined mode), and any chaos fault-injection span must be a
+  ``fault.*``-named root. Both are instant markers (1 µs simulated
+  duration), so like ``rpc``/``net`` they are exempt from wall-clock
+  containment;
 * **serve mode** (``--mode serve``) — at least one per-request root
   ``request`` span, each carrying its own trace id.
 
@@ -33,6 +39,12 @@ MAP_COUNTERS = [
     "combine_output_records",
     "combiner_ratio",
     "shuffle_bytes",
+]
+PROFILE_STATS = [
+    "density",
+    "item_skew",
+    "avg_basket_width",
+    "candidate_fanout",
 ]
 
 
@@ -115,6 +127,28 @@ def check_mine(events):
         failures.append("total map-side shuffle_bytes is zero")
     if not any(e["name"].startswith("reduce.task.") for e in events):
         failures.append("no reduce.task spans recorded")
+
+    # workload-statistics spans: all four stats, parented to a level span
+    # (sync mine) or the mine root (pipelined mine has no level spans)
+    ok_parents = {lv["args"]["span_id"] for lv in levels}
+    ok_parents.add(root["args"]["span_id"])
+    for p in (e for e in events if e["name"].startswith("profile.level.")):
+        if p["cat"] != "profile":
+            failures.append(f"{p['name']}: cat {p['cat']!r} != 'profile'")
+        if p["args"]["parent_id"] not in ok_parents:
+            failures.append(
+                f"{p['name']} not under a level span or the mine root")
+        for stat in PROFILE_STATS:
+            if stat not in p["args"]:
+                failures.append(f"{p['name']}: missing workload stat {stat}")
+
+    # chaos fault injections: named fault.*, recorded as roots so they
+    # never distort the mine tree's wall-clock containment
+    for c in (e for e in events if e["cat"] == "chaos"):
+        if not c["name"].startswith("fault."):
+            failures.append(f"chaos span {c['name']} is not named fault.*")
+        if c["args"]["parent_id"] != 0:
+            failures.append(f"{c['name']}: chaos fault spans must be roots")
     return failures
 
 
